@@ -1,0 +1,53 @@
+//! Figure 1: end-to-end wallclock speedups when drafting for the primary
+//! target (qwensim-L / "Qwen2.5-VL 7B" analog) at T=0, gamma=5, per task
+//! category plus overall, for BASELINE text-only drafting vs MASSV.
+//! Rendered as an ASCII bar chart + the underlying numbers.
+//!
+//!     cargo bench --bench fig1_speedup [-- --quick]
+
+mod harness;
+
+use harness::{artifacts_or_exit, items_per_cell, BenchReport};
+use massv::eval::{eval_cell, tables};
+use massv::models::ModelSet;
+use massv::tokenizer::Tokenizer;
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_or_exit("fig1_speedup");
+    let n = items_per_cell();
+    let models = ModelSet::load(&dir)?;
+    let tok = Tokenizer::load(&dir)?;
+    let mut report = BenchReport::new("fig1_speedup");
+    let tasks = workload::load_all_tasks(&dir, &tok, models.manifest.p_max)?;
+    let target = "qwensim-L";
+
+    report.line(format!(
+        "Figure 1 reproduction: end-to-end wallclock speedup vs plain target decoding\n\
+         target {target}, T=0, gamma={}, {n} items/task\n",
+        models.manifest.gamma
+    ));
+
+    let mut bars = Vec::new();
+    for variant in ["baseline", "massv"] {
+        let mut cells = Vec::new();
+        for (task, items) in &tasks {
+            let items = &items[..n.min(items.len())];
+            let c = eval_cell(&models, target, variant, task, items, 0.0, false, true)?;
+            bars.push((format!("{variant}/{task}"), c.wall_speedup));
+            cells.push(c);
+        }
+        bars.push((
+            format!("{variant}/OVERALL"),
+            tables::overall_wall_speedup(&cells),
+        ));
+    }
+    report.line(tables::bar_chart(
+        "end-to-end speedup over target-only decoding (x)",
+        &bars,
+        "x",
+        48,
+    ));
+    report.finish();
+    Ok(())
+}

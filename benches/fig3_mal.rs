@@ -1,0 +1,52 @@
+//! Figure 3: mean accepted lengths per task for qwensim-L at T=0,
+//! baseline vs MASSV (the bar chart under Table 1's headline numbers).
+//!
+//!     cargo bench --bench fig3_mal [-- --quick]
+
+mod harness;
+
+use harness::{artifacts_or_exit, items_per_cell, BenchReport};
+use massv::eval::{eval_cell, tables};
+use massv::models::ModelSet;
+use massv::tokenizer::Tokenizer;
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_or_exit("fig3_mal");
+    let n = items_per_cell();
+    let models = ModelSet::load(&dir)?;
+    let tok = Tokenizer::load(&dir)?;
+    let mut report = BenchReport::new("fig3_mal");
+    let tasks = workload::load_all_tasks(&dir, &tok, models.manifest.p_max)?;
+    let target = "qwensim-L";
+
+    report.line(format!(
+        "Figure 3 reproduction: mean accepted length per task ({target}, T=0, {n} items/task)\n"
+    ));
+
+    let mut bars = Vec::new();
+    let mut improvement = Vec::new();
+    for variant in ["baseline", "massv"] {
+        let mut cells = Vec::new();
+        for (task, items) in &tasks {
+            let items = &items[..n.min(items.len())];
+            let c = eval_cell(&models, target, variant, task, items, 0.0, false, false)?;
+            bars.push((format!("{variant}/{task}"), c.mal));
+            cells.push(c);
+        }
+        let overall = tables::overall_mal(&cells);
+        bars.push((format!("{variant}/OVERALL"), overall));
+        improvement.push(overall);
+    }
+    report.line(tables::bar_chart("mean accepted length tau", &bars, "", 48));
+    if improvement.len() == 2 && improvement[0] > 0.0 {
+        report.line(format!(
+            "overall improvement: {:.2} -> {:.2} ({:+.1}%)",
+            improvement[0],
+            improvement[1],
+            100.0 * (improvement[1] / improvement[0] - 1.0)
+        ));
+    }
+    report.finish();
+    Ok(())
+}

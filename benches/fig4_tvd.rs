@@ -1,0 +1,50 @@
+//! Figure 4: histogram of total variation distances (Eq. 6) between the
+//! drafter's and target's next-token distributions along target-greedy
+//! trajectories, MASSV vs MASSV-w/o-SDViT.  The paper's claim to
+//! reproduce in shape: SDViT concentrates mass at low TVD (left-skewed);
+//! without it the distribution is broad / heavy-tailed.
+//!
+//!     cargo bench --bench fig4_tvd [-- --quick]
+
+mod harness;
+
+use harness::{artifacts_or_exit, items_per_cell, BenchReport};
+use massv::eval::tvd_histogram;
+use massv::models::ModelSet;
+use massv::stats;
+use massv::tokenizer::Tokenizer;
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_or_exit("fig4_tvd");
+    let n = items_per_cell();
+    let models = ModelSet::load(&dir)?;
+    let tok = Tokenizer::load(&dir)?;
+    let mut report = BenchReport::new("fig4_tvd");
+    let target = "qwensim-L";
+
+    // pool all four tasks like the paper's "multimodal SD benchmark"
+    let mut items = Vec::new();
+    for (_, task_items) in workload::load_all_tasks(&dir, &tok, models.manifest.p_max)? {
+        items.extend(task_items.into_iter().take(n));
+    }
+
+    report.line(format!(
+        "Figure 4 reproduction: TVD(drafter, target) histogram ({target}, {} contexts)\n",
+        items.len()
+    ));
+
+    for variant in ["massv", "massv_wo_sdvit"] {
+        let (hist, all) = tvd_histogram(&models, target, variant, &items, 20, 24)?;
+        report.line(format!(
+            "== {variant} ==  n={} mean TVD {:.3} median {:.3} | mass at TVD<0.2: {:.1}%",
+            all.len(),
+            stats::mean(&all),
+            stats::median(&all),
+            100.0 * hist.cdf(0.2)
+        ));
+        report.line(hist.render(50));
+    }
+    report.finish();
+    Ok(())
+}

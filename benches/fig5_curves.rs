@@ -1,0 +1,81 @@
+//! Figure 5: training loss curves of the two-phase MASSV pipeline
+//! (phase 1 projector pretraining, phase 2 SDViT), rendered from the loss
+//! log that python/compile/train.py wrote during `make artifacts`.
+//!
+//!     cargo bench --bench fig5_curves
+
+mod harness;
+
+use harness::{artifacts_or_exit, BenchReport};
+use massv::util::json::parse;
+
+fn sparkline(losses: &[(usize, f64)], width: usize, height: usize) -> String {
+    if losses.is_empty() {
+        return "(no data)".into();
+    }
+    let lo = losses.iter().map(|(_, l)| *l).fold(f64::INFINITY, f64::min);
+    let hi = losses.iter().map(|(_, l)| *l).fold(0.0f64, f64::max);
+    let span = (hi - lo).max(1e-9);
+    // resample to `width` columns
+    let cols: Vec<f64> = (0..width)
+        .map(|c| {
+            let idx = c * losses.len() / width;
+            losses[idx].1
+        })
+        .collect();
+    let mut rows = vec![String::new(); height];
+    for v in cols {
+        let level = (((v - lo) / span) * (height as f64 - 1.0)).round() as usize;
+        for (r, row) in rows.iter_mut().enumerate() {
+            let want = height - 1 - r; // top row = highest loss
+            row.push(if level >= want { '*' } else { ' ' });
+        }
+    }
+    let mut out = String::new();
+    for (r, row) in rows.iter().enumerate() {
+        let label = hi - span * r as f64 / (height as f64 - 1.0);
+        out.push_str(&format!("{label:7.3} |{row}\n"));
+    }
+    out.push_str(&format!(
+        "        +{} steps 0..{}\n",
+        "-".repeat(width),
+        losses.last().unwrap().0
+    ));
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_or_exit("fig5_curves");
+    let mut report = BenchReport::new("fig5_curves");
+    let text = std::fs::read_to_string(format!("{dir}/training_curves.json"))?;
+    let v = parse(&text)?;
+    let curves = v.req("curves")?.as_arr()?;
+
+    report.line("Figure 5 reproduction: two-phase MASSV training loss curves\n");
+    for phase in [
+        "phase1_projector/qwensim-S",
+        "phase2_sdvit/qwensim-S",
+        "phase1_projector/gemsim-S",
+        "phase2_sdvit/gemsim-S",
+    ] {
+        let pts: Vec<(usize, f64)> = curves
+            .iter()
+            .filter(|c| c.get("phase").and_then(|p| p.as_str().ok()) == Some(phase))
+            .map(|c| {
+                (
+                    c.req("step").unwrap().as_usize().unwrap(),
+                    c.req("loss").unwrap().as_f64().unwrap(),
+                )
+            })
+            .collect();
+        if pts.is_empty() {
+            continue;
+        }
+        let first = pts.first().unwrap().1;
+        let last = pts.last().unwrap().1;
+        report.line(format!("== {phase} ==  loss {first:.3} -> {last:.3}"));
+        report.line(sparkline(&pts, 64, 10));
+    }
+    report.finish();
+    Ok(())
+}

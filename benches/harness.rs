@@ -1,0 +1,86 @@
+//! Shared bench harness (criterion is not in the offline vendored set).
+//!
+//! Provides: warmup + repeated measurement with median/mean/stddev, a
+//! common artifacts guard, and a tee-style writer that mirrors bench
+//! output into `target/paper/<name>.txt` so every paper table/figure run
+//! leaves a file behind.
+
+#![allow(dead_code)]
+
+use std::io::Write;
+use std::time::Instant;
+
+pub struct BenchReport {
+    name: String,
+    body: String,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), body: String::new() }
+    }
+
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        println!("{}", s.as_ref());
+        self.body.push_str(s.as_ref());
+        self.body.push('\n');
+    }
+
+    pub fn finish(self) {
+        std::fs::create_dir_all("target/paper").ok();
+        let path = format!("target/paper/{}.txt", self.name);
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = f.write_all(self.body.as_bytes());
+        }
+        println!("\n[report saved to {path}]");
+    }
+}
+
+/// Artifacts guard: paper benches need `make artifacts` to have run.
+pub fn artifacts_or_exit(bench: &str) -> String {
+    let dir = std::env::var("MASSV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        println!("SKIP {bench}: artifacts not found at {dir:?} (run `make artifacts`)");
+        std::process::exit(0);
+    }
+    dir
+}
+
+/// Micro-benchmark: warmup then `n` timed iterations; returns per-iter
+/// times in microseconds.
+pub fn measure<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e6
+        })
+        .collect()
+}
+
+pub fn summarize(name: &str, micros: &[f64]) -> String {
+    let mut v = micros.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = v[v.len() / 2];
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    let p95 = v[((v.len() as f64 * 0.95) as usize).min(v.len() - 1)];
+    format!("{name:<42} n={:<4} median {med:>9.1} us  mean {mean:>9.1} us  p95 {p95:>9.1} us", v.len())
+}
+
+/// How many eval items to use per cell; benches accept `--quick` (or env
+/// MASSV_BENCH_QUICK=1) for a fast smoke pass.
+pub fn items_per_cell() -> usize {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MASSV_BENCH_QUICK").ok().as_deref() == Some("1");
+    if quick {
+        6
+    } else {
+        std::env::var("MASSV_BENCH_ITEMS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(24)
+    }
+}

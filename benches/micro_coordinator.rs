@@ -1,0 +1,80 @@
+//! Coordinator microbenchmarks (section Perf, layer 3): scheduler ops/sec
+//! (no models), and end-to-end engine throughput scaling with the worker
+//! pool over a real request mix.
+//!
+//!     cargo bench --bench micro_coordinator [-- --quick]
+
+mod harness;
+
+use std::time::Instant;
+
+use harness::{artifacts_or_exit, items_per_cell, measure, summarize, BenchReport};
+use massv::coordinator::{Engine, EngineConfig, Priority, Request, Scheduler};
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::new("micro_coordinator");
+
+    // ---- pure scheduler throughput (no models) ---------------------------
+    let sched: Scheduler<u64> = Scheduler::new(1 << 16);
+    let us = measure(10, 200, || {
+        for i in 0..1000u64 {
+            let class = if i % 3 == 0 { Priority::Batch } else { Priority::Interactive };
+            let _ = sched.submit(i, class);
+        }
+        for _ in 0..1000 {
+            let _ = sched.try_pop();
+        }
+    });
+    report.line(summarize("scheduler submit+pop x1000", &us));
+
+    // ---- engine throughput vs worker count --------------------------------
+    let dir = artifacts_or_exit("micro_coordinator");
+    let n_req = items_per_cell() * 2;
+    for workers in [1usize, 2, 4] {
+        let engine = Engine::start(
+            &dir,
+            EngineConfig {
+                default_target: "qwensim-L".into(),
+                workers,
+                queue_capacity: 1024,
+            },
+        )?;
+        let items = workload::load_task(
+            &dir,
+            "instruct",
+            &engine.tokenizer,
+            engine.models.manifest.p_max,
+        )?;
+        // warm the executable cache before timing
+        let _ = engine.run(Request::simple(
+            engine.next_id(),
+            &items[0].prompt,
+            items[0].image.clone(),
+        ));
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| {
+                let it = &items[i % items.len()];
+                engine.submit(Request::simple(engine.next_id(), &it.prompt, it.image.clone()))
+            })
+            .collect();
+        let mut tokens = 0usize;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none());
+            tokens += r.tokens.len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        report.line(format!(
+            "engine workers={workers}: {n_req} reqs, {tokens} tokens in {dt:.2}s -> \
+             {:.1} req/s, {:.0} tok/s, p95 latency {:.0} ms",
+            n_req as f64 / dt,
+            tokens as f64 / dt,
+            engine.metrics.latency_ms.percentile(95.0)
+        ));
+        engine.shutdown();
+    }
+    report.finish();
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Runtime microbenchmarks (section Perf, layer 3): per-entry-point PJRT
+//! call latency, the KV literal round-trip cost, and the call-count
+//! economics of the fused draft loop vs step-wise drafting.
+//!
+//!     cargo bench --bench micro_runtime
+
+mod harness;
+
+use harness::{artifacts_or_exit, measure, summarize, BenchReport};
+use massv::models::ModelSet;
+use massv::runtime::Tensor;
+use massv::tokenizer::Tokenizer;
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_or_exit("micro_runtime");
+    let models = ModelSet::load(&dir)?;
+    let tok = Tokenizer::load(&dir)?;
+    let items = workload::load_task(&dir, "coco", &tok, models.manifest.p_max)?;
+    let it = &items[0];
+    let mut report = BenchReport::new("micro_runtime");
+    let gamma = models.manifest.gamma;
+
+    report.line("runtime microbenchmarks (PJRT CPU, batch-1 executables)\n");
+
+    for tname in ["qwensim-L", "qwensim-XL"] {
+        let target = models.target(tname)?;
+        // prefill
+        let us = measure(3, 20, || {
+            let _ = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len).unwrap();
+        });
+        report.line(summarize(&format!("{tname}::prefill_mm"), &us));
+
+        // verify + decode on a live state
+        let (_, mut st) = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len)?;
+        let toks: Vec<i32> = (0..=gamma as i32).collect();
+        let us = measure(3, 50, || {
+            let _ = target.verify(&mut st, &toks).unwrap();
+        });
+        report.line(summarize(&format!("{tname}::verify(gamma+1)"), &us));
+
+        let (_, mut st) = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len)?;
+        let us = measure(3, 50, || {
+            st.pos -= 1;
+            let _ = target.decode(&mut st, 7).unwrap();
+        });
+        report.line(summarize(&format!("{tname}::decode(1)"), &us));
+    }
+
+    let drafter = models.drafter("qwensim-S", "massv")?;
+    let mut ds = drafter.prefill(Some(&it.image), &it.prompt_ids, it.prompt_len, false)?;
+    let us = measure(3, 50, || {
+        let _ = drafter.draft(&mut ds, 7, 0.0, 1).unwrap();
+    });
+    report.line(summarize("qwensim-S::draft (fused, gamma tokens)", &us));
+
+    let mut ds = drafter.prefill(Some(&it.image), &it.prompt_ids, it.prompt_len, false)?;
+    let us = measure(3, 50, || {
+        ds.pos -= 1;
+        let _ = drafter.decode(&mut ds, 7).unwrap();
+    });
+    report.line(summarize("qwensim-S::decode (one step)", &us));
+    report.line(format!(
+        "\n-> step-wise drafting would cost gamma={gamma} decode calls + sampling \
+         round-trips per SD iteration;\n   the fused draft loop collapses that \
+         into ONE call (see EXPERIMENTS.md section Perf).\n"
+    ));
+
+    // KV literal round-trip cost (the host<->device copy we pay per call)
+    let target = models.target("qwensim-L")?;
+    let (_, st) = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len)?;
+    let kv = Tensor::from_literal(&st.kv)?;
+    report.line(format!(
+        "KV cache: {:?} = {} f32 = {:.2} MiB",
+        kv.dims,
+        kv.numel(),
+        kv.numel() as f64 * 4.0 / (1 << 20) as f64
+    ));
+    let us = measure(3, 50, || {
+        let t = Tensor::from_literal(&st.kv).unwrap();
+        let _ = t.to_literal().unwrap();
+    });
+    report.line(summarize("kv literal host round-trip (down+up)", &us));
+
+    // ---- interpret-Pallas vs fused-jnp lowering (the L1 CPU ablation) ----
+    let raw = massv::util::json::parse(&massv::util::read_file(&format!(
+        "{dir}/manifest.json"
+    ))?)?;
+    if let Some(recs) = raw.get("kernel_validation") {
+        if let Some(rec) = recs.as_arr()?.iter().find(|r| {
+            r.get("name").and_then(|n| n.as_str().ok()) == Some("qwensim-L")
+        }) {
+            let file = rec
+                .req("entries")?
+                .req("verify")?
+                .req("file")?
+                .as_str()?
+                .to_string();
+            let kexec = models.rt.load_exec(&format!("{dir}/{file}"), "kernel_verify")?;
+            let target = models.target("qwensim-L")?;
+            let (_, st) = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len)?;
+            let toks: Vec<i32> = (0..=gamma as i32).collect();
+            let args = [
+                massv::runtime::lit_i32(&toks, &[gamma + 1])?,
+                massv::runtime::scalar_i32(st.pos),
+                st.kv.clone(),
+            ];
+            let us = measure(2, 10, || {
+                let _ = kexec.call(&args).unwrap();
+            });
+            report.line(String::new());
+            report.line(summarize("qwensim-L::verify (interpret-Pallas lowering)", &us));
+            report.line(
+                "-> compare with qwensim-L::verify above (fused-jnp serving lowering); \
+                 this gap is why CPU serving uses the fused artifacts \
+                 (aot.py SERVE_KERNEL) while the kernel remains the TPU story."
+                    .to_string(),
+            );
+        }
+    }
+
+    // per-exec mean latencies accumulated during this run
+    report.line("\nper-executable means (from runtime counters):");
+    let mut stats = models.exec_stats();
+    stats.sort_by(|a, b| a.0.cmp(&b.0));
+    for (name, calls, mean_us) in stats {
+        report.line(format!("  {name:<42} calls={calls:<5} mean {mean_us:>9.1} us"));
+    }
+    report.finish();
+    Ok(())
+}

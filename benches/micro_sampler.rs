@@ -1,0 +1,72 @@
+//! Sampler microbenchmarks (section Perf): the host-side acceptance math
+//! must be negligible next to a PJRT call (hundreds of microseconds).
+//! No artifacts needed.
+//!
+//!     cargo bench --bench micro_sampler
+
+mod harness;
+
+use harness::{measure, summarize, BenchReport};
+use massv::runtime::Tensor;
+use massv::spec::{accept_stochastic, sampler, Scratch};
+use massv::util::rng::Rng;
+
+fn main() {
+    let mut report = BenchReport::new("micro_sampler");
+    let v = 120; // shape-world vocab size
+    let mut rng = Rng::seeded(1);
+    let logits: Vec<f32> = (0..v).map(|_| rng.f32() * 8.0 - 4.0).collect();
+
+    report.line(format!("sampler microbenchmarks (vocab={v})\n"));
+
+    let mut probs = Vec::new();
+    let us = measure(100, 2000, || {
+        sampler::softmax_t(&logits, 1.0, &mut probs);
+    });
+    report.line(summarize("softmax_t", &us));
+
+    let us = measure(100, 2000, || {
+        let _ = sampler::argmax(&logits);
+    });
+    report.line(summarize("argmax", &us));
+
+    sampler::softmax_t(&logits, 1.0, &mut probs);
+    let mut perm = Vec::new();
+    let us = measure(100, 2000, || {
+        let mut p = probs.clone();
+        sampler::top_p_filter(&mut p, 0.9, &mut perm);
+    });
+    report.line(summarize("top_p_filter (incl. clone)", &us));
+
+    let mut out = Vec::new();
+    let q: Vec<f32> = {
+        let mut q = probs.clone();
+        q.rotate_right(3);
+        q
+    };
+    let us = measure(100, 2000, || {
+        sampler::residual(&probs, &q, &mut out);
+    });
+    report.line(summarize("residual distribution", &us));
+
+    // a full gamma=5 stochastic acceptance pass
+    let gamma = 5;
+    let qlogits = Tensor::new(
+        (0..gamma * v).map(|i| ((i * 37) % 97) as f32 * 0.05).collect(),
+        vec![gamma, v],
+    )
+    .unwrap();
+    let plogits = Tensor::new(
+        (0..(gamma + 1) * v).map(|i| ((i * 53) % 89) as f32 * 0.05).collect(),
+        vec![gamma + 1, v],
+    )
+    .unwrap();
+    let draft = vec![3i32, 14, 15, 9, 26];
+    let mut scratch = Scratch::default();
+    let us = measure(100, 2000, || {
+        let _ = accept_stochastic(&draft, &qlogits, &plogits, 1.0, 1.0, &mut rng, &mut scratch);
+    });
+    report.line(summarize("accept_stochastic (full gamma window)", &us));
+    report.line("\n-> all host-side costs are O(microseconds); the PJRT call dominates.".to_string());
+    report.finish();
+}

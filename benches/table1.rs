@@ -1,0 +1,76 @@
+//! Table 1: mean accepted lengths (tau) and speedups across model
+//! families, tasks, and temperatures (T in {0, 1}) with gamma = 5.
+//!
+//! Baseline = text-only drafting (Gagrani et al.); MASSV = this paper.
+//! Like the paper, speedups are normalized to the baseline drafter's MAL
+//! via measured wallclock; the XL rows are the section-4.2 generalization
+//! experiment (drafter aligned to the L target, serving the XL target).
+//!
+//!     cargo bench --bench table1 [-- --quick]
+
+mod harness;
+
+
+use harness::{artifacts_or_exit, items_per_cell, BenchReport};
+use massv::eval::{eval_cell, tables, CellResult};
+use massv::models::ModelSet;
+use massv::tokenizer::Tokenizer;
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_or_exit("table1");
+    let n = items_per_cell();
+    let models = ModelSet::load(&dir)?;
+    let tok = Tokenizer::load(&dir)?;
+    let mut report = BenchReport::new("table1");
+
+    let tasks = workload::load_all_tasks(&dir, &tok, models.manifest.p_max)?;
+    let targets = ["qwensim-L", "qwensim-XL", "gemsim-L", "gemsim-XL"];
+
+    report.line(format!(
+        "Table 1 reproduction: tau and speedup, gamma={}, {} items/cell",
+        models.manifest.gamma, n
+    ));
+    report.line("(speedup = measured wallclock per token vs non-speculative target decode)\n");
+
+    for temperature in [0.0f32, 1.0] {
+        report.line(format!("---- TEMPERATURE = {temperature} ----"));
+        for target in targets {
+            let mut rows: Vec<(String, Vec<String>)> = Vec::new();
+            let mut overall: Vec<(String, Vec<CellResult>)> = Vec::new();
+            for variant in ["baseline", "massv"] {
+                let mut cells = Vec::new();
+                let mut row = Vec::new();
+                for (task, items) in &tasks {
+                    let items = &items[..n.min(items.len())];
+                    let cell = eval_cell(
+                        &models, target, variant, task, items, temperature, false, true,
+                    )?;
+                    row.push(tables::cell(cell.mal, cell.wall_speedup));
+                    cells.push(cell);
+                }
+                row.push(tables::cell(
+                    tables::overall_mal(&cells),
+                    tables::overall_wall_speedup(&cells),
+                ));
+                rows.push((variant.to_uppercase(), row));
+                overall.push((variant.to_string(), cells));
+            }
+            let analog = &models.manifest.target(target)?.paper_analog;
+            let t = tables::TableBlock {
+                title: format!("{target} ({analog}), T={temperature}"),
+                columns: vec![
+                    "instruct".into(),
+                    "wild".into(),
+                    "gqa".into(),
+                    "coco".into(),
+                    "OVERALL".into(),
+                ],
+                rows,
+            };
+            report.line(t.render());
+        }
+    }
+    report.finish();
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Table 2: ablation on the effect of SDViT (Self-Distilled Visual
+//! Instruction Tuning) on drafting performance, at temperature 0, on the
+//! overall multimodal benchmark (all four tasks pooled).
+//!
+//! Rows per target: BASELINE (text-only drafting), MASSV w/o SDViT
+//! (architectural adaptation + fixed-label fine-tune), full MASSV.
+//! The paper's key observation to reproduce in *shape*: w/o SDViT lands
+//! near (or below!) the baseline, full MASSV is clearly above it.
+//!
+//!     cargo bench --bench table2_sdvit [-- --quick]
+
+mod harness;
+
+use harness::{artifacts_or_exit, items_per_cell, BenchReport};
+use massv::eval::{eval_cell, tables, CellResult};
+use massv::models::ModelSet;
+use massv::tokenizer::Tokenizer;
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_or_exit("table2_sdvit");
+    let n = items_per_cell();
+    let models = ModelSet::load(&dir)?;
+    let tok = Tokenizer::load(&dir)?;
+    let mut report = BenchReport::new("table2_sdvit");
+    let tasks = workload::load_all_tasks(&dir, &tok, models.manifest.p_max)?;
+
+    report.line(format!(
+        "Table 2 reproduction: SDViT ablation (overall benchmark, T=0, {n} items/task)\n"
+    ));
+
+    for target in ["qwensim-L", "gemsim-L"] {
+        let mut rows = Vec::new();
+        let mut baseline_mal = 0.0;
+        for (label, variant) in [
+            ("BASELINE", "baseline"),
+            ("MASSV w/o SDViT", "massv_wo_sdvit"),
+            ("MASSV", "massv"),
+        ] {
+            let mut cells: Vec<CellResult> = Vec::new();
+            for (task, items) in &tasks {
+                let items = &items[..n.min(items.len())];
+                cells.push(eval_cell(&models, target, variant, task, items, 0.0, false, true)?);
+            }
+            let mal = tables::overall_mal(&cells);
+            if variant == "baseline" {
+                baseline_mal = mal;
+            }
+            // paper Table 2 reports speedup normalized to the BASELINE row
+            let rel = if baseline_mal > 0.0 { mal / baseline_mal } else { 0.0 };
+            let wall = tables::overall_wall_speedup(&cells);
+            rows.push((
+                label.to_string(),
+                vec![format!("{mal:.2}"), format!("{rel:.2}x"), format!("{wall:.2}x")],
+            ));
+        }
+        let analog = &models.manifest.target(target)?.paper_analog;
+        let t = tables::TableBlock {
+            title: format!("{target} ({analog})"),
+            columns: vec!["tau".into(), "vs baseline".into(), "wall speedup".into()],
+            rows,
+        };
+        report.line(t.render());
+    }
+    report.finish();
+    Ok(())
+}

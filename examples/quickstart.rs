@@ -1,0 +1,67 @@
+//! Quickstart: load the engine, caption one image with MASSV speculative
+//! decoding, and compare against plain target decoding.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` to have produced ./artifacts.
+
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = massv::util::artifacts_dir();
+    let engine = Engine::start(
+        &artifacts,
+        EngineConfig { default_target: "qwensim-L".into(), workers: 1, queue_capacity: 8 },
+    )?;
+
+    // pick a captioning prompt + image from the fixed eval set
+    let items = workload::load_task(
+        &artifacts,
+        "coco",
+        &engine.tokenizer,
+        engine.models.manifest.p_max,
+    )?;
+    let item = &items[0];
+    println!("prompt:    {}", item.prompt);
+    println!("reference: {}", item.reference);
+
+    // warm the executable cache (HLO parse + compile costs seconds on
+    // first use and would otherwise be billed to the first request)
+    let mut warm = Request::simple(engine.next_id(), &item.prompt, item.image.clone());
+    warm.gen.max_new = 2;
+    let _ = engine.run(warm);
+    let mut warm = Request::simple(engine.next_id(), &item.prompt, item.image.clone());
+    warm.mode = DecodeMode::TargetOnly;
+    warm.gen.max_new = 2;
+    let _ = engine.run(warm);
+
+    // --- MASSV speculative decoding --------------------------------------
+    let mut req = Request::simple(engine.next_id(), &item.prompt, item.image.clone());
+    req.task = "coco".into();
+    let spec = engine.run(req);
+    println!("\n[MASSV speculative]");
+    println!("output:  {}", spec.text);
+    println!(
+        "mal {:.2} | {} verify calls | {} draft tokens accepted | {:.1} ms",
+        spec.mal, spec.verify_calls, spec.accepted_draft, spec.latency_ms
+    );
+
+    // --- plain target decoding (the 1.00x reference) ----------------------
+    let mut req = Request::simple(engine.next_id(), &item.prompt, item.image.clone());
+    req.task = "coco".into();
+    req.mode = DecodeMode::TargetOnly;
+    let base = engine.run(req);
+    println!("\n[target only]");
+    println!("output:  {}", base.text);
+    println!("{} target forwards | {:.1} ms", base.verify_calls, base.latency_ms);
+
+    // greedy speculation is lossless: outputs must match exactly
+    assert_eq!(spec.tokens, base.tokens, "losslessness violated!");
+    println!(
+        "\noutputs identical (lossless); wallclock speedup {:.2}x",
+        base.latency_ms / spec.latency_ms.max(1e-9)
+    );
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! END-TO-END SERVING DRIVER (the mandated full-system example).
+//!
+//! Boots the complete stack -- PJRT runtime, coordinator (scheduler +
+//! router + worker pool), TCP server -- then drives it with an open-loop
+//! Poisson captioning workload over real sockets, and reports latency /
+//! throughput / acceptance statistics.  Proves all three layers compose:
+//! Pallas kernel (L1, inside the AOT HLO) -> JAX models (L2, baked
+//! artifacts) -> Rust serving (L3, this process).  Recorded in
+//! EXPERIMENTS.md section End-to-end.
+//!
+//!     cargo run --release --example serve_captioning [-- --rate 4 --n 40]
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use massv::coordinator::{Engine, EngineConfig};
+use massv::server::{Client, Server};
+use massv::stats;
+use massv::util::cli::Args;
+use massv::util::json::Json;
+use massv::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1), &[]);
+    let artifacts = massv::util::artifacts_dir();
+    let n_requests = args.get_usize("n", 40);
+    let rate = args.get_f64("rate", 4.0); // req/s open loop
+    let workers = args.get_usize("workers", 4);
+
+    println!("== MASSV end-to-end serving demo ==");
+    println!("booting engine ({workers} workers) + TCP server ...");
+    let engine = Arc::new(Engine::start(
+        &artifacts,
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers,
+            queue_capacity: 512,
+        },
+    )?);
+    let items = workload::load_task(
+        &artifacts,
+        "coco",
+        &engine.tokenizer,
+        engine.models.manifest.p_max,
+    )?;
+
+    let server = Server::new(engine.clone());
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap().to_string();
+    println!("server listening on {addr}");
+
+    // warm the executable cache with one request so timing is honest
+    let mut warm = Client::connect(&addr)?;
+    let _ = warm.call(&gen_req(&items[0], 0))?;
+
+    // ---- open-loop Poisson load over real sockets -------------------------
+    let schedule = workload::poisson_schedule(n_requests, rate, items.len(), 42);
+    println!(
+        "driving {n_requests} captioning requests at ~{rate}/s (open loop, Poisson) ...\n"
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (i, arr) in schedule.iter().enumerate() {
+        let wait = Duration::from_secs_f64(arr.at) - t0.elapsed().min(Duration::from_secs_f64(arr.at));
+        std::thread::sleep(wait);
+        let addr = addr.clone();
+        let item = items[arr.item].clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(f64, usize, f64)> {
+            let issued = Instant::now();
+            let mut c = Client::connect(&addr)?;
+            let resp = c.call(&gen_req(&item, i as u64))?;
+            let e2e_ms = issued.elapsed().as_secs_f64() * 1000.0;
+            anyhow::ensure!(resp.get("error").is_none(), "{resp:?}");
+            let tokens = resp.get("tokens").unwrap().to_i32_vec()?.len();
+            let mal = resp.get("mal").unwrap().as_f64()?;
+            Ok((e2e_ms, tokens, mal))
+        }));
+    }
+
+    let mut lat = Vec::new();
+    let mut mals = Vec::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let (ms, toks, mal) = h.join().unwrap()?;
+        lat.push(ms);
+        mals.push(mal);
+        tokens += toks;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("== results ==");
+    println!("wall time          {wall:.2} s");
+    println!("throughput         {:.2} req/s, {:.0} tok/s", n_requests as f64 / wall, tokens as f64 / wall);
+    println!("latency (client)   p50 {:.0} ms  p95 {:.0} ms  max {:.0} ms",
+        lat[lat.len() / 2], lat[(lat.len() as f64 * 0.95) as usize], lat[lat.len() - 1]);
+    println!("mean accepted len  {:.2} (per-request mean {:.2})",
+        engine.metrics.overall_mal(), stats::mean(&mals));
+    println!("server metrics     completed={} rejected={} verify_calls={}",
+        engine.metrics.requests_completed.get(),
+        engine.metrics.requests_rejected.get(),
+        engine.metrics.verify_calls.get());
+
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
+    Ok(())
+}
+
+fn gen_req(item: &workload::EvalItem, seed: u64) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str(item.prompt.clone())),
+        ("image", Json::arr_f32(&item.image)),
+        ("task", Json::str("coco")),
+        ("mode", Json::str("massv")),
+        ("priority", Json::str("interactive")),
+        ("seed", Json::num(seed as f64)),
+    ])
+}

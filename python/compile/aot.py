@@ -1,0 +1,290 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust runtime.
+
+Python's last act: every inference entry point of every trained model is
+jitted with its weights CLOSED OVER (baked as HLO constants), lowered to
+stablehlo, converted to an XlaComputation, and dumped as HLO *text*.
+
+HLO text -- not ``.serialize()`` -- is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Also emitted:
+  artifacts/manifest.json         model registry the Rust runtime loads
+  artifacts/vocab.json            shared tokenizer tables
+  artifacts/eval/<task>.json      fixed eval sets (prompts + images)
+  artifacts/training_curves.json  Figure-5 data (written by train.py)
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapeworld, train
+from .config import (
+    ALIGN_TARGET,
+    DRAFT_VARIANTS,
+    EVAL_N_PER_TASK,
+    EVAL_SEED,
+    GAMMA,
+    GEN_MAX,
+    MODELS,
+    N_VISUAL,
+    P_MAX,
+    T_MAX,
+    ModelConfig,
+)
+
+# Serving artifacts are lowered from the pure-jnp attention path.  The
+# Pallas kernel is a TPU artifact: on CPU it must run interpret=True,
+# which expands each pallas_call into a while-loop nest whose overhead
+# grows with grid size (measured ~1.15x on gamma+1 verify at this model
+# scale, larger on long-sequence prefill -- EXPERIMENTS.md section Perf).
+# XLA:CPU also fuses the jnp attention into tighter loops than the
+# interpret expansion allows.  The kernel still ships in the SAME HLO
+# format for the models listed in KERNEL_VALIDATION below; the Rust
+# integration suite proves kernel-path and serving-path artifacts are
+# numerically identical, and pytest pins the kernel to the jnp oracle.
+# Set MASSV_SERVE_KERNEL=1 to serve fully from the kernel lowering.
+SERVE_KERNEL = os.environ.get("MASSV_SERVE_KERNEL", "0") == "1"
+KERNEL_VALIDATION = [("target", "qwensim-L"), ("draft", "qwensim-S", "massv")]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # Two print-option gotchas vs the plain ``as_hlo_text()``:
+    #  * print_large_constants=True -- jax >= 0.7 ELIDES multi-dim dense
+    #    literals as ``constant({...})`` by default; XLA 0.5.1's parser
+    #    silently accepts that as garbage (zeros / denormals), so every
+    #    baked weight would vanish.
+    #  * print_metadata=False -- the new printer emits metadata fields
+    #    (source_end_line, ...) the 0.5.1 parser rejects outright.
+    mod = comp.get_hlo_module()
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return mod.to_string(opts)
+
+
+def _write(outdir: str, name: str, lowered) -> dict:
+    path = os.path.join(outdir, "hlo", f"{name}.hlo.txt")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {"file": f"hlo/{name}.hlo.txt", "bytes": len(text)}
+
+
+def _kv_shape(cfg: ModelConfig) -> list[int]:
+    return [cfg.n_layers, 2, cfg.n_heads, cfg.t_max, cfg.d_head]
+
+
+# ---------------------------------------------------------------------------
+# Lowering per model
+# ---------------------------------------------------------------------------
+
+
+def lower_common(
+    params: dict, cfg: ModelConfig, name: str, outdir: str, *, mm: bool,
+    use_kernel: bool = None,
+) -> dict:
+    """Entry points shared by targets and drafters."""
+    USE_KERNEL = SERVE_KERNEL if use_kernel is None else use_kernel
+    img = jax.ShapeDtypeStruct((shapeworld.IMG_SIZE, shapeworld.IMG_SIZE, 3), jnp.float32)
+    prompt = jax.ShapeDtypeStruct((P_MAX,), jnp.int32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    u32 = jax.ShapeDtypeStruct((), jnp.uint32)
+    kv = jax.ShapeDtypeStruct(tuple(_kv_shape(cfg)), jnp.float32)
+
+    entries = {}
+    if mm:
+        entries["prefill_mm"] = _write(
+            outdir, f"{name}.prefill_mm",
+            jax.jit(
+                lambda image, ids, ln: model.prefill_mm(
+                    params, cfg, image, ids, ln, use_kernel=USE_KERNEL
+                )
+            ).lower(img, prompt, i32),
+        )
+    entries["prefill_text"] = _write(
+        outdir, f"{name}.prefill_text",
+        jax.jit(
+            lambda ids, ln: model.prefill_text(params, cfg, ids, ln, use_kernel=USE_KERNEL)
+        ).lower(prompt, i32),
+    )
+    toks_v = jax.ShapeDtypeStruct((GAMMA + 1,), jnp.int32)
+    entries["verify"] = _write(
+        outdir, f"{name}.verify",
+        jax.jit(
+            lambda t, p, c: model.extend(params, cfg, t, p, c, use_kernel=USE_KERNEL)
+        ).lower(toks_v, i32, kv),
+    )
+    tok1 = jax.ShapeDtypeStruct((1,), jnp.int32)
+    entries["decode"] = _write(
+        outdir, f"{name}.decode",
+        jax.jit(
+            lambda t, p, c: model.extend(params, cfg, t, p, c, use_kernel=USE_KERNEL)
+        ).lower(tok1, i32, kv),
+    )
+    entries["draft"] = _write(
+        outdir, f"{name}.draft",
+        jax.jit(
+            lambda t, p, c, temp, seed: model.draft_scan(
+                params, cfg, t, p, c, temp, seed, gamma=GAMMA, use_kernel=USE_KERNEL
+            )
+        ).lower(i32, i32, kv, f32, u32),
+    )
+    return entries
+
+
+def model_record(name: str, cfg: ModelConfig, entries: dict, *, kind: str, extra: dict) -> dict:
+    return {
+        "name": name,
+        "kind": kind,
+        "family": cfg.family,
+        "paper_analog": cfg.paper_analog,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_head": cfg.d_head,
+        "vocab": cfg.vocab,
+        "window": cfg.window if cfg.family == "gemsim" else None,
+        "kv_shape": _kv_shape(cfg),
+        "entries": entries,
+        **extra,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse existing artifacts/params checkpoints")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    pdir = os.path.join(outdir, "params")
+
+    # ---- 1. train (or reuse checkpoints) ---------------------------------
+    have_all = os.path.isdir(pdir) and all(
+        os.path.exists(os.path.join(pdir, f"target_{t}.pkl"))
+        for t, c in MODELS.items()
+        if c.role == "target"
+    ) and all(
+        os.path.exists(os.path.join(pdir, f"draft_{d}_{v}.pkl"))
+        for d in ALIGN_TARGET
+        for v in DRAFT_VARIANTS
+    )
+    if not (args.skip_train and have_all) and not have_all:
+        train.train_all(outdir)
+
+    # ---- 2. lower every model --------------------------------------------
+    manifest: dict = {
+        "schema": 1,
+        "gamma": GAMMA,
+        "t_max": T_MAX,
+        "p_max": P_MAX,
+        "n_visual": N_VISUAL,
+        "gen_max": GEN_MAX,
+        "vocab_size": shapeworld.VOCAB_SIZE,
+        "pad_id": shapeworld.PAD_ID,
+        "bos_id": shapeworld.BOS_ID,
+        "eos_id": shapeworld.EOS_ID,
+        "sep_id": shapeworld.SEP_ID,
+        "use_kernel": SERVE_KERNEL,
+        "targets": [],
+        "drafters": [],
+    }
+
+    for name, cfg in MODELS.items():
+        if cfg.role != "target":
+            continue
+        print(f"lowering target {name}", flush=True)
+        params = train.load_params(os.path.join(pdir, f"target_{name}.pkl"))
+        entries = lower_common(params, cfg, f"target_{name}", outdir, mm=True)
+        manifest["targets"].append(
+            model_record(name, cfg, entries, kind="target", extra={})
+        )
+
+    for dname, align in ALIGN_TARGET.items():
+        cfg = MODELS[dname]
+        for variant in DRAFT_VARIANTS:
+            print(f"lowering drafter {dname}/{variant}", flush=True)
+            params = train.load_params(
+                os.path.join(pdir, f"draft_{dname}_{variant}.pkl")
+            )
+            mm = variant != "baseline"  # baseline is the text-only drafter
+            entries = lower_common(
+                params, cfg, f"draft_{dname}_{variant}", outdir, mm=mm
+            )
+            manifest["drafters"].append(
+                model_record(
+                    dname, cfg, entries, kind="draft",
+                    extra={
+                        "variant": variant,
+                        "aligned_target": align,
+                        "multimodal": mm,
+                    },
+                )
+            )
+
+    # ---- 2b. kernel-path validation artifacts ------------------------------
+    # Same models, attention routed through the Pallas kernel (interpret
+    # lowering).  The Rust suite asserts numerical equivalence with the
+    # serving artifacts; EXPERIMENTS.md section Perf benches the gap.
+    kernel_records = []
+    for spec in KERNEL_VALIDATION:
+        if spec[0] == "target":
+            name = spec[1]
+            params = train.load_params(os.path.join(pdir, f"target_{name}.pkl"))
+            cfg = MODELS[name]
+            mm = True
+            label = f"kernel_target_{name}"
+        else:
+            name, variant = spec[1], spec[2]
+            params = train.load_params(os.path.join(pdir, f"draft_{name}_{variant}.pkl"))
+            cfg = MODELS[name]
+            mm = variant != "baseline"
+            label = f"kernel_draft_{name}_{variant}"
+        print(f"lowering kernel-path validation artifact {label}", flush=True)
+        entries = lower_common(params, cfg, label, outdir, mm=mm, use_kernel=True)
+        rec = model_record(name, cfg, entries, kind="kernel_validation", extra={})
+        if spec[0] == "draft":
+            rec["variant"] = spec[2]
+        kernel_records.append(rec)
+    manifest["kernel_validation"] = kernel_records
+
+    # ---- 3. vocab + eval sets --------------------------------------------
+    with open(os.path.join(outdir, "vocab.json"), "w") as f:
+        f.write(shapeworld.vocab_json())
+    evdir = os.path.join(outdir, "eval")
+    os.makedirs(evdir, exist_ok=True)
+    for i, task in enumerate(shapeworld.TASKS):
+        with open(os.path.join(evdir, f"{task}.json"), "w") as f:
+            f.write(shapeworld.eval_set_json(task, EVAL_N_PER_TASK, EVAL_SEED + i))
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts written to {outdir}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Model/system configuration for the MASSV reproduction.
+
+The model zoo mirrors the paper's two families and two sizes per family
+(DESIGN.md section 5).  ``MASSV_FAST=1`` shrinks training for smoke tests;
+reported numbers always come from the default profile.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+from . import shapeworld
+
+# Sequence budget (shared by every model and the Rust runtime via manifest)
+N_VISUAL = 4  # visual tokens: 8x8 patches == the four scene quadrants
+P_MAX = 32  # max text prompt tokens (incl. <bos>/<sep>)
+GEN_MAX = 48  # max generated tokens
+GAMMA = 5  # speculation length (paper: gamma = 5)
+# Slack so a gamma-token speculation never overruns the cache even at the
+# generation cap; rounded up to a multiple of the kernel block (32).
+T_MAX = ((N_VISUAL + P_MAX + GEN_MAX + GAMMA + 1 + 31) // 32) * 32  # 128
+WINDOW = 16  # sliding-window width for the gemsim family
+
+FAST = os.environ.get("MASSV_FAST", "0") == "1"
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    # patch == 8 aligns each visual token with one scene quadrant, which is
+    # what makes visual grounding learnable at this model scale (the
+    # grounding-emergence experiment in EXPERIMENTS.md section Training).
+    patch: int = 8
+    d_vis: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ffn: int = 128
+
+    @property
+    def d_head(self) -> int:
+        return self.d_vis // self.n_heads
+
+    @property
+    def n_patches(self) -> int:
+        side = shapeworld.IMG_SIZE // self.patch
+        return side * side
+
+    @property
+    def d_patch(self) -> int:
+        return self.patch * self.patch * 3
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "qwensim" (global attention) | "gemsim" (interleaved SWA)
+    role: str  # "target" | "draft"
+    paper_analog: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ffn: int
+    vocab: int = shapeworld.VOCAB_SIZE
+    window: int | None = None  # sliding window width on odd layers
+    t_max: int = T_MAX
+    p_max: int = P_MAX
+    n_visual: int = N_VISUAL
+    vision: VisionConfig = field(default_factory=VisionConfig)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def layer_window(self, layer: int) -> int | None:
+        """gemsim interleaves sliding-window attention on odd layers,
+        mirroring Gemma3's interleaved local/global pattern."""
+        if self.family == "gemsim" and layer % 2 == 1:
+            return self.window or WINDOW
+        return None
+
+
+def _cfg(name, family, role, analog, d, l, h, f) -> ModelConfig:
+    if FAST:
+        d, l, f = max(d // 2, 24), max(l - 1, 1), max(f // 2, 48)
+    window = WINDOW if family == "gemsim" else None
+    return ModelConfig(
+        name=name, family=family, role=role, paper_analog=analog,
+        d_model=d, n_layers=l, n_heads=4, d_ffn=f, window=window,
+    )
+
+
+MODELS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _cfg("qwensim-L", "qwensim", "target", "Qwen2.5-VL 7B Instruct", 96, 3, 4, 192),
+        _cfg("qwensim-XL", "qwensim", "target", "Qwen2.5-VL 32B Instruct", 128, 4, 4, 256),
+        _cfg("gemsim-L", "gemsim", "target", "Gemma3-12B IT", 96, 3, 4, 192),
+        _cfg("gemsim-XL", "gemsim", "target", "Gemma3-27B IT", 128, 4, 4, 256),
+        _cfg("qwensim-S", "qwensim", "draft", "Qwen2.5-1.5B Instruct", 48, 2, 4, 96),
+        _cfg("gemsim-S", "gemsim", "draft", "Gemma3-1B IT", 48, 2, 4, 96),
+    ]
+}
+
+TARGETS = [n for n, c in MODELS.items() if c.role == "target"]
+DRAFTS = [n for n, c in MODELS.items() if c.role == "draft"]
+# the "aligned" target each drafter is trained against (paper: 7B / 12B);
+# XL variants reuse the same drafter (the generalization experiment).
+ALIGN_TARGET = {"qwensim-S": "qwensim-L", "gemsim-S": "gemsim-L"}
+FAMILY_TARGETS = {
+    "qwensim": ["qwensim-L", "qwensim-XL"],
+    "gemsim": ["gemsim-L", "gemsim-XL"],
+}
+DRAFT_VARIANTS = ["baseline", "massv_wo_sdvit", "massv"]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    # dataset sizes
+    n_target_train: int = 512 if FAST else 4096
+    n_pretrain_pairs: int = 256 if FAST else 2048
+    n_finetune: int = 256 if FAST else 2048
+    n_text_pretrain: int = 512 if FAST else 3072
+    # optimization
+    target_epochs: int = 1 if FAST else 12
+    pretrain_epochs: int = 1 if FAST else 6
+    finetune_epochs: int = 1 if FAST else 6
+    batch_size: int = 32 if FAST else 64
+    lr_target: float = 1e-3
+    lr_pretrain: float = 1e-3  # paper appendix: projector pretrain lr 1e-3
+    lr_finetune: float = 2e-4  # paper: 2e-5 for 1.5B; scaled for toy models
+    seed: int = 1234
+    # SDViT generation (paper: top-p across temperatures for diversity)
+    sdd_temperatures: tuple[float, ...] = (0.7, 1.0)
+    sdd_top_p: float = 0.9
+
+
+TRAIN = TrainConfig()
+
+EVAL_SEED = 20250710
+EVAL_N_PER_TASK = 16 if FAST else 50

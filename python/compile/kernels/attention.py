@@ -1,0 +1,182 @@
+"""Layer-1 Pallas kernel: fused flash-style attention over a KV cache.
+
+This is the compute hot-spot of VLM serving (the paper's decode/verify path
+on H100).  HARDWARE ADAPTATION (DESIGN.md section 3): the paper's setting is
+CUDA (threadblocks, shared memory); on TPU-shaped hardware we re-express the
+same insight with Pallas primitives:
+
+  * the HBM<->VMEM schedule the paper does with threadblocks is expressed
+    with ``BlockSpec``s: one (head, q-block) program instance per grid cell,
+    K/V streamed through VMEM in ``block_k``-sized tiles;
+  * online softmax keeps the running (max, denominator, accumulator) state
+    in VMEM-resident loop carries instead of shared memory;
+  * tile sizes default to MXU-friendly multiples (the systolic array wants
+    128-lane tiles; our toy head dims are smaller, so tiles are
+    parameterized and the roofline analysis in EXPERIMENTS.md scales them).
+
+``interpret=True`` is required for CPU PJRT execution: real TPU lowering
+emits a Mosaic custom-call that the CPU plugin cannot run.  Correctness is
+pinned to kernels/ref.py by python/tests/test_kernel.py (pytest +
+hypothesis shape/mask sweeps).
+
+Masking semantics are shared with the reference (see ref.py docstring):
+query i has absolute position ``qa = pos + i``; key j is visible iff
+``j <= qa`` and, for sliding-window layers, ``j > qa - window``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    pos_ref,  # [1] i32 in SMEM-like memory: absolute position of q[:, 0]
+    q_ref,  # [1, block_q, Dh]
+    k_ref,  # [1, T, Dh] (whole head, streamed in block_k tiles below)
+    v_ref,  # [1, T, Dh]
+    o_ref,  # [1, block_q, Dh]
+    *,
+    block_k: int,
+    window: int | None,
+    causal: bool,
+):
+    block_q = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    t = k_ref.shape[1]
+    n_k = t // block_k
+
+    iq = pl.program_id(1)
+    pos = pos_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, Dh]
+    # absolute positions of the queries in this block
+    qa = pos + iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    def body(jk, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_blk = k_ref[0, pl.ds(jk * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(jk * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_blk.T  # [bq, bk] -- the MXU matmul tile
+
+        kj = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask = mask & (kj <= qa)
+        if window is not None:
+            mask = mask & (kj > qa - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        # online softmax update
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        # fully-masked entries at m_new == NEG_INF would yield exp(0)=1;
+        # they are wiped by corr=0 as soon as a real key appears and a row
+        # always sees at least its own position, so the final state is exact
+        # (proof obligation discharged by the hypothesis sweep vs ref.py).
+        l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        acc_new = acc_prev * corr + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, acc0))
+
+    out = acc / jnp.maximum(l, 1e-30)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "causal", "block_q", "block_k", "interpret"),
+)
+def fused_attention(
+    q: jnp.ndarray,  # [H, S, Dh]
+    k: jnp.ndarray,  # [H, T, Dh]
+    v: jnp.ndarray,  # [H, T, Dh]
+    pos,  # scalar i32
+    *,
+    window: int | None = None,
+    causal: bool = True,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused attention over a (possibly stale-tailed) KV cache.
+
+    Pads S up to a multiple of ``block_q`` (padded queries attend validly
+    but their outputs are sliced away) and requires T to be a multiple of
+    ``block_k`` -- model configs guarantee that (T_max = 96, block 32).
+    """
+    h, s, dh = q.shape
+    t = k.shape[1]
+    bq = min(block_q, _next_multiple(s, 1))
+    bq = s if s <= block_q else block_q
+    s_pad = _next_multiple(s, bq)
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0)))
+    if t % block_k != 0:
+        raise ValueError(f"T={t} must be a multiple of block_k={block_k}")
+
+    grid = (h, s_pad // bq)
+    pos_arr = jnp.asarray(pos, dtype=jnp.int32).reshape((1,))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, block_k=block_k, window=window, causal=causal
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ih, iq: (0,)),
+            pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, t, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda ih, iq: (ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s_pad, dh), q.dtype),
+        interpret=interpret,
+    )(pos_arr, q, k, v)
+
+    return out[:, :s, :]
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def vmem_footprint_bytes(
+    s: int, t: int, dh: int, block_q: int, block_k: int, dtype_bytes: int = 4
+) -> dict:
+    """Analytic VMEM budget per program instance -- the quantity we tune in
+    the section-Perf block-size sweep (interpret-mode wallclock is not a TPU
+    proxy; structure is what we optimize).  See EXPERIMENTS.md section Perf."""
+    bq = min(block_q, s)
+    q_tile = bq * dh * dtype_bytes
+    kv_tile = 2 * block_k * dh * dtype_bytes
+    state = (2 * bq + bq * dh) * 4  # m, l, acc in f32
+    scores = bq * block_k * 4
+    total = q_tile + kv_tile + state + scores
+    return {
+        "q_tile": q_tile,
+        "kv_tile": kv_tile,
+        "softmax_state": state,
+        "scores_tile": scores,
+        "total": total,
+    }
+
+
+def mxu_utilization_estimate(dh: int, block_q: int, block_k: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy for the score matmul tile, assuming a
+    mxu x mxu systolic array processes (block_q x dh) @ (dh x block_k)."""
+    eff_m = min(block_q, mxu) / mxu
+    eff_k = min(dh, mxu) / mxu
+    eff_n = min(block_k, mxu) / mxu
+    return eff_m * eff_k * eff_n

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the fused attention kernel.
+
+This is the CORE correctness signal for Layer 1: kernels/attention.py must
+match this reference bit-for-bit in semantics (allclose in f32) across every
+shape/mask configuration the models use.  pytest + hypothesis sweep the
+space in python/tests/test_kernel.py.
+
+Masking semantics (shared by kernel, reference, and the Rust-side mental
+model):
+  * query i in the current call has absolute position ``qa = pos + i``
+  * key j is visible iff  j <= qa                      (causal)
+  *                 and  j > qa - window  (if windowed) (sliding window)
+Stale KV-cache entries at j > pos + s - 1 are never visible because of the
+causal rule, which is what makes rejection rollback free in the serving
+layer (DESIGN.md section 3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(
+    q: jnp.ndarray,  # [H, S, Dh]
+    k: jnp.ndarray,  # [H, T, Dh]
+    v: jnp.ndarray,  # [H, T, Dh]
+    pos,  # scalar i32: absolute position of q[:, 0]
+    window: int | None = None,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Naive softmax attention with the canonical mask. Returns [H, S, Dh]."""
+    h, s, dh = q.shape
+    t = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("hsd,htd->hst", q, k) * scale  # [H, S, T]
+
+    qa = pos + jnp.arange(s)[:, None]  # [S, 1] absolute query positions
+    kj = jnp.arange(t)[None, :]  # [1, T]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask = mask & (kj <= qa)
+    if window is not None:
+        mask = mask & (kj > qa - window)
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hst,htd->hsd", probs, v)

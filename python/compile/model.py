@@ -1,0 +1,212 @@
+"""Layer-2 model assembly: target VLMs and MASSV drafters.
+
+A target VLM is ``M_p^VLM = (phi_I^p, g_theta^p, M_p)`` (Section 2.2); a
+MASSV drafter is ``M_q^VLM = (phi_I^p, g_psi^q, M_q)`` (Eq. 1) -- it REUSES
+the target's frozen vision encoder and owns a fresh projector sized to the
+SLM's embedding width (Eq. 2).
+
+This module defines the inference entry points that aot.py lowers to HLO
+text (with weights baked as constants) for the Rust runtime:
+
+  prefill_mm     image + prompt -> last-position logits + KV
+  prefill_text   prompt only    -> last-position logits + KV
+  verify         gamma+1 tokens @ pos -> logits for each + KV   (target)
+  decode         1 token @ pos -> logits + KV     (non-speculative baseline)
+  draft_scan     fused on-device draft loop: gamma tokens sampled by
+                 gumbel-max at temperature T (T=0 degenerates to argmax),
+                 returning the raw q-logits the coordinator needs for
+                 stochastic acceptance (Section 2.1).
+
+Sequence layout (multimodal): [visual 0..m-1][text m..m+P_max-1][generation]
+Generation starts at absolute position m + prompt_len.  Text-only models
+drop the visual prefix.  The KV cache is a packed [L, 2, H, T_max, Dh]
+array; stale tail entries are masked by position (see kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import GAMMA, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Parameter bundles
+# ---------------------------------------------------------------------------
+
+
+def init_target_params(cfg: ModelConfig, seed: int) -> dict:
+    return {
+        "vision": nn.init_vision_params(cfg.vision, seed + 1),
+        "proj": nn.init_projector_params(cfg.vision.d_vis, cfg.d_model, seed + 2),
+        "lm": nn.init_lm_params(cfg, seed + 3),
+    }
+
+
+def init_drafter_params(cfg: ModelConfig, target_vision: dict, lm: dict, seed: int) -> dict:
+    """Architectural adaptation (Section 3.1): graft the target's vision
+    encoder, add a randomly initialized projector, keep the SLM backbone."""
+    return {
+        "vision": target_vision,  # shared, frozen
+        "proj": nn.init_projector_params(cfg.vision.d_vis, cfg.d_model, seed),
+        "lm": lm,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding assembly
+# ---------------------------------------------------------------------------
+
+
+def visual_embeds(params: dict, cfg: ModelConfig, image: jnp.ndarray) -> jnp.ndarray:
+    feats = nn.vision_encode(params["vision"], cfg.vision, image)
+    return nn.project_visual(params["proj"], feats)  # [m, d]
+
+
+def token_embeds(params: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return params["lm"]["embed"][ids]
+
+
+# ---------------------------------------------------------------------------
+# Inference entry points (lowered by aot.py; batch = 1)
+# ---------------------------------------------------------------------------
+
+
+def prefill_mm(
+    params: dict,
+    cfg: ModelConfig,
+    image: jnp.ndarray,  # [16, 16, 3] f32
+    prompt_ids: jnp.ndarray,  # [P_max] i32 (padded with <pad>)
+    prompt_len,  # scalar i32
+    *,
+    use_kernel: bool = True,
+):
+    """Multimodal prefill.  Returns (last_logits [V], kv)."""
+    vis = visual_embeds(params, cfg, image)
+    tok = token_embeds(params, prompt_ids)
+    embeds = jnp.concatenate([vis, tok], axis=0)  # [m + P_max, d]
+    kv = nn.empty_kv(cfg)
+    logits, kv = nn.lm_forward_cached(
+        params["lm"], cfg, embeds, kv, 0, use_kernel=use_kernel
+    )
+    last = logits[cfg.n_visual + prompt_len - 1]
+    return last, kv
+
+
+def prefill_text(
+    params: dict,
+    cfg: ModelConfig,
+    prompt_ids: jnp.ndarray,  # [P_max] i32
+    prompt_len,
+    *,
+    use_kernel: bool = True,
+):
+    """Text-only prefill (baseline drafting / Table-3 text-only mode)."""
+    tok = token_embeds(params, prompt_ids)
+    kv = nn.empty_kv(cfg)
+    logits, kv = nn.lm_forward_cached(
+        params["lm"], cfg, tok, kv, 0, use_kernel=use_kernel
+    )
+    last = logits[prompt_len - 1]
+    return last, kv
+
+
+def extend(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [S] i32
+    pos,  # scalar i32
+    kv: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+):
+    """Process S tokens starting at absolute position pos.
+
+    S = gamma+1 -> target verify; S = 1 -> single decode step."""
+    embeds = token_embeds(params, tokens)
+    logits, kv = nn.lm_forward_cached(
+        params["lm"], cfg, embeds, kv, pos, use_kernel=use_kernel
+    )
+    return logits, kv
+
+
+def draft_scan(
+    params: dict,
+    cfg: ModelConfig,
+    last_token,  # scalar i32: last accepted token
+    pos,  # scalar i32: its write position + 1 == first draft position
+    kv: jnp.ndarray,
+    temperature,  # scalar f32 (0 -> greedy)
+    seed,  # scalar u32 (gumbel-max sampling noise)
+    *,
+    gamma: int = GAMMA,
+    use_kernel: bool = True,
+):
+    """Fused on-device draft loop (the key L2/L3 co-design optimization:
+    one PJRT call drafts all gamma tokens instead of gamma round-trips).
+
+    Gumbel-max sampling draws token ~ softmax(logits / T) exactly, so the
+    coordinator's acceptance test (which recomputes q = softmax(logits / T)
+    host-side from the returned raw logits) sees a consistent (token, q)
+    pair -- required for the losslessness guarantee of Section 2.1.
+
+    Returns (tokens [gamma] i32, q_logits [gamma, V] f32, kv')."""
+    key0 = jax.random.PRNGKey(seed)
+    temperature = jnp.asarray(temperature, jnp.float32)
+
+    def step(carry, _):
+        tok, p, kv, key = carry
+        emb = token_embeds(params, tok[None])  # [1, d]
+        logits, kv = nn.lm_forward_cached(
+            params["lm"], cfg, emb, kv, p, use_kernel=use_kernel
+        )
+        lg = logits[0]  # [V] raw logits
+        key, sub = jax.random.split(key)
+        u = jax.random.uniform(sub, lg.shape, minval=1e-7, maxval=1.0 - 1e-7)
+        gumbel = -jnp.log(-jnp.log(u))
+        t_eff = jnp.maximum(temperature, 1e-4)
+        noisy = lg / t_eff + gumbel * (temperature > 0).astype(jnp.float32)
+        ntok = jnp.argmax(noisy).astype(jnp.int32)
+        return (ntok, p + 1, kv, key), (ntok, lg)
+
+    (_, _, kv, _), (tokens, qlogits) = jax.lax.scan(
+        step, (jnp.asarray(last_token, jnp.int32), pos, kv, key0), None, length=gamma
+    )
+    return tokens, qlogits, kv
+
+
+# ---------------------------------------------------------------------------
+# Training forwards (batched, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def train_logits_mm(
+    params: dict,
+    cfg: ModelConfig,
+    images: jnp.ndarray,  # [B, 16, 16, 3]
+    tokens: jnp.ndarray,  # [B, S_txt] i32
+) -> jnp.ndarray:
+    """Batched multimodal forward: [visual m][text S_txt].  Returns logits
+    aligned to text positions: [B, S_txt, V] where logits[:, i] predicts
+    tokens[:, i+1]."""
+    vis = jax.vmap(lambda im: visual_embeds(params, cfg, im))(images)
+    tok = params["lm"]["embed"][tokens]
+    embeds = jnp.concatenate([vis, tok], axis=1)
+    logits = nn.lm_forward_train(params["lm"], cfg, embeds)
+    return logits[:, cfg.n_visual :, :]
+
+
+def train_logits_text(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    tok = params["lm"]["embed"][tokens]
+    return nn.lm_forward_train(params["lm"], cfg, tok)
+
+
+def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray, mask: jnp.ndarray):
+    """Cross-entropy of logits[:, :-1] predicting tokens[:, 1:], weighted by
+    mask[:, 1:] (1.0 on supervised positions).  Eq. 3 / Eq. 5 shape."""
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)

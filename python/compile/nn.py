@@ -1,0 +1,273 @@
+"""Layer-2 building blocks: RMSNorm, RoPE, cached attention, MLP, blocks.
+
+All functions are pure (params are nested dicts of jnp arrays) and written
+unbatched over ``[S, d]`` activations; training vmaps them over the batch
+axis.  The cached-attention path routes through the Layer-1 Pallas kernel
+(``use_kernel=True``, the AOT inference path) or the pure-jnp reference
+(training / oracle path); python/tests/test_model.py asserts the two paths
+agree, which is the L1<->L2 integration contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, VisionConfig
+from .kernels.attention import fused_attention
+from .kernels.ref import attention_reference
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense(rng, d_in, d_out, scale=0.02):
+    w = rng.normal(0.0, scale, size=(d_in, d_out)).astype(np.float32)
+    return {"w": jnp.asarray(w), "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def _block_params(rng, d, h, dh, dff):
+    return {
+        "ln1": {"g": jnp.ones((d,), jnp.float32)},
+        "wq": _dense(rng, d, h * dh),
+        "wk": _dense(rng, d, h * dh),
+        "wv": _dense(rng, d, h * dh),
+        "wo": _dense(rng, h * dh, d),
+        "ln2": {"g": jnp.ones((d,), jnp.float32)},
+        "w1": _dense(rng, d, dff),
+        "w2": _dense(rng, dff, d),
+    }
+
+
+def init_lm_params(cfg: ModelConfig, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "embed": jnp.asarray(
+            rng.normal(0.0, 0.02, size=(cfg.vocab, cfg.d_model)).astype(np.float32)
+        ),
+        "blocks": [
+            _block_params(rng, cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ffn)
+            for _ in range(cfg.n_layers)
+        ],
+        "ln_f": {"g": jnp.ones((cfg.d_model,), jnp.float32)},
+        "head": _dense(rng, cfg.d_model, cfg.vocab),
+    }
+
+
+def init_vision_params(vc: VisionConfig, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "patch": _dense(rng, vc.d_patch, vc.d_vis),
+        "pos": jnp.asarray(
+            rng.normal(0.0, 0.02, size=(vc.n_patches, vc.d_vis)).astype(np.float32)
+        ),
+        "blocks": [
+            _block_params(rng, vc.d_vis, vc.n_heads, vc.d_head, vc.d_ffn)
+            for _ in range(vc.n_layers)
+        ],
+        "ln_f": {"g": jnp.ones((vc.d_vis,), jnp.float32)},
+    }
+
+
+def init_projector_params(d_vis: int, d_model: int, seed: int) -> dict:
+    """LLaVA-style 2-layer MLP projector (Eq. 2: R^{d_vis} -> R^{d_emb^q});
+    randomly initialized per Section 3.1."""
+    rng = np.random.default_rng(seed)
+    return {
+        "fc1": _dense(rng, d_vis, d_model),
+        "fc2": _dense(rng, d_model, d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+# ---------------------------------------------------------------------------
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * p["g"]
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: [H, S, Dh] (Dh even), positions: [S]."""
+    h, s, dh = x.shape
+    half = dh // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def _split_heads(x, h):
+    s, hd = x.shape
+    return x.reshape(s, h, hd // h).transpose(1, 0, 2)  # [H, S, Dh]
+
+
+def _merge_heads(x):
+    h, s, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block with KV cache
+# ---------------------------------------------------------------------------
+
+
+def attn_cached(
+    p: dict,
+    x: jnp.ndarray,  # [S, d]
+    kcache: jnp.ndarray,  # [H, T, Dh]
+    vcache: jnp.ndarray,
+    pos,  # scalar i32: absolute position of x[0]
+    *,
+    n_heads: int,
+    window: int | None,
+    use_kernel: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Project q/k/v, rotate, write the cache at [pos, pos+S), attend.
+
+    Returns (y [S, d], kcache', vcache').  Stale cache entries beyond
+    pos+S-1 are invisible under the causal mask (DESIGN.md section 3)."""
+    s = x.shape[0]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)
+    q = rope(_split_heads(dense(p["wq"], x), n_heads), positions)
+    k = rope(_split_heads(dense(p["wk"], x), n_heads), positions)
+    v = _split_heads(dense(p["wv"], x), n_heads)
+
+    kcache = jax.lax.dynamic_update_slice(kcache, k, (0, pos, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v, (0, pos, 0))
+
+    if use_kernel:
+        out = fused_attention(q, kcache, vcache, pos, window=window)
+    else:
+        out = attention_reference(q, kcache, vcache, pos, window=window)
+    y = dense(p["wo"], _merge_heads(out))
+    return y, kcache, vcache
+
+
+def block_cached(
+    p, x, kcache, vcache, pos, *, n_heads, window, use_kernel
+):
+    a, kcache, vcache = attn_cached(
+        p, rmsnorm(p["ln1"], x), kcache, vcache, pos,
+        n_heads=n_heads, window=window, use_kernel=use_kernel,
+    )
+    x = x + a
+    hmid = gelu(dense(p["w1"], rmsnorm(p["ln2"], x)))
+    x = x + dense(p["w2"], hmid)
+    return x, kcache, vcache
+
+
+def lm_forward_cached(
+    params: dict,
+    cfg: ModelConfig,
+    embeds: jnp.ndarray,  # [S, d] (token and/or visual embeddings)
+    kv: jnp.ndarray,  # [L, 2, H, T, Dh]
+    pos,
+    *,
+    use_kernel: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run all blocks over S new positions, updating the packed KV cache.
+
+    Returns (logits [S, V], kv')."""
+    x = embeds
+    new_kv = []
+    for i, bp in enumerate(params["blocks"]):
+        x, kc, vc = block_cached(
+            bp, x, kv[i, 0], kv[i, 1], pos,
+            n_heads=cfg.n_heads, window=cfg.layer_window(i), use_kernel=use_kernel,
+        )
+        new_kv.append(jnp.stack([kc, vc]))
+    x = rmsnorm(params["ln_f"], x)
+    logits = dense(params["head"], x)
+    return logits, jnp.stack(new_kv)
+
+
+def empty_kv(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.zeros(
+        (cfg.n_layers, 2, cfg.n_heads, cfg.t_max, cfg.d_head), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vision encoder + projector
+# ---------------------------------------------------------------------------
+
+
+def patchify(image: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """[16,16,3] -> [n_patches, patch*patch*3] in raster order."""
+    hh, ww, c = image.shape
+    gh, gw = hh // patch, ww // patch
+    x = image.reshape(gh, patch, gw, patch, c)
+    x = x.transpose(0, 2, 1, 3, 4).reshape(gh * gw, patch * patch * c)
+    return x
+
+
+def vision_encode(vp: dict, vc: VisionConfig, image: jnp.ndarray) -> jnp.ndarray:
+    """Frozen target vision encoder phi_I (Section 3.1): bidirectional
+    transformer over patch embeddings.  Returns [n_patches, d_vis]."""
+    x = dense(vp["patch"], patchify(image, vc.patch)) + vp["pos"]
+    for bp in vp["blocks"]:
+        h = rmsnorm(bp["ln1"], x)
+        q = _split_heads(dense(bp["wq"], h), vc.n_heads)
+        k = _split_heads(dense(bp["wk"], h), vc.n_heads)
+        v = _split_heads(dense(bp["wv"], h), vc.n_heads)
+        out = attention_reference(q, k, v, 0, window=None, causal=False)
+        x = x + dense(bp["wo"], _merge_heads(out))
+        x = x + dense(bp["w2"], gelu(dense(bp["w1"], rmsnorm(bp["ln2"], x))))
+    return rmsnorm(vp["ln_f"], x)
+
+
+def project_visual(pp: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """g_psi: map vision features into the LM embedding space (Eq. 2)."""
+    return dense(pp["fc2"], gelu(dense(pp["fc1"], feats)))
+
+
+# ---------------------------------------------------------------------------
+# Batched training forward (full sequence, no cache)
+# ---------------------------------------------------------------------------
+
+
+def _full_attn_batched(p, x, positions, *, n_heads, window):
+    """x: [B, S, d]; full causal self-attention (training path, jnp only)."""
+
+    def one(xb):
+        q = rope(_split_heads(dense(p["wq"], xb), n_heads), positions)
+        k = rope(_split_heads(dense(p["wk"], xb), n_heads), positions)
+        v = _split_heads(dense(p["wv"], xb), n_heads)
+        out = attention_reference(q, k, v, 0, window=window)
+        return dense(p["wo"], _merge_heads(out))
+
+    return jax.vmap(one)(x)
+
+
+def lm_forward_train(
+    params: dict, cfg: ModelConfig, embeds: jnp.ndarray  # [B, S, d]
+) -> jnp.ndarray:
+    """Training forward over full (padded) sequences.  Returns [B, S, V]."""
+    b, s, _ = embeds.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = embeds
+    for i, bp in enumerate(params["blocks"]):
+        a = _full_attn_batched(
+            bp, rmsnorm(bp["ln1"], x), positions,
+            n_heads=cfg.n_heads, window=cfg.layer_window(i),
+        )
+        x = x + a
+        x = x + dense(bp["w2"], gelu(dense(bp["w1"], rmsnorm(bp["ln2"], x))))
+    x = rmsnorm(params["ln_f"], x)
+    return dense(params["head"], x)

@@ -1,0 +1,141 @@
+"""Self-data distillation: sample responses from the target VLM (Eq. 4).
+
+``y'_i = sample_top-p(p(. | I_i, X_i))`` -- the target generates its own
+training labels for the drafter.  Per the paper, diversity matters (it
+prevents "teacher hacking"): we sample at several temperatures with top-p
+nucleus filtering and emit one distilled example per (prompt, temperature).
+
+Generation is batched and jitted (pure-jnp attention path: the Pallas
+kernel is reserved for the AOT inference artifacts; equality of the two
+paths is asserted by python/tests/test_model.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, shapeworld
+from .config import GEN_MAX, P_MAX, ModelConfig
+
+
+def _pad_prompt(prompt_ids: list[int]) -> tuple[np.ndarray, int]:
+    ids = [shapeworld.BOS_ID] + prompt_ids + [shapeworld.SEP_ID]
+    if len(ids) > P_MAX:
+        raise ValueError(f"prompt too long: {len(ids)}")
+    out = np.full(P_MAX, shapeworld.PAD_ID, dtype=np.int32)
+    out[: len(ids)] = ids
+    return out, len(ids)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _batched_prefill(params, cfg: ModelConfig, images, prompts, lens):
+    return jax.vmap(
+        lambda im, pr, ln: model.prefill_mm(params, cfg, im, pr, ln, use_kernel=False)
+    )(images, prompts, lens)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _batched_step(params, cfg: ModelConfig, tokens, positions, kv):
+    return jax.vmap(
+        lambda t, p, c: model.extend(params, cfg, t[None], p, c, use_kernel=False)
+    )(tokens, positions, kv)
+
+
+def _top_p_sample(
+    logits: np.ndarray, temperature: float, top_p: float, rng: np.random.Generator
+) -> int:
+    """Nucleus sampling on the host (matches rust/src/spec/sampler.rs)."""
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    z = logits / temperature
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    order = np.argsort(-p)
+    csum = np.cumsum(p[order])
+    cut = int(np.searchsorted(csum, top_p) + 1)
+    keep = order[:cut]
+    pk = p[keep] / p[keep].sum()
+    return int(rng.choice(keep, p=pk))
+
+
+def generate_batch(
+    params: dict,
+    cfg: ModelConfig,
+    examples: list[shapeworld.Example],
+    temperature: float,
+    top_p: float,
+    rng: np.random.Generator,
+    max_new: int = GEN_MAX - 1,
+) -> list[list[int]]:
+    """Greedy/top-p generation for a batch of multimodal prompts.
+    Returns generated token id lists (without the trailing <eos>)."""
+    b = len(examples)
+    images = jnp.asarray(np.stack([e.image for e in examples]))
+    padded = [_pad_prompt(e.prompt_ids) for e in examples]
+    prompts = jnp.asarray(np.stack([p for p, _ in padded]))
+    lens = jnp.asarray(np.array([l for _, l in padded], dtype=np.int32))
+
+    last_logits, kv = _batched_prefill(params, cfg, images, prompts, lens)
+    positions = np.array([cfg.n_visual + l for _, l in padded], dtype=np.int32)
+
+    out: list[list[int]] = [[] for _ in range(b)]
+    done = np.zeros(b, dtype=bool)
+    logits_np = np.asarray(last_logits)
+
+    for _ in range(max_new):
+        toks = np.zeros(b, dtype=np.int32)
+        for i in range(b):
+            if done[i]:
+                toks[i] = shapeworld.PAD_ID
+                continue
+            t = _top_p_sample(logits_np[i], temperature, top_p, rng)
+            toks[i] = t
+            if t == shapeworld.EOS_ID:
+                done[i] = True
+            else:
+                out[i].append(t)
+        if done.all():
+            break
+        step_logits, kv = _batched_step(
+            params, cfg, jnp.asarray(toks), jnp.asarray(positions), kv
+        )
+        positions += 1
+        logits_np = np.asarray(step_logits)[:, 0, :]
+    return out
+
+
+def distill_dataset(
+    target_params: dict,
+    target_cfg: ModelConfig,
+    dataset: list[shapeworld.Example],
+    *,
+    temperatures: tuple[float, ...],
+    top_p: float,
+    seed: int,
+    batch_size: int = 64,
+) -> list[shapeworld.Example]:
+    """Create D' = {(I_i, X_i, y'_i)}: same images and instructions, labels
+    replaced by target VLM samples (one pass per temperature)."""
+    rng = np.random.default_rng(seed)
+    distilled: list[shapeworld.Example] = []
+    for temp in temperatures:
+        for i in range(0, len(dataset), batch_size):
+            chunk = dataset[i : i + batch_size]
+            gens = generate_batch(target_params, target_cfg, chunk, temp, top_p, rng)
+            for ex, ids in zip(chunk, gens):
+                if not ids:  # degenerate sample; keep dataset label
+                    ids = ex.answer_ids
+                distilled.append(
+                    shapeworld.Example(
+                        image=ex.image,
+                        prompt_ids=ex.prompt_ids,
+                        answer_ids=ids,
+                        task=ex.task,
+                    )
+                )
+    return distilled

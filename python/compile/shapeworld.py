@@ -1,0 +1,441 @@
+"""Shape-world: the synthetic multimodal universe used for the reproduction.
+
+The paper trains/evaluates on LLaVA-Pretrain-LCS-558K, LLaVA-mix-665K, GQA,
+COCO and LLaVA-Bench.  None of those are available offline, so we substitute
+a procedurally generated world that preserves the property MASSV exploits:
+*visually grounded tokens (colors, shapes, positions) are unpredictable from
+text alone, while function words are predictable*.
+
+Images are 16x16x3 float32 arrays holding a 2x2 grid of colored shape glyphs.
+Captions and QA pairs come from a compositional grammar with multiple
+equivalent phrasings, so a trained target VLM develops idiosyncratic
+phrasing preferences that fixed-label fine-tuning cannot capture but
+self-data distillation (SDViT) can -- the mechanism under test.
+
+Everything is deterministic given a seed.  The same vocabulary is exported
+to artifacts/vocab.json and re-implemented byte-for-byte by the Rust
+tokenizer (rust/src/tokenizer/).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary
+# ---------------------------------------------------------------------------
+
+PAD, BOS, EOS, SEP, IMG = "<pad>", "<bos>", "<eos>", "<sep>", "<img>"
+SPECIALS = [PAD, BOS, EOS, SEP, IMG]
+
+COLORS = ["red", "blue", "green", "yellow", "purple", "orange"]
+SHAPES = ["circle", "square", "triangle", "star", "cross", "heart"]
+POSITIONS = ["top left", "top right", "bottom left", "bottom right"]
+POSITION_WORDS = ["top", "bottom", "left", "right"]
+NUMBER_WORDS = ["zero", "one", "two", "three", "four"]
+
+_CORE_WORDS = [
+    # articles / function words
+    "the", "a", "an", "is", "are", "in", "on", "and", "of", "there",
+    "image", "shows", "picture", "contains", "you", "can", "see",
+    "corner", "it", "its", "this", "that", "with", "has", "empty",
+    # question words
+    "what", "which", "how", "many", "where", "color", "shape", "shapes",
+    "describe", "briefly", "detail", "tell", "me", "about", "visible",
+    "question", "answer", "reasoning", "because", "so", "first", "then",
+    "look", "at", "region", "each", "total", "count", "found", "object",
+    "objects", "located", "no", "yes", "nothing", "scene", "grid",
+    "cell", "cells", "contain", "containing", "colored", "drawn",
+    "explain", "your", "step", "by", "final", "i", "identify", "all",
+    "therefore", "next", "other", "same", "different", "quadrant",
+    "please", "list", "every", "detailed", "comprehensive", "provide",
+    "description", "location",
+    ".", ",", "?", ":",
+]
+
+
+def build_vocab() -> list[str]:
+    """The canonical token list.  Index == token id."""
+    words: list[str] = []
+    words.extend(SPECIALS)
+    words.extend(COLORS)
+    words.extend(SHAPES)
+    words.extend(POSITION_WORDS)
+    words.extend(NUMBER_WORDS)
+    for w in _CORE_WORDS:
+        if w not in words:
+            words.append(w)
+    return words
+
+
+VOCAB = build_vocab()
+TOK2ID = {w: i for i, w in enumerate(VOCAB)}
+VOCAB_SIZE = len(VOCAB)
+PAD_ID, BOS_ID, EOS_ID, SEP_ID, IMG_ID = (TOK2ID[t] for t in SPECIALS)
+
+
+def encode(text: str) -> list[int]:
+    """Word-level encode.  Punctuation must be space-separated by callers;
+    the grammar below always emits canonical spacing."""
+    ids = []
+    for w in text.split():
+        if w not in TOK2ID:
+            raise KeyError(f"OOV word {w!r} (grammar bug)")
+        ids.append(TOK2ID[w])
+    return ids
+
+
+def decode(ids) -> str:
+    return " ".join(VOCAB[int(i)] for i in ids)
+
+
+# ---------------------------------------------------------------------------
+# Images
+# ---------------------------------------------------------------------------
+
+IMG_SIZE = 16
+CELL = 8  # 2x2 grid of 8x8 cells
+
+# 8x8 binary glyphs, hand drawn; distinct under the 4x4 patching used by the
+# vision encoder.
+_GLYPHS = {
+    "circle": [
+        "..####..",
+        ".#....#.",
+        "#......#",
+        "#......#",
+        "#......#",
+        "#......#",
+        ".#....#.",
+        "..####..",
+    ],
+    "square": [
+        "########",
+        "########",
+        "##....##",
+        "##....##",
+        "##....##",
+        "##....##",
+        "########",
+        "########",
+    ],
+    "triangle": [
+        "...##...",
+        "...##...",
+        "..####..",
+        "..####..",
+        ".######.",
+        ".######.",
+        "########",
+        "########",
+    ],
+    "star": [
+        "...#....",
+        "..###...",
+        "#######.",
+        ".#####..",
+        "..###...",
+        ".##.##..",
+        "##...##.",
+        "#.....#.",
+    ],
+    "cross": [
+        "...##...",
+        "...##...",
+        "...##...",
+        "########",
+        "########",
+        "...##...",
+        "...##...",
+        "...##...",
+    ],
+    "heart": [
+        ".##..##.",
+        "########",
+        "########",
+        "########",
+        ".######.",
+        "..####..",
+        "...##...",
+        "........",
+    ],
+}
+
+_RGB = {
+    "red": (1.0, 0.1, 0.1),
+    "blue": (0.1, 0.2, 1.0),
+    "green": (0.1, 0.9, 0.2),
+    "yellow": (1.0, 0.9, 0.1),
+    "purple": (0.7, 0.1, 0.9),
+    "orange": (1.0, 0.55, 0.05),
+}
+
+_CELL_ORIGIN = {  # (row, col) pixel origins of the four quadrants
+    "top left": (0, 0),
+    "top right": (0, CELL),
+    "bottom left": (CELL, 0),
+    "bottom right": (CELL, CELL),
+}
+
+
+@dataclass
+class SceneObject:
+    color: str
+    shape: str
+    position: str  # one of POSITIONS
+
+
+@dataclass
+class Scene:
+    """A fully described image: up to four objects, one per quadrant."""
+
+    objects: list[SceneObject] = field(default_factory=list)
+
+    def occupied(self) -> set[str]:
+        return {o.position for o in self.objects}
+
+    def render(self) -> np.ndarray:
+        img = np.zeros((IMG_SIZE, IMG_SIZE, 3), dtype=np.float32)
+        for obj in self.objects:
+            glyph = _GLYPHS[obj.shape]
+            r0, c0 = _CELL_ORIGIN[obj.position]
+            rgb = _RGB[obj.color]
+            for r in range(CELL):
+                for c in range(CELL):
+                    if glyph[r][c] == "#":
+                        img[r0 + r, c0 + c, :] = rgb
+        return img
+
+
+def random_scene(rng: np.random.Generator, min_objects: int = 1, max_objects: int = 3) -> Scene:
+    n = int(rng.integers(min_objects, max_objects + 1))
+    positions = list(rng.permutation(POSITIONS))[:n]
+    objs = [
+        SceneObject(
+            color=COLORS[int(rng.integers(len(COLORS)))],
+            shape=SHAPES[int(rng.integers(len(SHAPES)))],
+            position=str(p),
+        )
+        for p in positions
+    ]
+    # canonical ordering: raster order of quadrants, so captions are
+    # deterministic functions of the scene
+    order = {p: i for i, p in enumerate(POSITIONS)}
+    objs.sort(key=lambda o: order[o.position])
+    return Scene(objs)
+
+
+# ---------------------------------------------------------------------------
+# Grammar: captions / QA with multiple equivalent phrasings
+# ---------------------------------------------------------------------------
+
+def _obj_phrase(o: SceneObject) -> str:
+    return f"a {o.color} {o.shape} in the {o.position}"
+
+
+def caption(scene: Scene, style: int) -> str:
+    """Three equivalent caption templates.  The target VLM is trained on a
+    mixture of styles; the canonical dataset label is always style 0.  The
+    divergence between what the target *says* and what the dataset *labels*
+    is exactly the distribution gap SDViT closes."""
+    parts = [_obj_phrase(o) for o in scene.objects]
+    if style == 0:
+        body = " and ".join(parts)
+        return f"the image shows {body} ."
+    if style == 1:
+        body = " and ".join(parts)
+        return f"in this picture you can see {body} ."
+    body = " and ".join(parts)
+    return f"the scene contains {body} ."
+
+
+def question_color(scene: Scene, rng: np.random.Generator) -> tuple[str, str]:
+    o = scene.objects[int(rng.integers(len(scene.objects)))]
+    q = f"what color is the {o.shape} ?"
+    a = f"the {o.shape} in the {o.position} is {o.color} ."
+    return q, a
+
+
+def question_shape(scene: Scene, rng: np.random.Generator) -> tuple[str, str]:
+    o = scene.objects[int(rng.integers(len(scene.objects)))]
+    q = f"what shape is in the {o.position} ?"
+    a = f"there is a {o.color} {o.shape} in the {o.position} ."
+    return q, a
+
+
+def question_count(scene: Scene, rng: np.random.Generator) -> tuple[str, str]:
+    color = COLORS[int(rng.integers(len(COLORS)))]
+    n = sum(1 for o in scene.objects if o.color == color)
+    q = f"how many shapes are {color} ?"
+    if n == 0:
+        a = f"there are no {color} shapes in the image ."
+    else:
+        a = f"there are {NUMBER_WORDS[n]} {color} shapes in the image ."
+    return q, a
+
+
+def question_where(scene: Scene, rng: np.random.Generator) -> tuple[str, str]:
+    o = scene.objects[int(rng.integers(len(scene.objects)))]
+    q = f"where is the {o.color} {o.shape} ?"
+    a = f"the {o.color} {o.shape} is located in the {o.position} ."
+    return q, a
+
+
+def gqa_answer(scene: Scene, rng: np.random.Generator) -> tuple[str, str]:
+    """GQA analog: a reasoning-style answer that first enumerates then
+    concludes (mirrors the paper's GQA prompt asking for step-by-step
+    reasoning)."""
+    o = scene.objects[int(rng.integers(len(scene.objects)))]
+    q = f"question : what color is the {o.shape} ? explain your reasoning step by step ."
+    steps = f"first i look at the {o.position} region . i identify a {o.shape} there ."
+    concl = f"therefore the answer is {o.color} ."
+    return q, f"{steps} {concl}"
+
+
+_QA_GENERATORS = [question_color, question_shape, question_count, question_where]
+
+
+def instruct_sample(scene: Scene, rng: np.random.Generator, style: int) -> tuple[str, str]:
+    """LLaVA-Instruct analog: mixture of captioning requests and QA."""
+    kind = int(rng.integers(0, 5))
+    if kind == 0:
+        return "describe the image briefly .", caption(scene, style)
+    if kind == 1:
+        return "tell me about the visible objects .", caption(scene, style)
+    gen = _QA_GENERATORS[int(rng.integers(len(_QA_GENERATORS)))]
+    return gen(scene, rng)
+
+
+COCO_PROMPT = (
+    "describe the image in detail . please provide a comprehensive "
+    "description of every object and its location ."
+)
+WILD_PROMPT = "look at this picture and tell me what you see in the scene ."
+GQA_PREAMBLE = "answer the question with reasoning ."
+
+
+def coco_sample(scene: Scene, style: int) -> tuple[str, str]:
+    return COCO_PROMPT, caption(scene, style)
+
+
+def wild_sample(scene: Scene, rng: np.random.Generator, style: int) -> tuple[str, str]:
+    # open-ended: caption plus one observation sentence
+    o = scene.objects[int(rng.integers(len(scene.objects)))]
+    extra = f"the {o.shape} in the {o.position} is {o.color} ."
+    return WILD_PROMPT, f"{caption(scene, style)} {extra}"
+
+
+TASKS = ["instruct", "wild", "gqa", "coco"]
+
+
+def task_sample(task: str, scene: Scene, rng: np.random.Generator, style: int) -> tuple[str, str]:
+    if task == "instruct":
+        return instruct_sample(scene, rng, style)
+    if task == "wild":
+        return wild_sample(scene, rng, style)
+    if task == "gqa":
+        return gqa_answer(scene, rng)
+    if task == "coco":
+        return coco_sample(scene, style)
+    raise ValueError(f"unknown task {task!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dataset assembly
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Example:
+    image: np.ndarray  # (16,16,3) f32
+    prompt_ids: list[int]
+    answer_ids: list[int]
+    task: str
+
+    def full_ids(self) -> list[int]:
+        """Training sequence: <bos> prompt <sep> answer <eos>."""
+        return [BOS_ID] + self.prompt_ids + [SEP_ID] + self.answer_ids + [EOS_ID]
+
+
+def make_example(task: str, rng: np.random.Generator, style_mix: bool) -> Example:
+    scene = random_scene(rng)
+    style = int(rng.integers(0, 3)) if style_mix else 0
+    prompt, answer = task_sample(task, scene, rng, style)
+    return Example(
+        image=scene.render(),
+        prompt_ids=encode(prompt),
+        answer_ids=encode(answer),
+        task=task,
+    )
+
+
+def make_dataset(
+    n: int,
+    seed: int,
+    tasks: list[str] | None = None,
+    style_mix: bool = True,
+) -> list[Example]:
+    """Deterministic dataset.  ``style_mix=True`` trains the target on all
+    caption phrasings (creating idiosyncrasy); ``style_mix=False`` produces
+    canonical fixed labels (what MASSV-w/o-SDViT fine-tunes on)."""
+    rng = np.random.default_rng(seed)
+    tasks = tasks or TASKS
+    return [make_example(tasks[i % len(tasks)], rng, style_mix) for i in range(n)]
+
+
+def pretrain_pairs(n: int, seed: int) -> list[Example]:
+    """LLaVA-Pretrain analog: pure image->caption pairs for projector
+    pretraining (phase 1).  Prompt is empty: the model learns visual
+    grounding, not instruction following."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        scene = random_scene(rng)
+        style = int(rng.integers(0, 3))
+        out.append(
+            Example(
+                image=scene.render(),
+                prompt_ids=encode("describe the image briefly ."),
+                answer_ids=encode(caption(scene, style)),
+                task="pretrain",
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Export helpers (consumed by the Rust side)
+# ---------------------------------------------------------------------------
+
+def vocab_json() -> str:
+    return json.dumps(
+        {
+            "tokens": VOCAB,
+            "pad_id": PAD_ID,
+            "bos_id": BOS_ID,
+            "eos_id": EOS_ID,
+            "sep_id": SEP_ID,
+            "img_id": IMG_ID,
+        },
+        indent=1,
+    )
+
+
+def eval_set_json(task: str, n: int, seed: int) -> str:
+    """Fixed eval prompts with rendered images, consumed by rust/workload."""
+    rng = np.random.default_rng(seed)
+    items = []
+    for _ in range(n):
+        scene = random_scene(rng)
+        prompt, reference = task_sample(task, scene, rng, style=0)
+        items.append(
+            {
+                "task": task,
+                "prompt": prompt,
+                "reference": reference,
+                "image": [round(float(v), 4) for v in scene.render().reshape(-1)],
+            }
+        )
+    return json.dumps({"task": task, "items": items})

@@ -1,0 +1,306 @@
+"""MASSV two-phase training pipeline (build time only).
+
+Reproduces Section 3.2 end to end, on the shape-world substitution:
+
+  0. Train target VLMs (both families, L and XL) on style-mixed multimodal
+     data -- the analog of the released Qwen2.5-VL / Gemma3 checkpoints.
+     Style mixing gives each target idiosyncratic phrasing preferences, the
+     distribution gap SDViT is designed to close.
+  1. Pretrain text-only SLMs (the paper's off-the-shelf 1.5B/1B drafters)
+     and fine-tune them on text-only transcripts -> ``baseline`` drafter.
+  2. Phase 1 (Eq. 3): multimodal projector pretraining on image-caption
+     pairs, vision encoder + SLM frozen.
+  3. Phase 2:
+       a. fixed-label visual instruction tuning  -> ``massv_wo_sdvit``
+       b. SDViT (Eq. 4-5): fine-tune on responses sampled from the target
+          VLM (top-p, multiple temperatures)     -> ``massv``
+
+Artifacts: pickled parameter checkpoints under artifacts/params/ and the
+Figure-5 loss curves in artifacts/training_curves.json.
+
+Optimizer: hand-written Adam (optax is not available offline).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, selfdistill, shapeworld
+from .config import (
+    ALIGN_TARGET,
+    GEN_MAX,
+    MODELS,
+    P_MAX,
+    TRAIN,
+    ModelConfig,
+)
+
+S_TXT = P_MAX + GEN_MAX  # padded text length of a training sequence
+
+# ---------------------------------------------------------------------------
+# Batching
+# ---------------------------------------------------------------------------
+
+
+def assemble_sequence(ex: shapeworld.Example) -> tuple[np.ndarray, np.ndarray, int]:
+    """[<bos> prompt <sep> answer <eos> <pad>...] plus the supervision mask
+    (answer tokens + <eos>).  Returns (tokens [S_TXT], mask [S_TXT], prompt_len)
+    where prompt_len counts <bos> prompt <sep>."""
+    ids = [shapeworld.BOS_ID] + ex.prompt_ids + [shapeworld.SEP_ID]
+    prompt_len = len(ids)
+    ids = ids + ex.answer_ids + [shapeworld.EOS_ID]
+    if len(ids) > S_TXT:
+        raise ValueError(f"sequence too long: {len(ids)} > {S_TXT}")
+    toks = np.full(S_TXT, shapeworld.PAD_ID, dtype=np.int32)
+    toks[: len(ids)] = ids
+    mask = np.zeros(S_TXT, dtype=np.float32)
+    mask[prompt_len : len(ids)] = 1.0
+    return toks, mask, prompt_len
+
+
+def make_batches(
+    examples: list[shapeworld.Example],
+    batch_size: int,
+    rng: np.random.Generator,
+    *,
+    supervise_all: bool = False,
+    with_images: bool = True,
+):
+    """Yield dict batches.  ``supervise_all`` turns on full-LM supervision
+    (SLM pretraining); otherwise only answer tokens are supervised."""
+    order = rng.permutation(len(examples))
+    for i in range(0, len(examples) - batch_size + 1, batch_size):
+        idx = order[i : i + batch_size]
+        toks, masks, imgs = [], [], []
+        for j in idx:
+            t, m, _ = assemble_sequence(examples[j])
+            if supervise_all:
+                m = (t != shapeworld.PAD_ID).astype(np.float32)
+            toks.append(t)
+            masks.append(m)
+            if with_images:
+                imgs.append(examples[j].image)
+        batch = {
+            "tokens": jnp.asarray(np.stack(toks)),
+            "mask": jnp.asarray(np.stack(masks)),
+        }
+        if with_images:
+            batch["images"] = jnp.asarray(np.stack(imgs))
+        yield batch
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def freeze_scale(grads: dict, trainable: dict[str, bool]) -> dict:
+    """Zero the gradient of frozen top-level components ('vision', 'proj',
+    'lm') -- how the snowflake/flame split of Figure 2 is realized."""
+    return {
+        k: jax.tree.map(lambda g: g if trainable.get(k, True) else jnp.zeros_like(g), sub)
+        for k, sub in grads.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+
+def _loss_mm(params, cfg, batch):
+    logits = model.train_logits_mm(params, cfg, batch["images"], batch["tokens"])
+    return model.next_token_loss(logits, batch["tokens"], batch["mask"])
+
+
+def _loss_text(params, cfg, batch):
+    logits = model.train_logits_text(params, cfg, batch["tokens"])
+    return model.next_token_loss(logits, batch["tokens"], batch["mask"])
+
+
+def train_phase(
+    params: dict,
+    cfg: ModelConfig,
+    examples: list[shapeworld.Example],
+    *,
+    epochs: int,
+    lr: float,
+    multimodal: bool,
+    trainable: dict[str, bool] | None = None,
+    supervise_all: bool = False,
+    seed: int = 0,
+    phase_name: str = "",
+    curves: list | None = None,
+    log_every: int = 10,
+) -> dict:
+    """Generic phase runner used by every stage of the pipeline."""
+    loss_fn = _loss_mm if multimodal else _loss_text
+    trainable = trainable or {}
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+        grads = freeze_scale(grads, trainable)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    it, t0 = 0, time.time()
+    loss = float("nan")
+    batch_size = min(TRAIN.batch_size, len(examples))  # tiny-dataset safety
+    for ep in range(epochs):
+        for batch in make_batches(
+            examples, batch_size, rng,
+            supervise_all=supervise_all, with_images=multimodal,
+        ):
+            params, opt, loss = step(params, opt, batch)
+            if curves is not None and it % log_every == 0:
+                curves.append({"phase": phase_name, "step": it, "loss": float(loss)})
+            it += 1
+    if curves is not None:
+        curves.append({"phase": phase_name, "step": it, "loss": float(loss)})
+    print(f"  [{phase_name}] {it} steps, final loss {float(loss):.4f}, "
+          f"{time.time() - t0:.1f}s", flush=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint I/O
+# ---------------------------------------------------------------------------
+
+
+def save_params(path: str, params: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump(jax.tree.map(np.asarray, params), f)
+
+
+def load_params(path: str) -> dict:
+    with open(path, "rb") as f:
+        return jax.tree.map(jnp.asarray, pickle.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline
+# ---------------------------------------------------------------------------
+
+
+def train_all(outdir: str) -> None:
+    """Train every model in DESIGN.md section 5 and dump checkpoints."""
+    pdir = os.path.join(outdir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    curves: list[dict] = []
+
+    target_data = shapeworld.make_dataset(TRAIN.n_target_train, TRAIN.seed, style_mix=True)
+    pre_pairs = shapeworld.pretrain_pairs(TRAIN.n_pretrain_pairs, TRAIN.seed + 1)
+    ft_data = shapeworld.make_dataset(TRAIN.n_finetune, TRAIN.seed + 2, style_mix=False)
+    text_data = shapeworld.make_dataset(TRAIN.n_text_pretrain, TRAIN.seed + 3, style_mix=True)
+
+    # ---- 0. target VLMs --------------------------------------------------
+    targets: dict[str, dict] = {}
+    for name, cfg in MODELS.items():
+        if cfg.role != "target":
+            continue
+        print(f"training target {name} ({cfg.paper_analog} analog)", flush=True)
+        params = model.init_target_params(cfg, TRAIN.seed + hash(name) % 1000)
+        params = train_phase(
+            params, cfg, target_data,
+            epochs=TRAIN.target_epochs, lr=TRAIN.lr_target, multimodal=True,
+            seed=TRAIN.seed, phase_name=f"target/{name}", curves=curves,
+        )
+        targets[name] = params
+        save_params(os.path.join(pdir, f"target_{name}.pkl"), params)
+
+    # ---- 1. SLM backbones + baseline drafters ----------------------------
+    for dname, align in ALIGN_TARGET.items():
+        cfg = MODELS[dname]
+        tname = align
+        tcfg = MODELS[tname]
+        fam = cfg.family
+        print(f"drafter pipeline for {dname} (family {fam}, target {tname})", flush=True)
+
+        # 1a. text pretraining of the off-the-shelf SLM
+        slm = model.init_target_params(cfg, TRAIN.seed + 77 + hash(dname) % 97)
+        slm = train_phase(
+            slm, cfg, text_data,
+            epochs=TRAIN.target_epochs, lr=TRAIN.lr_target, multimodal=False,
+            trainable={"vision": False, "proj": False, "lm": True},
+            supervise_all=True, seed=TRAIN.seed + 4,
+            phase_name=f"slm_pretrain/{dname}", curves=curves,
+        )
+
+        # 1b. baseline: text-only fine-tune on fixed instruct transcripts
+        # (Gagrani et al. text-only drafting baseline)
+        baseline = {k: v for k, v in slm.items()}
+        baseline = train_phase(
+            baseline, cfg, ft_data,
+            epochs=TRAIN.finetune_epochs, lr=TRAIN.lr_finetune, multimodal=False,
+            trainable={"vision": False, "proj": False, "lm": True},
+            seed=TRAIN.seed + 5, phase_name=f"baseline/{dname}", curves=curves,
+        )
+        save_params(os.path.join(pdir, f"draft_{dname}_baseline.pkl"), baseline)
+
+        # ---- 2. Phase 1: projector pretraining (Eq. 3) --------------------
+        drafter = model.init_drafter_params(
+            cfg, targets[tname]["vision"], slm["lm"], TRAIN.seed + 6
+        )
+        drafter = train_phase(
+            drafter, cfg, pre_pairs,
+            epochs=TRAIN.pretrain_epochs, lr=TRAIN.lr_pretrain, multimodal=True,
+            trainable={"vision": False, "proj": True, "lm": False},
+            seed=TRAIN.seed + 7, phase_name=f"phase1_projector/{dname}", curves=curves,
+        )
+        save_params(os.path.join(pdir, f"draft_{dname}_phase1.pkl"), drafter)
+
+        # ---- 3a. Phase 2 without SDViT: fixed-label fine-tune -------------
+        wo_sdvit = train_phase(
+            dict(drafter), cfg, ft_data,
+            epochs=TRAIN.finetune_epochs, lr=TRAIN.lr_finetune, multimodal=True,
+            trainable={"vision": False, "proj": True, "lm": True},
+            seed=TRAIN.seed + 8, phase_name=f"phase2_fixed/{dname}", curves=curves,
+        )
+        save_params(os.path.join(pdir, f"draft_{dname}_massv_wo_sdvit.pkl"), wo_sdvit)
+
+        # ---- 3b. Phase 2 with SDViT (Eq. 4-5) ------------------------------
+        print(f"  generating self-distilled dataset from {tname}", flush=True)
+        sdd_data = selfdistill.distill_dataset(
+            targets[tname], tcfg, ft_data,
+            temperatures=TRAIN.sdd_temperatures, top_p=TRAIN.sdd_top_p,
+            seed=TRAIN.seed + 9,
+        )
+        massv = train_phase(
+            dict(drafter), cfg, sdd_data,
+            epochs=TRAIN.finetune_epochs, lr=TRAIN.lr_finetune, multimodal=True,
+            trainable={"vision": False, "proj": True, "lm": True},
+            seed=TRAIN.seed + 10, phase_name=f"phase2_sdvit/{dname}", curves=curves,
+        )
+        save_params(os.path.join(pdir, f"draft_{dname}_massv.pkl"), massv)
+
+    with open(os.path.join(outdir, "training_curves.json"), "w") as f:
+        json.dump({"curves": curves}, f)
+    print("training complete", flush=True)

@@ -1,0 +1,113 @@
+"""AOT lowering: HLO text artifacts well-formed, manifest schema stable.
+
+Uses an *untrained* tiny model so the test is fast and independent of the
+full `make artifacts` run; the real artifacts are exercised by the Rust
+integration tests.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, shapeworld as sw
+from compile.config import GAMMA, MODELS, P_MAX
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    outdir = str(tmp_path_factory.mktemp("aot"))
+    cfg = MODELS["qwensim-S"]
+    params = model.init_target_params(cfg, 0)
+    entries = aot.lower_common(params, cfg, "toy", outdir, mm=True)
+    return outdir, cfg, entries
+
+
+def test_all_entry_points_emitted(lowered):
+    outdir, _cfg, entries = lowered
+    assert set(entries) == {"prefill_mm", "prefill_text", "verify", "decode", "draft"}
+    for meta in entries.values():
+        path = os.path.join(outdir, meta["file"])
+        assert os.path.exists(path)
+        assert meta["bytes"] > 1000
+
+
+def test_hlo_text_is_parsable_hlo(lowered):
+    outdir, _cfg, entries = lowered
+    text = open(os.path.join(outdir, entries["verify"]["file"])).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # weights are baked: there must be large constants in the module
+    assert "constant" in text
+
+
+def test_verify_hlo_shapes(lowered):
+    outdir, cfg, entries = lowered
+    text = open(os.path.join(outdir, entries["verify"]["file"])).read()
+    # input: gamma+1 tokens; output tuple (logits [gamma+1, V], kv)
+    assert f"s32[{GAMMA + 1}]" in text
+    assert f"f32[{GAMMA + 1},{cfg.vocab}]" in text
+
+
+def test_prefill_hlo_shapes(lowered):
+    outdir, cfg, entries = lowered
+    text = open(os.path.join(outdir, entries["prefill_mm"]["file"])).read()
+    assert "f32[16,16,3]" in text
+    assert f"s32[{P_MAX}]" in text
+
+
+def test_to_hlo_text_round_trips_numerics():
+    """Lower a toy jax fn and check the HLO text still encodes the same
+    function by reparsing constants (smoke for the interchange format)."""
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[4]" in text
+
+
+def test_manifest_vocab_eval_written(tmp_path, monkeypatch):
+    """Fast end-to-end of aot.main's export stage using pre-seeded params
+    (skips training by planting checkpoints)."""
+    outdir = str(tmp_path / "arts")
+    pdir = os.path.join(outdir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    from compile import train as trainmod
+    from compile.config import ALIGN_TARGET, DRAFT_VARIANTS
+
+    for name, cfg in MODELS.items():
+        if cfg.role == "target":
+            trainmod.save_params(
+                os.path.join(pdir, f"target_{name}.pkl"),
+                model.init_target_params(cfg, 1),
+            )
+    for dname in ALIGN_TARGET:
+        cfg = MODELS[dname]
+        for v in DRAFT_VARIANTS:
+            trainmod.save_params(
+                os.path.join(pdir, f"draft_{dname}_{v}.pkl"),
+                model.init_target_params(cfg, 2),
+            )
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out", outdir, "--skip-train"]
+    )
+    aot.main()
+
+    manifest = json.load(open(os.path.join(outdir, "manifest.json")))
+    assert manifest["schema"] == 1
+    assert manifest["gamma"] == GAMMA
+    assert len(manifest["targets"]) == 4
+    assert len(manifest["drafters"]) == 6
+    baseline = [d for d in manifest["drafters"] if d["variant"] == "baseline"]
+    assert all(not d["multimodal"] for d in baseline)
+    assert all("prefill_mm" not in d["entries"] for d in baseline)
+
+    vocab = json.load(open(os.path.join(outdir, "vocab.json")))
+    assert len(vocab["tokens"]) == sw.VOCAB_SIZE
+    for task in sw.TASKS:
+        ev = json.load(open(os.path.join(outdir, "eval", f"{task}.json")))
+        assert len(ev["items"]) > 0

@@ -1,0 +1,157 @@
+"""Layer-1 correctness: the Pallas fused-attention kernel vs the pure-jnp
+oracle (kernels/ref.py).  This is the CORE correctness signal for the
+kernel; hypothesis sweeps shapes, positions, windows and dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    fused_attention,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import attention_reference
+
+ATOL = 2e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _check(h, s, t, d, pos, window, causal=True, dtype=jnp.float32, atol=ATOL):
+    rng = np.random.default_rng(hash((h, s, t, d, pos, window or 0)) % 2**32)
+    q = _rand(rng, h, s, d).astype(dtype)
+    k = _rand(rng, h, t, d).astype(dtype)
+    v = _rand(rng, h, t, d).astype(dtype)
+    got = fused_attention(q, k, v, pos, window=window, causal=causal)
+    want = attention_reference(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        pos, window=window, causal=causal,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), atol=atol, rtol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# The exact shapes the model zoo uses
+# ---------------------------------------------------------------------------
+
+MODEL_SHAPES = [
+    # (H, S, T, Dh): prefill mm (48 new), verify (6), decode (1), draft step
+    (4, 48, 96, 24),
+    (4, 48, 96, 12),
+    (4, 6, 96, 24),
+    (4, 6, 96, 32),
+    (4, 1, 96, 12),
+    (4, 1, 96, 24),
+    (4, 80, 96, 24),  # full prefill incl. text
+    (4, 96, 96, 32),
+]
+
+
+@pytest.mark.parametrize("h,s,t,d", MODEL_SHAPES)
+@pytest.mark.parametrize("pos", [0, 17, 48])
+@pytest.mark.parametrize("window", [None, 16])
+def test_model_shapes(h, s, t, d, pos, window):
+    if pos + s > t:
+        pos = t - s
+    _check(h, s, t, d, pos, window)
+
+
+def test_non_causal_full_attention():
+    # vision-encoder mode: every key visible
+    _check(4, 16, 32, 12, 0, None, causal=False)
+
+
+def test_decode_last_position():
+    _check(4, 1, 96, 24, 95, None)
+    _check(4, 1, 96, 24, 95, 16)
+
+
+def test_stale_tail_is_invisible():
+    """Entries beyond the causal horizon must not affect the output -- the
+    property that makes speculative rejection rollback-free."""
+    rng = np.random.default_rng(7)
+    h, s, t, d, pos = 4, 6, 96, 24, 40
+    q = _rand(rng, h, s, d)
+    k = _rand(rng, h, t, d)
+    v = _rand(rng, h, t, d)
+    base = fused_attention(q, k, v, pos, window=None)
+    # scribble garbage into the stale tail (positions > pos + s - 1)
+    k2 = k.at[:, pos + s :, :].set(1e3)
+    v2 = v.at[:, pos + s :, :].set(-1e3)
+    got = fused_attention(q, k2, v2, pos, window=None)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(got), atol=0, rtol=0)
+
+
+def test_window_equals_t_matches_global():
+    rng = np.random.default_rng(3)
+    h, s, t, d = 4, 8, 64, 16
+    q, k, v = _rand(rng, h, s, d), _rand(rng, h, t, d), _rand(rng, h, t, d)
+    a = fused_attention(q, k, v, 10, window=t)  # window covers everything
+    b = fused_attention(q, k, v, 10, window=None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_window_one_attends_self_only():
+    rng = np.random.default_rng(4)
+    h, s, t, d = 2, 4, 32, 8
+    q, k, v = _rand(rng, h, s, d), _rand(rng, h, t, d), _rand(rng, h, t, d)
+    out = fused_attention(q, k, v, 5, window=1)
+    # with window 1 each query sees exactly its own position: output == v@pos
+    for i in range(s):
+        np.testing.assert_allclose(
+            np.asarray(out[:, i, :]), np.asarray(v[:, 5 + i, :]), atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    s=st.integers(1, 33),
+    tb=st.integers(1, 3),  # t = 32 * tb (kernel requires block_k multiple)
+    d=st.sampled_from([8, 12, 16, 24]),
+    pos_frac=st.floats(0.0, 1.0),
+    window=st.sampled_from([None, 4, 16, 32]),
+)
+def test_hypothesis_sweep(h, s, tb, d, pos_frac, window):
+    t = 32 * tb
+    s = min(s, t)
+    pos = int(pos_frac * (t - s))
+    _check(h, s, t, d, pos, window)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 16), pos=st.integers(0, 40))
+def test_hypothesis_bf16(s, pos):
+    # bf16 inputs, f32 accumulation; looser tolerance
+    _check(4, s, 64, 16, min(pos, 64 - s), None, dtype=jnp.bfloat16, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# Roofline bookkeeping (structure-level, see EXPERIMENTS.md section Perf)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_within_budget():
+    # a TPU core has ~16 MiB of VMEM; every config we ship must fit easily
+    for h, s, t, d in MODEL_SHAPES:
+        fp = vmem_footprint_bytes(s, t, d, block_q=32, block_k=32)
+        assert fp["total"] < 1 << 20, (h, s, t, d, fp)
+        assert fp["total"] == sum(v for k, v in fp.items() if k != "total")
+
+
+def test_mxu_estimate_monotone_in_tile():
+    lo = mxu_utilization_estimate(dh=16, block_q=16, block_k=16)
+    hi = mxu_utilization_estimate(dh=128, block_q=128, block_k=128)
+    assert 0.0 < lo < hi <= 1.0

@@ -1,0 +1,133 @@
+"""Shape-world data generator: grammar closure, determinism, rendering."""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import shapeworld as sw
+
+
+def test_vocab_has_no_duplicates():
+    assert len(sw.VOCAB) == len(set(sw.VOCAB))
+    assert sw.VOCAB[:5] == sw.SPECIALS
+
+
+def test_encode_decode_roundtrip():
+    s = "the image shows a red circle in the top left ."
+    assert sw.decode(sw.encode(s)) == s
+
+
+def test_encode_rejects_oov():
+    with pytest.raises(KeyError):
+        sw.encode("the flying spaghetti monster")
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), task=st.sampled_from(sw.TASKS))
+def test_grammar_closed_over_vocab(seed, task):
+    """Every sentence the grammar can emit must tokenize (no OOV ever)."""
+    rng = np.random.default_rng(seed)
+    ex = sw.make_example(task, rng, style_mix=True)
+    assert ex.prompt_ids and ex.answer_ids
+    assert all(0 <= i < sw.VOCAB_SIZE for i in ex.full_ids())
+
+
+def test_dataset_deterministic():
+    a = sw.make_dataset(20, seed=5)
+    b = sw.make_dataset(20, seed=5)
+    for x, y in zip(a, b):
+        assert x.prompt_ids == y.prompt_ids
+        assert x.answer_ids == y.answer_ids
+        np.testing.assert_array_equal(x.image, y.image)
+
+
+def test_dataset_seed_changes_content():
+    a = sw.make_dataset(20, seed=5)
+    b = sw.make_dataset(20, seed=6)
+    assert any(x.answer_ids != y.answer_ids for x, y in zip(a, b))
+
+
+def test_render_shape_and_range():
+    rng = np.random.default_rng(0)
+    img = sw.random_scene(rng).render()
+    assert img.shape == (16, 16, 3) and img.dtype == np.float32
+    assert img.min() >= 0.0 and img.max() <= 1.0
+
+
+def test_render_distinguishes_scenes():
+    """Different (color, shape, quadrant) triples must render differently --
+    otherwise visual grounding is unlearnable."""
+    seen = {}
+    for color in sw.COLORS[:3]:
+        for shape in sw.SHAPES[:3]:
+            for posn in sw.POSITIONS[:2]:
+                scene = sw.Scene([sw.SceneObject(color, shape, posn)])
+                key = scene.render().tobytes()
+                assert key not in seen, (color, shape, posn, seen.get(key))
+                seen[key] = (color, shape, posn)
+
+
+def test_empty_quadrants_are_black():
+    scene = sw.Scene([sw.SceneObject("red", "circle", "top left")])
+    img = scene.render()
+    assert img[8:, 8:, :].sum() == 0.0  # bottom right untouched
+
+
+def test_caption_styles_are_distinct_but_consistent():
+    rng = np.random.default_rng(1)
+    scene = sw.random_scene(rng)
+    caps = [sw.caption(scene, s) for s in range(3)]
+    assert len(set(caps)) == 3
+    # all styles describe the same objects in the same order
+    for o in scene.objects:
+        for c in caps:
+            assert f"{o.color} {o.shape}" in c
+
+
+def test_count_question_answer_is_correct():
+    scene = sw.Scene(
+        [
+            sw.SceneObject("red", "circle", "top left"),
+            sw.SceneObject("red", "square", "top right"),
+            sw.SceneObject("blue", "star", "bottom left"),
+        ]
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        q, a = sw.question_count(scene, rng)
+        color = q.split()[4]
+        n = sum(1 for o in scene.objects if o.color == color)
+        if n == 0:
+            assert "no" in a.split()
+        else:
+            assert sw.NUMBER_WORDS[n] in a.split()
+
+
+def test_sequence_budget():
+    """Every generated example must fit the AOT sequence budget."""
+    from compile.config import GEN_MAX, P_MAX
+
+    rng = np.random.default_rng(9)
+    for i in range(400):
+        ex = sw.make_example(sw.TASKS[i % 4], rng, style_mix=True)
+        assert len(ex.prompt_ids) + 2 <= P_MAX, ex.prompt_ids
+        assert len(ex.answer_ids) + 1 <= GEN_MAX, ex.answer_ids
+
+
+def test_eval_set_json_schema():
+    blob = json.loads(sw.eval_set_json("coco", 3, seed=1))
+    assert blob["task"] == "coco"
+    assert len(blob["items"]) == 3
+    it = blob["items"][0]
+    assert len(it["image"]) == 16 * 16 * 3
+    sw.encode(it["prompt"])  # must tokenize
+    sw.encode(it["reference"])
+
+
+def test_vocab_json_schema():
+    blob = json.loads(sw.vocab_json())
+    assert blob["tokens"][blob["pad_id"]] == "<pad>"
+    assert blob["tokens"][blob["eos_id"]] == "<eos>"
+    assert len(blob["tokens"]) == sw.VOCAB_SIZE

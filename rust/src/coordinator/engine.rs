@@ -1,0 +1,216 @@
+//! The serving engine: a worker pool draining the scheduler, running
+//! speculative decoding against shared compiled executables.
+//!
+//! PJRT CPU executables are batch-1 (DESIGN.md section 3), so continuous
+//! batching happens at *request* granularity: N workers keep N sequences
+//! in flight, sharing the compiled target/drafter executables (which the
+//! TFRT CPU runtime executes concurrently on its own thread pool).  The
+//! scheduler provides the two-priority admission-controlled queue in
+//! front; the router picks the (target, drafter) pair per request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::request::{DecodeMode, Request, Response};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::{Scheduler, Submit};
+use crate::metrics::Metrics;
+use crate::models::ModelSet;
+use crate::spec::{AdaptiveConfig, AdaptiveDecoder, GenStats, SpecDecoder};
+use crate::tokenizer::Tokenizer;
+
+pub struct EngineConfig {
+    pub default_target: String,
+    pub workers: usize,
+    pub queue_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 4,
+            queue_capacity: 256,
+        }
+    }
+}
+
+struct Job {
+    req: Request,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+pub struct Engine {
+    pub models: Arc<ModelSet>,
+    pub tokenizer: Arc<Tokenizer>,
+    pub metrics: Arc<Metrics>,
+    sched: Arc<Scheduler<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Engine {
+    pub fn start(artifacts_dir: &str, cfg: EngineConfig) -> Result<Engine> {
+        let models = ModelSet::load(artifacts_dir)?;
+        let tokenizer = Arc::new(Tokenizer::load(artifacts_dir)?);
+        let metrics = Arc::new(Metrics::new());
+        let sched = Arc::new(Scheduler::new(cfg.queue_capacity));
+        let router = Arc::new(Router::new(cfg.default_target.clone()));
+
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let models = models.clone();
+            let tokenizer = tokenizer.clone();
+            let metrics = metrics.clone();
+            let sched = sched.clone();
+            let router = router.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("massv-worker-{wid}"))
+                    .spawn(move || {
+                        worker_loop(&models, &tokenizer, &metrics, &sched, &router)
+                    })?,
+            );
+        }
+        Ok(Engine {
+            models,
+            tokenizer,
+            metrics,
+            sched,
+            workers,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    /// Backpressure: a full queue yields an immediate rejected Response.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.requests_received.inc();
+        let id = req.id;
+        let priority = req.priority;
+        let job = Job { req, enqueued: Instant::now(), reply: tx.clone() };
+        match self.sched.submit(job, priority) {
+            Submit::Accepted => {
+                self.metrics.queue_depth.set(self.sched.len() as i64);
+            }
+            Submit::Rejected => {
+                self.metrics.requests_rejected.inc();
+                let _ = tx.send(Response::failure(id, "queue full (backpressure)".into()));
+            }
+        }
+        rx
+    }
+
+    /// Submit and wait (convenience for examples/benches).
+    pub fn run(&self, req: Request) -> Response {
+        let id = req.id;
+        self.submit(req)
+            .recv()
+            .unwrap_or_else(|_| Response::failure(id, "engine shut down".into()))
+    }
+
+    /// Graceful shutdown: drain the queue, then join workers.
+    pub fn shutdown(mut self) {
+        self.sched.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    models: &Arc<ModelSet>,
+    tokenizer: &Tokenizer,
+    metrics: &Arc<Metrics>,
+    sched: &Arc<Scheduler<Job>>,
+    router: &Router,
+) {
+    while let Some(job) = sched.pop() {
+        metrics.queue_depth.set(sched.len() as i64);
+        metrics.inflight.add(1);
+        let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1000.0;
+        let t0 = Instant::now();
+        let resp = match run_request(models, tokenizer, router, &job.req) {
+            Ok(stats) => {
+                let text = tokenizer.decode(
+                    &stats
+                        .tokens
+                        .iter()
+                        .filter(|&&t| t != models.manifest.eos_id)
+                        .map(|&t| t as u32)
+                        .collect::<Vec<_>>(),
+                );
+                metrics.requests_completed.inc();
+                metrics.tokens_generated.add(stats.tokens.len() as u64);
+                metrics.verify_calls.add(stats.verify_calls as u64);
+                metrics.draft_calls.add(stats.draft_calls as u64);
+                metrics.draft_tokens_accepted.add(stats.accepted_draft as u64);
+                metrics.prefill_ms.record(stats.prefill_micros as f64 / 1000.0);
+                if stats.verify_calls > 0 && stats.draft_calls > 0 {
+                    metrics.per_request_mal.record(stats.mal());
+                }
+                let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+                metrics.latency_ms.record(latency_ms);
+                Response {
+                    id: job.req.id,
+                    text,
+                    mal: if stats.draft_calls > 0 { stats.mal() } else { 0.0 },
+                    verify_calls: stats.verify_calls,
+                    accepted_draft: stats.accepted_draft,
+                    finished_by_eos: stats.finished_by_eos,
+                    tokens: stats.tokens,
+                    queue_ms,
+                    latency_ms,
+                    error: None,
+                }
+            }
+            Err(e) => {
+                log::error!("request {} failed: {e:#}", job.req.id);
+                Response::failure(job.req.id, format!("{e:#}"))
+            }
+        };
+        metrics.inflight.add(-1);
+        let _ = job.reply.send(resp);
+    }
+}
+
+/// Resolve the route and run one request to completion.
+fn run_request(
+    models: &Arc<ModelSet>,
+    tokenizer: &Tokenizer,
+    router: &Router,
+    req: &Request,
+) -> Result<GenStats> {
+    let route = router
+        .route(req, &models.manifest)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let target = models.target(&route.target)?;
+    let (prompt_ids, len) = tokenizer.encode_prompt(&req.prompt, models.manifest.p_max)?;
+
+    match (&req.mode, &route.drafter) {
+        (DecodeMode::TargetOnly, _) | (_, None) => {
+            SpecDecoder::generate_baseline(&target, &req.image, &prompt_ids, len, &req.gen)
+        }
+        (DecodeMode::Speculative { adaptive, .. }, Some((dname, variant))) => {
+            let drafter = models.drafter(dname, variant)?;
+            let mut dec = SpecDecoder::new(target, drafter);
+            dec.text_only_draft = route.text_only_draft;
+            if *adaptive {
+                AdaptiveDecoder::new(dec, AdaptiveConfig::default())
+                    .generate(&req.image, &prompt_ids, len, &req.gen)
+            } else {
+                dec.generate(&req.image, &prompt_ids, len, &req.gen)
+            }
+        }
+    }
+}

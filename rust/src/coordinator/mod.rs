@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the paper's serving-system integration.
+//!
+//! MASSV's contribution is a drafting *method*; deploying it requires a
+//! serving coordinator (the paper's Figure-2 "deployment configuration").
+//! This module provides the vLLM-router-shaped stack: request types + FSM,
+//! two-class admission-controlled scheduler, family-aware model router,
+//! and a worker-pool engine over shared compiled executables.
+
+pub mod engine;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{DecodeMode, Priority, Request, Response};
+pub use router::{Route, Router};
+pub use scheduler::{Scheduler, Submit};

@@ -1,0 +1,132 @@
+//! Request/response types and the request lifecycle FSM.
+
+use crate::spec::GenConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// latency-sensitive (chat-style)
+    Interactive,
+    /// throughput-oriented (bulk captioning, evals)
+    Batch,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecodeMode {
+    /// MASSV speculative decoding with the given drafter variant
+    /// ("baseline" | "massv_wo_sdvit" | "massv").  `adaptive` enables the
+    /// acceptance-EMA fallback controller (spec::adaptive).
+    Speculative { variant: String, text_only_draft: bool, adaptive: bool },
+    /// Plain target autoregression (the 1.00x reference).
+    TargetOnly,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// task label (metrics bucketing only)
+    pub task: String,
+    pub prompt: String,
+    /// 16x16x3 row-major image; required (targets are multimodal)
+    pub image: Vec<f32>,
+    /// target model override; empty -> engine default
+    pub target: String,
+    pub mode: DecodeMode,
+    pub gen: GenConfig,
+    pub priority: Priority,
+}
+
+impl Request {
+    pub fn simple(id: u64, prompt: &str, image: Vec<f32>) -> Request {
+        Request {
+            id,
+            task: "adhoc".into(),
+            prompt: prompt.into(),
+            image,
+            target: String::new(),
+            mode: DecodeMode::Speculative {
+                variant: "massv".into(),
+                text_only_draft: false,
+                adaptive: false,
+            },
+            gen: GenConfig::default(),
+            priority: Priority::Interactive,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// mean accepted length for this request (0 for TargetOnly)
+    pub mal: f64,
+    pub verify_calls: usize,
+    pub accepted_draft: usize,
+    pub finished_by_eos: bool,
+    pub queue_ms: f64,
+    pub latency_ms: f64,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn failure(id: u64, err: String) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            tokens: vec![],
+            mal: 0.0,
+            verify_calls: 0,
+            accepted_draft: 0,
+            finished_by_eos: false,
+            queue_ms: 0.0,
+            latency_ms: 0.0,
+            error: Some(err),
+        }
+    }
+}
+
+/// Observability lifecycle (the engine tracks transitions per request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Rejected,
+}
+
+impl Lifecycle {
+    /// Legal transitions of the FSM (property-tested in the scheduler).
+    pub fn can_transition(self, next: Lifecycle) -> bool {
+        use Lifecycle::*;
+        matches!(
+            (self, next),
+            (Queued, Running) | (Queued, Rejected) | (Running, Done) | (Running, Failed)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_legal_transitions() {
+        use Lifecycle::*;
+        assert!(Queued.can_transition(Running));
+        assert!(Queued.can_transition(Rejected));
+        assert!(Running.can_transition(Done));
+        assert!(Running.can_transition(Failed));
+        assert!(!Done.can_transition(Running));
+        assert!(!Rejected.can_transition(Running));
+        assert!(!Queued.can_transition(Done));
+    }
+
+    #[test]
+    fn simple_request_defaults() {
+        let r = Request::simple(7, "hi", vec![0.0; 768]);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert!(matches!(r.mode, DecodeMode::Speculative { .. }));
+    }
+}

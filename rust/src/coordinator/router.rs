@@ -1,0 +1,156 @@
+//! Model routing: resolve a request to a (target, drafter) pair.
+//!
+//! Policy (vLLM-router-style, adapted to the MASSV deployment shape):
+//!   * the request may pin a target; otherwise the engine default is used
+//!   * speculative requests pick the drafter aligned with the target's
+//!     *family* (the paper's generalization result: one drafter serves all
+//!     same-family targets, including larger ones it was never tuned on)
+//!   * unknown variants or missing drafters fall back to TargetOnly rather
+//!     than failing the request (availability over speculation).
+
+use crate::coordinator::request::{DecodeMode, Request};
+use crate::manifest::Manifest;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    pub target: String,
+    /// None -> plain target decoding
+    pub drafter: Option<(String, String)>, // (name, variant)
+    pub text_only_draft: bool,
+}
+
+pub struct Router {
+    pub default_target: String,
+}
+
+impl Router {
+    pub fn new(default_target: impl Into<String>) -> Router {
+        Router { default_target: default_target.into() }
+    }
+
+    pub fn route(&self, req: &Request, manifest: &Manifest) -> Result<Route, String> {
+        let target = if req.target.is_empty() {
+            self.default_target.clone()
+        } else {
+            req.target.clone()
+        };
+        if manifest.target(&target).is_err() {
+            return Err(format!("unknown target model {target:?}"));
+        }
+        match &req.mode {
+            DecodeMode::TargetOnly => Ok(Route { target, drafter: None, text_only_draft: false }),
+            DecodeMode::Speculative { variant, text_only_draft, .. } => {
+                match manifest.drafter_for_target(&target, variant) {
+                    Ok(d) => Ok(Route {
+                        target,
+                        drafter: Some((d.name.clone(), variant.clone())),
+                        text_only_draft: *text_only_draft,
+                    }),
+                    Err(_) => {
+                        log::warn!(
+                            "no {variant:?} drafter for target {target:?}; \
+                             falling back to target-only decoding"
+                        );
+                        Ok(Route { target, drafter: None, text_only_draft: false })
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::manifest::Manifest;
+
+    const TOY: &str = r#"{
+      "schema": 1, "gamma": 5, "t_max": 128, "p_max": 32, "n_visual": 16,
+      "gen_max": 48, "vocab_size": 120, "pad_id": 0, "bos_id": 1,
+      "eos_id": 2, "sep_id": 3, "use_kernel": true,
+      "targets": [
+        {"name": "qwensim-L", "kind": "target", "family": "qwensim",
+         "paper_analog": "x", "d_model": 96, "n_layers": 3, "n_heads": 4,
+         "d_head": 24, "vocab": 120, "window": null,
+         "kv_shape": [3,2,4,128,24], "entries": {}},
+        {"name": "qwensim-XL", "kind": "target", "family": "qwensim",
+         "paper_analog": "x", "d_model": 128, "n_layers": 4, "n_heads": 4,
+         "d_head": 32, "vocab": 120, "window": null,
+         "kv_shape": [4,2,4,128,32], "entries": {}}
+      ],
+      "drafters": [
+        {"name": "qwensim-S", "kind": "draft", "family": "qwensim",
+         "paper_analog": "x", "d_model": 48, "n_layers": 2, "n_heads": 4,
+         "d_head": 12, "vocab": 120, "window": null,
+         "kv_shape": [2,2,4,128,12], "entries": {},
+         "variant": "massv", "aligned_target": "qwensim-L", "multimodal": true}
+      ]
+    }"#;
+
+    fn req(mode: DecodeMode, target: &str) -> Request {
+        let mut r = Request::simple(1, "hi", vec![0.0; 768]);
+        r.mode = mode;
+        r.target = target.to_string();
+        r
+    }
+
+    #[test]
+    fn routes_to_default_target() {
+        let m = Manifest::from_json(TOY).unwrap();
+        let router = Router::new("qwensim-L");
+        let r = router
+            .route(
+                &req(
+                    DecodeMode::Speculative { variant: "massv".into(), text_only_draft: false, adaptive: false },
+                    "",
+                ),
+                &m,
+            )
+            .unwrap();
+        assert_eq!(r.target, "qwensim-L");
+        assert_eq!(r.drafter, Some(("qwensim-S".into(), "massv".into())));
+    }
+
+    #[test]
+    fn family_generalization_xl_uses_same_drafter() {
+        // the paper's section 4.2 experiment: the drafter aligned to the L
+        // target serves the XL target of the same family
+        let m = Manifest::from_json(TOY).unwrap();
+        let router = Router::new("qwensim-L");
+        let r = router
+            .route(
+                &req(
+                    DecodeMode::Speculative { variant: "massv".into(), text_only_draft: false, adaptive: false },
+                    "qwensim-XL",
+                ),
+                &m,
+            )
+            .unwrap();
+        assert_eq!(r.target, "qwensim-XL");
+        assert_eq!(r.drafter, Some(("qwensim-S".into(), "massv".into())));
+    }
+
+    #[test]
+    fn missing_variant_falls_back_to_target_only() {
+        let m = Manifest::from_json(TOY).unwrap();
+        let router = Router::new("qwensim-L");
+        let r = router
+            .route(
+                &req(
+                    DecodeMode::Speculative { variant: "baseline".into(), text_only_draft: false, adaptive: false },
+                    "",
+                ),
+                &m,
+            )
+            .unwrap();
+        assert_eq!(r.drafter, None);
+    }
+
+    #[test]
+    fn unknown_target_is_an_error() {
+        let m = Manifest::from_json(TOY).unwrap();
+        let router = Router::new("qwensim-L");
+        assert!(router.route(&req(DecodeMode::TargetOnly, "nope"), &m).is_err());
+    }
+}

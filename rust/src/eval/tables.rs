@@ -1,0 +1,133 @@
+//! Paper-style table/figure rendering (plain text, fixed width) -- the
+//! bench targets print these so `cargo bench` regenerates the paper's
+//! artifacts as readable console/report output.
+
+use crate::eval::CellResult;
+
+/// Render one Table-1 style block: rows = methods, columns = tasks +
+/// overall, cells = "tau (speedup)".
+pub struct TableBlock {
+    pub title: String,
+    pub columns: Vec<String>,
+    /// (method label, cells aligned with columns)
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl TableBlock {
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let mut label_w = "METHOD".len();
+        for (label, cells) in &self.rows {
+            label_w = label_w.max(label.len());
+            for (i, c) in cells.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!("{:<label_w$}", "METHOD"));
+        for (i, c) in self.columns.iter().enumerate() {
+            out.push_str(&format!("  {:>w$}", c, w = widths[i]));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(label_w + widths.iter().map(|w| w + 2).sum::<usize>()));
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("{:<label_w$}", label));
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("  {:>w$}", c, w = widths[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// "2.46 (1.00x)" cell formatting, paper style.
+pub fn cell(mal: f64, speedup: f64) -> String {
+    if speedup > 0.0 {
+        format!("{mal:.2} ({speedup:.2}x)")
+    } else {
+        format!("{mal:.2}")
+    }
+}
+
+/// Overall row from per-task cells (pooled by iteration counts is done
+/// upstream; this averages the per-task MALs like the paper's OVERALL).
+pub fn overall_mal(cells: &[CellResult]) -> f64 {
+    if cells.is_empty() {
+        return 0.0;
+    }
+    cells.iter().map(|c| c.mal).sum::<f64>() / cells.len() as f64
+}
+
+pub fn overall_wall_speedup(cells: &[CellResult]) -> f64 {
+    let with = cells.iter().filter(|c| c.wall_speedup > 0.0).count();
+    if with == 0 {
+        return 0.0;
+    }
+    cells.iter().map(|c| c.wall_speedup).sum::<f64>() / with as f64
+}
+
+/// ASCII bar chart (Figures 1 and 3).
+pub fn bar_chart(title: &str, bars: &[(String, f64)], unit: &str, width: usize) -> String {
+    let max = bars.iter().map(|(_, v)| *v).fold(0.0f64, f64::max).max(1e-9);
+    let label_w = bars.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = format!("== {title} ==\n");
+    for (label, v) in bars {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<label_w$}  {:>7.3}{unit} |{}\n",
+            label,
+            v,
+            "#".repeat(n)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_block_renders_aligned() {
+        let t = TableBlock {
+            title: "Table 1 (qwensim-L, T=0)".into(),
+            columns: vec!["instruct".into(), "coco".into(), "OVERALL".into()],
+            rows: vec![
+                ("BASELINE".into(), vec!["2.37 (1.00x)".into(), "2.21 (1.00x)".into(), "2.46 (1.00x)".into()]),
+                ("MASSV".into(), vec!["3.21 (1.24x)".into(), "3.26 (1.46x)".into(), "3.20 (1.28x)".into()]),
+            ],
+        };
+        let s = t.render();
+        assert!(s.contains("Table 1"));
+        assert!(s.contains("MASSV"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // columns aligned: every row has same length
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn cell_formats() {
+        assert_eq!(cell(2.455, 1.276), "2.46 (1.28x)");
+        assert_eq!(cell(2.455, 0.0), "2.46");
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            "Fig 1",
+            &[("coco".into(), 1.46), ("gqa".into(), 0.73)],
+            "x",
+            20,
+        );
+        let coco_bar = s.lines().find(|l| l.starts_with("coco")).unwrap();
+        let gqa_bar = s.lines().find(|l| l.starts_with("gqa")).unwrap();
+        let count = |l: &str| l.chars().filter(|&c| c == '#').count();
+        assert_eq!(count(coco_bar), 20);
+        assert_eq!(count(gqa_bar), 10);
+    }
+}

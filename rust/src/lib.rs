@@ -1,0 +1,34 @@
+//! # MASSV — Multimodal Adaptation and Self-Data Distillation for
+//! # Speculative Decoding of Vision-Language Models
+//!
+//! Rust serving layer (Layer 3) of the three-layer reproduction:
+//!
+//! * **L1** `python/compile/kernels/` — Pallas fused-attention kernel
+//!   (build time, lowered into the model HLO).
+//! * **L2** `python/compile/` — JAX model families + the MASSV two-phase
+//!   training pipeline (build time; produces `artifacts/`).
+//! * **L3** this crate — the request path: PJRT runtime, speculative
+//!   decoding engine, coordinator (router/scheduler/worker pool), TCP
+//!   server, workload + evaluation harness.  Python never runs here.
+//!
+//! Quick start (after `make artifacts`):
+//! ```no_run
+//! use massv::coordinator::{Engine, EngineConfig, Request};
+//! let engine = Engine::start("artifacts", EngineConfig::default()).unwrap();
+//! let image = vec![0.0f32; 768]; // 16x16x3
+//! let resp = engine.run(Request::simple(1, "describe the image briefly .", image));
+//! println!("{} (mal {:.2})", resp.text, resp.mal);
+//! ```
+
+pub mod coordinator;
+pub mod eval;
+pub mod manifest;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod server;
+pub mod spec;
+pub mod stats;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,177 @@
+//! `massv` CLI: serve, generate, eval, and inspect the artifact registry.
+//!
+//! Subcommands:
+//!   serve     start the TCP serving front-end
+//!   generate  one-shot generation from the command line
+//!   models    list targets/drafters in the artifact manifest
+//!   eval      quick MAL evaluation of one (target, variant, task) cell
+//!
+//! Common options: --artifacts DIR (or $MASSV_ARTIFACTS), --target NAME.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
+use massv::eval::{eval_cell, tables};
+use massv::models::ModelSet;
+use massv::server::Server;
+use massv::spec::GenConfig;
+use massv::tokenizer::Tokenizer;
+use massv::util::cli::Args;
+use massv::workload;
+
+const USAGE: &str = "\
+massv — multimodal speculative decoding for VLMs (MASSV reproduction)
+
+USAGE:
+  massv serve    [--addr 127.0.0.1:7700] [--target qwensim-L] [--workers N]
+  massv generate --prompt \"describe the image briefly .\" [--task coco]
+                 [--mode massv|massv_wo_sdvit|baseline|target_only]
+                 [--temperature T] [--item N]
+  massv eval     [--target qwensim-L] [--variant massv] [--task coco]
+                 [--temperature 0] [--n 20]
+  massv models
+
+OPTIONS:
+  --artifacts DIR   artifact directory (default: ./artifacts or $MASSV_ARTIFACTS)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["serve", "generate", "eval", "models"]);
+    let artifacts = args
+        .get("artifacts")
+        .map(String::from)
+        .unwrap_or_else(massv::util::artifacts_dir);
+
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&artifacts, &args),
+        Some("generate") => generate(&artifacts, &args),
+        Some("eval") => eval(&artifacts, &args),
+        Some("models") => models(&artifacts),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn engine(artifacts: &str, args: &Args) -> Result<Engine> {
+    Engine::start(
+        artifacts,
+        EngineConfig {
+            default_target: args.get_or("target", "qwensim-L").to_string(),
+            workers: args.get_usize("workers", 4),
+            queue_capacity: args.get_usize("queue", 256),
+        },
+    )
+}
+
+fn serve(artifacts: &str, args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7700");
+    let eng = Arc::new(engine(artifacts, args)?);
+    println!("massv serving on {addr} (target {})", args.get_or("target", "qwensim-L"));
+    Server::new(eng).serve(addr, |a| println!("bound {a}"))
+}
+
+fn load_item(artifacts: &str, task: &str, idx: usize) -> Result<workload::EvalItem> {
+    let tok = Tokenizer::load(artifacts)?;
+    let manifest = massv::manifest::Manifest::load(artifacts)?;
+    let items = workload::load_task(artifacts, task, &tok, manifest.p_max)?;
+    items
+        .into_iter()
+        .nth(idx)
+        .ok_or_else(|| anyhow::anyhow!("item {idx} out of range"))
+}
+
+fn generate(artifacts: &str, args: &Args) -> Result<()> {
+    let task = args.get_or("task", "coco");
+    let item = load_item(artifacts, task, args.get_usize("item", 0))?;
+    let eng = engine(artifacts, args)?;
+    let mode = match args.get_or("mode", "massv") {
+        "target_only" => DecodeMode::TargetOnly,
+        v => DecodeMode::Speculative {
+            variant: v.to_string(),
+            text_only_draft: args.has_flag("text-only-draft"),
+            adaptive: args.has_flag("adaptive"),
+        },
+    };
+    let prompt = args.get("prompt").map(String::from).unwrap_or(item.prompt.clone());
+    let req = Request {
+        id: eng.next_id(),
+        task: task.to_string(),
+        prompt,
+        image: item.image.clone(),
+        target: args.get_or("target", "").to_string(),
+        mode,
+        gen: GenConfig {
+            temperature: args.get_f64("temperature", 0.0) as f32,
+            top_p: args.get_f64("top-p", 1.0) as f32,
+            max_new: args.get_usize("max-new", 48),
+            seed: args.get_usize("seed", 0) as u64,
+        },
+        priority: massv::coordinator::Priority::Interactive,
+    };
+    let resp = eng.run(req);
+    println!("prompt:    {}", item.prompt);
+    println!("reference: {}", item.reference);
+    println!("output:    {}", resp.text);
+    println!(
+        "mal {:.2} | verify calls {} | accepted {} | {:.1} ms",
+        resp.mal, resp.verify_calls, resp.accepted_draft, resp.latency_ms
+    );
+    eng.shutdown();
+    Ok(())
+}
+
+fn eval(artifacts: &str, args: &Args) -> Result<()> {
+    let models = ModelSet::load(artifacts)?;
+    let tok = Tokenizer::load(artifacts)?;
+    let target = args.get_or("target", "qwensim-L");
+    let variant = args.get_or("variant", "massv");
+    let task = args.get_or("task", "coco");
+    let temp = args.get_f64("temperature", 0.0) as f32;
+    let n = args.get_usize("n", 20);
+    let mut items = workload::load_task(artifacts, task, &tok, models.manifest.p_max)?;
+    items.truncate(n);
+    let cell = eval_cell(&models, target, variant, task, &items, temp, false, true)?;
+    println!(
+        "{target} x {variant} on {task} (T={temp}): {}",
+        tables::cell(cell.mal, cell.wall_speedup)
+    );
+    println!(
+        "  modeled speedup {:.2}x | spec {:.0} ms vs base {:.0} ms over {} reqs / {} tokens",
+        cell.model_speedup, cell.spec_decode_ms, cell.base_decode_ms, cell.n_requests, cell.tokens
+    );
+    if args.has_flag("exec-stats") {
+        let mut stats = models.exec_stats();
+        stats.sort_by(|a, b| a.0.cmp(&b.0));
+        for (name, calls, mean_us) in stats {
+            println!("  {name:<40} calls={calls:<6} mean {mean_us:>9.1} us");
+        }
+    }
+    Ok(())
+}
+
+fn models(artifacts: &str) -> Result<()> {
+    let m = massv::manifest::Manifest::load(artifacts)?;
+    println!("targets:");
+    for t in &m.targets {
+        println!(
+            "  {:<12} family={:<8} d={} L={} ({})",
+            t.name, t.family, t.d_model, t.n_layers, t.paper_analog
+        );
+    }
+    println!("drafters:");
+    for d in &m.drafters {
+        println!(
+            "  {:<12} variant={:<16} mm={} aligned_to={} ({})",
+            d.name,
+            d.variant.as_deref().unwrap_or("?"),
+            d.multimodal,
+            d.aligned_target.as_deref().unwrap_or("?"),
+            d.paper_analog
+        );
+    }
+    println!("gamma={} t_max={} vocab={}", m.gamma, m.t_max, m.vocab_size);
+    Ok(())
+}

@@ -1,0 +1,215 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  The manifest enumerates every AOT-lowered executable
+//! (weights are baked into the HLO, so a "model" is just a set of HLO text
+//! files plus shape metadata).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub gamma: usize,
+    pub t_max: usize,
+    pub p_max: usize,
+    pub n_visual: usize,
+    pub gen_max: usize,
+    pub vocab_size: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub sep_id: i32,
+    pub use_kernel: bool,
+    pub targets: Vec<ModelEntry>,
+    pub drafters: Vec<ModelEntry>,
+}
+
+/// One lowered model (target, or one drafter variant).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    pub family: String,
+    pub paper_analog: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    pub window: Option<usize>,
+    pub kv_shape: Vec<usize>,
+    /// entry point name -> HLO file path relative to the artifacts dir
+    pub entries: HashMap<String, String>,
+    // drafter-only fields
+    pub variant: Option<String>,
+    pub aligned_target: Option<String>,
+    pub multimodal: bool,
+}
+
+fn parse_entry(v: &Json) -> Result<ModelEntry> {
+    let entries = v
+        .req("entries")?
+        .as_obj()?
+        .iter()
+        .map(|(k, e)| Ok((k.clone(), e.req("file")?.as_str()?.to_string())))
+        .collect::<Result<HashMap<_, _>>>()?;
+    Ok(ModelEntry {
+        name: v.req("name")?.as_str()?.to_string(),
+        kind: v.req("kind")?.as_str()?.to_string(),
+        family: v.req("family")?.as_str()?.to_string(),
+        paper_analog: v.req("paper_analog")?.as_str()?.to_string(),
+        d_model: v.req("d_model")?.as_usize()?,
+        n_layers: v.req("n_layers")?.as_usize()?,
+        n_heads: v.req("n_heads")?.as_usize()?,
+        d_head: v.req("d_head")?.as_usize()?,
+        vocab: v.req("vocab")?.as_usize()?,
+        window: match v.get("window") {
+            Some(Json::Num(n)) => Some(*n as usize),
+            _ => None,
+        },
+        kv_shape: v
+            .req("kv_shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize().map_err(Into::into))
+            .collect::<Result<_>>()?,
+        entries,
+        variant: v.get("variant").and_then(|x| x.as_str().ok()).map(String::from),
+        aligned_target: v
+            .get("aligned_target")
+            .and_then(|x| x.as_str().ok())
+            .map(String::from),
+        multimodal: v
+            .get("multimodal")
+            .map(|x| x.as_bool().unwrap_or(false))
+            .unwrap_or(true),
+    })
+}
+
+impl Manifest {
+    pub fn from_json(text: &str) -> Result<Manifest> {
+        let v = parse(text)?;
+        let schema = v.req("schema")?.as_i64()?;
+        if schema != 1 {
+            return Err(anyhow!("unsupported manifest schema {schema}"));
+        }
+        Ok(Manifest {
+            gamma: v.req("gamma")?.as_usize()?,
+            t_max: v.req("t_max")?.as_usize()?,
+            p_max: v.req("p_max")?.as_usize()?,
+            n_visual: v.req("n_visual")?.as_usize()?,
+            gen_max: v.req("gen_max")?.as_usize()?,
+            vocab_size: v.req("vocab_size")?.as_usize()?,
+            pad_id: v.req("pad_id")?.as_i64()? as i32,
+            bos_id: v.req("bos_id")?.as_i64()? as i32,
+            eos_id: v.req("eos_id")?.as_i64()? as i32,
+            sep_id: v.req("sep_id")?.as_i64()? as i32,
+            use_kernel: v.req("use_kernel")?.as_bool()?,
+            targets: v
+                .req("targets")?
+                .as_arr()?
+                .iter()
+                .map(parse_entry)
+                .collect::<Result<_>>()?,
+            drafters: v
+                .req("drafters")?
+                .as_arr()?
+                .iter()
+                .map(parse_entry)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn load(artifacts_dir: &str) -> Result<Manifest> {
+        Manifest::from_json(&crate::util::read_file(&format!(
+            "{artifacts_dir}/manifest.json"
+        ))?)
+    }
+
+    pub fn target(&self, name: &str) -> Result<&ModelEntry> {
+        self.targets
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("unknown target model {name:?}"))
+    }
+
+    pub fn drafter(&self, name: &str, variant: &str) -> Result<&ModelEntry> {
+        self.drafters
+            .iter()
+            .find(|d| d.name == name && d.variant.as_deref() == Some(variant))
+            .ok_or_else(|| anyhow!("unknown drafter {name:?} variant {variant:?}"))
+    }
+
+    /// The drafter aligned with (trained against) a given target's family.
+    pub fn drafter_for_target(&self, target: &str, variant: &str) -> Result<&ModelEntry> {
+        let fam = &self.target(target)?.family;
+        self.drafters
+            .iter()
+            .find(|d| &d.family == fam && d.variant.as_deref() == Some(variant))
+            .ok_or_else(|| anyhow!("no {variant:?} drafter for family {fam:?}"))
+    }
+
+    pub fn target_names(&self) -> Vec<&str> {
+        self.targets.iter().map(|t| t.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const TOY: &str = r#"{
+      "schema": 1, "gamma": 5, "t_max": 128, "p_max": 32, "n_visual": 16,
+      "gen_max": 48, "vocab_size": 120, "pad_id": 0, "bos_id": 1,
+      "eos_id": 2, "sep_id": 3, "use_kernel": true,
+      "targets": [
+        {"name": "qwensim-L", "kind": "target", "family": "qwensim",
+         "paper_analog": "Qwen2.5-VL 7B Instruct", "d_model": 96,
+         "n_layers": 3, "n_heads": 4, "d_head": 24, "vocab": 120,
+         "window": null, "kv_shape": [3, 2, 4, 128, 24],
+         "entries": {"verify": {"file": "hlo/t.verify.hlo.txt", "bytes": 10}}}
+      ],
+      "drafters": [
+        {"name": "qwensim-S", "kind": "draft", "family": "qwensim",
+         "paper_analog": "Qwen2.5-1.5B Instruct", "d_model": 48,
+         "n_layers": 2, "n_heads": 4, "d_head": 12, "vocab": 120,
+         "window": null, "kv_shape": [2, 2, 4, 128, 12],
+         "entries": {"draft": {"file": "hlo/d.draft.hlo.txt", "bytes": 10}},
+         "variant": "massv", "aligned_target": "qwensim-L", "multimodal": true}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_toy_manifest() {
+        let m = Manifest::from_json(TOY).unwrap();
+        assert_eq!(m.gamma, 5);
+        assert_eq!(m.targets.len(), 1);
+        let t = m.target("qwensim-L").unwrap();
+        assert_eq!(t.kv_shape, vec![3, 2, 4, 128, 24]);
+        assert_eq!(t.entries["verify"], "hlo/t.verify.hlo.txt");
+        assert!(t.window.is_none());
+        let d = m.drafter("qwensim-S", "massv").unwrap();
+        assert_eq!(d.aligned_target.as_deref(), Some("qwensim-L"));
+        assert!(d.multimodal);
+        assert_eq!(
+            m.drafter_for_target("qwensim-L", "massv").unwrap().name,
+            "qwensim-S"
+        );
+    }
+
+    #[test]
+    fn unknown_lookups_error() {
+        let m = Manifest::from_json(TOY).unwrap();
+        assert!(m.target("nope").is_err());
+        assert!(m.drafter("qwensim-S", "baseline").is_err());
+        assert!(m.drafter_for_target("qwensim-L", "nope").is_err());
+    }
+
+    #[test]
+    fn bad_schema_rejected() {
+        let bad = TOY.replacen("\"schema\": 1", "\"schema\": 9", 1);
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+}

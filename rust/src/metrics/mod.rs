@@ -1,0 +1,228 @@
+//! Serving metrics: counters, gauges, latency histograms with percentile
+//! queries, and a throughput window.  Lock-free where it matters (counters
+//! on the hot path are atomics); histograms take a short mutex only when a
+//! sample is recorded.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exact percentile queries (stores samples; serving
+/// runs here are small enough that this beats maintaining HDR buckets).
+#[derive(Default)]
+pub struct Histogram {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl Histogram {
+    pub fn record(&self, v: f64) {
+        self.samples.lock().unwrap().push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().sum::<f64>() / s.len() as f64
+    }
+
+    /// Exact percentile (nearest-rank).  `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn snapshot(&self) -> Vec<f64> {
+        self.samples.lock().unwrap().clone()
+    }
+}
+
+/// The registry the engine and server expose.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_received: Counter,
+    pub requests_completed: Counter,
+    pub requests_rejected: Counter,
+    pub tokens_generated: Counter,
+    pub draft_tokens_accepted: Counter,
+    pub verify_calls: Counter,
+    pub draft_calls: Counter,
+    pub queue_depth: Gauge,
+    pub inflight: Gauge,
+    pub latency_ms: Histogram,
+    pub prefill_ms: Histogram,
+    pub per_request_mal: Histogram,
+    start: Mutex<Option<Instant>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        let m = Metrics::default();
+        *m.start.lock().unwrap() = Some(Instant::now());
+        m
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.start
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    pub fn throughput_tokens_per_sec(&self) -> f64 {
+        let up = self.uptime_secs();
+        if up <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated.get() as f64 / up
+    }
+
+    /// Aggregate mean accepted length across completed requests.
+    pub fn overall_mal(&self) -> f64 {
+        let v = self.verify_calls.get();
+        if v == 0 {
+            return 0.0;
+        }
+        (self.draft_tokens_accepted.get() + v) as f64 / v as f64
+    }
+
+    /// Render a flat name->value map (the server's `metrics` op).
+    pub fn render(&self) -> HashMap<String, f64> {
+        let mut out = HashMap::new();
+        out.insert("requests_received".into(), self.requests_received.get() as f64);
+        out.insert("requests_completed".into(), self.requests_completed.get() as f64);
+        out.insert("requests_rejected".into(), self.requests_rejected.get() as f64);
+        out.insert("tokens_generated".into(), self.tokens_generated.get() as f64);
+        out.insert("draft_tokens_accepted".into(), self.draft_tokens_accepted.get() as f64);
+        out.insert("verify_calls".into(), self.verify_calls.get() as f64);
+        out.insert("draft_calls".into(), self.draft_calls.get() as f64);
+        out.insert("queue_depth".into(), self.queue_depth.get() as f64);
+        out.insert("inflight".into(), self.inflight.get() as f64);
+        out.insert("latency_ms_p50".into(), self.latency_ms.percentile(50.0));
+        out.insert("latency_ms_p95".into(), self.latency_ms.percentile(95.0));
+        out.insert("latency_ms_p99".into(), self.latency_ms.percentile(99.0));
+        out.insert("latency_ms_mean".into(), self.latency_ms.mean());
+        out.insert("overall_mal".into(), self.overall_mal());
+        out.insert("throughput_tps".into(), self.throughput_tokens_per_sec());
+        out.insert("uptime_secs".into(), self.uptime_secs());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.requests_received.inc();
+        m.requests_received.add(4);
+        assert_eq!(m.requests_received.get(), 5);
+        m.queue_depth.set(3);
+        m.queue_depth.add(-1);
+        assert_eq!(m.queue_depth.get(), 2);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn overall_mal() {
+        let m = Metrics::new();
+        m.verify_calls.add(10);
+        m.draft_tokens_accepted.add(22);
+        assert!((m.overall_mal() - 3.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_keys() {
+        let m = Metrics::new();
+        let r = m.render();
+        assert!(r.contains_key("overall_mal"));
+        assert!(r.contains_key("latency_ms_p99"));
+    }
+
+    #[test]
+    fn histogram_concurrent_records() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::default());
+        let hs: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        h.record((t * 1000 + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in hs {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,0 +1,272 @@
+//! High-level model handles over compiled PJRT executables.
+//!
+//! A `ModelSet` owns the PJRT client plus a lazy cache of compiled entry
+//! points (one executable per HLO artifact; weights are baked in, so
+//! loading a "model" costs one parse+compile per entry point on first use).
+//!
+//! `TargetModel` / `DraftModel` expose the serving-level operations the
+//! speculative decoder composes:
+//!
+//!   target:  prefill_mm -> verify(gamma+1) / decode(1)
+//!   drafter: prefill_mm | prefill_text -> draft(gamma, fused) / decode(1)
+//!
+//! KV caches stay opaque `xla::Literal`s between calls -- the coordinator
+//! never parses them, it just threads them through (DESIGN.md section 3).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::{Manifest, ModelEntry};
+use crate::runtime::tensor::to_vec_i32;
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, scalar_u32, Exec, Runtime, Tensor};
+
+pub const IMAGE_ELEMS: usize = 16 * 16 * 3;
+
+pub struct ModelSet {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub dir: String,
+    execs: Mutex<HashMap<String, Arc<Exec>>>,
+}
+
+impl ModelSet {
+    pub fn load(artifacts_dir: &str) -> Result<Arc<ModelSet>> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Arc::new(ModelSet {
+            rt: Runtime::cpu()?,
+            manifest,
+            dir: artifacts_dir.to_string(),
+            execs: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    /// Fetch (compiling on first use) the executable for one entry point.
+    pub fn exec(&self, entry: &ModelEntry, point: &str) -> Result<Arc<Exec>> {
+        let rel = entry
+            .entries
+            .get(point)
+            .ok_or_else(|| anyhow!("model {} has no entry point {point:?}", entry.name))?;
+        let key = rel.clone();
+        if let Some(e) = self.execs.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        // compile outside the lock (compilation can take hundreds of ms)
+        let path = format!("{}/{}", self.dir, rel);
+        let name = format!("{}::{}", entry.name, point);
+        let exec = Arc::new(self.rt.load_exec(&path, &name)?);
+        let mut cache = self.execs.lock().unwrap();
+        Ok(cache.entry(key).or_insert(exec).clone())
+    }
+
+    pub fn target(self: &Arc<Self>, name: &str) -> Result<TargetModel> {
+        let entry = self.manifest.target(name)?.clone();
+        Ok(TargetModel { set: self.clone(), entry })
+    }
+
+    pub fn drafter(self: &Arc<Self>, name: &str, variant: &str) -> Result<DraftModel> {
+        let entry = self.manifest.drafter(name, variant)?.clone();
+        Ok(DraftModel { set: self.clone(), entry })
+    }
+
+    pub fn drafter_for(self: &Arc<Self>, target: &str, variant: &str) -> Result<DraftModel> {
+        let entry = self.manifest.drafter_for_target(target, variant)?.clone();
+        Ok(DraftModel { set: self.clone(), entry })
+    }
+
+    /// Per-executable latency table (name, calls, mean micros) for metrics.
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        self.execs
+            .lock()
+            .unwrap()
+            .values()
+            .map(|e| (e.name.clone(), e.call_count(), e.mean_micros()))
+            .collect()
+    }
+}
+
+/// Per-sequence decoding state: an opaque device-format KV cache plus the
+/// absolute position where the next token will be written.
+pub struct SeqState {
+    pub kv: xla::Literal,
+    pub pos: i32,
+}
+
+fn prompt_literal(prompt: &[i32], p_max: usize) -> Result<xla::Literal> {
+    if prompt.len() != p_max {
+        return Err(anyhow!("prompt must be padded to {p_max}, got {}", prompt.len()));
+    }
+    lit_i32(prompt, &[p_max])
+}
+
+#[derive(Clone)]
+pub struct TargetModel {
+    pub set: Arc<ModelSet>,
+    pub entry: ModelEntry,
+}
+
+impl TargetModel {
+    pub fn name(&self) -> &str {
+        &self.entry.name
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.entry.vocab
+    }
+
+    /// Multimodal prefill.  Returns last-position logits and the sequence
+    /// state positioned at the first generation slot.
+    pub fn prefill_mm(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)> {
+        if image.len() != IMAGE_ELEMS {
+            return Err(anyhow!("image must have {IMAGE_ELEMS} elems, got {}", image.len()));
+        }
+        let m = &self.set.manifest;
+        let exec = self.set.exec(&self.entry, "prefill_mm")?;
+        let out = exec.call(&[
+            lit_f32(image, &[16, 16, 3])?,
+            prompt_literal(prompt, m.p_max)?,
+            scalar_i32(len as i32),
+        ])?;
+        let logits = crate::runtime::to_vec_f32(&out[0])?;
+        let kv = out.into_iter().nth(1).unwrap();
+        Ok((logits, SeqState { kv, pos: (m.n_visual + len) as i32 }))
+    }
+
+    /// Verify gamma+1 tokens written at `state.pos`.  Returns per-position
+    /// logits [(gamma+1) x V]; the caller advances `state.pos` by the
+    /// number of tokens actually accepted (stale tail is position-masked).
+    pub fn verify(&self, state: &mut SeqState, tokens: &[i32]) -> Result<Tensor> {
+        let gamma1 = self.set.manifest.gamma + 1;
+        if tokens.len() != gamma1 {
+            return Err(anyhow!("verify expects {gamma1} tokens, got {}", tokens.len()));
+        }
+        let exec = self.set.exec(&self.entry, "verify")?;
+        let out = exec.call(&[
+            lit_i32(tokens, &[gamma1])?,
+            scalar_i32(state.pos),
+            state.kv.clone(),
+        ])?;
+        let logits = Tensor::new(
+            crate::runtime::to_vec_f32(&out[0])?,
+            vec![gamma1, self.entry.vocab],
+        )?;
+        state.kv = out.into_iter().nth(1).unwrap();
+        Ok(logits)
+    }
+
+    /// Single-token decode (non-speculative baseline path).  Writes the
+    /// token at `state.pos` and advances it.
+    pub fn decode(&self, state: &mut SeqState, token: i32) -> Result<Vec<f32>> {
+        let exec = self.set.exec(&self.entry, "decode")?;
+        let out = exec.call(&[
+            lit_i32(&[token], &[1])?,
+            scalar_i32(state.pos),
+            state.kv.clone(),
+        ])?;
+        let logits = crate::runtime::to_vec_f32(&out[0])?;
+        state.kv = out.into_iter().nth(1).unwrap();
+        state.pos += 1;
+        Ok(logits)
+    }
+}
+
+/// Tokens + raw q-logits produced by one fused draft call.
+pub struct DraftOutput {
+    pub tokens: Vec<i32>,
+    /// [gamma x V] raw logits; q_i = softmax(logits_i / T).
+    pub qlogits: Tensor,
+}
+
+#[derive(Clone)]
+pub struct DraftModel {
+    pub set: Arc<ModelSet>,
+    pub entry: ModelEntry,
+}
+
+impl DraftModel {
+    pub fn name(&self) -> &str {
+        &self.entry.name
+    }
+
+    pub fn variant(&self) -> &str {
+        self.entry.variant.as_deref().unwrap_or("?")
+    }
+
+    pub fn is_multimodal(&self) -> bool {
+        self.entry.multimodal
+    }
+
+    /// Drafter prefill.  Multimodal drafters consume the image unless
+    /// `text_only` (Table-3 mode: visual tokens discarded); the baseline
+    /// drafter has no multimodal entry point at all.
+    pub fn prefill(
+        &self,
+        image: Option<&[f32]>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState> {
+        let m = &self.set.manifest;
+        let prompt_lit = prompt_literal(prompt, m.p_max)?;
+        if self.entry.multimodal && !text_only {
+            let image = image.ok_or_else(|| anyhow!("multimodal drafter needs an image"))?;
+            let exec = self.set.exec(&self.entry, "prefill_mm")?;
+            let out = exec.call(&[
+                lit_f32(image, &[16, 16, 3])?,
+                prompt_lit,
+                scalar_i32(len as i32),
+            ])?;
+            let kv = out.into_iter().nth(1).unwrap();
+            Ok(SeqState { kv, pos: (m.n_visual + len) as i32 })
+        } else {
+            let exec = self.set.exec(&self.entry, "prefill_text")?;
+            let out = exec.call(&[prompt_lit, scalar_i32(len as i32)])?;
+            let kv = out.into_iter().nth(1).unwrap();
+            Ok(SeqState { kv, pos: len as i32 })
+        }
+    }
+
+    /// Fused on-device draft loop: writes `last` at `state.pos`, samples
+    /// gamma tokens at `temperature` (gumbel-max; T=0 == argmax), returns
+    /// them with their raw q-logits.  Advances pos past `last` only -- the
+    /// caller advances further by the accepted count.
+    pub fn draft(
+        &self,
+        state: &mut SeqState,
+        last: i32,
+        temperature: f32,
+        seed: u32,
+    ) -> Result<DraftOutput> {
+        let gamma = self.set.manifest.gamma;
+        let exec = self.set.exec(&self.entry, "draft")?;
+        let out = exec.call(&[
+            scalar_i32(last),
+            scalar_i32(state.pos),
+            state.kv.clone(),
+            scalar_f32(temperature),
+            scalar_u32(seed),
+        ])?;
+        let tokens = to_vec_i32(&out[0])?;
+        let qlogits = Tensor::new(
+            crate::runtime::to_vec_f32(&out[1])?,
+            vec![gamma, self.entry.vocab],
+        )?;
+        state.kv = out.into_iter().nth(2).unwrap();
+        Ok(DraftOutput { tokens, qlogits })
+    }
+
+    /// Step-wise decode (reference path + TVD distribution analysis).
+    pub fn decode(&self, state: &mut SeqState, token: i32) -> Result<Vec<f32>> {
+        let exec = self.set.exec(&self.entry, "decode")?;
+        let out = exec.call(&[
+            lit_i32(&[token], &[1])?,
+            scalar_i32(state.pos),
+            state.kv.clone(),
+        ])?;
+        let logits = crate::runtime::to_vec_f32(&out[0])?;
+        state.kv = out.into_iter().nth(1).unwrap();
+        state.pos += 1;
+        Ok(logits)
+    }
+}

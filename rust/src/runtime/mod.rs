@@ -1,0 +1,122 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it on the hot path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin):
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute`.  Adapted from /opt/xla-example/load_hlo.
+//!
+//! Design notes
+//! * HLO **text** is the interchange format (64-bit proto ids from jax>=0.5
+//!   are rejected by this XLA version; the text parser reassigns ids).
+//! * Every entry point is lowered with `return_tuple=True`; execution
+//!   returns one tuple buffer that we sync to host and decompose.  The KV
+//!   cache therefore round-trips through host literals -- measured in the
+//!   micro_runtime bench and discussed in EXPERIMENTS.md section Perf.
+//! * PJRT CPU (TFRT) clients and loaded executables are thread-safe in the
+//!   C++ runtime; the `xla` crate just doesn't mark them `Send`/`Sync`
+//!   because they hold raw pointers.  `Exec`/`Runtime` wrap them with
+//!   unsafe impls so the coordinator's worker pool can share compiled
+//!   executables.  Literals are NOT shared across threads.
+
+pub mod tensor;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use tensor::{lit_f32, lit_i32, scalar_f32, scalar_i32, scalar_u32, to_vec_f32, Tensor};
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: the TFRT CPU PjRtClient is internally synchronized; all methods
+// used here (compile, buffer upload) are safe to call concurrently.  See
+// module docs.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it to an executable.
+    pub fn load_exec(&self, path: &str, name: &str) -> Result<Exec> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e}"))?;
+        log::debug!("compiled {name} from {path} in {:?}", t0.elapsed());
+        Ok(Exec {
+            exe,
+            name: name.to_string(),
+            calls: AtomicU64::new(0),
+            exec_nanos: AtomicU64::new(0),
+        })
+    }
+}
+
+/// A compiled entry point.  Tracks call count + cumulative latency for the
+/// metrics endpoint and the section-Perf profiling.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    calls: AtomicU64,
+    exec_nanos: AtomicU64,
+}
+
+// SAFETY: PJRT loaded executables support concurrent Execute calls; the
+// underlying TFRT CPU executable is immutable after compilation.
+unsafe impl Send for Exec {}
+unsafe impl Sync for Exec {}
+
+impl Exec {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn call(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let mut lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("syncing output of {}: {e}", self.name))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing output of {}: {e}", self.name))?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(parts)
+    }
+
+    pub fn call_count(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative wall time spent inside `call` (nanoseconds).
+    pub fn total_nanos(&self) -> u64 {
+        self.exec_nanos.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        let c = self.call_count();
+        if c == 0 {
+            0.0
+        } else {
+            self.total_nanos() as f64 / c as f64 / 1000.0
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Literal construction/extraction helpers for the PJRT boundary.
+
+use anyhow::{anyhow, Result};
+
+/// A plain host tensor (f32, row-major) -- what the coordinator reasons
+/// about; converted to/from `xla::Literal` at the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: Vec<usize>) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} wants {n} elems, got {}", dims, data.len()));
+        }
+        Ok(Tensor { data, dims })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { data: vec![0.0; n], dims }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.dims.len(), 2);
+        let w = self.dims[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        lit_f32(&self.data, &self.dims)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Tensor { data: to_vec_f32(lit)?, dims })
+    }
+}
+
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape f32{dims:?}: {e}"))
+}
+
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape i32{dims:?}: {e}"))
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_u32(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32 vec: {e}"))
+}
+
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32 vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![1.0; 6], vec![2, 3]).is_ok());
+        assert!(Tensor::new(vec![1.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[test]
+    fn tensor_row() {
+        let t = Tensor::new((0..6).map(|x| x as f32).collect(), vec![2, 3]).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), vec![2, 3, 4]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_literal_round_trip() {
+        let lit = lit_i32(&[1, -2, 3, 4], &[4]).unwrap();
+        assert_eq!(to_vec_i32(&lit).unwrap(), vec![1, -2, 3, 4]);
+    }
+}

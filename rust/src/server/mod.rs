@@ -1,0 +1,153 @@
+//! TCP serving front-end: newline-delimited JSON over a plain socket.
+//!
+//! `tokio` is not in the offline vendored set (DESIGN.md section 2), so the
+//! server is thread-per-connection over `std::net` -- entirely adequate for
+//! the request rates this testbed sustains, and it keeps the request path
+//! free of any Python.
+//!
+//! Protocol (one JSON object per line, both directions):
+//!   request:  {"op":"generate", "prompt": str, "image": [f32;768],
+//!              "task"?: str, "target"?: str, "mode"?: "massv"|
+//!              "massv_wo_sdvit"|"baseline"|"target_only",
+//!              "temperature"?: f32, "top_p"?: f32, "max_new"?: int,
+//!              "seed"?: int, "priority"?: "interactive"|"batch",
+//!              "text_only_draft"?: bool}
+//!   request:  {"op":"metrics"}    |    {"op":"ping"}
+//!   response: {"id":n, "text":str, "tokens":[...], "mal":f, ...}
+//!             or {"error": str}
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::Engine;
+use crate::util::json::Json;
+
+pub use protocol::{parse_request, render_metrics, render_response};
+
+pub struct Server {
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(engine: Arc<Engine>) -> Server {
+        Server { stop: Arc::new(AtomicBool::new(false)), engine }
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve until the stop flag is raised.  Returns the bound address via
+    /// the callback (port 0 supported for tests).
+    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?);
+        let mut handles = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log::info!("connection from {peer}");
+                    let engine = self.engine.clone();
+                    let stop = self.stop.clone();
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, &engine, &stop) {
+                            log::debug!("connection {peer} closed: {e:#}");
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<()> {
+    stream.set_nodelay(true)?;
+    // bounded reads so the handler notices the stop flag even while a
+    // client holds the connection open without sending anything
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client closed
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let reply = handle_line(&line, engine);
+                writer.write_all(reply.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // timeout tick: re-check the stop flag
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, engine: &Engine) -> Json {
+    match parse_request(line, engine) {
+        Ok(protocol::Op::Ping) => Json::obj(vec![("ok", Json::Bool(true))]),
+        Ok(protocol::Op::Metrics) => render_metrics(engine),
+        Ok(protocol::Op::Generate(req)) => {
+            let resp = engine.run(req);
+            render_response(&resp)
+        }
+        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    }
+}
+
+/// Minimal blocking client for examples, benches, and integration tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(crate::util::json::parse(&line)?)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("ping"))]))?;
+        Ok(r.get("ok").map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false))
+    }
+}

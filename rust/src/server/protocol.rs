@@ -1,0 +1,159 @@
+//! Wire protocol: JSON <-> request/response mapping.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{DecodeMode, Engine, Priority, Request, Response};
+use crate::spec::GenConfig;
+use crate::util::json::{parse, Json};
+
+pub enum Op {
+    Ping,
+    Metrics,
+    Generate(Request),
+}
+
+pub fn parse_request(line: &str, engine: &Engine) -> Result<Op> {
+    let v = parse(line)?;
+    match v.req("op")?.as_str()? {
+        "ping" => Ok(Op::Ping),
+        "metrics" => Ok(Op::Metrics),
+        "generate" => Ok(Op::Generate(parse_generate(&v, engine)?)),
+        op => Err(anyhow!("unknown op {op:?}")),
+    }
+}
+
+fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
+    let prompt = v.req("prompt")?.as_str()?.to_string();
+    let image = v.req("image")?.to_f32_vec()?;
+    if image.len() != 16 * 16 * 3 {
+        return Err(anyhow!("image must have 768 floats, got {}", image.len()));
+    }
+    let mode = match v.get("mode").and_then(|m| m.as_str().ok()).unwrap_or("massv") {
+        "target_only" => DecodeMode::TargetOnly,
+        variant @ ("massv" | "massv_wo_sdvit" | "baseline") => DecodeMode::Speculative {
+            variant: variant.to_string(),
+            text_only_draft: v
+                .get("text_only_draft")
+                .map(|b| b.as_bool().unwrap_or(false))
+                .unwrap_or(false),
+            adaptive: v
+                .get("adaptive")
+                .map(|b| b.as_bool().unwrap_or(false))
+                .unwrap_or(false),
+        },
+        m => return Err(anyhow!("unknown mode {m:?}")),
+    };
+    let gen = GenConfig {
+        temperature: v.get("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32,
+        top_p: v.get("top_p").map(|t| t.as_f64().unwrap_or(1.0)).unwrap_or(1.0) as f32,
+        max_new: v
+            .get("max_new")
+            .map(|t| t.as_usize().unwrap_or(48))
+            .unwrap_or(48),
+        seed: v.get("seed").map(|t| t.as_i64().unwrap_or(0)).unwrap_or(0) as u64,
+    };
+    let priority = match v.get("priority").and_then(|p| p.as_str().ok()) {
+        Some("batch") => Priority::Batch,
+        _ => Priority::Interactive,
+    };
+    Ok(Request {
+        id: engine.next_id(),
+        task: v
+            .get("task")
+            .and_then(|t| t.as_str().ok())
+            .unwrap_or("adhoc")
+            .to_string(),
+        prompt,
+        image,
+        target: v
+            .get("target")
+            .and_then(|t| t.as_str().ok())
+            .unwrap_or("")
+            .to_string(),
+        mode,
+        gen,
+        priority,
+    })
+}
+
+pub fn render_response(r: &Response) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(r.id as f64)),
+        ("text", Json::str(r.text.clone())),
+        ("tokens", Json::arr_i32(&r.tokens)),
+        ("mal", Json::num(r.mal)),
+        ("verify_calls", Json::num(r.verify_calls as f64)),
+        ("accepted_draft", Json::num(r.accepted_draft as f64)),
+        ("finished_by_eos", Json::Bool(r.finished_by_eos)),
+        ("queue_ms", Json::num(r.queue_ms)),
+        ("latency_ms", Json::num(r.latency_ms)),
+    ];
+    if let Some(e) = &r.error {
+        fields.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(fields)
+}
+
+pub fn render_metrics(engine: &Engine) -> Json {
+    let mut fields: Vec<(String, Json)> = engine
+        .metrics
+        .render()
+        .into_iter()
+        .map(|(k, v)| (k, Json::num(v)))
+        .collect();
+    fields.sort_by(|a, b| a.0.cmp(&b.0));
+    let execs = engine.models.exec_stats();
+    let exec_json = Json::Arr(
+        execs
+            .into_iter()
+            .map(|(name, calls, mean_us)| {
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("calls", Json::num(calls as f64)),
+                    ("mean_micros", Json::num(mean_us)),
+                ])
+            })
+            .collect(),
+    );
+    let mut obj: Vec<(String, Json)> = fields;
+    obj.push(("executables".to_string(), exec_json));
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // parse_generate needs an Engine only for next_id(); these tests cover
+    // the pure pieces.  Full protocol round-trips live in tests/server.rs.
+
+    #[test]
+    fn render_response_round_trips() {
+        let r = Response {
+            id: 9,
+            text: "the red circle .".into(),
+            tokens: vec![5, 6, 7, 8],
+            mal: 3.25,
+            verify_calls: 4,
+            accepted_draft: 9,
+            finished_by_eos: true,
+            queue_ms: 0.5,
+            latency_ms: 12.25,
+            error: None,
+        };
+        let j = render_response(&r);
+        let back = parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("id").unwrap().as_i64().unwrap(), 9);
+        assert_eq!(back.get("text").unwrap().as_str().unwrap(), "the red circle .");
+        assert_eq!(back.get("tokens").unwrap().to_i32_vec().unwrap(), vec![5, 6, 7, 8]);
+        assert!((back.get("mal").unwrap().as_f64().unwrap() - 3.25).abs() < 1e-9);
+        assert!(back.get("error").is_none());
+    }
+
+    #[test]
+    fn render_failure_has_error() {
+        let r = Response::failure(1, "boom".into());
+        let j = render_response(&r);
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+}

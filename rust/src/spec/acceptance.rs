@@ -1,0 +1,232 @@
+//! Speculative-decoding acceptance rules (Section 2.1, Leviathan et al.).
+//!
+//! Greedy (T = 0): draft token i is accepted iff it equals the target's
+//! argmax at that position; on rejection the argmax is emitted instead.
+//!
+//! Stochastic (T > 0): draft token x_i ~ q is accepted with probability
+//! min(1, p(x_i)/q(x_i)); on rejection a replacement is drawn from the
+//! residual norm(max(p - q, 0)).  If all gamma drafts are accepted a bonus
+//! token is drawn from the target's distribution at the last position.
+//! This preserves the target's output distribution exactly -- property
+//! tested below (`prop_output_distribution_preserved`).
+
+use crate::runtime::Tensor;
+use crate::spec::sampler;
+use crate::util::rng::Rng;
+
+/// Outcome of verifying one speculation window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    /// How many draft tokens were accepted (0..=gamma).
+    pub accepted: usize,
+    /// The extra target-sampled token: the correction on rejection, or the
+    /// bonus token when everything was accepted.
+    pub next_token: i32,
+    /// True when `next_token` is the bonus (all drafts accepted).
+    pub bonus: bool,
+}
+
+/// Reusable scratch buffers so the hot loop does not allocate.
+#[derive(Default)]
+pub struct Scratch {
+    p: Vec<f32>,
+    q: Vec<f32>,
+    r: Vec<f32>,
+    perm: Vec<u32>,
+}
+
+/// Greedy verification.  `plogits` has gamma+1 rows; row i is the target
+/// distribution conditioned on the prefix ending at draft token i-1.
+pub fn accept_greedy(draft: &[i32], plogits: &Tensor) -> Decision {
+    debug_assert_eq!(plogits.dims[0], draft.len() + 1);
+    for (i, &x) in draft.iter().enumerate() {
+        let best = sampler::argmax(plogits.row(i)) as i32;
+        if x != best {
+            return Decision { accepted: i, next_token: best, bonus: false };
+        }
+    }
+    let bonus = sampler::argmax(plogits.row(draft.len())) as i32;
+    Decision { accepted: draft.len(), next_token: bonus, bonus: true }
+}
+
+/// Stochastic verification at `temperature` with optional nucleus filtering
+/// of the *target* distribution (`top_p`; 1.0 disables).  `qlogits` are the
+/// drafter's raw logits (row i produced draft token i via plain temperature
+/// sampling, so q_i = softmax(qlogits_i / T) exactly).
+#[allow(clippy::too_many_arguments)]
+pub fn accept_stochastic(
+    draft: &[i32],
+    qlogits: &Tensor,
+    plogits: &Tensor,
+    temperature: f32,
+    top_p: f32,
+    rng: &mut Rng,
+    scratch: &mut Scratch,
+) -> Decision {
+    debug_assert_eq!(plogits.dims[0], draft.len() + 1);
+    debug_assert_eq!(qlogits.dims[0], draft.len());
+    if temperature <= 0.0 {
+        return accept_greedy(draft, plogits);
+    }
+    for (i, &x) in draft.iter().enumerate() {
+        sampler::softmax_t(plogits.row(i), temperature, &mut scratch.p);
+        sampler::top_p_filter(&mut scratch.p, top_p, &mut scratch.perm);
+        sampler::softmax_t(qlogits.row(i), temperature, &mut scratch.q);
+        let px = scratch.p[x as usize];
+        let qx = scratch.q[x as usize].max(1e-30);
+        let ratio = (px / qx) as f64;
+        if rng.f64() < ratio {
+            continue; // accepted
+        }
+        sampler::residual(&scratch.p, &scratch.q, &mut scratch.r);
+        let tok = sampler::sample(&scratch.r, rng) as i32;
+        return Decision { accepted: i, next_token: tok, bonus: false };
+    }
+    sampler::softmax_t(plogits.row(draft.len()), temperature, &mut scratch.p);
+    sampler::top_p_filter(&mut scratch.p, top_p, &mut scratch.perm);
+    let tok = sampler::sample(&scratch.p, rng) as i32;
+    Decision { accepted: draft.len(), next_token: tok, bonus: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{propcheck, random_distribution};
+
+    fn tensor(rows: Vec<Vec<f32>>) -> Tensor {
+        let r = rows.len();
+        let c = rows[0].len();
+        Tensor::new(rows.into_iter().flatten().collect(), vec![r, c]).unwrap()
+    }
+
+    #[test]
+    fn greedy_accepts_matching_prefix() {
+        // vocab 3; target argmaxes: [2, 0, 1, 2] over 4 rows
+        let p = tensor(vec![
+            vec![0.0, 0.1, 0.9],
+            vec![0.9, 0.0, 0.1],
+            vec![0.1, 0.8, 0.1],
+            vec![0.0, 0.2, 0.8],
+        ]);
+        // draft matches first two, diverges at third
+        let d = accept_greedy(&[2, 0, 0], &p);
+        assert_eq!(d, Decision { accepted: 2, next_token: 1, bonus: false });
+    }
+
+    #[test]
+    fn greedy_all_accepted_yields_bonus() {
+        let p = tensor(vec![vec![0.0, 1.0], vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let d = accept_greedy(&[1, 0], &p);
+        assert_eq!(d, Decision { accepted: 2, next_token: 1, bonus: true });
+    }
+
+    #[test]
+    fn greedy_immediate_rejection() {
+        let p = tensor(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let d = accept_greedy(&[1], &p);
+        assert_eq!(d, Decision { accepted: 0, next_token: 0, bonus: false });
+    }
+
+    #[test]
+    fn stochastic_identical_distributions_accept_everything() {
+        // when p == q the ratio is 1 -> always accepted
+        let logits = vec![vec![0.5, 1.5, -0.3]; 4];
+        let p = tensor(logits.clone());
+        let q = tensor(logits[..3].to_vec());
+        let mut rng = Rng::seeded(0);
+        let mut s = Scratch::default();
+        for _ in 0..100 {
+            let d = accept_stochastic(&[1, 1, 1], &q, &p, 1.0, 1.0, &mut rng, &mut s);
+            assert_eq!(d.accepted, 3);
+            assert!(d.bonus);
+        }
+    }
+
+    #[test]
+    fn stochastic_temperature_zero_delegates_to_greedy() {
+        let p = tensor(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let q = tensor(vec![vec![0.0, 1.0]]);
+        let mut rng = Rng::seeded(0);
+        let mut s = Scratch::default();
+        let d = accept_stochastic(&[0], &q, &p, 0.0, 1.0, &mut rng, &mut s);
+        assert_eq!(d, accept_greedy(&[0], &p));
+    }
+
+    /// THE speculative-sampling theorem: for a single position, the emitted
+    /// token (draft if accepted, else residual sample) is distributed
+    /// exactly as p, for arbitrary p and q.  We verify empirically.
+    #[test]
+    fn prop_output_distribution_preserved() {
+        propcheck("spec sampling preserves target dist", 12, |rng| {
+            let v = 2 + rng.range(6);
+            let p = random_distribution(rng, v);
+            let q = random_distribution(rng, v);
+            // build logits whose softmax(T=1) equals p and q
+            let plog: Vec<f32> = p.iter().map(|&x| (x.max(1e-9)).ln()).collect();
+            let qlog: Vec<f32> = q.iter().map(|&x| (x.max(1e-9)).ln()).collect();
+            let pt = Tensor::new(
+                plog.iter().chain(plog.iter()).cloned().collect(),
+                vec![2, v],
+            )
+            .unwrap();
+            let qt = Tensor::new(qlog.clone(), vec![1, v]).unwrap();
+            let mut s = Scratch::default();
+            let n = 60_000;
+            let mut counts = vec![0usize; v];
+            for _ in 0..n {
+                // draw the draft token from q, then run acceptance
+                let x = sampler::sample(&q, rng) as i32;
+                let d = accept_stochastic(&[x], &qt, &pt, 1.0, 1.0, rng, &mut s);
+                let emitted = if d.accepted == 1 { x } else { d.next_token };
+                counts[emitted as usize] += 1;
+            }
+            for i in 0..v {
+                let f = counts[i] as f64 / n as f64;
+                let want = p[i] as f64;
+                // generous tolerance: logit round-trip + sampling noise
+                if (f - want).abs() > 0.02 + 0.05 * want {
+                    return Err(format!("token {i}: got {f:.4}, want {want:.4}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_acceptance_rate_increases_with_overlap() {
+        // drafts from q == p should be accepted far more often than drafts
+        // from a disjoint-ish q' -- the mechanism MASSV exploits.
+        propcheck("overlap drives acceptance", 8, |rng| {
+            let v = 8;
+            let p = random_distribution(rng, v);
+            let plog: Vec<f32> = p.iter().map(|&x| (x.max(1e-9)).ln()).collect();
+            let pt = Tensor::new(
+                plog.iter().chain(plog.iter()).cloned().collect(),
+                vec![2, v],
+            )
+            .unwrap();
+            let qt_good = Tensor::new(plog.clone(), vec![1, v]).unwrap();
+            // bad drafter: uniform
+            let qbad = vec![1.0 / v as f32; v];
+            let qt_bad = Tensor::new(vec![0.0; v], vec![1, v]).unwrap();
+            let mut s = Scratch::default();
+            let trials = 4000;
+            let mut acc_good = 0;
+            let mut acc_bad = 0;
+            for _ in 0..trials {
+                let xg = sampler::sample(&p, rng) as i32;
+                if accept_stochastic(&[xg], &qt_good, &pt, 1.0, 1.0, rng, &mut s).accepted == 1 {
+                    acc_good += 1;
+                }
+                let xb = sampler::sample(&qbad, rng) as i32;
+                if accept_stochastic(&[xb], &qt_bad, &pt, 1.0, 1.0, rng, &mut s).accepted == 1 {
+                    acc_bad += 1;
+                }
+            }
+            if acc_good <= acc_bad {
+                return Err(format!("good {acc_good} <= bad {acc_bad}"));
+            }
+            Ok(())
+        });
+    }
+}

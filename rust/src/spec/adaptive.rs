@@ -1,0 +1,272 @@
+//! Adaptive speculation controller (extension beyond the paper).
+//!
+//! Speculation only pays when the drafter is reasonably aligned: each SD
+//! iteration costs one (fused) draft call plus one verify, so with
+//! per-iteration emitted tokens tau and a draft/verify cost ratio c, SD
+//! beats plain decoding iff tau > 1 + c.  The paper fixes gamma = 5 and
+//! always speculates; on hard prompts (or with a badly aligned drafter --
+//! its own Table 2 shows MASSV-w/o-SDViT *regressing* below 1.00x) this
+//! wastes the draft call.  `AdaptiveDecoder` monitors a per-request EMA of
+//! emitted-tokens-per-iteration and falls back to plain target decoding
+//! for the remainder of the request once the EMA drops below a break-even
+//! threshold -- bounding the worst case at approximately plain-decoding
+//! cost while preserving exact losslessness (both paths sample from the
+//! target distribution).
+//!
+//! Tested against scripted mocks below; exercised end-to-end by
+//! examples/ablation_drafting.rs.
+
+use anyhow::Result;
+
+use crate::spec::decoder::{
+    generate_baseline, sample_token, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams,
+    TargetBackend,
+};
+use crate::spec::acceptance::{accept_stochastic, Scratch};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// EMA smoothing factor for emitted-tokens-per-iteration.
+    pub ema_alpha: f64,
+    /// Fall back to plain decoding when the EMA drops below this
+    /// (break-even is 1 + draft_cost_ratio; default assumes c ~ 0.5).
+    pub min_tau: f64,
+    /// Never fall back before this many SD iterations (avoid reacting to
+    /// one unlucky window).
+    pub patience: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { ema_alpha: 0.5, min_tau: 1.5, patience: 3 }
+    }
+}
+
+pub struct AdaptiveDecoder<T: TargetBackend, D: DraftBackend> {
+    pub inner: SpecDecoder<T, D>,
+    pub adaptive: AdaptiveConfig,
+}
+
+impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
+    pub fn new(inner: SpecDecoder<T, D>, adaptive: AdaptiveConfig) -> Self {
+        AdaptiveDecoder { inner, adaptive }
+    }
+
+    /// Speculative generation with fallback.  Mirrors
+    /// `SpecDecoder::generate` but tracks the acceptance EMA and switches
+    /// to target-only decoding mid-request when speculation stops paying.
+    pub fn generate(
+        &self,
+        image: &[f32],
+        prompt: &[i32],
+        len: usize,
+        cfg: &GenConfig,
+    ) -> Result<GenStats> {
+        let p: &SpecParams = &self.inner.params;
+        let eos = p.eos_id;
+        let mut rng = Rng::seeded(cfg.seed);
+        let mut scratch = Scratch::default();
+        let mut stats = GenStats::default();
+        let max_new = cfg.max_new.min(p.gen_max);
+
+        let t0 = Instant::now();
+        let (last_logits, mut tstate) = self.inner.target.prefill(image, prompt, len)?;
+        let mut dstate = self
+            .inner
+            .drafter
+            .prefill(Some(image), prompt, len, self.inner.text_only_draft)?;
+        stats.prefill_micros = t0.elapsed().as_micros() as u64;
+
+        let td = Instant::now();
+        let mut probs = Vec::new();
+        let t0_tok = sample_token(&last_logits, cfg, &mut probs, &mut rng);
+        stats.tokens.push(t0_tok);
+        if t0_tok == eos {
+            stats.finished_by_eos = true;
+            stats.decode_micros = td.elapsed().as_micros() as u64;
+            return Ok(stats);
+        }
+
+        let mut last = t0_tok;
+        let mut ema: Option<f64> = None;
+        let mut speculating = true;
+
+        'outer: while stats.tokens.len() < max_new {
+            if speculating {
+                let seed = rng.next_u32();
+                let out = self.inner.drafter.draft(&mut dstate, last, cfg.temperature, seed)?;
+                stats.draft_calls += 1;
+                let mut vtokens = Vec::with_capacity(p.gamma + 1);
+                vtokens.push(last);
+                vtokens.extend_from_slice(&out.tokens);
+                let plogits = self.inner.target.verify(&mut tstate, &vtokens)?;
+                stats.verify_calls += 1;
+                let dec = accept_stochastic(
+                    &out.tokens, &out.qlogits, &plogits,
+                    cfg.temperature, cfg.top_p, &mut rng, &mut scratch,
+                );
+
+                let mut emitted = 0usize;
+                for &tok in &out.tokens[..dec.accepted] {
+                    stats.tokens.push(tok);
+                    emitted += 1;
+                    if tok == eos {
+                        stats.finished_by_eos = true;
+                        stats.accepted_draft += emitted;
+                        stats.per_iter_emitted.push(emitted);
+                        break 'outer;
+                    }
+                    if stats.tokens.len() >= max_new {
+                        stats.accepted_draft += emitted;
+                        stats.per_iter_emitted.push(emitted);
+                        break 'outer;
+                    }
+                }
+                stats.accepted_draft += emitted;
+                stats.tokens.push(dec.next_token);
+                emitted += 1;
+                stats.per_iter_emitted.push(emitted);
+                if dec.next_token == eos {
+                    stats.finished_by_eos = true;
+                    break;
+                }
+                tstate.pos += 1 + dec.accepted as i32;
+                dstate.pos += 1 + dec.accepted as i32;
+                last = dec.next_token;
+
+                // controller update
+                let a = self.adaptive.ema_alpha;
+                ema = Some(match ema {
+                    None => emitted as f64,
+                    Some(e) => a * emitted as f64 + (1.0 - a) * e,
+                });
+                if stats.verify_calls >= self.adaptive.patience
+                    && ema.unwrap() < self.adaptive.min_tau
+                {
+                    speculating = false;
+                    stats.fallback_at = Some(stats.verify_calls);
+                    // the target cache holds the accepted prefix; continue
+                    // decoding from `last` at tstate.pos (write position)
+                }
+            } else {
+                // plain target decoding for the rest of the request
+                let logits = self.inner.target.decode(&mut tstate, last)?;
+                stats.verify_calls += 1;
+                let tok = sample_token(&logits, cfg, &mut probs, &mut rng);
+                stats.tokens.push(tok);
+                stats.per_iter_emitted.push(1);
+                if tok == eos {
+                    stats.finished_by_eos = true;
+                    break;
+                }
+                last = tok;
+            }
+        }
+        stats.decode_micros = td.elapsed().as_micros() as u64;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::testing::{params, MockDraft, MockTarget};
+
+    fn dec(
+        script: Vec<i32>,
+        dscript: Vec<i32>,
+        acfg: AdaptiveConfig,
+    ) -> AdaptiveDecoder<MockTarget, MockDraft> {
+        AdaptiveDecoder::new(
+            SpecDecoder::with_params(MockTarget::new(script), MockDraft::new(dscript), params()),
+            acfg,
+        )
+    }
+
+    #[test]
+    fn aligned_drafter_never_falls_back() {
+        let script: Vec<i32> = (10..40).chain([2]).collect();
+        let d = dec(script.clone(), script.clone(), AdaptiveConfig::default());
+        let stats = d.generate(&[], &[0; 8], 3, &GenConfig::default()).unwrap();
+        assert_eq!(stats.tokens, script);
+        assert_eq!(stats.fallback_at, None);
+        assert!(stats.mal() > 5.0);
+    }
+
+    #[test]
+    fn hopeless_drafter_triggers_fallback_and_stays_lossless() {
+        let script: Vec<i32> = (10..40).chain([2]).collect();
+        let wrong: Vec<i32> = (50..99).collect();
+        let d = dec(script.clone(), wrong, AdaptiveConfig::default());
+        let stats = d.generate(&[], &[0; 8], 3, &GenConfig::default()).unwrap();
+        assert_eq!(stats.tokens, script, "fallback must preserve the greedy output");
+        assert_eq!(stats.fallback_at, Some(3), "patience=3 iterations of tau=1");
+        // after fallback no more draft calls happen
+        assert_eq!(stats.draft_calls, 3);
+        assert!(stats.verify_calls > 3);
+    }
+
+    #[test]
+    fn fallback_reduces_draft_calls_vs_plain_spec() {
+        let script: Vec<i32> = (10..45).chain([2]).collect();
+        let wrong: Vec<i32> = (50..99).collect();
+        let plain = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(wrong.clone()),
+            params(),
+        );
+        let plain_stats = plain.generate(&[], &[0; 8], 3, &GenConfig::default()).unwrap();
+        let adaptive = dec(script, wrong, AdaptiveConfig::default());
+        let ad_stats = adaptive.generate(&[], &[0; 8], 3, &GenConfig::default()).unwrap();
+        assert_eq!(plain_stats.tokens, ad_stats.tokens);
+        assert!(
+            ad_stats.draft_calls < plain_stats.draft_calls,
+            "adaptive {} vs plain {}",
+            ad_stats.draft_calls,
+            plain_stats.draft_calls
+        );
+    }
+
+    #[test]
+    fn patience_delays_fallback() {
+        let script: Vec<i32> = (10..40).chain([2]).collect();
+        let wrong: Vec<i32> = (50..99).collect();
+        let d = dec(
+            script,
+            wrong,
+            AdaptiveConfig { patience: 7, ..AdaptiveConfig::default() },
+        );
+        let stats = d.generate(&[], &[0; 8], 3, &GenConfig::default()).unwrap();
+        assert_eq!(stats.fallback_at, Some(7));
+    }
+
+    #[test]
+    fn recovering_ema_requires_sustained_agreement() {
+        // drafter agrees on even-indexed windows only -> EMA hovers; with a
+        // high threshold it falls back, with a low one it never does
+        let script: Vec<i32> = (10..60).collect();
+        let mut mixed = script.clone();
+        for i in (0..mixed.len()).step_by(3) {
+            mixed[i] = 99;
+        }
+        let low = dec(
+            script.clone(),
+            mixed.clone(),
+            AdaptiveConfig { min_tau: 1.01, ..Default::default() },
+        );
+        let mut cfg = GenConfig::default();
+        cfg.max_new = 30;
+        let s_low = low.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(s_low.fallback_at, None, "tau ~2 stays above 1.01");
+        let high = dec(
+            script,
+            mixed,
+            AdaptiveConfig { min_tau: 4.5, ..Default::default() },
+        );
+        let s_high = high.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        assert!(s_high.fallback_at.is_some(), "tau ~2 falls below 4.5");
+        assert_eq!(s_low.tokens, s_high.tokens);
+    }
+}

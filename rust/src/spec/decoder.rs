@@ -1,0 +1,532 @@
+//! The speculative decoding engine: drive a (target, drafter) pair through
+//! prefill -> [draft gamma -> verify -> accept]* for one request.
+//!
+//! The decoder is generic over `TargetBackend`/`DraftBackend` so its logic
+//! (EOS handling, budget truncation, MAL accounting, cache-position
+//! bookkeeping) is unit-testable against scripted mocks (`spec::testing`)
+//! without a PJRT runtime; the real `models::{TargetModel, DraftModel}`
+//! implement the same traits over compiled artifacts.
+//!
+//! Position bookkeeping (DESIGN.md section 3): both models keep absolute
+//! positions into their own KV caches.  The drafter only ever *misses* the
+//! target-sampled token of each iteration (correction or bonus), which is
+//! fed to it as `last` on the next draft call -- so both caches stay
+//! consistent without any rollback (stale tails are position-masked).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+use crate::models::{DraftModel, DraftOutput, SeqState, TargetModel};
+use crate::runtime::Tensor;
+use crate::spec::acceptance::{accept_stochastic, Scratch};
+use crate::spec::sampler;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Backend abstraction
+// ---------------------------------------------------------------------------
+
+/// Target-model operations the decoder needs.
+pub trait TargetBackend {
+    fn prefill(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)>;
+    /// Verify gamma+1 tokens written at `st.pos`; returns [(gamma+1) x V]
+    /// logits.  Must NOT advance `st.pos` (the decoder advances by the
+    /// accepted count).
+    fn verify(&self, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor>;
+    /// Single decode step; writes at `st.pos` and advances it.
+    fn decode(&self, st: &mut SeqState, token: i32) -> Result<Vec<f32>>;
+}
+
+/// Drafter operations the decoder needs.
+pub trait DraftBackend {
+    fn prefill(
+        &self,
+        image: Option<&[f32]>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState>;
+    /// Fused gamma-token draft starting from `last` written at `st.pos`.
+    /// Advances `st.pos` past `last` only.
+    fn draft(&self, st: &mut SeqState, last: i32, temperature: f32, seed: u32)
+        -> Result<DraftOutput>;
+}
+
+impl TargetBackend for TargetModel {
+    fn prefill(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)> {
+        self.prefill_mm(image, prompt, len)
+    }
+
+    fn verify(&self, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor> {
+        TargetModel::verify(self, st, tokens)
+    }
+
+    fn decode(&self, st: &mut SeqState, token: i32) -> Result<Vec<f32>> {
+        TargetModel::decode(self, st, token)
+    }
+}
+
+impl DraftBackend for DraftModel {
+    fn prefill(
+        &self,
+        image: Option<&[f32]>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState> {
+        DraftModel::prefill(self, image, prompt, len, text_only)
+    }
+
+    fn draft(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        temperature: f32,
+        seed: u32,
+    ) -> Result<DraftOutput> {
+        DraftModel::draft(self, st, last, temperature, seed)
+    }
+}
+
+/// Decoding-invariant parameters (from the artifact manifest, or synthetic
+/// for tests).
+#[derive(Debug, Clone)]
+pub struct SpecParams {
+    pub gamma: usize,
+    pub eos_id: i32,
+    pub gen_max: usize,
+}
+
+impl SpecParams {
+    pub fn from_manifest(m: &Manifest) -> SpecParams {
+        SpecParams { gamma: m.gamma, eos_id: m.eos_id, gen_max: m.gen_max }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generation config + stats
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub temperature: f32,
+    pub top_p: f32,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { temperature: 0.0, top_p: 1.0, max_new: 48, seed: 0 }
+    }
+}
+
+/// Per-request generation record (everything the eval harness needs).
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    pub tokens: Vec<i32>,
+    /// number of verify (target forward) calls == SD iterations
+    pub verify_calls: usize,
+    pub draft_calls: usize,
+    /// draft tokens accepted, summed over iterations
+    pub accepted_draft: usize,
+    /// tokens emitted per iteration (accepted + the target-sampled one)
+    pub per_iter_emitted: Vec<usize>,
+    pub prefill_micros: u64,
+    pub decode_micros: u64,
+    pub finished_by_eos: bool,
+    /// iteration index at which an adaptive controller abandoned
+    /// speculation (None = stayed speculative throughout)
+    pub fallback_at: Option<usize>,
+}
+
+impl GenStats {
+    /// Mean accepted length tau: tokens emitted per target forward pass
+    /// (accepted drafts + the correction/bonus token), the paper's metric.
+    pub fn mal(&self) -> f64 {
+        if self.verify_calls == 0 {
+            return 0.0;
+        }
+        let emitted: usize = self.per_iter_emitted.iter().sum();
+        emitted as f64 / self.verify_calls as f64
+    }
+
+    pub fn total_micros(&self) -> u64 {
+        self.prefill_micros + self.decode_micros
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The decoder
+// ---------------------------------------------------------------------------
+
+pub struct SpecDecoder<T: TargetBackend = TargetModel, D: DraftBackend = DraftModel> {
+    pub target: T,
+    pub drafter: D,
+    pub params: SpecParams,
+    /// Table-3 mode: run a multimodal drafter with visual tokens discarded.
+    pub text_only_draft: bool,
+}
+
+impl SpecDecoder<TargetModel, DraftModel> {
+    /// Production constructor: parameters come from the artifact manifest.
+    pub fn new(target: TargetModel, drafter: DraftModel) -> Self {
+        let params = SpecParams::from_manifest(&target.set.manifest);
+        SpecDecoder { target, drafter, params, text_only_draft: false }
+    }
+}
+
+impl<T: TargetBackend, D: DraftBackend> SpecDecoder<T, D> {
+    /// Test/extension constructor with explicit backends + params.
+    pub fn with_params(target: T, drafter: D, params: SpecParams) -> Self {
+        SpecDecoder { target, drafter, params, text_only_draft: false }
+    }
+
+    /// Generate with speculative decoding.  `prompt` is padded to p_max;
+    /// `len` is the true prompt length (incl. <bos>/<sep>).
+    pub fn generate(
+        &self,
+        image: &[f32],
+        prompt: &[i32],
+        len: usize,
+        cfg: &GenConfig,
+    ) -> Result<GenStats> {
+        let eos = self.params.eos_id;
+        let mut rng = Rng::seeded(cfg.seed);
+        let mut scratch = Scratch::default();
+        let mut stats = GenStats::default();
+        let max_new = cfg.max_new.min(self.params.gen_max);
+
+        // ---- prefill both models -----------------------------------------
+        let t0 = Instant::now();
+        let (last_logits, mut tstate) = self.target.prefill(image, prompt, len)?;
+        let mut dstate =
+            self.drafter.prefill(Some(image), prompt, len, self.text_only_draft)?;
+        stats.prefill_micros = t0.elapsed().as_micros() as u64;
+
+        // the prefill gives the first token "for free" from the target
+        let td = Instant::now();
+        let mut probs = Vec::new();
+        let t0_tok = sample_token(&last_logits, cfg, &mut probs, &mut rng);
+        stats.tokens.push(t0_tok);
+        if t0_tok == eos {
+            stats.finished_by_eos = true;
+            stats.decode_micros = td.elapsed().as_micros() as u64;
+            return Ok(stats);
+        }
+
+        // ---- speculation loop ---------------------------------------------
+        let mut last = t0_tok;
+        'outer: while stats.tokens.len() < max_new {
+            let seed = rng.next_u32();
+            let out = self.drafter.draft(&mut dstate, last, cfg.temperature, seed)?;
+            stats.draft_calls += 1;
+
+            let mut vtokens = Vec::with_capacity(self.params.gamma + 1);
+            vtokens.push(last);
+            vtokens.extend_from_slice(&out.tokens);
+            let plogits = self.target.verify(&mut tstate, &vtokens)?;
+            stats.verify_calls += 1;
+
+            let dec = accept_stochastic(
+                &out.tokens,
+                &out.qlogits,
+                &plogits,
+                cfg.temperature,
+                cfg.top_p,
+                &mut rng,
+                &mut scratch,
+            );
+
+            // emit accepted prefix (may contain EOS), then the target token
+            let mut emitted = 0usize;
+            for &tok in &out.tokens[..dec.accepted] {
+                stats.tokens.push(tok);
+                emitted += 1;
+                if tok == eos {
+                    stats.finished_by_eos = true;
+                    stats.accepted_draft += emitted;
+                    stats.per_iter_emitted.push(emitted);
+                    break 'outer;
+                }
+                if stats.tokens.len() >= max_new {
+                    stats.accepted_draft += emitted;
+                    stats.per_iter_emitted.push(emitted);
+                    break 'outer;
+                }
+            }
+            stats.accepted_draft += emitted;
+            stats.tokens.push(dec.next_token);
+            emitted += 1;
+            stats.per_iter_emitted.push(emitted);
+            if dec.next_token == eos {
+                stats.finished_by_eos = true;
+                break;
+            }
+
+            // advance both caches past the accepted region:
+            //   target wrote [last, x1..xgamma] at tstate.pos; the accepted
+            //   prefix is last + accepted drafts = 1 + dec.accepted slots
+            tstate.pos += 1 + dec.accepted as i32;
+            //   drafter wrote [last, x1..xgamma-1] at dstate.pos; same
+            //   advance keeps it one token behind the target, by design
+            dstate.pos += 1 + dec.accepted as i32;
+            last = dec.next_token;
+        }
+        stats.decode_micros = td.elapsed().as_micros() as u64;
+        Ok(stats)
+    }
+}
+
+/// Non-speculative target-only decoding (the 1.00x reference for every
+/// speedup number in the paper's tables).
+pub fn generate_baseline<T: TargetBackend>(
+    target: &T,
+    params: &SpecParams,
+    image: &[f32],
+    prompt: &[i32],
+    len: usize,
+    cfg: &GenConfig,
+) -> Result<GenStats> {
+    let eos = params.eos_id;
+    let mut rng = Rng::seeded(cfg.seed);
+    let mut stats = GenStats::default();
+    let max_new = cfg.max_new.min(params.gen_max);
+
+    let t0 = Instant::now();
+    let (mut logits, mut tstate) = target.prefill(image, prompt, len)?;
+    stats.prefill_micros = t0.elapsed().as_micros() as u64;
+
+    let td = Instant::now();
+    let mut probs = Vec::new();
+    loop {
+        let tok = sample_token(&logits, cfg, &mut probs, &mut rng);
+        stats.tokens.push(tok);
+        if tok == eos {
+            stats.finished_by_eos = true;
+            break;
+        }
+        if stats.tokens.len() >= max_new {
+            break;
+        }
+        logits = target.decode(&mut tstate, tok)?;
+        stats.verify_calls += 1; // one target forward per token
+    }
+    stats.decode_micros = td.elapsed().as_micros() as u64;
+    Ok(stats)
+}
+
+impl SpecDecoder<TargetModel, DraftModel> {
+    /// Back-compat wrapper used by the engine/eval harness.
+    pub fn generate_baseline(
+        target: &TargetModel,
+        image: &[f32],
+        prompt: &[i32],
+        len: usize,
+        cfg: &GenConfig,
+    ) -> Result<GenStats> {
+        let params = SpecParams::from_manifest(&target.set.manifest);
+        generate_baseline(target, &params, image, prompt, len, cfg)
+    }
+}
+
+/// Sample one token from raw logits under (temperature, top_p).
+pub(crate) fn sample_token(
+    logits: &[f32],
+    cfg: &GenConfig,
+    probs: &mut Vec<f32>,
+    rng: &mut Rng,
+) -> i32 {
+    if cfg.temperature <= 0.0 {
+        return sampler::argmax(logits) as i32;
+    }
+    sampler::softmax_t(logits, cfg.temperature, probs);
+    let mut perm = Vec::new();
+    sampler::top_p_filter(probs, cfg.top_p, &mut perm);
+    sampler::sample(probs, rng) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::testing::{params, MockDraft, MockTarget};
+
+    fn greedy() -> GenConfig {
+        GenConfig::default()
+    }
+
+    #[test]
+    fn perfect_drafter_emits_full_windows() {
+        // drafter script == target script: every window fully accepted
+        let script = vec![5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 2]; // ends with EOS(2)
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(script.clone()),
+            params(),
+        );
+        let stats = dec.generate(&[], &[0; 8], 3, &greedy()).unwrap();
+        assert_eq!(stats.tokens, script);
+        assert!(stats.finished_by_eos);
+        // 13 tokens: 1 free from prefill, then windows of up to 6
+        assert_eq!(stats.verify_calls, 2);
+        assert_eq!(stats.per_iter_emitted, vec![6, 6]);
+        assert!((stats.mal() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hopeless_drafter_still_lossless_one_token_per_iter() {
+        let script = vec![5, 6, 7, 8, 9, 2];
+        let wrong = vec![50, 51, 52, 53, 54, 55, 56, 57, 58, 59, 60, 61];
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(wrong),
+            params(),
+        );
+        let stats = dec.generate(&[], &[0; 8], 3, &greedy()).unwrap();
+        assert_eq!(stats.tokens, script, "losslessness must hold even for garbage drafts");
+        assert_eq!(stats.accepted_draft, 0);
+        // every iteration emits exactly the correction token
+        assert!(stats.per_iter_emitted.iter().all(|&e| e == 1));
+        assert!((stats.mal() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_agreement_counts_prefix_only() {
+        // drafter agrees on the first 2 tokens of each window then diverges
+        let script = vec![5, 6, 7, 8, 9, 10, 11, 2];
+        let mut dscript = script.clone();
+        dscript[2] = 99; // first divergence at stream index 2
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(dscript),
+            params(),
+        );
+        let stats = dec.generate(&[], &[0; 8], 3, &greedy()).unwrap();
+        assert_eq!(stats.tokens, script);
+        // iter 1: drafts for idx 1..=5 = [6,7->99 mismatch...] accepted 1
+        assert_eq!(stats.per_iter_emitted[0], 2); // 1 draft + correction
+    }
+
+    #[test]
+    fn eos_inside_accepted_window_truncates() {
+        let script = vec![5, 6, 2, 40, 41, 42, 43, 44]; // EOS at index 2
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(script.clone()),
+            params(),
+        );
+        let stats = dec.generate(&[], &[0; 8], 3, &greedy()).unwrap();
+        assert_eq!(stats.tokens, vec![5, 6, 2]);
+        assert!(stats.finished_by_eos);
+        assert_eq!(stats.verify_calls, 1);
+    }
+
+    #[test]
+    fn eos_as_first_token_short_circuits() {
+        let script = vec![2, 9, 9];
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(script),
+            params(),
+        );
+        let stats = dec.generate(&[], &[0; 8], 3, &greedy()).unwrap();
+        assert_eq!(stats.tokens, vec![2]);
+        assert_eq!(stats.verify_calls, 0);
+        assert_eq!(stats.draft_calls, 0);
+    }
+
+    #[test]
+    fn max_new_budget_is_respected() {
+        let script: Vec<i32> = (10..60).collect(); // no EOS
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(script.clone()),
+            params(),
+        );
+        let mut cfg = greedy();
+        cfg.max_new = 9;
+        let stats = dec.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(stats.tokens.len(), 9);
+        assert_eq!(stats.tokens, script[..9].to_vec());
+        assert!(!stats.finished_by_eos);
+    }
+
+    #[test]
+    fn baseline_matches_script_and_counts_forwards() {
+        let script = vec![5, 6, 7, 2];
+        let target = MockTarget::new(script.clone());
+        let stats =
+            generate_baseline(&target, &params(), &[], &[0; 8], 3, &greedy()).unwrap();
+        assert_eq!(stats.tokens, script);
+        assert_eq!(stats.verify_calls, 3); // one decode per non-prefill token
+        assert!(stats.finished_by_eos);
+    }
+
+    #[test]
+    fn spec_equals_baseline_for_any_drafter_script() {
+        // property: greedy SD output == greedy target output, for random
+        // drafter scripts (the losslessness theorem at the decoder level)
+        crate::util::prop::propcheck("decoder losslessness", 50, |rng| {
+            let n = 3 + rng.range(20);
+            let mut script: Vec<i32> = (0..n).map(|_| 4 + rng.range(90) as i32).collect();
+            script.push(2); // EOS
+            let dscript: Vec<i32> = (0..n + 8)
+                .map(|_| {
+                    if rng.range(2) == 0 {
+                        4 + rng.range(90) as i32
+                    } else {
+                        2
+                    }
+                })
+                .collect();
+            let dec = SpecDecoder::with_params(
+                MockTarget::new(script.clone()),
+                MockDraft::new(dscript),
+                params(),
+            );
+            let spec = dec.generate(&[], &[0; 8], 3, &GenConfig::default()).unwrap();
+            let base = generate_baseline(
+                &MockTarget::new(script.clone()),
+                &params(),
+                &[],
+                &[0; 8],
+                3,
+                &GenConfig::default(),
+            )
+            .unwrap();
+            if spec.tokens != base.tokens {
+                return Err(format!("spec {:?} != base {:?}", spec.tokens, base.tokens));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mal_accounting_sums_to_emitted_tokens() {
+        let script: Vec<i32> = (10..40).collect();
+        let mut dscript = script.clone();
+        dscript[4] = 99;
+        dscript[11] = 99;
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(dscript),
+            params(),
+        );
+        let mut cfg = greedy();
+        // 24 = prefill token + 4 full-ish windows; chosen so the budget is
+        // reached exactly at an iteration boundary (mid-window truncation
+        // legitimately drops the iteration's target token)
+        cfg.max_new = 24;
+        let stats = dec.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        let emitted: usize = stats.per_iter_emitted.iter().sum();
+        // +1 for the prefill free token
+        assert_eq!(emitted + 1, stats.tokens.len());
+        assert_eq!(
+            stats.accepted_draft + stats.verify_calls,
+            emitted,
+            "each full iteration emits accepted drafts + exactly one target token"
+        );
+    }
+}

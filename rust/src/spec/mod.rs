@@ -1,0 +1,15 @@
+//! Speculative decoding core (the paper's Section 2.1 algorithm + the
+//! MASSV serving integration): sampling primitives, acceptance rules, and
+//! the per-request decode engine.
+
+pub mod acceptance;
+pub mod adaptive;
+pub mod decoder;
+pub mod sampler;
+pub mod testing;
+
+pub use acceptance::{accept_greedy, accept_stochastic, Decision, Scratch};
+pub use adaptive::{AdaptiveConfig, AdaptiveDecoder};
+pub use decoder::{
+    generate_baseline, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams, TargetBackend,
+};

@@ -1,0 +1,263 @@
+//! Token sampling primitives: temperature softmax, top-p (nucleus)
+//! filtering, categorical sampling, and the residual distribution of
+//! speculative decoding (Section 2.1).
+//!
+//! All functions write into caller-provided buffers where it matters --
+//! the decoder hot loop runs allocation-free after warmup (section Perf).
+
+use crate::util::rng::Rng;
+
+/// argmax with first-winner tie-breaking (matches jnp.argmax).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// probs = softmax(logits / temperature); T <= 0 degenerates to a one-hot
+/// at the argmax (greedy).  Numerically stable (max-subtracted).
+pub fn softmax_t(logits: &[f32], temperature: f32, probs: &mut Vec<f32>) {
+    probs.clear();
+    probs.resize(logits.len(), 0.0);
+    if temperature <= 0.0 {
+        probs[argmax(logits)] = 1.0;
+        return;
+    }
+    let inv_t = 1.0 / temperature;
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for (p, &l) in probs.iter_mut().zip(logits) {
+        let e = ((l - mx) * inv_t).exp();
+        *p = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for p in probs.iter_mut() {
+        *p *= inv;
+    }
+}
+
+/// In-place nucleus filter: keep the smallest prefix of probability mass
+/// >= top_p (by descending probability), zero the rest, renormalize.
+/// `top_p >= 1.0` is a no-op.  `scratch` holds the sort permutation.
+pub fn top_p_filter(probs: &mut [f32], top_p: f32, scratch: &mut Vec<u32>) {
+    if top_p >= 1.0 {
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..probs.len() as u32);
+    scratch.sort_unstable_by(|&a, &b| {
+        probs[b as usize]
+            .partial_cmp(&probs[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut acc = 0.0f32;
+    let mut cut = probs.len();
+    for (rank, &i) in scratch.iter().enumerate() {
+        acc += probs[i as usize];
+        if acc >= top_p {
+            cut = rank + 1;
+            break;
+        }
+    }
+    let mut kept = 0.0f32;
+    for &i in &scratch[..cut] {
+        kept += probs[i as usize];
+    }
+    for &i in &scratch[cut..] {
+        probs[i as usize] = 0.0;
+    }
+    if kept > 0.0 {
+        let inv = 1.0 / kept;
+        for p in probs.iter_mut() {
+            *p *= inv;
+        }
+    }
+}
+
+/// Draw an index from a (normalized) categorical distribution.
+pub fn sample(probs: &[f32], rng: &mut Rng) -> usize {
+    let u = rng.f64() as f32;
+    let mut acc = 0.0f32;
+    let mut last_nonzero = 0;
+    for (i, &p) in probs.iter().enumerate() {
+        if p > 0.0 {
+            last_nonzero = i;
+        }
+        acc += p;
+        if u < acc {
+            return i;
+        }
+    }
+    last_nonzero // float round-off fallback
+}
+
+/// Residual distribution norm(max(p - q, 0)) (Section 2.1).  Returns false
+/// (and leaves `out` = p) in the degenerate q >= p everywhere case, which
+/// can only arise from float round-off when p == q.
+pub fn residual(p: &[f32], q: &[f32], out: &mut Vec<f32>) -> bool {
+    out.clear();
+    out.resize(p.len(), 0.0);
+    let mut sum = 0.0f32;
+    for i in 0..p.len() {
+        let d = (p[i] - q[i]).max(0.0);
+        out[i] = d;
+        sum += d;
+    }
+    if sum <= 1e-12 {
+        out.copy_from_slice(p);
+        return false;
+    }
+    let inv = 1.0 / sum;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{propcheck, random_distribution, small_size};
+
+    #[test]
+    fn argmax_first_winner() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn softmax_temperature_zero_is_one_hot() {
+        let mut p = Vec::new();
+        softmax_t(&[0.1, 2.0, -1.0], 0.0, &mut p);
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_normalizes_and_orders() {
+        let mut p = Vec::new();
+        softmax_t(&[1.0, 2.0, 3.0], 1.0, &mut p);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_low_temperature_sharpens() {
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        softmax_t(&[1.0, 2.0], 1.0, &mut a);
+        softmax_t(&[1.0, 2.0], 0.25, &mut b);
+        assert!(b[1] > a[1]);
+    }
+
+    #[test]
+    fn softmax_handles_extreme_logits() {
+        let mut p = Vec::new();
+        softmax_t(&[1e30, -1e30, 0.0], 1.0, &mut p);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn top_p_one_is_noop() {
+        let mut probs = vec![0.5, 0.3, 0.2];
+        let orig = probs.clone();
+        top_p_filter(&mut probs, 1.0, &mut Vec::new());
+        assert_eq!(probs, orig);
+    }
+
+    #[test]
+    fn top_p_keeps_nucleus() {
+        let mut probs = vec![0.5, 0.3, 0.15, 0.05];
+        top_p_filter(&mut probs, 0.7, &mut Vec::new());
+        // 0.5 + 0.3 = 0.8 >= 0.7 -> keep first two, renormalized
+        assert!((probs[0] - 0.625).abs() < 1e-5);
+        assert!((probs[1] - 0.375).abs() < 1e-5);
+        assert_eq!(probs[2], 0.0);
+        assert_eq!(probs[3], 0.0);
+    }
+
+    #[test]
+    fn prop_top_p_normalized_and_subset() {
+        propcheck("top_p filtered distribution valid", 300, |rng| {
+            let n = small_size(rng, 64);
+            let mut p = random_distribution(rng, n);
+            let orig = p.clone();
+            let tp = 0.05 + 0.9 * rng.f32();
+            top_p_filter(&mut p, tp, &mut Vec::new());
+            let s: f32 = p.iter().sum();
+            if (s - 1.0).abs() > 1e-3 {
+                return Err(format!("sum {s}"));
+            }
+            for i in 0..n {
+                if p[i] > 0.0 && orig[i] == 0.0 {
+                    return Err("mass created from nothing".into());
+                }
+            }
+            // the most probable token always survives
+            if p[argmax(&orig)] <= 0.0 {
+                return Err("mode filtered out".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sample_respects_distribution() {
+        let mut rng = Rng::seeded(11);
+        let probs = vec![0.2, 0.5, 0.3];
+        let n = 200_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[sample(&probs, &mut rng)] += 1;
+        }
+        for i in 0..3 {
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - probs[i] as f64).abs() < 0.01, "bucket {i}: {f}");
+        }
+    }
+
+    #[test]
+    fn residual_basic() {
+        let p = vec![0.6, 0.3, 0.1];
+        let q = vec![0.2, 0.5, 0.3];
+        let mut r = Vec::new();
+        assert!(residual(&p, &q, &mut r));
+        assert!((r[0] - 1.0).abs() < 1e-6); // only index 0 has p > q
+        assert_eq!(r[1], 0.0);
+        assert_eq!(r[2], 0.0);
+    }
+
+    #[test]
+    fn residual_degenerate_p_equals_q() {
+        let p = vec![0.5, 0.5];
+        let mut r = Vec::new();
+        assert!(!residual(&p, &p.clone(), &mut r));
+        assert_eq!(r, p);
+    }
+
+    #[test]
+    fn prop_residual_is_distribution() {
+        propcheck("residual normalized", 300, |rng| {
+            let n = small_size(rng, 48);
+            let p = random_distribution(rng, n);
+            let q = random_distribution(rng, n);
+            let mut r = Vec::new();
+            residual(&p, &q, &mut r);
+            let s: f32 = r.iter().sum();
+            if (s - 1.0).abs() > 1e-3 {
+                return Err(format!("sum {s}"));
+            }
+            if r.iter().any(|&v| v < 0.0) {
+                return Err("negative mass".into());
+            }
+            Ok(())
+        });
+    }
+}

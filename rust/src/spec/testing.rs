@@ -1,0 +1,155 @@
+//! Scripted mock backends for decoder-logic tests (no PJRT involved).
+//!
+//! Semantics: a mock target deterministically "wants" the token stream
+//! `script[0], script[1], ...` -- prefill returns one-hot logits for
+//! `script[0]`; a verify window whose first token is written at stream
+//! position `st.pos` returns one-hot rows for `script[pos+1 ..= pos+gamma+1]`.
+//! A mock drafter proposes its own script the same way.  Greedy speculative
+//! decoding against these mocks must reproduce the target script exactly,
+//! with acceptance counts equal to per-window prefix agreement -- which is
+//! what the tests in spec::decoder assert.
+//!
+//! `SeqState.pos` is reused as the *stream* position (the mocks have no KV
+//! cache; the dummy literal is never read).
+
+use anyhow::Result;
+
+use crate::models::{DraftOutput, SeqState};
+use crate::runtime::Tensor;
+use crate::spec::decoder::{DraftBackend, SpecParams, TargetBackend};
+
+pub const MOCK_VOCAB: usize = 100;
+pub const MOCK_EOS: i32 = 2;
+pub const MOCK_GAMMA: usize = 5;
+
+/// Standard params used by the mock tests.
+pub fn params() -> SpecParams {
+    SpecParams { gamma: MOCK_GAMMA, eos_id: MOCK_EOS, gen_max: 48 }
+}
+
+fn one_hot(tok: i32) -> Vec<f32> {
+    let mut row = vec![0.0f32; MOCK_VOCAB];
+    row[(tok as usize).min(MOCK_VOCAB - 1)] = 1.0;
+    row
+}
+
+fn dummy_state() -> SeqState {
+    SeqState { kv: xla::Literal::scalar(0.0f32), pos: 0 }
+}
+
+/// A target that greedily emits `script` (cyclic past the end, so budget
+/// tests can run without EOS).
+pub struct MockTarget {
+    pub script: Vec<i32>,
+}
+
+impl MockTarget {
+    pub fn new(script: Vec<i32>) -> Self {
+        assert!(!script.is_empty());
+        MockTarget { script }
+    }
+
+    fn at(&self, i: i32) -> i32 {
+        self.script[(i.max(0) as usize) % self.script.len()]
+    }
+}
+
+impl TargetBackend for MockTarget {
+    fn prefill(&self, _image: &[f32], _prompt: &[i32], _len: usize) -> Result<(Vec<f32>, SeqState)> {
+        Ok((one_hot(self.at(0)), dummy_state()))
+    }
+
+    fn verify(&self, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor> {
+        // row i conditions on the prefix ending at tokens[i] (stream index
+        // st.pos + i) and predicts the token at stream index st.pos + i + 1
+        let rows: Vec<f32> = (0..tokens.len())
+            .flat_map(|i| one_hot(self.at(st.pos + i as i32 + 1)))
+            .collect();
+        Tensor::new(rows, vec![tokens.len(), MOCK_VOCAB])
+    }
+
+    fn decode(&self, st: &mut SeqState, _token: i32) -> Result<Vec<f32>> {
+        let out = one_hot(self.at(st.pos + 1));
+        st.pos += 1;
+        Ok(out)
+    }
+}
+
+/// A drafter that proposes its own script (cyclic), independent of the
+/// tokens it is fed -- agreement with the target is purely positional,
+/// which makes expected acceptance counts trivially computable in tests.
+pub struct MockDraft {
+    pub script: Vec<i32>,
+}
+
+impl MockDraft {
+    pub fn new(script: Vec<i32>) -> Self {
+        assert!(!script.is_empty());
+        MockDraft { script }
+    }
+
+    fn at(&self, i: i32) -> i32 {
+        self.script[(i.max(0) as usize) % self.script.len()]
+    }
+}
+
+impl DraftBackend for MockDraft {
+    fn prefill(
+        &self,
+        _image: Option<&[f32]>,
+        _prompt: &[i32],
+        _len: usize,
+        _text_only: bool,
+    ) -> Result<SeqState> {
+        Ok(dummy_state())
+    }
+
+    fn draft(
+        &self,
+        st: &mut SeqState,
+        _last: i32,
+        _temperature: f32,
+        _seed: u32,
+    ) -> Result<DraftOutput> {
+        let tokens: Vec<i32> = (0..MOCK_GAMMA).map(|i| self.at(st.pos + 1 + i as i32)).collect();
+        let qlogits = Tensor::new(
+            tokens.iter().flat_map(|&t| one_hot(t)).collect(),
+            vec![MOCK_GAMMA, MOCK_VOCAB],
+        )?;
+        Ok(DraftOutput { tokens, qlogits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_target_scripts_greedy_stream() {
+        let t = MockTarget::new(vec![7, 8, 9]);
+        let (lg, mut st) = t.prefill(&[], &[], 0).unwrap();
+        assert_eq!(crate::spec::sampler::argmax(&lg), 7);
+        let lg = t.decode(&mut st, 7).unwrap();
+        assert_eq!(crate::spec::sampler::argmax(&lg), 8);
+        assert_eq!(st.pos, 1);
+    }
+
+    #[test]
+    fn mock_verify_rows_follow_positions() {
+        let t = MockTarget::new(vec![7, 8, 9, 10, 11, 12, 13, 14]);
+        let mut st = dummy_state();
+        let rows = t.verify(&mut st, &[7, 8, 9, 10, 11, 12]).unwrap();
+        for i in 0..6 {
+            assert_eq!(crate::spec::sampler::argmax(rows.row(i)), 8 + i);
+        }
+    }
+
+    #[test]
+    fn mock_draft_proposes_positionally() {
+        let d = MockDraft::new(vec![5, 6, 7, 8, 9, 10, 11]);
+        let mut st = dummy_state();
+        st.pos = 2;
+        let out = d.draft(&mut st, 0, 0.0, 0).unwrap();
+        assert_eq!(out.tokens, vec![8, 9, 10, 11, 5]); // cyclic wrap at idx 7
+    }
+}

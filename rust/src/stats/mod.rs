@@ -1,0 +1,175 @@
+//! Statistics used by the evaluation harness: total variation distance
+//! (Figure 4's distribution analysis, Eq. 6), histogram binning, and small
+//! aggregation helpers.
+
+/// Total variation distance TVD(P, Q) = 1/2 * sum |P(x) - Q(x)| (Eq. 6).
+/// Inputs must be distributions over the same vocabulary.
+pub fn tvd(p: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    0.5 * p
+        .iter()
+        .zip(q)
+        .map(|(&a, &b)| (a as f64 - b as f64).abs())
+        .sum::<f64>()
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; out-of-range
+/// values clamp into the edge buckets (TVD lives in [0,1] so none occur).
+#[derive(Debug, Clone)]
+pub struct FixedHistogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub n: u64,
+}
+
+impl FixedHistogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        FixedHistogram { lo, hi, counts: vec![0; bins], n: 0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let bins = self.counts.len() as f64;
+        let idx = ((v - self.lo) / (self.hi - self.lo) * bins)
+            .floor()
+            .clamp(0.0, bins - 1.0) as usize;
+        self.counts[idx] += 1;
+        self.n += 1;
+    }
+
+    pub fn fraction(&self, bin: usize) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.counts[bin] as f64 / self.n as f64
+        }
+    }
+
+    /// Mass at or below `v` (inclusive of the bin containing v).
+    pub fn cdf(&self, v: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let bins = self.counts.len() as f64;
+        let idx = ((v - self.lo) / (self.hi - self.lo) * bins)
+            .floor()
+            .clamp(0.0, bins - 1.0) as usize;
+        self.counts[..=idx].iter().sum::<u64>() as f64 / self.n as f64
+    }
+
+    /// ASCII rendering for bench output (Figure-4 style).
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bins = self.counts.len();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let a = self.lo + (self.hi - self.lo) * i as f64 / bins as f64;
+            let b = self.lo + (self.hi - self.lo) * (i + 1) as f64 / bins as f64;
+            let bar = "#".repeat((c as usize * width / max as usize).max(usize::from(c > 0)));
+            out.push_str(&format!("[{a:.2},{b:.2}) {c:6} {bar}\n"));
+        }
+        out
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median of (a copy of) the samples.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{propcheck, random_distribution, small_size};
+
+    #[test]
+    fn tvd_identical_is_zero() {
+        let p = vec![0.25, 0.25, 0.5];
+        assert_eq!(tvd(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn tvd_disjoint_is_one() {
+        assert!((tvd(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tvd_known_value() {
+        // |0.6-0.2| + |0.4-0.8| = 0.8 -> TVD 0.4
+        assert!((tvd(&[0.6, 0.4], &[0.2, 0.8]) - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_tvd_bounds_and_symmetry() {
+        propcheck("tvd in [0,1], symmetric", 300, |rng| {
+            let n = small_size(rng, 64);
+            let p = random_distribution(rng, n);
+            let q = random_distribution(rng, n);
+            let d = tvd(&p, &q);
+            if !(0.0..=1.0 + 1e-6).contains(&d) {
+                return Err(format!("tvd {d}"));
+            }
+            if (d - tvd(&q, &p)).abs() > 1e-9 {
+                return Err("asymmetric".into());
+            }
+            // triangle inequality with a third distribution
+            let r = random_distribution(rng, n);
+            if tvd(&p, &r) > tvd(&p, &q) + tvd(&q, &r) + 1e-6 {
+                return Err("triangle violated".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = FixedHistogram::new(0.0, 1.0, 10);
+        h.record(0.05);
+        h.record(0.15);
+        h.record(0.15);
+        h.record(0.999);
+        h.record(1.5); // clamps to last bin
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.n, 5);
+        assert!((h.cdf(0.19) - 0.6).abs() < 1e-9);
+        assert!(h.render(20).lines().count() == 10);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.2909944487358056).abs() < 1e-9);
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

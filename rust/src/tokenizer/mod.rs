@@ -1,0 +1,147 @@
+//! Word-level tokenizer shared with the Python authoring side.
+//!
+//! The vocabulary is authored once in `python/compile/shapeworld.py` and
+//! exported to `artifacts/vocab.json`; this module loads the same tables so
+//! the serving path never imports Python (the three-layer contract).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::parse;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    tokens: Vec<String>,
+    ids: HashMap<String, u32>,
+    pub pad_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub sep_id: u32,
+}
+
+impl Tokenizer {
+    pub fn from_json(text: &str) -> Result<Tokenizer> {
+        let v = parse(text)?;
+        let tokens: Vec<String> = v
+            .req("tokens")?
+            .as_arr()?
+            .iter()
+            .map(|t| Ok(t.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let ids = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Ok(Tokenizer {
+            pad_id: v.req("pad_id")?.as_usize()? as u32,
+            bos_id: v.req("bos_id")?.as_usize()? as u32,
+            eos_id: v.req("eos_id")?.as_usize()? as u32,
+            sep_id: v.req("sep_id")?.as_usize()? as u32,
+            tokens,
+            ids,
+        })
+    }
+
+    pub fn load(artifacts_dir: &str) -> Result<Tokenizer> {
+        Tokenizer::from_json(&crate::util::read_file(&format!(
+            "{artifacts_dir}/vocab.json"
+        ))?)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Encode a whitespace-separated word sequence.  Errors on OOV -- the
+    /// grammar is closed, so OOV at serving time is a caller bug.
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        text.split_whitespace()
+            .map(|w| {
+                self.ids
+                    .get(w)
+                    .copied()
+                    .ok_or_else(|| anyhow!("OOV word {w:?}"))
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.tokens.get(i as usize).map(|s| s.as_str()).unwrap_or("<?>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn token(&self, id: u32) -> Option<&str> {
+        self.tokens.get(id as usize).map(|s| s.as_str())
+    }
+
+    /// `[<bos>] words [<sep>]` padded to `p_max`; returns (ids, len).
+    /// This is the canonical prompt framing used at training time
+    /// (python/compile/train.py::assemble_sequence) -- they must agree.
+    pub fn encode_prompt(&self, text: &str, p_max: usize) -> Result<(Vec<i32>, usize)> {
+        let body = self.encode(text)?;
+        let len = body.len() + 2;
+        if len > p_max {
+            return Err(anyhow!("prompt too long: {len} > {p_max}"));
+        }
+        let mut out = vec![self.pad_id as i32; p_max];
+        out[0] = self.bos_id as i32;
+        for (i, id) in body.iter().enumerate() {
+            out[1 + i] = *id as i32;
+        }
+        out[1 + body.len()] = self.sep_id as i32;
+        Ok((out, len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        Tokenizer::from_json(
+            r#"{"tokens":["<pad>","<bos>","<eos>","<sep>","<img>","the","red","circle","."],
+                "pad_id":0,"bos_id":1,"eos_id":2,"sep_id":3,"img_id":4}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = toy();
+        let ids = t.encode("the red circle .").unwrap();
+        assert_eq!(ids, vec![5, 6, 7, 8]);
+        assert_eq!(t.decode(&ids), "the red circle .");
+    }
+
+    #[test]
+    fn oov_is_error() {
+        assert!(toy().encode("the blue circle").is_err());
+    }
+
+    #[test]
+    fn prompt_framing() {
+        let t = toy();
+        let (ids, len) = t.encode_prompt("the red circle", 8).unwrap();
+        assert_eq!(len, 5);
+        assert_eq!(ids, vec![1, 5, 6, 7, 3, 0, 0, 0]);
+    }
+
+    #[test]
+    fn prompt_too_long() {
+        let t = toy();
+        assert!(t.encode_prompt("the red circle .", 4).is_err());
+    }
+
+    #[test]
+    fn special_ids() {
+        let t = toy();
+        assert_eq!(t.pad_id, 0);
+        assert_eq!(t.eos_id, 2);
+        assert_eq!(t.token(7), Some("circle"));
+        assert_eq!(t.vocab_size(), 9);
+    }
+}

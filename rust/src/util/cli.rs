@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser (`clap` is not vendored offline).
+//!
+//! Grammar: `prog [subcommand] [--key value | --flag] [positional...]`.
+//! Used by the `massv` binary, examples, and bench harnesses.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first element must NOT be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I, subcommands: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if subcommands.contains(&first.as_str()) {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse(subcommands: &[&str]) -> Args {
+        Args::parse_from(std::env::args().skip(1), subcommands)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positional() {
+        // NB: a bare `--flag` followed by a non-dashed token would consume
+        // it as a value (documented grammar); flags go last or use `=`.
+        let a = Args::parse_from(
+            argv("serve --port 7777 --rate=2.5 input.json --verbose"),
+            &["serve", "eval"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("7777"));
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["input.json"]);
+    }
+
+    #[test]
+    fn no_subcommand_when_unknown() {
+        let a = Args::parse_from(argv("frobnicate --x 1"), &["serve"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["frobnicate"]);
+    }
+
+    #[test]
+    fn trailing_flag_is_flag_not_option() {
+        let a = Args::parse_from(argv("--a 1 --b"), &[]);
+        assert_eq!(a.get("a"), Some("1"));
+        assert!(a.has_flag("b"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(argv(""), &[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_or("x", "d"), "d");
+    }
+}

@@ -1,0 +1,17 @@
+//! Infrastructure substitutions for the offline environment (DESIGN.md
+//! section 2): JSON codec, CLI parser, PRNG, and a property-test harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Read a whole file to string with a path-annotated error.
+pub fn read_file(path: &str) -> anyhow::Result<String> {
+    std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))
+}
+
+/// Resolve the artifacts directory: $MASSV_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> String {
+    std::env::var("MASSV_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}

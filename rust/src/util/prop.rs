@@ -1,0 +1,129 @@
+//! Tiny property-testing harness (`proptest` is not vendored offline).
+//!
+//! Usage:
+//! ```ignore
+//! propcheck("sampler normalizes", 500, |rng| {
+//!     let n = 1 + rng.range(50);
+//!     // ... build a random case from rng, return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+//! Failures report the case index and the derived seed so a case can be
+//! replayed exactly with `propcheck_seeded`.  No shrinking: generators are
+//! encouraged to draw sizes small-biased (see `small_size`).
+
+use super::rng::Rng;
+
+pub const DEFAULT_SEED: u64 = 0x4D41_5353_565F_5250; // "MASSV_RP"
+
+/// Run `n` random cases of `f`; panic with a replay seed on failure.
+pub fn propcheck<F>(name: &str, n: usize, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    propcheck_seeded(name, n, DEFAULT_SEED, f)
+}
+
+pub fn propcheck_seeded<F>(name: &str, n: usize, seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut meta = Rng::seeded(seed);
+    for case in 0..n {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::seeded(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case}/{n} \
+                 (replay: propcheck_case({name:?}, 0x{case_seed:x}, f)): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case from its reported seed.
+pub fn propcheck_case<F>(name: &str, case_seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::seeded(case_seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property {name:?} failed on replay: {msg}");
+    }
+}
+
+/// Small-biased size draw in [1, max]: half the mass below max/8.
+pub fn small_size(rng: &mut Rng, max: usize) -> usize {
+    debug_assert!(max >= 1);
+    if rng.range(2) == 0 {
+        1 + rng.range(max.div_ceil(8))
+    } else {
+        1 + rng.range(max)
+    }
+}
+
+/// A random probability distribution over `n` outcomes (possibly sparse).
+pub fn random_distribution(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut p: Vec<f32> = (0..n)
+        .map(|_| if rng.range(4) == 0 { 0.0 } else { rng.f32() + 1e-6 })
+        .collect();
+    let s: f32 = p.iter().sum();
+    if s <= 0.0 {
+        p[rng.range(n)] = 1.0;
+        return p;
+    }
+    for v in &mut p {
+        *v /= s;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        propcheck("tautology", 100, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn panics_with_replay_info() {
+        propcheck("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn random_distribution_sums_to_one() {
+        propcheck("distribution normalized", 200, |rng| {
+            let n = small_size(rng, 64);
+            let p = random_distribution(rng, n);
+            let s: f32 = p.iter().sum();
+            if (s - 1.0).abs() < 1e-4 && p.iter().all(|&v| v >= 0.0) {
+                Ok(())
+            } else {
+                Err(format!("sum {s}"))
+            }
+        });
+    }
+
+    #[test]
+    fn small_size_in_bounds() {
+        propcheck("small_size bounds", 500, |rng| {
+            let m = 1 + rng.range(100);
+            let s = small_size(rng, m);
+            if (1..=m).contains(&s) {
+                Ok(())
+            } else {
+                Err(format!("size {s} for max {m}"))
+            }
+        });
+    }
+}

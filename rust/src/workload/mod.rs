@@ -1,0 +1,133 @@
+//! Workloads: the four paper task suites (loaded from the fixed eval sets
+//! emitted by python/compile/aot.py) plus open- and closed-loop load
+//! generation for the serving benchmarks.
+
+use anyhow::{anyhow, Result};
+
+use crate::tokenizer::Tokenizer;
+use crate::util::json::parse;
+use crate::util::rng::Rng;
+
+/// Paper tasks (Section 4.1): LLaVA-150k, LLaVA-Bench(wild), GQA, COCO
+/// analogs -- see DESIGN.md section 2 for the substitution argument.
+pub const TASKS: [&str; 4] = ["instruct", "wild", "gqa", "coco"];
+
+#[derive(Debug, Clone)]
+pub struct EvalItem {
+    pub task: String,
+    pub prompt: String,
+    pub reference: String,
+    /// 16x16x3 row-major f32 image
+    pub image: Vec<f32>,
+    /// prompt pre-encoded to the padded layout
+    pub prompt_ids: Vec<i32>,
+    pub prompt_len: usize,
+}
+
+pub fn load_task(
+    artifacts_dir: &str,
+    task: &str,
+    tok: &Tokenizer,
+    p_max: usize,
+) -> Result<Vec<EvalItem>> {
+    let text = crate::util::read_file(&format!("{artifacts_dir}/eval/{task}.json"))?;
+    let v = parse(&text)?;
+    let items = v.req("items")?.as_arr()?;
+    items
+        .iter()
+        .map(|it| {
+            let prompt = it.req("prompt")?.as_str()?.to_string();
+            let image = it.req("image")?.to_f32_vec()?;
+            if image.len() != 16 * 16 * 3 {
+                return Err(anyhow!("bad image size {}", image.len()));
+            }
+            let (prompt_ids, prompt_len) = tok.encode_prompt(&prompt, p_max)?;
+            Ok(EvalItem {
+                task: task.to_string(),
+                reference: it.req("reference")?.as_str()?.to_string(),
+                prompt,
+                image,
+                prompt_ids,
+                prompt_len,
+            })
+        })
+        .collect()
+}
+
+pub fn load_all_tasks(
+    artifacts_dir: &str,
+    tok: &Tokenizer,
+    p_max: usize,
+) -> Result<Vec<(String, Vec<EvalItem>)>> {
+    TASKS
+        .iter()
+        .map(|t| Ok((t.to_string(), load_task(artifacts_dir, t, tok, p_max)?)))
+        .collect()
+}
+
+/// Open-loop arrival schedule: Poisson process at `rate` req/s over `n`
+/// requests drawn round-robin-with-jitter from the eval items.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// offset from test start, seconds
+    pub at: f64,
+    /// index into the item pool
+    pub item: usize,
+}
+
+pub fn poisson_schedule(n: usize, rate: f64, pool: usize, seed: u64) -> Vec<Arrival> {
+    let mut rng = Rng::seeded(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            Arrival { at: t, item: rng.range(pool) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_is_sorted_and_rate_correct() {
+        let s = poisson_schedule(5000, 20.0, 10, 42);
+        assert_eq!(s.len(), 5000);
+        for w in s.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let span = s.last().unwrap().at;
+        let rate = 5000.0 / span;
+        assert!((rate - 20.0).abs() < 1.5, "rate {rate}");
+        assert!(s.iter().all(|a| a.item < 10));
+    }
+
+    #[test]
+    fn load_task_parses_inline_fixture() {
+        // round-trip through a temp dir
+        let dir = std::env::temp_dir().join(format!("massv_wl_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("eval")).unwrap();
+        let img: Vec<String> = (0..768).map(|i| format!("{}", (i % 4) as f64 * 0.25)).collect();
+        std::fs::write(
+            dir.join("eval/coco.json"),
+            format!(
+                r#"{{"task":"coco","items":[{{"task":"coco","prompt":"the red circle",
+                     "reference":"the red circle .","image":[{}]}}]}}"#,
+                img.join(",")
+            ),
+        )
+        .unwrap();
+        let tok = Tokenizer::from_json(
+            r#"{"tokens":["<pad>","<bos>","<eos>","<sep>","<img>","the","red","circle","."],
+                "pad_id":0,"bos_id":1,"eos_id":2,"sep_id":3,"img_id":4}"#,
+        )
+        .unwrap();
+        let items = load_task(dir.to_str().unwrap(), "coco", &tok, 8).unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].prompt_len, 5);
+        assert_eq!(items[0].prompt_ids[..5], [1, 5, 6, 7, 3]);
+        assert_eq!(items[0].image.len(), 768);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

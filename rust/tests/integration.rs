@@ -1,0 +1,367 @@
+//! Integration tests over the real AOT artifacts (run `make artifacts`
+//! first).  These exercise the full L1+L2+L3 composition: HLO loading,
+//! speculative decoding invariants, the coordinator, and the TCP server.
+//!
+//! Every test skips (with a loud message) when artifacts/ is missing so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::sync::Arc;
+
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Priority, Request};
+use massv::models::ModelSet;
+use massv::spec::{sampler, GenConfig, SpecDecoder};
+use massv::tokenizer::Tokenizer;
+use massv::util::json::Json;
+use massv::workload;
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("MASSV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn setup(dir: &str) -> (Arc<ModelSet>, Tokenizer, Vec<workload::EvalItem>) {
+    let models = ModelSet::load(dir).unwrap();
+    let tok = Tokenizer::load(dir).unwrap();
+    let items = workload::load_task(dir, "coco", &tok, models.manifest.p_max).unwrap();
+    (models, tok, items)
+}
+
+/// THE invariant of speculative decoding (Section 2.1): at T=0 the
+/// speculative output equals plain target greedy decoding, token for token,
+/// for every drafter variant (even a terrible drafter only costs speed).
+#[test]
+fn losslessness_greedy_spec_equals_target() {
+    let Some(dir) = artifacts() else { return };
+    let (models, _tok, items) = setup(&dir);
+    let target = models.target("qwensim-L").unwrap();
+    for variant in ["massv", "massv_wo_sdvit", "baseline"] {
+        let drafter = models.drafter_for("qwensim-L", variant).unwrap();
+        let dec = SpecDecoder::new(target.clone(), drafter);
+        for (i, it) in items.iter().take(6).enumerate() {
+            let cfg = GenConfig { temperature: 0.0, top_p: 1.0, max_new: 48, seed: i as u64 };
+            let spec = dec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg).unwrap();
+            let base = SpecDecoder::generate_baseline(
+                &target, &it.image, &it.prompt_ids, it.prompt_len, &cfg,
+            )
+            .unwrap();
+            assert_eq!(
+                spec.tokens, base.tokens,
+                "variant {variant}, item {i}: speculative != greedy"
+            );
+        }
+    }
+}
+
+/// The fused on-device draft loop must equal a host-side step-by-step
+/// greedy draft (L2/L3 contract for the key perf optimization).
+#[test]
+fn fused_draft_matches_stepwise_greedy() {
+    let Some(dir) = artifacts() else { return };
+    let (models, _tok, items) = setup(&dir);
+    let drafter = models.drafter("qwensim-S", "massv").unwrap();
+    let it = &items[0];
+    let gamma = models.manifest.gamma;
+
+    let mut s1 = drafter.prefill(Some(&it.image), &it.prompt_ids, it.prompt_len, false).unwrap();
+    let mut s2 = drafter.prefill(Some(&it.image), &it.prompt_ids, it.prompt_len, false).unwrap();
+    let last = 7i32;
+
+    let out = drafter.draft(&mut s1, last, 0.0, 99).unwrap();
+    // stepwise reference
+    let mut cur = last;
+    let mut toks = Vec::new();
+    for i in 0..gamma {
+        let logits = drafter.decode(&mut s2, cur).unwrap();
+        for (a, b) in logits.iter().zip(out.qlogits.row(i)) {
+            assert!((a - b).abs() < 1e-3, "qlogits diverge at step {i}");
+        }
+        cur = sampler::argmax(&logits) as i32;
+        toks.push(cur);
+    }
+    assert_eq!(out.tokens, toks);
+}
+
+/// Draft seeds: same seed -> same stochastic draft; T=0 ignores the seed.
+#[test]
+fn draft_seed_semantics() {
+    let Some(dir) = artifacts() else { return };
+    let (models, _tok, items) = setup(&dir);
+    let drafter = models.drafter("qwensim-S", "massv").unwrap();
+    let it = &items[0];
+    let prefill =
+        || drafter.prefill(Some(&it.image), &it.prompt_ids, it.prompt_len, false).unwrap();
+
+    let (mut a, mut b, mut c) = (prefill(), prefill(), prefill());
+    let oa = drafter.draft(&mut a, 7, 1.0, 123).unwrap();
+    let ob = drafter.draft(&mut b, 7, 1.0, 123).unwrap();
+    assert_eq!(oa.tokens, ob.tokens);
+    let og1 = drafter.draft(&mut c, 7, 0.0, 1).unwrap();
+    let mut d = prefill();
+    let og2 = drafter.draft(&mut d, 7, 0.0, 2).unwrap();
+    assert_eq!(og1.tokens, og2.tokens, "greedy draft must ignore the seed");
+}
+
+/// Rollback-free KV: after a simulated rejection mid-window, continuing to
+/// decode must equal a fresh run over the accepted prefix.
+#[test]
+fn kv_stale_tail_is_harmless_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let (models, _tok, items) = setup(&dir);
+    let target = models.target("qwensim-L").unwrap();
+    let it = &items[1];
+    let gamma = models.manifest.gamma;
+
+    // run a verify with garbage speculation, accept nothing, then decode
+    let (logits, mut dirty) = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len).unwrap();
+    let first = sampler::argmax(&logits) as i32;
+    let mut junk = vec![first];
+    junk.extend(std::iter::repeat(3).take(gamma)); // <sep> spam as speculation
+    let _plogits = target.verify(&mut dirty, &junk).unwrap();
+    // accept only `first` -> next decode happens at pos+1
+    dirty.pos += 1;
+    let dirty_logits = target.decode(&mut dirty, 9).unwrap();
+
+    let (_l2, mut clean) = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len).unwrap();
+    let _ = target.decode(&mut clean, first).unwrap();
+    let clean_logits = target.decode(&mut clean, 9).unwrap();
+    for (a, b) in dirty_logits.iter().zip(&clean_logits) {
+        assert!((a - b).abs() < 1e-3, "stale tail leaked into logits");
+    }
+}
+
+/// MASSV must actually speculate productively on visually grounded tasks:
+/// pooled MAL > 1.5 (a broken drafter would sit near 1.0).
+#[test]
+fn massv_mal_is_materially_above_one() {
+    let Some(dir) = artifacts() else { return };
+    let (models, _tok, items) = setup(&dir);
+    let stats =
+        massv::eval::run_spec(&models, "qwensim-L", "massv", &items[..8], 0.0, false, 3).unwrap();
+    let mal = massv::eval::pooled_mal(&stats);
+    assert!(mal > 1.5, "massv pooled MAL {mal:.2} suspiciously low");
+}
+
+/// Target generations must be visually grounded: the caption for an eval
+/// image should mention the reference's color+shape pairs (the target was
+/// trained to describe the scene; this guards against artifact mixups).
+#[test]
+fn target_generations_are_visually_grounded() {
+    let Some(dir) = artifacts() else { return };
+    let (models, tok, items) = setup(&dir);
+    let target = models.target("qwensim-L").unwrap();
+    let mut hits = 0;
+    let mut total = 0;
+    for it in items.iter().take(10) {
+        let cfg = GenConfig::default();
+        let out = SpecDecoder::generate_baseline(
+            &target, &it.image, &it.prompt_ids, it.prompt_len, &cfg,
+        )
+        .unwrap();
+        let text = tok.decode(
+            &out.tokens.iter().map(|&t| t as u32).collect::<Vec<_>>(),
+        );
+        // count color-shape bigrams of the reference found in the output
+        let ref_words: Vec<&str> = it.reference.split_whitespace().collect();
+        for w in ref_words.windows(2) {
+            if massv::workload::TASKS.contains(&"coco") // always true; keep shape
+                && ["red", "blue", "green", "yellow", "purple", "orange"].contains(&w[0])
+            {
+                total += 1;
+                if text.contains(&format!("{} {}", w[0], w[1])) {
+                    hits += 1;
+                }
+            }
+        }
+    }
+    assert!(total > 0);
+    let acc = hits as f64 / total as f64;
+    assert!(acc > 0.6, "visual grounding accuracy {acc:.2} too low ({hits}/{total})");
+}
+
+/// Engine end-to-end: concurrent requests through the scheduler/worker
+/// pool produce valid responses and consistent metrics.
+#[test]
+fn engine_concurrent_requests() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(
+        &dir,
+        EngineConfig { default_target: "qwensim-L".into(), workers: 3, queue_capacity: 64 },
+    )
+    .unwrap();
+    let tok = &engine.tokenizer;
+    let items = workload::load_task(&dir, "gqa", tok, engine.models.manifest.p_max).unwrap();
+
+    let mut rxs = Vec::new();
+    for (i, it) in items.iter().take(9).enumerate() {
+        let mut req = Request::simple(engine.next_id(), &it.prompt, it.image.clone());
+        req.priority = if i % 3 == 0 { Priority::Batch } else { Priority::Interactive };
+        rxs.push(engine.submit(req));
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(!resp.tokens.is_empty());
+        ok += 1;
+    }
+    assert_eq!(ok, 9);
+    assert_eq!(engine.metrics.requests_completed.get(), 9);
+    assert!(engine.metrics.overall_mal() > 1.0);
+    engine.shutdown();
+}
+
+/// Router fallback inside the engine: requesting TargetOnly works and
+/// reports no MAL.
+#[test]
+fn engine_target_only_mode() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(&dir, EngineConfig::default()).unwrap();
+    let items =
+        workload::load_task(&dir, "instruct", &engine.tokenizer, engine.models.manifest.p_max)
+            .unwrap();
+    let mut req = Request::simple(engine.next_id(), &items[0].prompt, items[0].image.clone());
+    req.mode = DecodeMode::TargetOnly;
+    let resp = engine.run(req);
+    assert!(resp.error.is_none());
+    assert_eq!(resp.mal, 0.0);
+    assert!(resp.verify_calls > 0); // decode steps counted as target passes
+    engine.shutdown();
+}
+
+/// Full server round-trip over a real socket: generate + metrics + ping.
+#[test]
+fn server_round_trip() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(
+        Engine::start(
+            &dir,
+            EngineConfig { default_target: "qwensim-L".into(), workers: 2, queue_capacity: 16 },
+        )
+        .unwrap(),
+    );
+    let items =
+        workload::load_task(&dir, "coco", &engine.tokenizer, engine.models.manifest.p_max)
+            .unwrap();
+
+    let server = massv::server::Server::new(engine);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let mut client = massv::server::Client::connect(&addr.to_string()).unwrap();
+    assert!(client.ping().unwrap());
+
+    let req = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str(items[0].prompt.clone())),
+        ("image", Json::arr_f32(&items[0].image)),
+        ("task", Json::str("coco")),
+        ("mode", Json::str("massv")),
+    ]);
+    let resp = client.call(&req).unwrap();
+    assert!(resp.get("error").is_none(), "{resp:?}");
+    assert!(!resp.get("text").unwrap().as_str().unwrap().is_empty());
+    assert!(resp.get("mal").unwrap().as_f64().unwrap() > 1.0);
+
+    let metrics = client.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    assert!(metrics.get("requests_completed").unwrap().as_f64().unwrap() >= 1.0);
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+}
+
+/// Backpressure: a queue of capacity 1 with a held worker rejects floods.
+#[test]
+fn engine_backpressure_rejects() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(
+        &dir,
+        EngineConfig { default_target: "qwensim-L".into(), workers: 1, queue_capacity: 2 },
+    )
+    .unwrap();
+    let items =
+        workload::load_task(&dir, "wild", &engine.tokenizer, engine.models.manifest.p_max)
+            .unwrap();
+    // flood: most must complete, overflow must be rejected cleanly
+    let rxs: Vec<_> = (0..12)
+        .map(|_| {
+            engine.submit(Request::simple(
+                engine.next_id(),
+                &items[0].prompt,
+                items[0].image.clone(),
+            ))
+        })
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|r| r.recv().unwrap()).collect();
+    let rejected = responses.iter().filter(|r| r.error.is_some()).count();
+    let completed = responses.iter().filter(|r| r.error.is_none()).count();
+    assert_eq!(rejected + completed, 12);
+    assert!(rejected > 0, "expected some backpressure rejections");
+    assert!(completed >= 2, "queue should still drain");
+    assert_eq!(engine.metrics.requests_rejected.get() as usize, rejected);
+    engine.shutdown();
+}
+
+/// TVD analysis sanity: MASSV's TVD mass at low values exceeds the
+/// w/o-SDViT drafter's (the Figure-4 claim, testable end to end).
+#[test]
+fn tvd_massv_is_better_aligned_than_wo_sdvit() {
+    let Some(dir) = artifacts() else { return };
+    let (models, _tok, items) = setup(&dir);
+    let (h_massv, _) =
+        massv::eval::tvd_histogram(&models, "qwensim-L", "massv", &items[..6], 20, 16).unwrap();
+    let (h_wo, _) =
+        massv::eval::tvd_histogram(&models, "qwensim-L", "massv_wo_sdvit", &items[..6], 20, 16)
+            .unwrap();
+    let low_massv = h_massv.cdf(0.3);
+    let low_wo = h_wo.cdf(0.3);
+    assert!(
+        low_massv > low_wo,
+        "massv low-TVD mass {low_massv:.3} should exceed w/o-SDViT {low_wo:.3}"
+    );
+}
+
+/// Adaptive speculation (extension): with a well-aligned drafter it stays
+/// speculative and matches plain SD output exactly at T=0; the engine path
+/// accepts the flag end to end.
+#[test]
+fn adaptive_mode_matches_spec_output() {
+    let Some(dir) = artifacts() else { return };
+    let (models, _tok, items) = setup(&dir);
+    let target = models.target("qwensim-L").unwrap();
+    let drafter = models.drafter_for("qwensim-L", "massv").unwrap();
+    let it = &items[2];
+    let cfg = GenConfig::default();
+
+    let dec = SpecDecoder::new(target.clone(), drafter.clone());
+    let plain = dec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg).unwrap();
+
+    let adec = massv::spec::AdaptiveDecoder::new(
+        SpecDecoder::new(target, drafter),
+        massv::spec::AdaptiveConfig::default(),
+    );
+    let adaptive = adec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg).unwrap();
+    assert_eq!(plain.tokens, adaptive.tokens);
+    assert_eq!(adaptive.fallback_at, None, "aligned drafter should stay speculative");
+
+    // engine-level flag
+    let engine = Engine::start(&dir, EngineConfig::default()).unwrap();
+    let mut req = Request::simple(engine.next_id(), &it.prompt, it.image.clone());
+    req.mode = DecodeMode::Speculative {
+        variant: "massv".into(),
+        text_only_draft: false,
+        adaptive: true,
+    };
+    let resp = engine.run(req);
+    assert!(resp.error.is_none());
+    assert_eq!(resp.tokens, plain.tokens);
+    engine.shutdown();
+}

@@ -1,0 +1,93 @@
+//! Kernel-path vs serving-path artifact equivalence (the L1 contract at
+//! the PJRT boundary): the Pallas-kernel lowering and the fused-jnp
+//! lowering of the SAME trained model must produce numerically identical
+//! outputs through the Rust runtime.  This is what licenses serving from
+//! the fused lowering on CPU while the kernel remains the TPU story
+//! (see python/compile/aot.py and EXPERIMENTS.md section Perf).
+
+use massv::manifest::Manifest;
+use massv::models::ModelSet;
+use massv::runtime::{lit_f32, lit_i32, scalar_i32, to_vec_f32};
+use massv::tokenizer::Tokenizer;
+use massv::workload;
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("MASSV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn kernel_and_serving_artifacts_agree() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let raw = massv::util::json::parse(
+        &massv::util::read_file(&format!("{dir}/manifest.json")).unwrap(),
+    )
+    .unwrap();
+    let Some(kv_records) = raw.get("kernel_validation") else {
+        eprintln!("SKIP: artifacts predate kernel_validation records");
+        return;
+    };
+    let kernel_target = kv_records.as_arr().unwrap().iter().find(|r| {
+        r.get("kind").and_then(|k| k.as_str().ok()) == Some("kernel_validation")
+            && r.get("name").and_then(|n| n.as_str().ok()) == Some("qwensim-L")
+    });
+    let Some(kernel_target) = kernel_target else {
+        eprintln!("SKIP: no kernel validation record for qwensim-L");
+        return;
+    };
+
+    let models = ModelSet::load(&dir).unwrap();
+    let tok = Tokenizer::load(&dir).unwrap();
+    let items = workload::load_task(&dir, "coco", &tok, manifest.p_max).unwrap();
+    let it = &items[0];
+
+    // serving-path prefill + verify
+    let target = models.target("qwensim-L").unwrap();
+    let (serving_logits, mut st) =
+        target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len).unwrap();
+    let toks: Vec<i32> = (10..=(10 + manifest.gamma as i32)).collect();
+    let serving_verify = target.verify(&mut st, &toks).unwrap();
+
+    // kernel-path prefill + verify through raw executables
+    let entries = kernel_target.req("entries").unwrap();
+    let file = |e: &str| {
+        format!(
+            "{dir}/{}",
+            entries.req(e).unwrap().req("file").unwrap().as_str().unwrap()
+        )
+    };
+    let prefill = models.rt.load_exec(&file("prefill_mm"), "k_prefill").unwrap();
+    let out = prefill
+        .call(&[
+            lit_f32(&it.image, &[16, 16, 3]).unwrap(),
+            lit_i32(&it.prompt_ids, &[manifest.p_max]).unwrap(),
+            scalar_i32(it.prompt_len as i32),
+        ])
+        .unwrap();
+    let kernel_logits = to_vec_f32(&out[0]).unwrap();
+    let kv = out.into_iter().nth(1).unwrap();
+
+    for (a, b) in serving_logits.iter().zip(&kernel_logits) {
+        assert!((a - b).abs() < 1e-3, "prefill logits diverge: {a} vs {b}");
+    }
+
+    let verify = models.rt.load_exec(&file("verify"), "k_verify").unwrap();
+    let pos = (manifest.n_visual + it.prompt_len) as i32;
+    let out = verify
+        .call(&[
+            lit_i32(&toks, &[manifest.gamma + 1]).unwrap(),
+            scalar_i32(pos),
+            kv,
+        ])
+        .unwrap();
+    let kernel_verify = to_vec_f32(&out[0]).unwrap();
+    for (a, b) in serving_verify.data.iter().zip(&kernel_verify) {
+        assert!((a - b).abs() < 1e-3, "verify logits diverge: {a} vs {b}");
+    }
+}
