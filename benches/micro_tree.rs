@@ -1,0 +1,111 @@
+//! Chain vs token-tree speculation microbenchmark: mean accepted length
+//! and host-side decode throughput on scripted agreement profiles (no
+//! artifacts needed -- this measures the decoder/acceptance machinery the
+//! way micro_sampler measures the sampling primitives).
+//!
+//!     cargo bench --bench micro_tree
+
+mod harness;
+
+use harness::{measure, summarize, BenchReport};
+use massv::spec::testing::{params, MockDraft, MockTarget, MockTreeDraft};
+use massv::spec::tree::TreeConfig;
+use massv::spec::{GenConfig, SpecDecoder};
+use massv::util::rng::Rng;
+
+/// A target stream plus a corrupted drafter line: every `period`-th
+/// position (at `phase`) diverges from the target.  (Bench-local mock
+/// profile -- deliberately simpler than `models::scripted::corrupt`, which
+/// must additionally guarantee vocabulary-range invariants.)
+fn corrupted(stream: &[i32], period: usize, phase: usize) -> Vec<i32> {
+    stream
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i % period == phase % period { 90 + (i % 7) as i32 } else { t })
+        .collect()
+}
+
+struct Profile {
+    name: &'static str,
+    /// chain drafter corruption period (larger = better aligned)
+    period: usize,
+}
+
+fn main() {
+    let mut report = BenchReport::new("micro_tree");
+    report.line("chain vs tree speculation (scripted mocks, greedy, gamma=5)\n");
+
+    let mut rng = Rng::seeded(7);
+    let stream: Vec<i32> = (0..200).map(|_| 4 + rng.range(80) as i32).collect();
+    let cfg = GenConfig::default();
+    let tree_cfg = GenConfig {
+        tree: Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }),
+        ..GenConfig::default()
+    };
+
+    for profile in [
+        Profile { name: "high agreement (period 7)", period: 7 },
+        Profile { name: "low agreement  (period 3)", period: 3 },
+    ] {
+        let primary = corrupted(&stream, profile.period, 1);
+        let alt = corrupted(&stream, profile.period, 1 + profile.period / 2);
+
+        let chain_dec = SpecDecoder::with_params(
+            MockTarget::new(stream.clone()),
+            MockDraft::new(primary.clone()),
+            params(),
+        );
+        let tree_dec = SpecDecoder::with_params(
+            MockTarget::new(stream.clone()),
+            MockTreeDraft::new(vec![primary.clone(), alt.clone()]),
+            params(),
+        );
+
+        let chain = chain_dec.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        let tree = tree_dec.generate_tree(&[], &[0; 8], 3, &tree_cfg).unwrap();
+        assert_eq!(chain.tokens, tree.tokens, "both decoders are lossless");
+
+        report.line(format!("== {} ==", profile.name));
+        report.line(format!(
+            "  chain: MAL {:.3} over {} verify calls",
+            chain.mal(),
+            chain.verify_calls
+        ));
+        report.line(format!(
+            "  tree:  MAL {:.3} over {} verify calls  (mean path depth {:.2}, \
+             branch utilization {:.2}, {} nodes drafted)",
+            tree.mal(),
+            tree.verify_calls,
+            tree.mean_path_depth(),
+            tree.branch_utilization(),
+            tree.tree_nodes_drafted,
+        ));
+        report.line(format!(
+            "  MAL improvement: {:+.1}%",
+            100.0 * (tree.mal() / chain.mal().max(1e-9) - 1.0)
+        ));
+
+        // host-side throughput (the real win is fewer verify calls; this
+        // bounds the extra tree bookkeeping cost)
+        let n_tokens = chain.tokens.len() as f64;
+        let us = measure(5, 200, || {
+            let _ = chain_dec.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        });
+        let med = median(&us);
+        report.line(summarize("  chain generate (48 tok)", &us));
+        report.line(format!("    -> {:.2} Mtok/s host-side", n_tokens / med));
+        let us = measure(5, 200, || {
+            let _ = tree_dec.generate_tree(&[], &[0; 8], 3, &tree_cfg).unwrap();
+        });
+        let med = median(&us);
+        report.line(summarize("  tree generate (48 tok)", &us));
+        report.line(format!("    -> {:.2} Mtok/s host-side\n", n_tokens / med));
+    }
+    report.finish();
+}
+
+fn median(us: &[f64]) -> f64 {
+    let mut v = us.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}

@@ -51,7 +51,8 @@ fn main() -> anyhow::Result<()> {
             let mut emitted = 0usize;
             let mut iters = 0usize;
             for (i, it) in items.iter().enumerate() {
-                let cfg = GenConfig { temperature: temp, top_p: 1.0, max_new: 48, seed: i as u64 };
+                let cfg =
+                    GenConfig { temperature: temp, top_p: 1.0, max_new: 48, seed: i as u64, tree: None };
                 let s = dec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg)?;
                 emitted += s.per_iter_emitted.iter().sum::<usize>();
                 iters += s.verify_calls;

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let mut total_iters = 0usize;
     let mut total_emitted = 0usize;
     for (i, it) in items.iter().take(n).enumerate() {
-        let cfg = GenConfig { temperature, top_p: 1.0, max_new: 48, seed: i as u64 };
+        let cfg = GenConfig { temperature, top_p: 1.0, max_new: 48, seed: i as u64, tree: None };
         let stats = dec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg)?;
         println!("── question {} {}", i + 1, "─".repeat(48));
         println!("Q: {}", it.prompt);

@@ -20,7 +20,7 @@ use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{Scheduler, Submit};
 use crate::metrics::Metrics;
 use crate::models::ModelSet;
-use crate::spec::{AdaptiveConfig, AdaptiveDecoder, GenStats, SpecDecoder};
+use crate::spec::{AdaptiveConfig, AdaptiveDecoder, GenStats, SpecDecoder, SpecMode};
 use crate::tokenizer::Tokenizer;
 
 pub struct EngineConfig {
@@ -159,6 +159,16 @@ fn worker_loop(
                 if stats.verify_calls > 0 && stats.draft_calls > 0 {
                     metrics.per_request_mal.record(stats.mal());
                 }
+                if !stats.per_iter_path_depth.is_empty() {
+                    metrics.tree_requests.inc();
+                    metrics.tree_nodes_drafted.add(stats.tree_nodes_drafted as u64);
+                    metrics
+                        .tree_iterations
+                        .add(stats.per_iter_path_depth.len() as u64);
+                    metrics
+                        .tree_path_accepted
+                        .add(stats.per_iter_path_depth.iter().sum::<usize>() as u64);
+                }
                 let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
                 metrics.latency_ms.record(latency_ms);
                 Response {
@@ -167,6 +177,8 @@ fn worker_loop(
                     mal: if stats.draft_calls > 0 { stats.mal() } else { 0.0 },
                     verify_calls: stats.verify_calls,
                     accepted_draft: stats.accepted_draft,
+                    mean_path_depth: stats.mean_path_depth(),
+                    tree_nodes_drafted: stats.tree_nodes_drafted,
                     finished_by_eos: stats.finished_by_eos,
                     tokens: stats.tokens,
                     queue_ms,
@@ -210,6 +222,22 @@ fn run_request(
                     .generate(&req.image, &prompt_ids, len, &req.gen)
             } else {
                 dec.generate(&req.image, &prompt_ids, len, &req.gen)
+            }
+        }
+        (DecodeMode::Tree { adaptive, .. }, Some((dname, variant))) => {
+            let drafter = models.drafter(dname, variant)?;
+            let mut dec = SpecDecoder::new(target, drafter);
+            dec.text_only_draft = route.text_only_draft;
+            if *adaptive {
+                AdaptiveDecoder::new(dec, AdaptiveConfig::default()).generate_with_mode(
+                    SpecMode::Tree,
+                    &req.image,
+                    &prompt_ids,
+                    len,
+                    &req.gen,
+                )
+            } else {
+                dec.generate_tree(&req.image, &prompt_ids, len, &req.gen)
             }
         }
     }

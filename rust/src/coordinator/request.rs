@@ -12,12 +12,43 @@ pub enum Priority {
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum DecodeMode {
-    /// MASSV speculative decoding with the given drafter variant
+    /// MASSV chain speculative decoding with the given drafter variant
     /// ("baseline" | "massv_wo_sdvit" | "massv").  `adaptive` enables the
     /// acceptance-EMA fallback controller (spec::adaptive).
     Speculative { variant: String, text_only_draft: bool, adaptive: bool },
+    /// Token-tree speculative decoding (spec::tree): the drafter proposes a
+    /// branching candidate tree, verified in one target call with the
+    /// longest root-to-leaf path accepted losslessly.  `adaptive` lets the
+    /// controller switch tree<->chain per request.
+    Tree { variant: String, text_only_draft: bool, adaptive: bool },
     /// Plain target autoregression (the 1.00x reference).
     TargetOnly,
+}
+
+impl DecodeMode {
+    /// Drafter variant + text-only flag for speculative modes (`None` for
+    /// TargetOnly) -- what the router needs to resolve a drafter.
+    pub fn drafting(&self) -> Option<(&str, bool)> {
+        match self {
+            DecodeMode::Speculative { variant, text_only_draft, .. }
+            | DecodeMode::Tree { variant, text_only_draft, .. } => {
+                Some((variant.as_str(), *text_only_draft))
+            }
+            DecodeMode::TargetOnly => None,
+        }
+    }
+
+    pub fn is_tree(&self) -> bool {
+        matches!(self, DecodeMode::Tree { .. })
+    }
+
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            DecodeMode::Speculative { .. } => "speculative",
+            DecodeMode::Tree { .. } => "tree",
+            DecodeMode::TargetOnly => "target_only",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -63,6 +94,11 @@ pub struct Response {
     pub mal: f64,
     pub verify_calls: usize,
     pub accepted_draft: usize,
+    /// mean accepted root-to-leaf path length over tree iterations
+    /// (0 when the request never ran tree-mode iterations)
+    pub mean_path_depth: f64,
+    /// candidate tree nodes drafted (0 outside tree mode)
+    pub tree_nodes_drafted: usize,
     pub finished_by_eos: bool,
     pub queue_ms: f64,
     pub latency_ms: f64,
@@ -78,6 +114,8 @@ impl Response {
             mal: 0.0,
             verify_calls: 0,
             accepted_draft: 0,
+            mean_path_depth: 0.0,
+            tree_nodes_drafted: 0,
             finished_by_eos: false,
             queue_ms: 0.0,
             latency_ms: 0.0,
@@ -128,5 +166,25 @@ mod tests {
         let r = Request::simple(7, "hi", vec![0.0; 768]);
         assert_eq!(r.priority, Priority::Interactive);
         assert!(matches!(r.mode, DecodeMode::Speculative { .. }));
+    }
+
+    #[test]
+    fn decode_mode_drafting_accessor() {
+        let spec = DecodeMode::Speculative {
+            variant: "massv".into(),
+            text_only_draft: false,
+            adaptive: false,
+        };
+        assert_eq!(spec.drafting(), Some(("massv", false)));
+        assert!(!spec.is_tree());
+        let tree = DecodeMode::Tree {
+            variant: "massv".into(),
+            text_only_draft: true,
+            adaptive: true,
+        };
+        assert_eq!(tree.drafting(), Some(("massv", true)));
+        assert!(tree.is_tree());
+        assert_eq!(tree.wire_name(), "tree");
+        assert_eq!(DecodeMode::TargetOnly.drafting(), None);
     }
 }

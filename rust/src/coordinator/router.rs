@@ -37,14 +37,14 @@ impl Router {
         if manifest.target(&target).is_err() {
             return Err(format!("unknown target model {target:?}"));
         }
-        match &req.mode {
-            DecodeMode::TargetOnly => Ok(Route { target, drafter: None, text_only_draft: false }),
-            DecodeMode::Speculative { variant, text_only_draft, .. } => {
+        match req.mode.drafting() {
+            None => Ok(Route { target, drafter: None, text_only_draft: false }),
+            Some((variant, text_only_draft)) => {
                 match manifest.drafter_for_target(&target, variant) {
                     Ok(d) => Ok(Route {
                         target,
-                        drafter: Some((d.name.clone(), variant.clone())),
-                        text_only_draft: *text_only_draft,
+                        drafter: Some((d.name.clone(), variant.to_string())),
+                        text_only_draft,
                     }),
                     Err(_) => {
                         log::warn!(
@@ -128,6 +128,27 @@ mod tests {
             )
             .unwrap();
         assert_eq!(r.target, "qwensim-XL");
+        assert_eq!(r.drafter, Some(("qwensim-S".into(), "massv".into())));
+    }
+
+    #[test]
+    fn tree_mode_routes_like_speculative() {
+        let m = Manifest::from_json(TOY).unwrap();
+        let router = Router::new("qwensim-L");
+        let r = router
+            .route(
+                &req(
+                    DecodeMode::Tree {
+                        variant: "massv".into(),
+                        text_only_draft: false,
+                        adaptive: false,
+                    },
+                    "",
+                ),
+                &m,
+            )
+            .unwrap();
+        assert_eq!(r.target, "qwensim-L");
         assert_eq!(r.drafter, Some(("qwensim-S".into(), "massv".into())));
     }
 

@@ -54,6 +54,7 @@ pub fn run_spec(
                 top_p: 1.0,
                 max_new: models.manifest.gen_max,
                 seed: seed.wrapping_add(i as u64),
+                tree: None,
             };
             dec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg)
         })
@@ -78,6 +79,7 @@ pub fn run_baseline(
                 top_p: 1.0,
                 max_new: models.manifest.gen_max,
                 seed: seed.wrapping_add(i as u64),
+                tree: None,
             };
             SpecDecoder::generate_baseline(&target, &it.image, &it.prompt_ids, it.prompt_len, &cfg)
         })
@@ -174,8 +176,8 @@ pub fn draft_cost_ratio(models: &Arc<ModelSet>, target: &str, variant: &str) -> 
             .find(|(n, c, _)| n.ends_with(suffix) && *c > 0)
             .map(|(_, _, us)| *us)
     };
-    let d = find(&format!("::draft"));
-    let v = find(&format!("::verify"));
+    let d = find("::draft");
+    let v = find("::verify");
     let _ = (target, variant);
     match (d, v) {
         (Some(d), Some(v)) if v > 0.0 => d / v,

@@ -8,8 +8,22 @@
 //! * **L2** `python/compile/` — JAX model families + the MASSV two-phase
 //!   training pipeline (build time; produces `artifacts/`).
 //! * **L3** this crate — the request path: PJRT runtime, speculative
-//!   decoding engine, coordinator (router/scheduler/worker pool), TCP
-//!   server, workload + evaluation harness.  Python never runs here.
+//!   decoding engine (chain and token-tree drafting, see
+//!   `docs/tree_speculation.md`), coordinator (router/scheduler/worker
+//!   pool), TCP server, workload + evaluation harness.  Python never runs
+//!   here.
+//!
+//! Decoding modes (`coordinator::DecodeMode`): `Speculative` (the paper's
+//! chain algorithm), `Tree` (token-tree speculation with lossless
+//! multi-path verification, `spec::tree`), and `TargetOnly` (the 1.00x
+//! reference).  The adaptive controller (`spec::adaptive`) switches
+//! between shapes per request on acceptance/utilization EMAs.
+//!
+//! Backends: model execution is abstracted behind
+//! `spec::{TargetBackend, DraftBackend}`; the manifest selects "pjrt"
+//! (compiled HLO artifacts) or "scripted" (deterministic host-side
+//! simulacra, `models::scripted`) so the full serving stack is testable
+//! without the PJRT runtime.
 //!
 //! Quick start (after `make artifacts`):
 //! ```no_run

@@ -26,8 +26,8 @@ massv — multimodal speculative decoding for VLMs (MASSV reproduction)
 USAGE:
   massv serve    [--addr 127.0.0.1:7700] [--target qwensim-L] [--workers N]
   massv generate --prompt \"describe the image briefly .\" [--task coco]
-                 [--mode massv|massv_wo_sdvit|baseline|target_only]
-                 [--temperature T] [--item N]
+                 [--mode massv|massv_wo_sdvit|baseline|tree|target_only]
+                 [--variant V] [--adaptive] [--temperature T] [--item N]
   massv eval     [--target qwensim-L] [--variant massv] [--task coco]
                  [--temperature 0] [--n 20]
   massv models
@@ -89,6 +89,11 @@ fn generate(artifacts: &str, args: &Args) -> Result<()> {
     let eng = engine(artifacts, args)?;
     let mode = match args.get_or("mode", "massv") {
         "target_only" => DecodeMode::TargetOnly,
+        "tree" => DecodeMode::Tree {
+            variant: args.get_or("variant", "massv").to_string(),
+            text_only_draft: args.has_flag("text-only-draft"),
+            adaptive: args.has_flag("adaptive"),
+        },
         v => DecodeMode::Speculative {
             variant: v.to_string(),
             text_only_draft: args.has_flag("text-only-draft"),
@@ -108,6 +113,7 @@ fn generate(artifacts: &str, args: &Args) -> Result<()> {
             top_p: args.get_f64("top-p", 1.0) as f32,
             max_new: args.get_usize("max-new", 48),
             seed: args.get_usize("seed", 0) as u64,
+            tree: None,
         },
         priority: massv::coordinator::Priority::Interactive,
     };

@@ -11,6 +11,11 @@ use crate::util::json::{parse, Json};
 
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Execution backend: "pjrt" (compiled HLO artifacts; the default) or
+    /// "scripted" (deterministic host-side model simulacra -- used by the
+    /// integration tests and any environment without the PJRT runtime; see
+    /// `models::scripted`).
+    pub backend: String,
     pub gamma: usize,
     pub t_max: usize,
     pub p_max: usize,
@@ -96,6 +101,11 @@ impl Manifest {
             return Err(anyhow!("unsupported manifest schema {schema}"));
         }
         Ok(Manifest {
+            backend: v
+                .get("backend")
+                .and_then(|b| b.as_str().ok())
+                .unwrap_or("pjrt")
+                .to_string(),
             gamma: v.req("gamma")?.as_usize()?,
             t_max: v.req("t_max")?.as_usize()?,
             p_max: v.req("p_max")?.as_usize()?,
@@ -180,6 +190,14 @@ mod tests {
          "variant": "massv", "aligned_target": "qwensim-L", "multimodal": true}
       ]
     }"#;
+
+    #[test]
+    fn backend_defaults_to_pjrt() {
+        let m = Manifest::from_json(TOY).unwrap();
+        assert_eq!(m.backend, "pjrt");
+        let scripted = TOY.replacen("\"schema\": 1,", "\"schema\": 1, \"backend\": \"scripted\",", 1);
+        assert_eq!(Manifest::from_json(&scripted).unwrap().backend, "scripted");
+    }
 
     #[test]
     fn parses_toy_manifest() {

@@ -94,6 +94,16 @@ pub struct Metrics {
     pub draft_calls: Counter,
     pub queue_depth: Gauge,
     pub inflight: Gauge,
+    /// requests that ran at least one tree-mode iteration
+    pub tree_requests: Counter,
+    /// candidate nodes drafted across all tree iterations
+    pub tree_nodes_drafted: Counter,
+    /// tree-mode SD iterations
+    pub tree_iterations: Counter,
+    /// accepted root-to-leaf path length summed over tree iterations
+    /// (a counter, not a histogram: one sample per SD iteration would grow
+    /// without bound on a long-lived server)
+    pub tree_path_accepted: Counter,
     pub latency_ms: Histogram,
     pub prefill_ms: Histogram,
     pub per_request_mal: Histogram,
@@ -151,7 +161,31 @@ impl Metrics {
         out.insert("overall_mal".into(), self.overall_mal());
         out.insert("throughput_tps".into(), self.throughput_tokens_per_sec());
         out.insert("uptime_secs".into(), self.uptime_secs());
+        out.insert("tree_requests".into(), self.tree_requests.get() as f64);
+        out.insert("tree_nodes_drafted".into(), self.tree_nodes_drafted.get() as f64);
+        out.insert("tree_iterations".into(), self.tree_iterations.get() as f64);
+        out.insert("tree_path_depth_mean".into(), self.tree_path_depth_mean());
+        out.insert("branch_utilization".into(), self.branch_utilization());
         out
+    }
+
+    /// Mean accepted root-to-leaf path length per tree iteration.
+    pub fn tree_path_depth_mean(&self) -> f64 {
+        let iters = self.tree_iterations.get();
+        if iters == 0 {
+            return 0.0;
+        }
+        self.tree_path_accepted.get() as f64 / iters as f64
+    }
+
+    /// Aggregate fraction of drafted tree nodes that landed on an accepted
+    /// path (tree-mode drafting efficiency).
+    pub fn branch_utilization(&self) -> f64 {
+        let drafted = self.tree_nodes_drafted.get();
+        if drafted == 0 {
+            return 0.0;
+        }
+        self.tree_path_accepted.get() as f64 / drafted as f64
     }
 }
 
@@ -204,6 +238,21 @@ mod tests {
         let r = m.render();
         assert!(r.contains_key("overall_mal"));
         assert!(r.contains_key("latency_ms_p99"));
+        assert!(r.contains_key("tree_path_depth_mean"));
+        assert!(r.contains_key("branch_utilization"));
+    }
+
+    #[test]
+    fn branch_utilization_aggregates() {
+        let m = Metrics::new();
+        assert_eq!(m.branch_utilization(), 0.0);
+        assert_eq!(m.tree_path_depth_mean(), 0.0);
+        m.tree_nodes_drafted.add(20);
+        m.tree_iterations.add(2);
+        m.tree_path_accepted.add(4);
+        m.tree_path_accepted.add(6);
+        assert!((m.branch_utilization() - 0.5).abs() < 1e-12);
+        assert!((m.tree_path_depth_mean() - 5.0).abs() < 1e-12);
     }
 
     #[test]

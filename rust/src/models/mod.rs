@@ -13,6 +13,8 @@
 //! KV caches stay opaque `xla::Literal`s between calls -- the coordinator
 //! never parses them, it just threads them through (DESIGN.md section 3).
 
+pub mod scripted;
+
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -21,6 +23,7 @@ use anyhow::{anyhow, Result};
 use crate::manifest::{Manifest, ModelEntry};
 use crate::runtime::tensor::to_vec_i32;
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, scalar_u32, Exec, Runtime, Tensor};
+use crate::spec::tree::DraftTree;
 
 pub const IMAGE_ELEMS: usize = 16 * 16 * 3;
 
@@ -87,10 +90,13 @@ impl ModelSet {
 }
 
 /// Per-sequence decoding state: an opaque device-format KV cache plus the
-/// absolute position where the next token will be written.
+/// absolute position where the next token will be written.  Under the
+/// scripted backend `pos` is the stream index and `script` carries the
+/// deterministic token lines; PJRT states leave `script` as `None`.
 pub struct SeqState {
     pub kv: xla::Literal,
     pub pos: i32,
+    pub script: Option<Arc<scripted::ScriptSet>>,
 }
 
 fn prompt_literal(prompt: &[i32], p_max: usize) -> Result<xla::Literal> {
@@ -115,6 +121,10 @@ impl TargetModel {
         self.entry.vocab
     }
 
+    fn is_scripted(&self) -> bool {
+        self.set.manifest.backend == "scripted"
+    }
+
     /// Multimodal prefill.  Returns last-position logits and the sequence
     /// state positioned at the first generation slot.
     pub fn prefill_mm(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)> {
@@ -122,6 +132,9 @@ impl TargetModel {
             return Err(anyhow!("image must have {IMAGE_ELEMS} elems, got {}", image.len()));
         }
         let m = &self.set.manifest;
+        if self.is_scripted() {
+            return scripted::prefill_target(m, self.entry.vocab, image, prompt, len);
+        }
         let exec = self.set.exec(&self.entry, "prefill_mm")?;
         let out = exec.call(&[
             lit_f32(image, &[16, 16, 3])?,
@@ -130,7 +143,7 @@ impl TargetModel {
         ])?;
         let logits = crate::runtime::to_vec_f32(&out[0])?;
         let kv = out.into_iter().nth(1).unwrap();
-        Ok((logits, SeqState { kv, pos: (m.n_visual + len) as i32 }))
+        Ok((logits, SeqState { kv, pos: (m.n_visual + len) as i32, script: None }))
     }
 
     /// Verify gamma+1 tokens written at `state.pos`.  Returns per-position
@@ -140,6 +153,9 @@ impl TargetModel {
         let gamma1 = self.set.manifest.gamma + 1;
         if tokens.len() != gamma1 {
             return Err(anyhow!("verify expects {gamma1} tokens, got {}", tokens.len()));
+        }
+        if self.is_scripted() {
+            return scripted::verify_target(self.entry.vocab, state, tokens);
         }
         let exec = self.set.exec(&self.entry, "verify")?;
         let out = exec.call(&[
@@ -155,9 +171,29 @@ impl TargetModel {
         Ok(logits)
     }
 
+    /// Flattened tree verification (one forward pass for a whole draft
+    /// tree).  Scripted states answer per node positionally; the PJRT path
+    /// linearizes chain-shaped trees through the fixed verify window (see
+    /// `spec::decoder::verify_tree_linearized`).
+    pub fn verify_tree(
+        &self,
+        state: &mut SeqState,
+        last: i32,
+        tree: &DraftTree,
+        gamma: usize,
+    ) -> Result<Tensor> {
+        if self.is_scripted() {
+            return scripted::verify_tree_target(self.entry.vocab, state, tree);
+        }
+        crate::spec::decoder::verify_tree_linearized(self, state, last, tree, gamma)
+    }
+
     /// Single-token decode (non-speculative baseline path).  Writes the
     /// token at `state.pos` and advances it.
     pub fn decode(&self, state: &mut SeqState, token: i32) -> Result<Vec<f32>> {
+        if self.is_scripted() {
+            return scripted::decode_target(self.entry.vocab, state);
+        }
         let exec = self.set.exec(&self.entry, "decode")?;
         let out = exec.call(&[
             lit_i32(&[token], &[1])?,
@@ -197,6 +233,10 @@ impl DraftModel {
         self.entry.multimodal
     }
 
+    fn is_scripted(&self) -> bool {
+        self.set.manifest.backend == "scripted"
+    }
+
     /// Drafter prefill.  Multimodal drafters consume the image unless
     /// `text_only` (Table-3 mode: visual tokens discarded); the baseline
     /// drafter has no multimodal entry point at all.
@@ -208,6 +248,17 @@ impl DraftModel {
         text_only: bool,
     ) -> Result<SeqState> {
         let m = &self.set.manifest;
+        if self.is_scripted() {
+            return scripted::prefill_drafter(
+                m,
+                self.variant(),
+                self.entry.multimodal,
+                image,
+                prompt,
+                len,
+                text_only,
+            );
+        }
         let prompt_lit = prompt_literal(prompt, m.p_max)?;
         if self.entry.multimodal && !text_only {
             let image = image.ok_or_else(|| anyhow!("multimodal drafter needs an image"))?;
@@ -218,12 +269,12 @@ impl DraftModel {
                 scalar_i32(len as i32),
             ])?;
             let kv = out.into_iter().nth(1).unwrap();
-            Ok(SeqState { kv, pos: (m.n_visual + len) as i32 })
+            Ok(SeqState { kv, pos: (m.n_visual + len) as i32, script: None })
         } else {
             let exec = self.set.exec(&self.entry, "prefill_text")?;
             let out = exec.call(&[prompt_lit, scalar_i32(len as i32)])?;
             let kv = out.into_iter().nth(1).unwrap();
-            Ok(SeqState { kv, pos: len as i32 })
+            Ok(SeqState { kv, pos: len as i32, script: None })
         }
     }
 
@@ -239,6 +290,11 @@ impl DraftModel {
         seed: u32,
     ) -> Result<DraftOutput> {
         let gamma = self.set.manifest.gamma;
+        if self.is_scripted() {
+            let _ = (last, temperature, seed);
+            let (tokens, qlogits) = scripted::draft_drafter(self.entry.vocab, gamma, state)?;
+            return Ok(DraftOutput { tokens, qlogits });
+        }
         let exec = self.set.exec(&self.entry, "draft")?;
         let out = exec.call(&[
             scalar_i32(last),
@@ -256,8 +312,31 @@ impl DraftModel {
         Ok(DraftOutput { tokens, qlogits })
     }
 
+    /// Draft a token tree from `last`: the scripted backend branches over
+    /// its candidate lines; the PJRT path degenerates to the fused chain.
+    pub fn draft_tree(
+        &self,
+        state: &mut SeqState,
+        last: i32,
+        cfg: &crate::spec::tree::TreeConfig,
+        temperature: f32,
+        seed: u32,
+    ) -> Result<DraftTree> {
+        if self.is_scripted() {
+            let _ = (last, temperature, seed);
+            return scripted::draft_tree_drafter(self.entry.vocab, cfg, state);
+        }
+        crate::spec::decoder::draft_tree_via_chain(self, state, last, cfg, temperature, seed)
+    }
+
     /// Step-wise decode (reference path + TVD distribution analysis).
     pub fn decode(&self, state: &mut SeqState, token: i32) -> Result<Vec<f32>> {
+        if self.is_scripted() {
+            let _ = token;
+            let (_, q) = scripted::draft_drafter(self.entry.vocab, 1, state)?;
+            state.pos += 1;
+            return Ok(q.data);
+        }
         let exec = self.set.exec(&self.entry, "decode")?;
         let out = exec.call(&[
             lit_i32(&[token], &[1])?,

@@ -1,0 +1,335 @@
+//! Deterministic scripted model backend (`manifest.backend == "scripted"`).
+//!
+//! Stands in for the compiled PJRT executables wherever the real runtime is
+//! unavailable (CI, the vendored-stub build, integration tests): every
+//! request maps to a deterministic target token stream derived by hashing
+//! its (image, prompt) pair, and drafter variants propose agreement-
+//! degraded copies of that stream -- "massv" diverges rarely, "baseline"
+//! constantly, text-only drafting degrades further -- so acceptance
+//! dynamics, MAL ordering across variants, and chain-vs-tree behavior are
+//! all exercised end-to-end (engine, scheduler, TCP protocol) with zero
+//! model weights.
+//!
+//! Logits are sharp one-hots (`SHARP`), so temperature sampling follows the
+//! script deterministically and T>0 losslessness is testable seed by seed.
+//! `SeqState.pos` holds the *stream* index (same convention as
+//! `spec::testing`); the opaque KV literal is never read.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::Manifest;
+use crate::models::SeqState;
+use crate::runtime::Tensor;
+use crate::spec::tree::{DraftTree, TreeBuilder, TreeConfig};
+use crate::util::rng::Rng;
+
+/// One-hot logit magnitude: softmax at T=1 is numerically a point mass.
+pub const SHARP: f32 = 50.0;
+
+/// The token lines a scripted sequence follows: the mainline plus
+/// alternative branch lines for tree drafting.
+#[derive(Debug, Clone)]
+pub struct ScriptSet {
+    pub primary: Vec<i32>,
+    pub alts: Vec<Vec<i32>>,
+}
+
+impl ScriptSet {
+    pub fn single(primary: Vec<i32>) -> ScriptSet {
+        ScriptSet { primary, alts: Vec::new() }
+    }
+}
+
+/// Cyclic indexing (same convention as the test mocks, so budget overruns
+/// never panic).
+pub fn at(script: &[i32], i: i32) -> i32 {
+    script[(i.max(0) as usize) % script.len()]
+}
+
+pub fn sharp_row(tok: i32, vocab: usize) -> Vec<f32> {
+    let mut row = vec![0.0f32; vocab];
+    row[(tok as usize).min(vocab - 1)] = SHARP;
+    row
+}
+
+/// FNV-1a over the true prompt prefix and a subsample of the image: the
+/// deterministic per-request seed.
+pub fn stream_seed(image: &[f32], prompt: &[i32], len: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in prompt.iter().take(len) {
+        h = (h ^ t as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    for v in image.iter().step_by(29) {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The target's token stream for one request: `gen_max - 2` content tokens
+/// from the non-special vocabulary range, then EOS.
+pub fn target_stream(m: &Manifest, image: &[f32], prompt: &[i32], len: usize) -> Vec<i32> {
+    let mut rng = Rng::seeded(stream_seed(image, prompt, len));
+    let lo = content_floor(m);
+    let n = m.gen_max.saturating_sub(2).max(4);
+    let mut s: Vec<i32> = (0..n)
+        .map(|_| (lo + rng.range(m.vocab_size - lo)) as i32)
+        .collect();
+    s.push(m.eos_id);
+    s
+}
+
+/// First non-special token id (special ids occupy the low range).
+fn content_floor(m: &Manifest) -> usize {
+    let top = m.pad_id.max(m.bos_id).max(m.eos_id).max(m.sep_id).max(0) as usize + 1;
+    // leave one extra slot so corruptions have room even in tiny vocabs
+    top.min(m.vocab_size.saturating_sub(2))
+}
+
+/// Replace every `period`-th token (at `phase`) with a deterministic
+/// *different* content token.
+fn corrupt(stream: &[i32], period: usize, phase: usize, lo: usize, vocab: usize) -> Vec<i32> {
+    let span = (vocab - lo).max(2) as i32;
+    stream
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            if i % period == phase % period {
+                let base = (t - lo as i32).rem_euclid(span);
+                let delta = 1 + (i % 5) as i32 % (span - 1);
+                lo as i32 + (base + delta).rem_euclid(span)
+            } else {
+                t
+            }
+        })
+        .collect()
+}
+
+/// Agreement period per drafter variant: corrupt every `period`-th stream
+/// position.  Larger = better aligned (the MASSV ordering: full pipeline >
+/// w/o SDViT > text-only baseline), halved when the visual context is
+/// discarded (`aligned == false`, the Table-3 regime).
+fn agreement_period(variant: &str, aligned: bool) -> usize {
+    let p = match variant {
+        "massv" => 7,
+        "massv_wo_sdvit" => 4,
+        "baseline" => 3,
+        _ => 2,
+    };
+    if aligned {
+        p
+    } else {
+        (p / 2).max(2)
+    }
+}
+
+/// Drafter lines for one request: the primary line corrupts the target
+/// stream on one phase, the alternative branch line on a disjoint phase --
+/// so tree drafting always carries a branch that tracks the target through
+/// a primary divergence (what raises tree MAL above chain MAL).
+pub fn drafter_scripts(
+    m: &Manifest,
+    stream: &[i32],
+    variant: &str,
+    aligned: bool,
+) -> ScriptSet {
+    let lo = content_floor(m);
+    let period = agreement_period(variant, aligned);
+    ScriptSet {
+        primary: corrupt(stream, period, 1, lo, m.vocab_size),
+        alts: vec![corrupt(stream, period, 1 + period / 2, lo, m.vocab_size)],
+    }
+}
+
+fn state(script: ScriptSet) -> SeqState {
+    SeqState { kv: xla::Literal::scalar(0.0f32), pos: 0, script: Some(Arc::new(script)) }
+}
+
+fn script_of(st: &SeqState) -> Result<&Arc<ScriptSet>> {
+    st.script
+        .as_ref()
+        .ok_or_else(|| anyhow!("scripted backend: sequence state carries no script"))
+}
+
+// ------------------------------------------------------------- target ops
+
+pub fn prefill_target(
+    m: &Manifest,
+    vocab: usize,
+    image: &[f32],
+    prompt: &[i32],
+    len: usize,
+) -> Result<(Vec<f32>, SeqState)> {
+    let stream = target_stream(m, image, prompt, len);
+    let logits = sharp_row(stream[0], vocab);
+    Ok((logits, state(ScriptSet::single(stream))))
+}
+
+/// Row i predicts the stream token after `tokens[i]` (position `pos + i`).
+pub fn verify_target(vocab: usize, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor> {
+    let script = script_of(st)?.clone();
+    let rows: Vec<f32> = (0..tokens.len())
+        .flat_map(|i| sharp_row(at(&script.primary, st.pos + i as i32 + 1), vocab))
+        .collect();
+    Tensor::new(rows, vec![tokens.len(), vocab])
+}
+
+pub fn decode_target(vocab: usize, st: &mut SeqState) -> Result<Vec<f32>> {
+    let script = script_of(st)?.clone();
+    let out = sharp_row(at(&script.primary, st.pos + 1), vocab);
+    st.pos += 1;
+    Ok(out)
+}
+
+/// Tree rows are positional: the node at depth d gets the row predicting
+/// stream index `pos + d + 2`; row 0 predicts `pos + 1`.
+pub fn verify_tree_target(vocab: usize, st: &mut SeqState, tree: &DraftTree) -> Result<Tensor> {
+    let script = script_of(st)?.clone();
+    let mut rows: Vec<f32> = Vec::with_capacity((tree.len() + 1) * vocab);
+    rows.extend(sharp_row(at(&script.primary, st.pos + 1), vocab));
+    for d in &tree.depths {
+        rows.extend(sharp_row(at(&script.primary, st.pos + *d as i32 + 2), vocab));
+    }
+    Tensor::new(rows, vec![tree.len() + 1, vocab])
+}
+
+// ------------------------------------------------------------ drafter ops
+
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_drafter(
+    m: &Manifest,
+    variant: &str,
+    multimodal: bool,
+    image: Option<&[f32]>,
+    prompt: &[i32],
+    len: usize,
+    text_only: bool,
+) -> Result<SeqState> {
+    // the drafter only "sees" the image when it is multimodal and not in
+    // Table-3 text-only mode; alignment degrades otherwise
+    let aligned = multimodal && !text_only && image.is_some();
+    let img: &[f32] = image.unwrap_or(&[]);
+    let stream = target_stream(m, img, prompt, len);
+    Ok(state(drafter_scripts(m, &stream, variant, aligned)))
+}
+
+pub fn draft_drafter(
+    vocab: usize,
+    gamma: usize,
+    st: &mut SeqState,
+) -> Result<(Vec<i32>, Tensor)> {
+    let script = script_of(st)?.clone();
+    let tokens: Vec<i32> =
+        (0..gamma).map(|i| at(&script.primary, st.pos + 1 + i as i32)).collect();
+    let qlogits = Tensor::new(
+        tokens.iter().flat_map(|&t| sharp_row(t, vocab)).collect(),
+        vec![gamma, vocab],
+    )?;
+    Ok((tokens, qlogits))
+}
+
+/// Prefix-trie over the primary and alternative lines' windows at the
+/// current stream position (genuine multi-branch drafting).
+pub fn draft_tree_drafter(
+    vocab: usize,
+    cfg: &TreeConfig,
+    st: &mut SeqState,
+) -> Result<DraftTree> {
+    let script = script_of(st)?.clone();
+    let mut b = TreeBuilder::new(vocab);
+    let lines = std::iter::once(&script.primary).chain(script.alts.iter());
+    for line in lines {
+        let path: Vec<(i32, Vec<f32>)> = (0..cfg.depth())
+            .map(|d| {
+                let t = at(line, st.pos + 1 + d as i32);
+                (t, sharp_row(t, vocab))
+            })
+            .collect();
+        b.add_path(&path, cfg);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::from_json(
+            r#"{
+          "schema": 1, "backend": "scripted", "gamma": 5, "t_max": 128,
+          "p_max": 32, "n_visual": 16, "gen_max": 48, "vocab_size": 120,
+          "pad_id": 0, "bos_id": 1, "eos_id": 2, "sep_id": 3,
+          "use_kernel": false, "targets": [], "drafters": []
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_request_dependent() {
+        let m = toy_manifest();
+        let img_a = vec![0.25f32; 768];
+        let img_b = vec![0.5f32; 768];
+        let prompt = vec![1, 5, 6, 3, 0, 0];
+        let s1 = target_stream(&m, &img_a, &prompt, 4);
+        let s2 = target_stream(&m, &img_a, &prompt, 4);
+        assert_eq!(s1, s2, "same request -> same stream");
+        assert_ne!(s1, target_stream(&m, &img_b, &prompt, 4), "image changes the stream");
+        assert_eq!(*s1.last().unwrap(), m.eos_id);
+        assert!(s1[..s1.len() - 1].iter().all(|&t| t >= 4 && (t as usize) < m.vocab_size));
+    }
+
+    #[test]
+    fn corruption_differs_and_period_orders_agreement() {
+        let m = toy_manifest();
+        let img = vec![0.1f32; 768];
+        let stream = target_stream(&m, &img, &[1, 7, 3], 3);
+        let agree = |variant: &str| -> usize {
+            let s = drafter_scripts(&m, &stream, variant, true);
+            s.primary.iter().zip(&stream).filter(|(a, b)| a == b).count()
+        };
+        let massv = agree("massv");
+        let wo = agree("massv_wo_sdvit");
+        let base = agree("baseline");
+        assert!(massv > wo && wo > base, "{massv} > {wo} > {base} expected");
+        // corrupted positions really differ
+        let s = drafter_scripts(&m, &stream, "massv", true);
+        let diffs = s.primary.iter().zip(&stream).filter(|(a, b)| a != b).count();
+        assert!(diffs > 0);
+        // primary and alt corrupt disjoint phases
+        for i in 0..stream.len() {
+            assert!(
+                s.primary[i] == stream[i] || s.alts[0][i] == stream[i],
+                "position {i} corrupted in both lines"
+            );
+        }
+    }
+
+    #[test]
+    fn text_only_degrades_alignment() {
+        let m = toy_manifest();
+        let img = vec![0.3f32; 768];
+        let stream = target_stream(&m, &img, &[1, 9, 3], 3);
+        let agree = |aligned: bool| -> usize {
+            drafter_scripts(&m, &stream, "massv", aligned)
+                .primary
+                .iter()
+                .zip(&stream)
+                .filter(|(a, b)| a == b)
+                .count()
+        };
+        assert!(agree(true) > agree(false));
+    }
+
+    #[test]
+    fn sharp_rows_pin_the_argmax() {
+        let r = sharp_row(7, 16);
+        assert_eq!(crate::spec::sampler::argmax(&r), 7);
+        let mut p = Vec::new();
+        crate::spec::sampler::softmax_t(&r, 1.0, &mut p);
+        assert!(p[7] > 0.999999);
+    }
+}

@@ -8,12 +8,15 @@
 //! Protocol (one JSON object per line, both directions):
 //!   request:  {"op":"generate", "prompt": str, "image": [f32;768],
 //!              "task"?: str, "target"?: str, "mode"?: "massv"|
-//!              "massv_wo_sdvit"|"baseline"|"target_only",
-//!              "temperature"?: f32, "top_p"?: f32, "max_new"?: int,
-//!              "seed"?: int, "priority"?: "interactive"|"batch",
-//!              "text_only_draft"?: bool}
+//!              "massv_wo_sdvit"|"baseline"|"tree"|"target_only",
+//!              "variant"?: str (drafter variant for mode "tree";
+//!              default "massv"), "temperature"?: f32, "top_p"?: f32,
+//!              "max_new"?: int, "seed"?: int,
+//!              "priority"?: "interactive"|"batch",
+//!              "text_only_draft"?: bool, "adaptive"?: bool}
 //!   request:  {"op":"metrics"}    |    {"op":"ping"}
-//!   response: {"id":n, "text":str, "tokens":[...], "mal":f, ...}
+//!   response: {"id":n, "text":str, "tokens":[...], "mal":f,
+//!              "mean_path_depth":f, "tree_nodes_drafted":n, ...}
 //!             or {"error": str}
 
 pub mod protocol;

@@ -28,18 +28,33 @@ fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
     if image.len() != 16 * 16 * 3 {
         return Err(anyhow!("image must have 768 floats, got {}", image.len()));
     }
+    let text_only_draft = v
+        .get("text_only_draft")
+        .map(|b| b.as_bool().unwrap_or(false))
+        .unwrap_or(false);
+    let adaptive = v
+        .get("adaptive")
+        .map(|b| b.as_bool().unwrap_or(false))
+        .unwrap_or(false);
     let mode = match v.get("mode").and_then(|m| m.as_str().ok()).unwrap_or("massv") {
         "target_only" => DecodeMode::TargetOnly,
+        // token-tree speculation; drafter variant comes from the separate
+        // "variant" field (default "massv").  Validate it here so a typo is
+        // a hard error, exactly like a typo'd chain-mode variant -- the
+        // router's missing-drafter fallback is for absent artifacts, not
+        // malformed requests.
+        "tree" => {
+            let variant =
+                v.get("variant").and_then(|x| x.as_str().ok()).unwrap_or("massv");
+            if !matches!(variant, "massv" | "massv_wo_sdvit" | "baseline") {
+                return Err(anyhow!("unknown drafter variant {variant:?}"));
+            }
+            DecodeMode::Tree { variant: variant.to_string(), text_only_draft, adaptive }
+        }
         variant @ ("massv" | "massv_wo_sdvit" | "baseline") => DecodeMode::Speculative {
             variant: variant.to_string(),
-            text_only_draft: v
-                .get("text_only_draft")
-                .map(|b| b.as_bool().unwrap_or(false))
-                .unwrap_or(false),
-            adaptive: v
-                .get("adaptive")
-                .map(|b| b.as_bool().unwrap_or(false))
-                .unwrap_or(false),
+            text_only_draft,
+            adaptive,
         },
         m => return Err(anyhow!("unknown mode {m:?}")),
     };
@@ -51,6 +66,7 @@ fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
             .map(|t| t.as_usize().unwrap_or(48))
             .unwrap_or(48),
         seed: v.get("seed").map(|t| t.as_i64().unwrap_or(0)).unwrap_or(0) as u64,
+        tree: None, // engine default tree shape (SpecParams::tree)
     };
     let priority = match v.get("priority").and_then(|p| p.as_str().ok()) {
         Some("batch") => Priority::Batch,
@@ -84,6 +100,8 @@ pub fn render_response(r: &Response) -> Json {
         ("mal", Json::num(r.mal)),
         ("verify_calls", Json::num(r.verify_calls as f64)),
         ("accepted_draft", Json::num(r.accepted_draft as f64)),
+        ("mean_path_depth", Json::num(r.mean_path_depth)),
+        ("tree_nodes_drafted", Json::num(r.tree_nodes_drafted as f64)),
         ("finished_by_eos", Json::Bool(r.finished_by_eos)),
         ("queue_ms", Json::num(r.queue_ms)),
         ("latency_ms", Json::num(r.latency_ms)),
@@ -136,6 +154,8 @@ mod tests {
             mal: 3.25,
             verify_calls: 4,
             accepted_draft: 9,
+            mean_path_depth: 2.5,
+            tree_nodes_drafted: 18,
             finished_by_eos: true,
             queue_ms: 0.5,
             latency_ms: 12.25,
@@ -147,7 +167,20 @@ mod tests {
         assert_eq!(back.get("text").unwrap().as_str().unwrap(), "the red circle .");
         assert_eq!(back.get("tokens").unwrap().to_i32_vec().unwrap(), vec![5, 6, 7, 8]);
         assert!((back.get("mal").unwrap().as_f64().unwrap() - 3.25).abs() < 1e-9);
+        assert!((back.get("mean_path_depth").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        assert_eq!(back.get("tree_nodes_drafted").unwrap().as_i64().unwrap(), 18);
         assert!(back.get("error").is_none());
+    }
+
+    #[test]
+    fn tree_mode_wire_name() {
+        use crate::coordinator::DecodeMode;
+        let m = DecodeMode::Tree {
+            variant: "massv".into(),
+            text_only_draft: false,
+            adaptive: false,
+        };
+        assert_eq!(m.wire_name(), "tree");
     }
 
     #[test]

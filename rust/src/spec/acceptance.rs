@@ -10,8 +10,24 @@
 //! This preserves the target's output distribution exactly -- property
 //! tested below (`prop_output_distribution_preserved`).
 
+//!
+//! Tree acceptance (`accept_tree_*`) generalizes both rules to a drafted
+//! token tree: walk from the root context, and at each level test the
+//! candidate children in node order.  Greedy accepts the child matching
+//! the target argmax; stochastic accepts child `x ~ q` with probability
+//! min(1, p(x)/q(x)) and, on rejection, continues to the next sibling
+//! against the residual target `norm(max(p - q, 0))` (the SpecInfer
+//! multi-candidate scheme).  When no child survives, the continuation is
+//! sampled from the final residual; when an accepted path reaches a leaf,
+//! the bonus token is sampled from that leaf's own target row.  Each level
+//! is therefore an instance of single-token speculative sampling, so the
+//! emitted token at every position is distributed exactly as the target's
+//! -- the same losslessness argument as the chain, applied per level
+//! (property-tested below and at the decoder level).
+
 use crate::runtime::Tensor;
 use crate::spec::sampler;
+use crate::spec::tree::DraftTree;
 use crate::util::rng::Rng;
 
 /// Outcome of verifying one speculation window.
@@ -86,6 +102,109 @@ pub fn accept_stochastic(
     sampler::top_p_filter(&mut scratch.p, top_p, &mut scratch.perm);
     let tok = sampler::sample(&scratch.p, rng) as i32;
     Decision { accepted: draft.len(), next_token: tok, bonus: true }
+}
+
+// ---------------------------------------------------------------------------
+// Tree acceptance
+// ---------------------------------------------------------------------------
+
+/// Outcome of verifying one drafted token tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeDecision {
+    /// Accepted node indices, root to leaf (possibly empty).
+    pub path: Vec<usize>,
+    /// The extra target-sampled token after the accepted path.
+    pub next_token: i32,
+    /// True when the accepted path ended at a leaf (no candidate was
+    /// rejected; `next_token` is the bonus from the leaf's own row).
+    pub bonus: bool,
+}
+
+/// Row of `plogits` conditioning on the path ending at `node` (`None` = the
+/// verified context itself).
+fn row_of(node: Option<usize>) -> usize {
+    node.map(|i| i + 1).unwrap_or(0)
+}
+
+/// Greedy tree verification.  `plogits` has `tree.len() + 1` rows laid out
+/// as `row_of` describes.  The walk follows the unique child matching the
+/// target argmax at each level, so the emitted tokens equal plain greedy
+/// target decoding token for token -- with the longest matching
+/// root-to-leaf path accepted in one verify call.
+pub fn accept_tree_greedy(tree: &DraftTree, plogits: &Tensor) -> TreeDecision {
+    debug_assert_eq!(plogits.dims[0], tree.len() + 1);
+    let mut cur: Option<usize> = None;
+    let mut path = Vec::new();
+    loop {
+        let best = sampler::argmax(plogits.row(row_of(cur))) as i32;
+        match tree.children_of(cur).find(|&c| tree.tokens[c] == best) {
+            Some(c) => {
+                path.push(c);
+                cur = Some(c);
+            }
+            None => {
+                let bonus = tree.children_of(cur).next().is_none();
+                return TreeDecision { path, next_token: best, bonus };
+            }
+        }
+    }
+}
+
+/// Stochastic tree verification at `temperature` with optional nucleus
+/// filtering of the target rows.  Lossless: see the module docs.
+///
+/// Q-ROW CONTRACT: exactness of the output distribution requires each
+/// node's `qlogits` row to be the drafter distribution that node's token
+/// was actually *sampled from*, with sibling candidates drawn i.i.d. from
+/// it (the SpecInfer precondition).  Deterministically-chosen siblings
+/// (e.g. `TreeBuilder::add_topk_children`) satisfy only the greedy rule;
+/// point-mass rows (each child certain of its own token, as the scripted
+/// backend emits) are a valid degenerate case.
+pub fn accept_tree_stochastic(
+    tree: &DraftTree,
+    plogits: &Tensor,
+    temperature: f32,
+    top_p: f32,
+    rng: &mut Rng,
+    scratch: &mut Scratch,
+) -> TreeDecision {
+    debug_assert_eq!(plogits.dims[0], tree.len() + 1);
+    if temperature <= 0.0 {
+        return accept_tree_greedy(tree, plogits);
+    }
+    let mut cur: Option<usize> = None;
+    let mut path = Vec::new();
+    loop {
+        sampler::softmax_t(plogits.row(row_of(cur)), temperature, &mut scratch.p);
+        sampler::top_p_filter(&mut scratch.p, top_p, &mut scratch.perm);
+        let mut accepted = None;
+        let mut had_children = false;
+        for c in tree.children_of(cur) {
+            had_children = true;
+            let x = tree.tokens[c];
+            sampler::softmax_t(tree.qlogits.row(c), temperature, &mut scratch.q);
+            let px = scratch.p[x as usize];
+            let qx = scratch.q[x as usize].max(1e-30);
+            if rng.f64() < (px / qx) as f64 {
+                accepted = Some(c);
+                break;
+            }
+            // this candidate is ruled out: continue siblings against the
+            // residual target norm(max(p - q, 0))
+            sampler::residual(&scratch.p, &scratch.q, &mut scratch.r);
+            std::mem::swap(&mut scratch.p, &mut scratch.r);
+        }
+        match accepted {
+            Some(c) => {
+                path.push(c);
+                cur = Some(c);
+            }
+            None => {
+                let tok = sampler::sample(&scratch.p, rng) as i32;
+                return TreeDecision { path, next_token: tok, bonus: !had_children };
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +303,197 @@ mod tests {
                 let f = counts[i] as f64 / n as f64;
                 let want = p[i] as f64;
                 // generous tolerance: logit round-trip + sampling noise
+                if (f - want).abs() > 0.02 + 0.05 * want {
+                    return Err(format!("token {i}: got {f:.4}, want {want:.4}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // ------------------------------------------------------------- trees
+
+    /// one-hot-ish rows sharp enough that softmax(T=1) is ~deterministic
+    fn sharp(tok: i32, v: usize) -> Vec<f32> {
+        let mut row = vec![0.0f32; v];
+        row[tok as usize] = 50.0;
+        row
+    }
+
+    /// Build a two-branch tree: branch A = [a0, a1], branch B = [b0, b1],
+    /// all q rows one-hot at the proposed token.
+    fn two_branch(v: usize, a: [i32; 2], b: [i32; 2]) -> DraftTree {
+        let tokens = vec![a[0], a[1], b[0], b[1]];
+        let parents = vec![None, Some(0), None, Some(2)];
+        let depths = vec![0, 1, 0, 1];
+        let q = Tensor::new(
+            tokens.iter().flat_map(|&t| sharp(t, v)).collect(),
+            vec![4, v],
+        )
+        .unwrap();
+        DraftTree::new(tokens, parents, depths, q).unwrap()
+    }
+
+    #[test]
+    fn tree_greedy_picks_longest_matching_path() {
+        let v = 10;
+        // target wants 5 then 6 then 7; branch A = [5, 9], branch B = [5->dup
+        // collapses? no: B = [4, 6]] -- only A's root matches, then diverges.
+        let t = two_branch(v, [5, 9], [4, 6]);
+        // rows: ctx, after A0(5), after A1(9), after B0(4), after B1(6)
+        let p = Tensor::new(
+            [sharp(5, v), sharp(6, v), sharp(0, v), sharp(0, v), sharp(0, v)]
+                .into_iter()
+                .flatten()
+                .collect(),
+            vec![5, v],
+        )
+        .unwrap();
+        let d = accept_tree_greedy(&t, &p);
+        assert_eq!(d.path, vec![0]); // A0 accepted, A1 (9) != 6 rejected
+        assert_eq!(d.next_token, 6); // correction from A0's row
+        assert!(!d.bonus);
+    }
+
+    #[test]
+    fn tree_greedy_second_branch_can_win() {
+        let v = 10;
+        let t = two_branch(v, [3, 9], [5, 6]);
+        // target: ctx->5, after B0(5)->6, after B1(6)->7 (bonus)
+        let p = Tensor::new(
+            [sharp(5, v), sharp(0, v), sharp(0, v), sharp(6, v), sharp(7, v)]
+                .into_iter()
+                .flatten()
+                .collect(),
+            vec![5, v],
+        )
+        .unwrap();
+        let d = accept_tree_greedy(&t, &p);
+        assert_eq!(d.path, vec![2, 3]); // full branch B accepted
+        assert_eq!(d.next_token, 7);
+        assert!(d.bonus, "leaf reached -> bonus");
+    }
+
+    #[test]
+    fn tree_greedy_zero_match_emits_correction() {
+        let v = 10;
+        let t = two_branch(v, [3, 4], [8, 9]);
+        let p = Tensor::new(
+            (0..5).flat_map(|_| sharp(6, v)).collect::<Vec<f32>>(),
+            vec![5, v],
+        )
+        .unwrap();
+        let d = accept_tree_greedy(&t, &p);
+        assert!(d.path.is_empty());
+        assert_eq!(d.next_token, 6);
+        assert!(!d.bonus);
+    }
+
+    #[test]
+    fn tree_empty_tree_is_plain_decoding() {
+        let v = 6;
+        let t = DraftTree::new(vec![], vec![], vec![], Tensor::new(vec![], vec![0, v]).unwrap())
+            .unwrap();
+        let p = Tensor::new(sharp(3, v), vec![1, v]).unwrap();
+        let d = accept_tree_greedy(&t, &p);
+        assert_eq!(d.path, Vec::<usize>::new());
+        assert_eq!(d.next_token, 3);
+        assert!(d.bonus, "no candidates to reject");
+        let mut rng = Rng::seeded(4);
+        let mut s = Scratch::default();
+        let ds = accept_tree_stochastic(&t, &p, 1.0, 1.0, &mut rng, &mut s);
+        assert_eq!(ds.next_token, 3, "sharp logits pin the sample");
+    }
+
+    /// For chain-shaped trees the tree rule must reproduce the classic rule
+    /// exactly -- same rng stream, same decision.
+    #[test]
+    fn prop_tree_acceptance_degenerates_to_chain() {
+        propcheck("tree == chain on linear trees", 60, |rng| {
+            let v = 2 + rng.range(8);
+            let n = 1 + rng.range(5);
+            let draft: Vec<i32> = (0..n).map(|_| rng.range(v) as i32).collect();
+            let rand_row = |rng: &mut Rng| -> Vec<f32> {
+                (0..v).map(|_| rng.f32() * 6.0 - 3.0).collect()
+            };
+            let q = Tensor::new(
+                (0..n).flat_map(|_| rand_row(rng)).collect::<Vec<f32>>(),
+                vec![n, v],
+            )
+            .unwrap();
+            let p = Tensor::new(
+                (0..n + 1).flat_map(|_| rand_row(rng)).collect::<Vec<f32>>(),
+                vec![n + 1, v],
+            )
+            .unwrap();
+            let temperature = if rng.range(4) == 0 { 0.0 } else { 0.3 + rng.f32() };
+            let top_p = if rng.range(2) == 0 { 1.0 } else { 0.5 + 0.5 * rng.f32() };
+            let tree = DraftTree::chain(draft.clone(), q.clone());
+            let seed = rng.next_u64();
+            let mut s1 = Scratch::default();
+            let mut s2 = Scratch::default();
+            let chain = accept_stochastic(
+                &draft, &q, &p, temperature, top_p, &mut Rng::seeded(seed), &mut s1,
+            );
+            let treed = accept_tree_stochastic(
+                &tree, &p, temperature, top_p, &mut Rng::seeded(seed), &mut s2,
+            );
+            if treed.path.len() != chain.accepted
+                || treed.next_token != chain.next_token
+                || treed.bonus != chain.bonus
+            {
+                return Err(format!("tree {treed:?} != chain {chain:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// THE tree-level losslessness property: with k i.i.d. draft candidates
+    /// per level, the emitted token is still distributed exactly as the
+    /// target's p, for arbitrary p and q (SpecInfer multi-candidate
+    /// speculative sampling).  Verified empirically at one level with k=2.
+    #[test]
+    fn prop_tree_output_distribution_preserved() {
+        propcheck("tree sampling preserves target dist", 8, |rng| {
+            let v = 2 + rng.range(6);
+            let p = random_distribution(rng, v);
+            let q = random_distribution(rng, v);
+            let plog: Vec<f32> = p.iter().map(|&x| (x.max(1e-9)).ln()).collect();
+            let qlog: Vec<f32> = q.iter().map(|&x| (x.max(1e-9)).ln()).collect();
+            let mut s = Scratch::default();
+            let n = 60_000;
+            let mut counts = vec![0usize; v];
+            for _ in 0..n {
+                // two i.i.d. candidates from q as sibling root nodes
+                let x0 = sampler::sample(&q, rng) as i32;
+                let x1 = sampler::sample(&q, rng) as i32;
+                let tree = DraftTree::new(
+                    vec![x0, x1],
+                    vec![None, None],
+                    vec![0, 0],
+                    Tensor::new(
+                        qlog.iter().chain(qlog.iter()).cloned().collect(),
+                        vec![2, v],
+                    )
+                    .unwrap(),
+                )
+                .unwrap();
+                // rows: ctx + one per node, all the same target p
+                let pt = Tensor::new(
+                    plog.iter().cycle().take(3 * v).cloned().collect(),
+                    vec![3, v],
+                )
+                .unwrap();
+                let d = accept_tree_stochastic(&tree, &pt, 1.0, 1.0, rng, &mut s);
+                let emitted = match d.path.first() {
+                    Some(&node) => tree.tokens[node],
+                    None => d.next_token,
+                };
+                counts[emitted as usize] += 1;
+            }
+            for i in 0..v {
+                let f = counts[i] as f64 / n as f64;
+                let want = p[i] as f64;
                 if (f - want).abs() > 0.02 + 0.05 * want {
                     return Err(format!("token {i}: got {f:.4}, want {want:.4}"));
                 }

@@ -13,18 +13,38 @@
 //! cost while preserving exact losslessness (both paths sample from the
 //! target distribution).
 //!
-//! Tested against scripted mocks below; exercised end-to-end by
-//! examples/ablation_drafting.rs.
+//! With token-tree speculation (`spec::tree`) the controller also switches
+//! *between* drafting shapes per request:
+//!
+//!   * chain -> tree when the emitted EMA saturates the chain window
+//!     (`tree_upgrade_tau`): acceptance is bottlenecked by single-path
+//!     drafting, so branching can raise the ceiling;
+//!   * tree -> chain when the EMA of branch utilization (accepted path
+//!     length / drafted nodes) drops below `min_branch_utilization`:
+//!     the extra branches are drafting work the verifier keeps throwing
+//!     away.
+//!
+//! Every mode samples from the target distribution, so switching is
+//! trajectory-safe: position bookkeeping is shared and the output stays
+//! exactly lossless.  Tested against scripted mocks below; exercised end
+//! to end by examples/ablation_drafting.rs and tests/tree_integration.rs.
 
 use anyhow::Result;
 
+use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
 use crate::spec::decoder::{
-    generate_baseline, sample_token, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams,
-    TargetBackend,
+    sample_token, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams, TargetBackend,
 };
-use crate::spec::acceptance::{accept_stochastic, Scratch};
 use crate::util::rng::Rng;
 use std::time::Instant;
+
+/// Which speculative drafting shape to run (the adaptive controller moves
+/// between these, and may abandon both for plain decoding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecMode {
+    Chain,
+    Tree,
+}
 
 #[derive(Debug, Clone)]
 pub struct AdaptiveConfig {
@@ -36,11 +56,23 @@ pub struct AdaptiveConfig {
     /// Never fall back before this many SD iterations (avoid reacting to
     /// one unlucky window).
     pub patience: usize,
+    /// Upgrade chain -> tree when the emitted EMA reaches this (the chain
+    /// window is saturating).  `f64::INFINITY` disables upgrades.
+    pub tree_upgrade_tau: f64,
+    /// Downgrade tree -> chain when the branch-utilization EMA falls below
+    /// this.  `0.0` disables downgrades.
+    pub min_branch_utilization: f64,
 }
 
 impl Default for AdaptiveConfig {
     fn default() -> Self {
-        AdaptiveConfig { ema_alpha: 0.5, min_tau: 1.5, patience: 3 }
+        AdaptiveConfig {
+            ema_alpha: 0.5,
+            min_tau: 1.5,
+            patience: 3,
+            tree_upgrade_tau: 4.5,
+            min_branch_utilization: 0.2,
+        }
     }
 }
 
@@ -54,9 +86,8 @@ impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
         AdaptiveDecoder { inner, adaptive }
     }
 
-    /// Speculative generation with fallback.  Mirrors
-    /// `SpecDecoder::generate` but tracks the acceptance EMA and switches
-    /// to target-only decoding mid-request when speculation stops paying.
+    /// Speculative generation with fallback, starting in chain mode
+    /// (back-compat entry point).
     pub fn generate(
         &self,
         image: &[f32],
@@ -64,8 +95,23 @@ impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
         len: usize,
         cfg: &GenConfig,
     ) -> Result<GenStats> {
+        self.generate_with_mode(SpecMode::Chain, image, prompt, len, cfg)
+    }
+
+    /// Speculative generation with the full controller: starts in `start`
+    /// mode, switches chain<->tree on the acceptance/utilization EMAs, and
+    /// abandons speculation entirely when it stops paying.
+    pub fn generate_with_mode(
+        &self,
+        start: SpecMode,
+        image: &[f32],
+        prompt: &[i32],
+        len: usize,
+        cfg: &GenConfig,
+    ) -> Result<GenStats> {
         let p: &SpecParams = &self.inner.params;
         let eos = p.eos_id;
+        let tree_cfg = cfg.tree.clone().unwrap_or_else(|| p.tree.clone());
         let mut rng = Rng::seeded(cfg.seed);
         let mut scratch = Scratch::default();
         let mut stats = GenStats::default();
@@ -91,66 +137,13 @@ impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
 
         let mut last = t0_tok;
         let mut ema: Option<f64> = None;
-        let mut speculating = true;
+        let mut util_ema: Option<f64> = None;
+        let mut tree_iters = 0usize;
+        let mut mode = Some(start); // None = plain target decoding
+        let mut tree_banned = false;
 
         'outer: while stats.tokens.len() < max_new {
-            if speculating {
-                let seed = rng.next_u32();
-                let out = self.inner.drafter.draft(&mut dstate, last, cfg.temperature, seed)?;
-                stats.draft_calls += 1;
-                let mut vtokens = Vec::with_capacity(p.gamma + 1);
-                vtokens.push(last);
-                vtokens.extend_from_slice(&out.tokens);
-                let plogits = self.inner.target.verify(&mut tstate, &vtokens)?;
-                stats.verify_calls += 1;
-                let dec = accept_stochastic(
-                    &out.tokens, &out.qlogits, &plogits,
-                    cfg.temperature, cfg.top_p, &mut rng, &mut scratch,
-                );
-
-                let mut emitted = 0usize;
-                for &tok in &out.tokens[..dec.accepted] {
-                    stats.tokens.push(tok);
-                    emitted += 1;
-                    if tok == eos {
-                        stats.finished_by_eos = true;
-                        stats.accepted_draft += emitted;
-                        stats.per_iter_emitted.push(emitted);
-                        break 'outer;
-                    }
-                    if stats.tokens.len() >= max_new {
-                        stats.accepted_draft += emitted;
-                        stats.per_iter_emitted.push(emitted);
-                        break 'outer;
-                    }
-                }
-                stats.accepted_draft += emitted;
-                stats.tokens.push(dec.next_token);
-                emitted += 1;
-                stats.per_iter_emitted.push(emitted);
-                if dec.next_token == eos {
-                    stats.finished_by_eos = true;
-                    break;
-                }
-                tstate.pos += 1 + dec.accepted as i32;
-                dstate.pos += 1 + dec.accepted as i32;
-                last = dec.next_token;
-
-                // controller update
-                let a = self.adaptive.ema_alpha;
-                ema = Some(match ema {
-                    None => emitted as f64,
-                    Some(e) => a * emitted as f64 + (1.0 - a) * e,
-                });
-                if stats.verify_calls >= self.adaptive.patience
-                    && ema.unwrap() < self.adaptive.min_tau
-                {
-                    speculating = false;
-                    stats.fallback_at = Some(stats.verify_calls);
-                    // the target cache holds the accepted prefix; continue
-                    // decoding from `last` at tstate.pos (write position)
-                }
-            } else {
+            let Some(cur_mode) = mode else {
                 // plain target decoding for the rest of the request
                 let logits = self.inner.target.decode(&mut tstate, last)?;
                 stats.verify_calls += 1;
@@ -162,6 +155,139 @@ impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
                     break;
                 }
                 last = tok;
+                continue;
+            };
+
+            // ---- one speculative iteration (chain or tree) ----------------
+            let seed = rng.next_u32();
+            let (accepted_len, next_token, emitted) = match cur_mode {
+                SpecMode::Chain => {
+                    let out =
+                        self.inner.drafter.draft(&mut dstate, last, cfg.temperature, seed)?;
+                    stats.draft_calls += 1;
+                    let mut vtokens = Vec::with_capacity(p.gamma + 1);
+                    vtokens.push(last);
+                    vtokens.extend_from_slice(&out.tokens);
+                    let plogits = self.inner.target.verify(&mut tstate, &vtokens)?;
+                    stats.verify_calls += 1;
+                    let dec = accept_stochastic(
+                        &out.tokens, &out.qlogits, &plogits,
+                        cfg.temperature, cfg.top_p, &mut rng, &mut scratch,
+                    );
+
+                    let mut emitted = 0usize;
+                    for &tok in &out.tokens[..dec.accepted] {
+                        stats.tokens.push(tok);
+                        emitted += 1;
+                        if tok == eos {
+                            stats.finished_by_eos = true;
+                            stats.accepted_draft += emitted;
+                            stats.per_iter_emitted.push(emitted);
+                            break 'outer;
+                        }
+                        if stats.tokens.len() >= max_new {
+                            stats.accepted_draft += emitted;
+                            stats.per_iter_emitted.push(emitted);
+                            break 'outer;
+                        }
+                    }
+                    stats.accepted_draft += emitted;
+                    (dec.accepted, dec.next_token, emitted)
+                }
+                SpecMode::Tree => {
+                    let tree = self.inner.drafter.draft_tree(
+                        &mut dstate, last, &tree_cfg, cfg.temperature, seed,
+                    )?;
+                    stats.draft_calls += 1;
+                    stats.tree_nodes_drafted += tree.len();
+                    let plogits =
+                        self.inner.target.verify_tree(&mut tstate, last, &tree, p.gamma)?;
+                    stats.verify_calls += 1;
+                    let dec = accept_tree_stochastic(
+                        &tree, &plogits, cfg.temperature, cfg.top_p, &mut rng, &mut scratch,
+                    );
+
+                    let mut emitted = 0usize;
+                    for &node in &dec.path {
+                        let tok = tree.tokens[node];
+                        stats.tokens.push(tok);
+                        emitted += 1;
+                        if tok == eos {
+                            stats.finished_by_eos = true;
+                            stats.accepted_draft += emitted;
+                            stats.per_iter_emitted.push(emitted);
+                            stats.per_iter_path_depth.push(emitted);
+                            break 'outer;
+                        }
+                        if stats.tokens.len() >= max_new {
+                            stats.accepted_draft += emitted;
+                            stats.per_iter_emitted.push(emitted);
+                            stats.per_iter_path_depth.push(emitted);
+                            break 'outer;
+                        }
+                    }
+                    stats.accepted_draft += emitted;
+                    stats.per_iter_path_depth.push(dec.path.len());
+                    tree_iters += 1;
+                    let util = if tree.is_empty() {
+                        0.0
+                    } else {
+                        dec.path.len() as f64 / tree.len() as f64
+                    };
+                    let a = self.adaptive.ema_alpha;
+                    util_ema = Some(match util_ema {
+                        None => util,
+                        Some(u) => a * util + (1.0 - a) * u,
+                    });
+                    (dec.path.len(), dec.next_token, emitted)
+                }
+            };
+
+            stats.tokens.push(next_token);
+            let emitted = emitted + 1;
+            stats.per_iter_emitted.push(emitted);
+            if next_token == eos {
+                stats.finished_by_eos = true;
+                break;
+            }
+
+            // advance both caches past last + the accepted region
+            tstate.pos += 1 + accepted_len as i32;
+            dstate.pos += 1 + accepted_len as i32;
+            last = next_token;
+
+            // ---- controller update ---------------------------------------
+            let a = self.adaptive.ema_alpha;
+            ema = Some(match ema {
+                None => emitted as f64,
+                Some(e) => a * emitted as f64 + (1.0 - a) * e,
+            });
+            if stats.verify_calls >= self.adaptive.patience
+                && ema.unwrap() < self.adaptive.min_tau
+            {
+                mode = None;
+                stats.fallback_at = Some(stats.verify_calls);
+                // the target cache holds the accepted prefix; continue
+                // decoding from `last` at tstate.pos (write position)
+                continue;
+            }
+            match cur_mode {
+                SpecMode::Chain => {
+                    if !tree_banned
+                        && stats.verify_calls >= self.adaptive.patience
+                        && ema.unwrap() >= self.adaptive.tree_upgrade_tau
+                    {
+                        mode = Some(SpecMode::Tree);
+                    }
+                }
+                SpecMode::Tree => {
+                    if tree_iters >= self.adaptive.patience
+                        && util_ema.unwrap_or(0.0) < self.adaptive.min_branch_utilization
+                    {
+                        mode = Some(SpecMode::Chain);
+                        tree_banned = true; // don't flip-flop within a request
+                    }
+                }
             }
         }
         stats.decode_micros = td.elapsed().as_micros() as u64;
@@ -172,7 +298,8 @@ impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::spec::testing::{params, MockDraft, MockTarget};
+    use crate::spec::testing::{params, MockDraft, MockTarget, MockTreeDraft};
+    use crate::spec::tree::TreeConfig;
 
     fn dec(
         script: Vec<i32>,
@@ -256,8 +383,7 @@ mod tests {
             mixed.clone(),
             AdaptiveConfig { min_tau: 1.01, ..Default::default() },
         );
-        let mut cfg = GenConfig::default();
-        cfg.max_new = 30;
+        let cfg = GenConfig { max_new: 30, ..GenConfig::default() };
         let s_low = low.generate(&[], &[0; 8], 3, &cfg).unwrap();
         assert_eq!(s_low.fallback_at, None, "tau ~2 stays above 1.01");
         let high = dec(
@@ -268,5 +394,127 @@ mod tests {
         let s_high = high.generate(&[], &[0; 8], 3, &cfg).unwrap();
         assert!(s_high.fallback_at.is_some(), "tau ~2 falls below 4.5");
         assert_eq!(s_low.tokens, s_high.tokens);
+    }
+
+    // ---------------------------------------------------- chain <-> tree
+
+    fn tree_dec(
+        script: Vec<i32>,
+        branches: Vec<Vec<i32>>,
+        acfg: AdaptiveConfig,
+    ) -> AdaptiveDecoder<MockTarget, MockTreeDraft> {
+        AdaptiveDecoder::new(
+            SpecDecoder::with_params(
+                MockTarget::new(script),
+                MockTreeDraft::new(branches),
+                params(),
+            ),
+            acfg,
+        )
+    }
+
+    #[test]
+    fn chain_upgrades_to_tree_when_window_saturates() {
+        // perfectly aligned drafter: chain EMA hits 6 immediately, so after
+        // `patience` iterations the controller moves to tree drafting
+        let script: Vec<i32> = (10..58).collect();
+        let d = tree_dec(
+            script.clone(),
+            vec![script.clone()],
+            AdaptiveConfig::default(),
+        );
+        let cfg = GenConfig {
+            tree: Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }),
+            ..GenConfig::default()
+        };
+        let stats = d.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(stats.tokens, script, "mode switches stay lossless");
+        assert!(
+            !stats.per_iter_path_depth.is_empty(),
+            "controller should have upgraded to tree iterations"
+        );
+        assert!(stats.per_iter_path_depth.len() < stats.verify_calls,
+            "the first `patience` iterations ran as chain");
+        assert_eq!(stats.fallback_at, None);
+    }
+
+    #[test]
+    fn tree_downgrades_to_chain_on_low_utilization() {
+        // branches agree with the target for 2 tokens per window then all
+        // diverge: decent tau (3) but poor utilization -> back to chain,
+        // without abandoning speculation
+        let script: Vec<i32> = (10..58).collect();
+        let mut b1 = script.clone();
+        let mut b2 = script.clone();
+        for i in 0..script.len() {
+            if i % 6 >= 2 {
+                b1[i] = 90;
+                b2[i] = 91;
+            }
+        }
+        let d = tree_dec(
+            script.clone(),
+            vec![b1, b2],
+            AdaptiveConfig {
+                min_branch_utilization: 0.6,
+                min_tau: 1.01,
+                ..AdaptiveConfig::default()
+            },
+        );
+        let cfg = GenConfig {
+            tree: Some(TreeConfig { branch: vec![2, 2, 2, 2, 2], max_nodes: 24 }),
+            ..GenConfig::default()
+        };
+        let stats = d
+            .generate_with_mode(SpecMode::Tree, &[], &[0; 8], 3, &cfg)
+            .unwrap();
+        assert_eq!(stats.tokens, script, "downgrade stays lossless");
+        let tree_iters = stats.per_iter_path_depth.len();
+        assert!(tree_iters >= 3, "ran at least `patience` tree iterations");
+        assert!(
+            tree_iters < stats.verify_calls,
+            "later iterations must have run as chain ({} of {})",
+            tree_iters,
+            stats.verify_calls
+        );
+        assert_eq!(stats.fallback_at, None, "speculation itself kept paying");
+    }
+
+    #[test]
+    fn tree_start_matches_plain_tree_decoder_when_stable() {
+        // with comfortable thresholds the adaptive tree path must equal the
+        // plain tree decoder exactly at T=0
+        let script: Vec<i32> = (10..40).chain([2]).collect();
+        let mut alt = script.clone();
+        for i in (1..alt.len()).step_by(4) {
+            alt[i] = 77;
+        }
+        let cfg = GenConfig {
+            tree: Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }),
+            ..GenConfig::default()
+        };
+        let plain = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![script.clone(), alt.clone()]),
+            params(),
+        )
+        .generate_tree(&[], &[0; 8], 3, &cfg)
+        .unwrap();
+        let adaptive = tree_dec(
+            script.clone(),
+            vec![script, alt],
+            AdaptiveConfig {
+                min_branch_utilization: 0.0,
+                min_tau: 0.0,
+                ..AdaptiveConfig::default()
+            },
+        );
+        let stats = adaptive
+            .generate_with_mode(SpecMode::Tree, &[], &[0; 8], 3, &cfg)
+            .unwrap();
+        assert_eq!(stats.tokens, plain.tokens);
+        assert_eq!(stats.per_iter_emitted, plain.per_iter_emitted);
+        assert_eq!(stats.per_iter_path_depth, plain.per_iter_path_depth);
+        assert_eq!(stats.tree_nodes_drafted, plain.tree_nodes_drafted);
     }
 }

@@ -20,8 +20,9 @@ use anyhow::Result;
 use crate::manifest::Manifest;
 use crate::models::{DraftModel, DraftOutput, SeqState, TargetModel};
 use crate::runtime::Tensor;
-use crate::spec::acceptance::{accept_stochastic, Scratch};
+use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
 use crate::spec::sampler;
+use crate::spec::tree::{DraftTree, TreeConfig};
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -37,6 +38,60 @@ pub trait TargetBackend {
     fn verify(&self, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor>;
     /// Single decode step; writes at `st.pos` and advances it.
     fn decode(&self, st: &mut SeqState, token: i32) -> Result<Vec<f32>>;
+
+    /// Verify a flattened draft tree rooted after `last` (written at
+    /// `st.pos`) in ONE forward pass.  Returns `[(n+1) x V]` logits: row 0
+    /// conditions on the prefix ending at `last`, row `i+1` on the
+    /// root-to-node-`i` path.  Must NOT advance `st.pos` (the decoder
+    /// advances by the accepted path length).
+    ///
+    /// The default linearizes chain-shaped trees through `verify` --
+    /// backends whose verify entry point has no tree-attention mask (the
+    /// fixed-window PJRT executables) still serve tree-mode requests for
+    /// degenerate trees; genuinely branching trees need an override
+    /// (scripted/mock backends provide one).
+    fn verify_tree(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        tree: &DraftTree,
+        gamma: usize,
+    ) -> Result<Tensor> {
+        verify_tree_linearized(self, st, last, tree, gamma)
+    }
+}
+
+/// Chain-fallback tree verification: pad the linearized tree to the fixed
+/// `gamma + 1` verify window and slice the rows back down.  Trailing pad
+/// tokens only condition rows we never read, so the result is exact.
+pub(crate) fn verify_tree_linearized<T: TargetBackend + ?Sized>(
+    target: &T,
+    st: &mut SeqState,
+    last: i32,
+    tree: &DraftTree,
+    gamma: usize,
+) -> Result<Tensor> {
+    let Some(chain) = tree.as_chain() else {
+        return Err(anyhow::anyhow!(
+            "this target backend only supports chain-shaped tree verification \
+             (branching trees need a tree-attention verify entry point)"
+        ));
+    };
+    if chain.len() > gamma {
+        return Err(anyhow::anyhow!(
+            "tree depth {} exceeds the verify window gamma={gamma}",
+            chain.len()
+        ));
+    }
+    let mut v = Vec::with_capacity(gamma + 1);
+    v.push(last);
+    v.extend_from_slice(&chain);
+    let pad = *v.last().unwrap();
+    v.resize(gamma + 1, pad);
+    let full = target.verify(st, &v)?;
+    let rows = tree.len() + 1;
+    let w = full.dims[1];
+    Tensor::new(full.data[..rows * w].to_vec(), vec![rows, w])
 }
 
 /// Drafter operations the decoder needs.
@@ -52,6 +107,43 @@ pub trait DraftBackend {
     /// Advances `st.pos` past `last` only.
     fn draft(&self, st: &mut SeqState, last: i32, temperature: f32, seed: u32)
         -> Result<DraftOutput>;
+
+    /// Draft a token tree from `last`.  The default degenerates to the
+    /// chain produced by `draft` truncated to the configured depth (fused
+    /// PJRT drafters have no tree entry point); scripted/mock drafters
+    /// override this with genuine top-k branching.
+    fn draft_tree(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        cfg: &TreeConfig,
+        temperature: f32,
+        seed: u32,
+    ) -> Result<DraftTree> {
+        draft_tree_via_chain(self, st, last, cfg, temperature, seed)
+    }
+}
+
+/// Chain-fallback tree drafting shared by the trait default and the PJRT
+/// `DraftModel` path.
+pub(crate) fn draft_tree_via_chain<D: DraftBackend + ?Sized>(
+    drafter: &D,
+    st: &mut SeqState,
+    last: i32,
+    cfg: &TreeConfig,
+    temperature: f32,
+    seed: u32,
+) -> Result<DraftTree> {
+    let out = drafter.draft(st, last, temperature, seed)?;
+    let depth = cfg.depth().min(out.tokens.len()).min(cfg.max_nodes);
+    if depth == out.tokens.len() {
+        return Ok(DraftTree::chain(out.tokens, out.qlogits));
+    }
+    let w = out.qlogits.dims[1];
+    Ok(DraftTree::chain(
+        out.tokens[..depth].to_vec(),
+        Tensor::new(out.qlogits.data[..depth * w].to_vec(), vec![depth, w])?,
+    ))
 }
 
 impl TargetBackend for TargetModel {
@@ -65,6 +157,16 @@ impl TargetBackend for TargetModel {
 
     fn decode(&self, st: &mut SeqState, token: i32) -> Result<Vec<f32>> {
         TargetModel::decode(self, st, token)
+    }
+
+    fn verify_tree(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        tree: &DraftTree,
+        gamma: usize,
+    ) -> Result<Tensor> {
+        TargetModel::verify_tree(self, st, last, tree, gamma)
     }
 }
 
@@ -88,6 +190,17 @@ impl DraftBackend for DraftModel {
     ) -> Result<DraftOutput> {
         DraftModel::draft(self, st, last, temperature, seed)
     }
+
+    fn draft_tree(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        cfg: &TreeConfig,
+        temperature: f32,
+        seed: u32,
+    ) -> Result<DraftTree> {
+        DraftModel::draft_tree(self, st, last, cfg, temperature, seed)
+    }
 }
 
 /// Decoding-invariant parameters (from the artifact manifest, or synthetic
@@ -97,11 +210,19 @@ pub struct SpecParams {
     pub gamma: usize,
     pub eos_id: i32,
     pub gen_max: usize,
+    /// Default tree shape for `DecodeMode::Tree` requests (overridable per
+    /// request via `GenConfig::tree`).
+    pub tree: TreeConfig,
 }
 
 impl SpecParams {
     pub fn from_manifest(m: &Manifest) -> SpecParams {
-        SpecParams { gamma: m.gamma, eos_id: m.eos_id, gen_max: m.gen_max }
+        SpecParams {
+            gamma: m.gamma,
+            eos_id: m.eos_id,
+            gen_max: m.gen_max,
+            tree: TreeConfig::for_depth(m.gamma),
+        }
     }
 }
 
@@ -115,11 +236,14 @@ pub struct GenConfig {
     pub top_p: f32,
     pub max_new: usize,
     pub seed: u64,
+    /// Per-request tree-shape override for tree-mode decoding; `None` uses
+    /// the engine default from `SpecParams::tree`.
+    pub tree: Option<TreeConfig>,
 }
 
 impl Default for GenConfig {
     fn default() -> Self {
-        GenConfig { temperature: 0.0, top_p: 1.0, max_new: 48, seed: 0 }
+        GenConfig { temperature: 0.0, top_p: 1.0, max_new: 48, seed: 0, tree: None }
     }
 }
 
@@ -140,6 +264,11 @@ pub struct GenStats {
     /// iteration index at which an adaptive controller abandoned
     /// speculation (None = stayed speculative throughout)
     pub fallback_at: Option<usize>,
+    /// accepted root-to-leaf path length per tree-mode iteration (empty
+    /// for chain/target-only decoding)
+    pub per_iter_path_depth: Vec<usize>,
+    /// total candidate nodes drafted across tree-mode iterations
+    pub tree_nodes_drafted: usize,
 }
 
 impl GenStats {
@@ -155,6 +284,25 @@ impl GenStats {
 
     pub fn total_micros(&self) -> u64 {
         self.prefill_micros + self.decode_micros
+    }
+
+    /// Mean accepted root-to-leaf path length over tree iterations.
+    pub fn mean_path_depth(&self) -> f64 {
+        if self.per_iter_path_depth.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self.per_iter_path_depth.iter().sum();
+        total as f64 / self.per_iter_path_depth.len() as f64
+    }
+
+    /// Fraction of drafted tree nodes that ended up on an accepted path
+    /// (branch utilization; 0.0 when no tree iterations ran).
+    pub fn branch_utilization(&self) -> f64 {
+        if self.tree_nodes_drafted == 0 {
+            return 0.0;
+        }
+        let accepted: usize = self.per_iter_path_depth.iter().sum();
+        accepted as f64 / self.tree_nodes_drafted as f64
     }
 }
 
@@ -273,6 +421,103 @@ impl<T: TargetBackend, D: DraftBackend> SpecDecoder<T, D> {
             //   drafter wrote [last, x1..xgamma-1] at dstate.pos; same
             //   advance keeps it one token behind the target, by design
             dstate.pos += 1 + dec.accepted as i32;
+            last = dec.next_token;
+        }
+        stats.decode_micros = td.elapsed().as_micros() as u64;
+        Ok(stats)
+    }
+
+    /// Generate with token-tree speculation: each iteration drafts a
+    /// candidate tree, verifies every node in one target call, and accepts
+    /// the longest root-to-leaf path losslessly
+    /// (`acceptance::accept_tree_*`).  Position bookkeeping matches the
+    /// chain path: both caches advance past `last` plus the accepted path;
+    /// rejected branches are stale tail that the backends position-mask.
+    pub fn generate_tree(
+        &self,
+        image: &[f32],
+        prompt: &[i32],
+        len: usize,
+        cfg: &GenConfig,
+    ) -> Result<GenStats> {
+        let eos = self.params.eos_id;
+        let tree_cfg = cfg.tree.clone().unwrap_or_else(|| self.params.tree.clone());
+        let mut rng = Rng::seeded(cfg.seed);
+        let mut scratch = Scratch::default();
+        let mut stats = GenStats::default();
+        let max_new = cfg.max_new.min(self.params.gen_max);
+
+        // ---- prefill both models -----------------------------------------
+        let t0 = Instant::now();
+        let (last_logits, mut tstate) = self.target.prefill(image, prompt, len)?;
+        let mut dstate =
+            self.drafter.prefill(Some(image), prompt, len, self.text_only_draft)?;
+        stats.prefill_micros = t0.elapsed().as_micros() as u64;
+
+        let td = Instant::now();
+        let mut probs = Vec::new();
+        let t0_tok = sample_token(&last_logits, cfg, &mut probs, &mut rng);
+        stats.tokens.push(t0_tok);
+        if t0_tok == eos {
+            stats.finished_by_eos = true;
+            stats.decode_micros = td.elapsed().as_micros() as u64;
+            return Ok(stats);
+        }
+
+        // ---- tree speculation loop ----------------------------------------
+        let mut last = t0_tok;
+        'outer: while stats.tokens.len() < max_new {
+            let seed = rng.next_u32();
+            let tree =
+                self.drafter.draft_tree(&mut dstate, last, &tree_cfg, cfg.temperature, seed)?;
+            stats.draft_calls += 1;
+            stats.tree_nodes_drafted += tree.len();
+
+            let plogits = self.target.verify_tree(&mut tstate, last, &tree, self.params.gamma)?;
+            stats.verify_calls += 1;
+
+            let dec = accept_tree_stochastic(
+                &tree,
+                &plogits,
+                cfg.temperature,
+                cfg.top_p,
+                &mut rng,
+                &mut scratch,
+            );
+
+            // emit the accepted path (may contain EOS), then the target token
+            let mut emitted = 0usize;
+            for &node in &dec.path {
+                let tok = tree.tokens[node];
+                stats.tokens.push(tok);
+                emitted += 1;
+                if tok == eos {
+                    stats.finished_by_eos = true;
+                    stats.accepted_draft += emitted;
+                    stats.per_iter_emitted.push(emitted);
+                    stats.per_iter_path_depth.push(emitted);
+                    break 'outer;
+                }
+                if stats.tokens.len() >= max_new {
+                    stats.accepted_draft += emitted;
+                    stats.per_iter_emitted.push(emitted);
+                    stats.per_iter_path_depth.push(emitted);
+                    break 'outer;
+                }
+            }
+            stats.accepted_draft += emitted;
+            stats.per_iter_path_depth.push(dec.path.len());
+            stats.tokens.push(dec.next_token);
+            emitted += 1;
+            stats.per_iter_emitted.push(emitted);
+            if dec.next_token == eos {
+                stats.finished_by_eos = true;
+                break;
+            }
+
+            // advance both caches past last + the accepted path
+            tstate.pos += 1 + dec.path.len() as i32;
+            dstate.pos += 1 + dec.path.len() as i32;
             last = dec.next_token;
         }
         stats.decode_micros = td.elapsed().as_micros() as u64;
@@ -498,6 +743,264 @@ mod tests {
             .unwrap();
             if spec.tokens != base.tokens {
                 return Err(format!("spec {:?} != base {:?}", spec.tokens, base.tokens));
+            }
+            Ok(())
+        });
+    }
+
+    // ------------------------------------------------------------ tree mode
+
+    use crate::spec::testing::{MockTreeDraft, MOCK_GAMMA};
+
+    fn wide(depth: usize) -> TreeConfig {
+        TreeConfig { branch: vec![3; depth], max_nodes: 32 }
+    }
+
+    #[test]
+    fn tree_prefix_agreement_accepts_longest_path() {
+        // target wants 10,11,12,...; branch A diverges at depth 2, branch B
+        // tracks the target all the way -> the accepted path must follow B.
+        let script: Vec<i32> = (10..40).collect();
+        let mut a = script.clone();
+        for i in (2..a.len()).step_by(3) {
+            a[i] = 90;
+        }
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![a, script.clone()]),
+            params(),
+        );
+        let mut cfg = greedy();
+        cfg.tree = Some(wide(5));
+        cfg.max_new = 19; // prefill + 3 full iterations of depth 5 + bonus
+        let stats = dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(stats.tokens, script[..19].to_vec());
+        // every iteration accepts the full 5-deep path + bonus
+        assert!(stats.per_iter_path_depth.iter().all(|&d| d == 5), "{:?}", stats.per_iter_path_depth);
+        assert!((stats.mal() - 6.0).abs() < 1e-9);
+        assert!(stats.tree_nodes_drafted > 5 * stats.verify_calls, "trees must branch");
+        assert!(stats.branch_utilization() < 1.0);
+    }
+
+    #[test]
+    fn tree_zero_agreement_emits_one_token_per_iter() {
+        let script = vec![5, 6, 7, 8, 9, 2];
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![vec![50, 51, 52], vec![60, 61, 62]]),
+            params(),
+        );
+        let mut cfg = greedy();
+        cfg.tree = Some(wide(5));
+        let stats = dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(stats.tokens, script, "losslessness with hopeless branches");
+        assert!(stats.per_iter_path_depth.iter().all(|&d| d == 0));
+        assert!(stats.per_iter_emitted.iter().all(|&e| e == 1));
+        assert!((stats.mal() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_eos_inside_accepted_branch_truncates() {
+        let script = vec![5, 6, 2, 40, 41, 42, 43, 44]; // EOS at index 2
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![script.clone(), vec![5, 6, 77, 78, 79, 80, 81, 82]]),
+            params(),
+        );
+        let mut cfg = greedy();
+        cfg.tree = Some(wide(5));
+        let stats = dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(stats.tokens, vec![5, 6, 2]);
+        assert!(stats.finished_by_eos);
+        assert_eq!(stats.verify_calls, 1);
+    }
+
+    #[test]
+    fn tree_gen_max_truncates_mid_tree() {
+        let script: Vec<i32> = (10..60).collect(); // no EOS
+        let dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![script.clone(), vec![90; 8]]),
+            params(),
+        );
+        let mut cfg = greedy();
+        cfg.tree = Some(wide(5));
+        cfg.max_new = 9; // hits the budget inside the second iteration's path
+        let stats = dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(stats.tokens.len(), 9);
+        assert_eq!(stats.tokens, script[..9].to_vec());
+        assert!(!stats.finished_by_eos);
+    }
+
+    #[test]
+    fn tree_mal_beats_chain_on_recovering_branches() {
+        // chain drafter: the target stream with scattered corruptions --
+        // every corrupted position cuts a chain window short.  The tree
+        // drafter carries the same corrupted line PLUS a clean line, so the
+        // walk always has a branch tracking the target: tree MAL > chain
+        // MAL on the same workload, both exactly lossless.
+        let script: Vec<i32> = (10..58).collect();
+        let mut corrupted = script.clone();
+        for i in (2..corrupted.len()).step_by(6) {
+            corrupted[i] = 90 + (i % 7) as i32;
+        }
+        let chain_dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(corrupted.clone()),
+            params(),
+        );
+        let chain = chain_dec.generate(&[], &[0; 8], 3, &greedy()).unwrap();
+        let tree_dec = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![corrupted, script.clone()]),
+            params(),
+        );
+        let mut cfg = greedy();
+        cfg.tree = Some(wide(5));
+        let tree = tree_dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(chain.tokens, tree.tokens, "both lossless");
+        assert_eq!(tree.tokens, script, "48-token budget covers the whole script");
+        assert!(
+            tree.mal() > chain.mal(),
+            "tree MAL {:.2} must beat chain MAL {:.2} here",
+            tree.mal(),
+            chain.mal()
+        );
+    }
+
+    #[test]
+    fn tree_chain_shaped_config_matches_chain_decoder() {
+        // with a single-branch drafter and branch factors of 1, tree mode
+        // must reproduce chain mode exactly, iteration for iteration
+        let script: Vec<i32> = (10..40).collect();
+        let mut dscript = script.clone();
+        dscript[4] = 99;
+        dscript[11] = 99;
+        let chain = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(dscript.clone()),
+            params(),
+        )
+        .generate(&[], &[0; 8], 3, &greedy())
+        .unwrap();
+        let mut cfg = greedy();
+        cfg.tree = Some(TreeConfig::chain(MOCK_GAMMA));
+        let tree = SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![dscript]),
+            params(),
+        )
+        .generate_tree(&[], &[0; 8], 3, &cfg)
+        .unwrap();
+        assert_eq!(chain.tokens, tree.tokens);
+        assert_eq!(chain.per_iter_emitted, tree.per_iter_emitted);
+        assert_eq!(chain.verify_calls, tree.verify_calls);
+    }
+
+    #[test]
+    fn prop_tree_spec_equals_baseline_for_any_scripts() {
+        // the tree-level losslessness theorem at the decoder level: greedy
+        // tree speculation == greedy target decoding for random branch sets
+        crate::util::prop::propcheck("tree decoder losslessness", 50, |rng| {
+            let n = 3 + rng.range(20);
+            let mut script: Vec<i32> = (0..n).map(|_| 4 + rng.range(90) as i32).collect();
+            script.push(2); // EOS
+            let n_branches = 1 + rng.range(3);
+            let scripts: Vec<Vec<i32>> = (0..n_branches)
+                .map(|_| {
+                    (0..n + 8)
+                        .map(|i| {
+                            if rng.range(3) == 0 {
+                                // often agree with the target stream
+                                *script.get(i).unwrap_or(&2)
+                            } else if rng.range(2) == 0 {
+                                4 + rng.range(90) as i32
+                            } else {
+                                2
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let dec = SpecDecoder::with_params(
+                MockTarget::new(script.clone()),
+                MockTreeDraft::new(scripts),
+                params(),
+            );
+            let cfg = GenConfig {
+                tree: Some(TreeConfig { branch: vec![3, 2, 2, 1, 1], max_nodes: 16 }),
+                ..GenConfig::default()
+            };
+            let spec = dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
+            let base = generate_baseline(
+                &MockTarget::new(script.clone()),
+                &params(),
+                &[],
+                &[0; 8],
+                3,
+                &GenConfig::default(),
+            )
+            .unwrap();
+            if spec.tokens != base.tokens {
+                return Err(format!("tree spec {:?} != base {:?}", spec.tokens, base.tokens));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_temperature_sampling_matches_target_only_for_fixed_seeds() {
+        // The mocks' sharp one-hot logits make T>0 sampling deterministic,
+        // so exact losslessness is testable seed by seed: chain and tree
+        // speculative output must equal target-only sampling output.
+        crate::util::prop::propcheck("T=1 spec == target-only per seed", 40, |rng| {
+            let n = 3 + rng.range(16);
+            let mut script: Vec<i32> = (0..n).map(|_| 4 + rng.range(90) as i32).collect();
+            script.push(2);
+            let dscript: Vec<i32> = (0..n + 8)
+                .map(|i| {
+                    if rng.range(2) == 0 {
+                        *script.get(i).unwrap_or(&2)
+                    } else {
+                        4 + rng.range(90) as i32
+                    }
+                })
+                .collect();
+            let cfg = GenConfig {
+                temperature: 1.0,
+                seed: rng.next_u64(),
+                ..GenConfig::default()
+            };
+            let base = generate_baseline(
+                &MockTarget::new(script.clone()),
+                &params(),
+                &[],
+                &[0; 8],
+                3,
+                &cfg,
+            )
+            .unwrap();
+            let chain = SpecDecoder::with_params(
+                MockTarget::new(script.clone()),
+                MockDraft::new(dscript.clone()),
+                params(),
+            )
+            .generate(&[], &[0; 8], 3, &cfg)
+            .unwrap();
+            if chain.tokens != base.tokens {
+                return Err(format!("T=1 chain {:?} != base {:?}", chain.tokens, base.tokens));
+            }
+            let mut tcfg = cfg.clone();
+            tcfg.tree = Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 });
+            let tree = SpecDecoder::with_params(
+                MockTarget::new(script.clone()),
+                MockTreeDraft::new(vec![dscript, script.clone()]),
+                params(),
+            )
+            .generate_tree(&[], &[0; 8], 3, &tcfg)
+            .unwrap();
+            if tree.tokens != base.tokens {
+                return Err(format!("T=1 tree {:?} != base {:?}", tree.tokens, base.tokens));
             }
             Ok(())
         });

@@ -7,9 +7,14 @@ pub mod adaptive;
 pub mod decoder;
 pub mod sampler;
 pub mod testing;
+pub mod tree;
 
-pub use acceptance::{accept_greedy, accept_stochastic, Decision, Scratch};
-pub use adaptive::{AdaptiveConfig, AdaptiveDecoder};
+pub use acceptance::{
+    accept_greedy, accept_stochastic, accept_tree_greedy, accept_tree_stochastic, Decision,
+    Scratch, TreeDecision,
+};
+pub use adaptive::{AdaptiveConfig, AdaptiveDecoder, SpecMode};
 pub use decoder::{
     generate_baseline, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams, TargetBackend,
 };
+pub use tree::{DraftTree, TreeBuilder, TreeConfig};

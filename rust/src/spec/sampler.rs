@@ -98,6 +98,21 @@ pub fn sample(probs: &[f32], rng: &mut Rng) -> usize {
     last_nonzero // float round-off fallback
 }
 
+/// Indices of the `k` largest values, descending, ties broken by lower
+/// index (deterministic).  Used for top-k branching when a draft tree fans
+/// a node out over the drafter's most confident continuations.
+pub fn top_k_indices(xs: &[f32], k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(0..xs.len() as u32);
+    out.sort_unstable_by(|&a, &b| {
+        xs[b as usize]
+            .partial_cmp(&xs[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    out.truncate(k);
+}
+
 /// Residual distribution norm(max(p - q, 0)) (Section 2.1).  Returns false
 /// (and leaves `out` = p) in the degenerate q >= p everywhere case, which
 /// can only arise from float round-off when p == q.
@@ -203,6 +218,35 @@ mod tests {
             // the most probable token always survives
             if p[argmax(&orig)] <= 0.0 {
                 return Err("mode filtered out".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn top_k_indices_descending_with_index_ties() {
+        let mut out = Vec::new();
+        top_k_indices(&[0.1, 5.0, 0.2, 3.0, 5.0], 3, &mut out);
+        assert_eq!(out, vec![1, 4, 3]); // 5.0@1 before 5.0@4 (tie by index)
+        top_k_indices(&[1.0, 2.0], 10, &mut out);
+        assert_eq!(out, vec![1, 0]); // k larger than input
+    }
+
+    #[test]
+    fn prop_top_k_contains_argmax_first() {
+        propcheck("top_k head is argmax", 200, |rng| {
+            let n = small_size(rng, 64);
+            let p = random_distribution(rng, n);
+            let mut out = Vec::new();
+            top_k_indices(&p, 1 + rng.range(n), &mut out);
+            if out[0] as usize != argmax(&p) {
+                return Err(format!("head {} vs argmax {}", out[0], argmax(&p)));
+            }
+            // descending order
+            for w in out.windows(2) {
+                if p[w[0] as usize] < p[w[1] as usize] {
+                    return Err("not descending".into());
+                }
             }
             Ok(())
         });

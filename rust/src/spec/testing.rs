@@ -9,32 +9,54 @@
 //! with acceptance counts equal to per-window prefix agreement -- which is
 //! what the tests in spec::decoder assert.
 //!
+//! One-hot logits use a sharp magnitude (`SHARP`) so that softmax at T=1 is
+//! numerically a point mass: the same mocks exercise temperature sampling
+//! deterministically (fixed-seed speculative output must equal fixed-seed
+//! target-only output -- the T>0 losslessness tests).
+//!
+//! For token-tree speculation, `MockTarget` overrides
+//! `TargetBackend::verify_tree` (its stream is positional, so the row for a
+//! node at depth d is just `script[pos + d + 2]`), and `MockTreeDraft`
+//! drafts a genuine multi-branch tree: a prefix-trie over several candidate
+//! scripts, exercising multi-path agreement deterministically.
+//!
 //! `SeqState.pos` is reused as the *stream* position (the mocks have no KV
 //! cache; the dummy literal is never read).
 
 use anyhow::Result;
 
+use crate::models::scripted::sharp_row;
 use crate::models::{DraftOutput, SeqState};
 use crate::runtime::Tensor;
 use crate::spec::decoder::{DraftBackend, SpecParams, TargetBackend};
+use crate::spec::tree::{DraftTree, TreeBuilder, TreeConfig};
 
 pub const MOCK_VOCAB: usize = 100;
 pub const MOCK_EOS: i32 = 2;
 pub const MOCK_GAMMA: usize = 5;
 
+/// One-hot logit magnitude (shared with the scripted backend -- both
+/// determinism arguments depend on the same constant): softmax_t(row, 1.0)
+/// puts ~1 - 1e-20 mass on the hot token, so T=1 sampling follows the
+/// script for every realizable rng draw.
+pub use crate::models::scripted::SHARP;
+
 /// Standard params used by the mock tests.
 pub fn params() -> SpecParams {
-    SpecParams { gamma: MOCK_GAMMA, eos_id: MOCK_EOS, gen_max: 48 }
+    SpecParams {
+        gamma: MOCK_GAMMA,
+        eos_id: MOCK_EOS,
+        gen_max: 48,
+        tree: TreeConfig::for_depth(MOCK_GAMMA),
+    }
 }
 
 fn one_hot(tok: i32) -> Vec<f32> {
-    let mut row = vec![0.0f32; MOCK_VOCAB];
-    row[(tok as usize).min(MOCK_VOCAB - 1)] = 1.0;
-    row
+    sharp_row(tok, MOCK_VOCAB)
 }
 
 fn dummy_state() -> SeqState {
-    SeqState { kv: xla::Literal::scalar(0.0f32), pos: 0 }
+    SeqState { kv: xla::Literal::scalar(0.0f32), pos: 0, script: None }
 }
 
 /// A target that greedily emits `script` (cyclic past the end, so budget
@@ -50,7 +72,7 @@ impl MockTarget {
     }
 
     fn at(&self, i: i32) -> i32 {
-        self.script[(i.max(0) as usize) % self.script.len()]
+        crate::models::scripted::at(&self.script, i)
     }
 }
 
@@ -73,6 +95,24 @@ impl TargetBackend for MockTarget {
         st.pos += 1;
         Ok(out)
     }
+
+    fn verify_tree(
+        &self,
+        st: &mut SeqState,
+        _last: i32,
+        tree: &DraftTree,
+        _gamma: usize,
+    ) -> Result<Tensor> {
+        // The mock stream is positional, so the distribution after the path
+        // to a node at depth d predicts stream index st.pos + d + 2; row 0
+        // (after `last` itself) predicts st.pos + 1.
+        let mut rows: Vec<f32> = Vec::with_capacity((tree.len() + 1) * MOCK_VOCAB);
+        rows.extend(one_hot(self.at(st.pos + 1)));
+        for d in &tree.depths {
+            rows.extend(one_hot(self.at(st.pos + *d as i32 + 2)));
+        }
+        Tensor::new(rows, vec![tree.len() + 1, MOCK_VOCAB])
+    }
 }
 
 /// A drafter that proposes its own script (cyclic), independent of the
@@ -89,7 +129,7 @@ impl MockDraft {
     }
 
     fn at(&self, i: i32) -> i32 {
-        self.script[(i.max(0) as usize) % self.script.len()]
+        crate::models::scripted::at(&self.script, i)
     }
 }
 
@@ -117,6 +157,75 @@ impl DraftBackend for MockDraft {
             vec![MOCK_GAMMA, MOCK_VOCAB],
         )?;
         Ok(DraftOutput { tokens, qlogits })
+    }
+}
+
+/// A multi-branch drafter: each of `scripts` is one candidate continuation
+/// line; `draft_tree` builds the prefix-trie over their windows at the
+/// current stream position (so branches sharing tokens share nodes).
+/// Chain-mode `draft` falls back to `scripts[0]`.
+pub struct MockTreeDraft {
+    pub scripts: Vec<Vec<i32>>,
+}
+
+impl MockTreeDraft {
+    pub fn new(scripts: Vec<Vec<i32>>) -> Self {
+        assert!(!scripts.is_empty());
+        assert!(scripts.iter().all(|s| !s.is_empty()));
+        MockTreeDraft { scripts }
+    }
+
+    fn at(&self, b: usize, i: i32) -> i32 {
+        crate::models::scripted::at(&self.scripts[b], i)
+    }
+}
+
+impl DraftBackend for MockTreeDraft {
+    fn prefill(
+        &self,
+        _image: Option<&[f32]>,
+        _prompt: &[i32],
+        _len: usize,
+        _text_only: bool,
+    ) -> Result<SeqState> {
+        Ok(dummy_state())
+    }
+
+    fn draft(
+        &self,
+        st: &mut SeqState,
+        _last: i32,
+        _temperature: f32,
+        _seed: u32,
+    ) -> Result<DraftOutput> {
+        let tokens: Vec<i32> =
+            (0..MOCK_GAMMA).map(|i| self.at(0, st.pos + 1 + i as i32)).collect();
+        let qlogits = Tensor::new(
+            tokens.iter().flat_map(|&t| one_hot(t)).collect(),
+            vec![MOCK_GAMMA, MOCK_VOCAB],
+        )?;
+        Ok(DraftOutput { tokens, qlogits })
+    }
+
+    fn draft_tree(
+        &self,
+        st: &mut SeqState,
+        _last: i32,
+        cfg: &TreeConfig,
+        _temperature: f32,
+        _seed: u32,
+    ) -> Result<DraftTree> {
+        let mut b = TreeBuilder::new(MOCK_VOCAB);
+        for branch in 0..self.scripts.len() {
+            let path: Vec<(i32, Vec<f32>)> = (0..cfg.depth())
+                .map(|d| {
+                    let t = self.at(branch, st.pos + 1 + d as i32);
+                    (t, one_hot(t))
+                })
+                .collect();
+            b.add_path(&path, cfg);
+        }
+        b.build()
     }
 }
 
@@ -151,5 +260,40 @@ mod tests {
         st.pos = 2;
         let out = d.draft(&mut st, 0, 0.0, 0).unwrap();
         assert_eq!(out.tokens, vec![8, 9, 10, 11, 5]); // cyclic wrap at idx 7
+    }
+
+    #[test]
+    fn mock_tree_draft_builds_trie_over_scripts() {
+        // scripts agree on the first token then diverge
+        let d = MockTreeDraft::new(vec![vec![5, 6, 7, 8, 9, 10], vec![5, 6, 40, 41, 42, 43]]);
+        let mut st = dummy_state();
+        let cfg = TreeConfig { branch: vec![2, 2, 2], max_nodes: 16 };
+        let tree = d.draft_tree(&mut st, 0, &cfg, 0.0, 0).unwrap();
+        // shared prefix [6, 7? no: window starts at pos+1 = scripts[..][1..]]
+        // window A = [6, 7, 8], window B = [6, 40, 41]: trie = 6 -> {7->8, 40->41}
+        assert_eq!(tree.len(), 5);
+        assert_eq!(tree.children_of(None).count(), 1);
+        let root = tree.children_of(None).next().unwrap();
+        assert_eq!(tree.tokens[root], 6);
+        assert_eq!(tree.children_of(Some(root)).count(), 2);
+        assert_eq!(tree.leaf_count(), 2);
+    }
+
+    #[test]
+    fn mock_verify_tree_rows_by_depth() {
+        let t = MockTarget::new(vec![7, 8, 9, 10, 11, 12, 13, 14]);
+        let d = MockTreeDraft::new(vec![vec![7, 8, 9, 10], vec![7, 8, 30, 31]]);
+        let mut st = dummy_state();
+        let cfg = TreeConfig { branch: vec![2, 2], max_nodes: 8 };
+        let tree = d.draft_tree(&mut st, 7, &cfg, 0.0, 0).unwrap();
+        let mut ts = dummy_state();
+        let rows = t.verify_tree(&mut ts, 7, &tree, MOCK_GAMMA).unwrap();
+        assert_eq!(rows.dims, vec![tree.len() + 1, MOCK_VOCAB]);
+        // row 0 predicts stream index 1 -> token 8
+        assert_eq!(crate::spec::sampler::argmax(rows.row(0)), 8);
+        // every node at depth d gets the row predicting stream index d + 2
+        for (i, &d) in tree.depths.iter().enumerate() {
+            assert_eq!(crate::spec::sampler::argmax(rows.row(i + 1)), 9 + d);
+        }
     }
 }

@@ -1,0 +1,366 @@
+//! Token-tree speculation structures (Spec-LLaVA / SpecInfer-style).
+//!
+//! A `DraftTree` holds the drafter's candidate continuations of the current
+//! context as a rooted forest in topological order: node `i` proposes one
+//! token conditioned on the root-to-parent path, `parents[i]` is `None` for
+//! children of the verified context (the token right after `last`), and
+//! `qlogits.row(i)` is the drafter distribution node `i`'s token was drawn
+//! from.  The whole tree is verified in ONE target call
+//! (`TargetBackend::verify_tree`) which returns a logits row per node plus
+//! one for the root context, and `spec::acceptance::accept_tree_*` picks
+//! the longest accepted root-to-leaf path losslessly.
+//!
+//! Chain speculation is the degenerate tree where every level has exactly
+//! one child -- `DraftTree::chain` -- so the tree path strictly generalizes
+//! the paper's Section 2.1 algorithm.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Tensor;
+use crate::spec::sampler;
+
+/// Per-request/per-engine tree-shape knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeConfig {
+    /// `branch[d]` = maximum children per node at depth `d`; `branch.len()`
+    /// is the tree depth (the analog of gamma for chain drafting).
+    pub branch: Vec<usize>,
+    /// Hard cap on drafted nodes per iteration (keeps the flattened verify
+    /// call bounded).
+    pub max_nodes: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        // Fan out near the root where divergence is most likely, stay
+        // narrow deeper in -- the Spec-LLaVA shape.
+        TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }
+    }
+}
+
+impl TreeConfig {
+    /// A pure chain of the given depth (tree mode degenerates to the
+    /// classic algorithm).
+    pub fn chain(depth: usize) -> TreeConfig {
+        TreeConfig { branch: vec![1; depth], max_nodes: depth.max(1) }
+    }
+
+    /// Shape derived from the manifest's gamma: depth = gamma, fan-out 2 on
+    /// the first two levels (where drafter/target divergence concentrates),
+    /// narrow below.
+    pub fn for_depth(depth: usize) -> TreeConfig {
+        let d = depth.max(1);
+        let mut branch = vec![1; d];
+        branch[0] = 2;
+        if d > 1 {
+            branch[1] = 2;
+        }
+        TreeConfig { branch, max_nodes: (3 * d).max(8) }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.branch.len()
+    }
+}
+
+/// A drafted token tree in topological (parent-before-child) order.
+#[derive(Debug, Clone)]
+pub struct DraftTree {
+    pub tokens: Vec<i32>,
+    /// `None` = child of the verified context (depth 0).
+    pub parents: Vec<Option<usize>>,
+    pub depths: Vec<usize>,
+    /// `[n x V]`: row `i` is the drafter's raw logits at node `i`'s parent
+    /// context (the distribution `tokens[i]` was sampled from).
+    pub qlogits: Tensor,
+}
+
+impl DraftTree {
+    pub fn new(
+        tokens: Vec<i32>,
+        parents: Vec<Option<usize>>,
+        depths: Vec<usize>,
+        qlogits: Tensor,
+    ) -> Result<DraftTree> {
+        let n = tokens.len();
+        if parents.len() != n || depths.len() != n {
+            return Err(anyhow!("tree arrays disagree on node count"));
+        }
+        if qlogits.dims.len() != 2 || qlogits.dims[0] != n {
+            return Err(anyhow!("qlogits must be [{n} x V], got {:?}", qlogits.dims));
+        }
+        for (i, p) in parents.iter().enumerate() {
+            match p {
+                None => {
+                    if depths[i] != 0 {
+                        return Err(anyhow!("root child {i} must have depth 0"));
+                    }
+                }
+                Some(p) => {
+                    if *p >= i {
+                        return Err(anyhow!("node {i} not in topological order"));
+                    }
+                    if depths[i] != depths[*p] + 1 {
+                        return Err(anyhow!("node {i} depth inconsistent with parent"));
+                    }
+                }
+            }
+        }
+        Ok(DraftTree { tokens, parents, depths, qlogits })
+    }
+
+    /// The degenerate single-path tree (classic chain speculation).
+    pub fn chain(tokens: Vec<i32>, qlogits: Tensor) -> DraftTree {
+        let n = tokens.len();
+        let parents = (0..n).map(|i| i.checked_sub(1)).collect();
+        let depths = (0..n).collect();
+        DraftTree { tokens, parents, depths, qlogits }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.depths.iter().copied().max().map(|d| d + 1).unwrap_or(0)
+    }
+
+    /// Children of `parent` (`None` = the root context), in node order.
+    /// Trees are small (<= max_nodes), so a linear scan is the right call.
+    pub fn children_of(&self, parent: Option<usize>) -> impl Iterator<Item = usize> + '_ {
+        self.parents
+            .iter()
+            .enumerate()
+            .filter(move |(_, p)| **p == parent)
+            .map(|(i, _)| i)
+    }
+
+    /// `Some(tokens root..leaf)` when the tree is a pure chain (node `i`'s
+    /// parent is `i-1`); used by backends that can only verify linear
+    /// windows.
+    pub fn as_chain(&self) -> Option<Vec<i32>> {
+        for (i, p) in self.parents.iter().enumerate() {
+            if *p != i.checked_sub(1) {
+                return None;
+            }
+        }
+        Some(self.tokens.clone())
+    }
+
+    /// Number of distinct root-to-leaf paths (branch utilization metrics).
+    pub fn leaf_count(&self) -> usize {
+        (0..self.len())
+            .filter(|&i| self.children_of(Some(i)).next().is_none())
+            .count()
+    }
+}
+
+/// Incremental prefix-tree builder: insert candidate continuation paths
+/// (token + the q-logits row it was sampled from per level); shared
+/// prefixes are deduplicated, per-level fan-out is budgeted by
+/// `TreeConfig::branch` with survivors chosen by drafter confidence
+/// (`sampler::top_k_indices` over the candidate tokens' q mass).
+pub struct TreeBuilder {
+    vocab: usize,
+    tokens: Vec<i32>,
+    parents: Vec<Option<usize>>,
+    depths: Vec<usize>,
+    rows: Vec<Vec<f32>>,
+}
+
+impl TreeBuilder {
+    pub fn new(vocab: usize) -> TreeBuilder {
+        TreeBuilder {
+            vocab,
+            tokens: Vec::new(),
+            parents: Vec::new(),
+            depths: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    fn find_child(&self, parent: Option<usize>, token: i32) -> Option<usize> {
+        (0..self.tokens.len())
+            .find(|&i| self.parents[i] == parent && self.tokens[i] == token)
+    }
+
+    fn child_count(&self, parent: Option<usize>) -> usize {
+        self.parents.iter().filter(|p| **p == parent).count()
+    }
+
+    /// Insert one root-to-leaf candidate path.  `path[d]` = (token, q-logits
+    /// row) at depth `d`.  Stops at the first level where the config budget
+    /// or `max_nodes` is exhausted and the token is not already present.
+    pub fn add_path(&mut self, path: &[(i32, Vec<f32>)], cfg: &TreeConfig) {
+        let mut cur: Option<usize> = None;
+        for (d, (tok, row)) in path.iter().enumerate() {
+            if d >= cfg.branch.len() {
+                break;
+            }
+            if let Some(existing) = self.find_child(cur, *tok) {
+                cur = Some(existing);
+                continue;
+            }
+            if self.child_count(cur) >= cfg.branch[d] || self.tokens.len() >= cfg.max_nodes {
+                break;
+            }
+            debug_assert_eq!(row.len(), self.vocab);
+            self.tokens.push(*tok);
+            self.parents.push(cur);
+            self.depths.push(d);
+            self.rows.push(row.clone());
+            cur = Some(self.tokens.len() - 1);
+        }
+    }
+
+    /// Fan a node out over the `k` most confident tokens of a drafter
+    /// distribution (top-k branching).  The first (most confident) inserted
+    /// child index is returned so callers can keep extending the mainline.
+    ///
+    /// GREEDY DRAFTING ONLY: the children are chosen deterministically, so
+    /// they are NOT i.i.d. samples from `qrow` and the stochastic
+    /// acceptance rule's losslessness proof does not cover them (see the
+    /// q-row contract on `accept_tree_stochastic`).  Greedy (T = 0)
+    /// acceptance is lossless for any tree, which is where this belongs;
+    /// a T > 0 drafter must populate siblings by sampling from its own
+    /// distribution instead (or use point-mass rows, as the scripted
+    /// backend does).
+    pub fn add_topk_children(
+        &mut self,
+        parent: Option<usize>,
+        qrow: &[f32],
+        k: usize,
+        cfg: &TreeConfig,
+    ) -> Option<usize> {
+        let depth = parent.map(|p| self.depths[p] + 1).unwrap_or(0);
+        if depth >= cfg.branch.len() {
+            return None;
+        }
+        let budget = cfg.branch[depth].min(k);
+        let mut idx = Vec::new();
+        sampler::top_k_indices(qrow, budget, &mut idx);
+        let mut first = None;
+        for &t in &idx {
+            if self.find_child(parent, t as i32).is_some()
+                || self.child_count(parent) >= cfg.branch[depth]
+                || self.tokens.len() >= cfg.max_nodes
+            {
+                continue;
+            }
+            self.tokens.push(t as i32);
+            self.parents.push(parent);
+            self.depths.push(depth);
+            self.rows.push(qrow.to_vec());
+            if first.is_none() {
+                first = Some(self.tokens.len() - 1);
+            }
+        }
+        first
+    }
+
+    pub fn build(self) -> Result<DraftTree> {
+        let n = self.tokens.len();
+        let qlogits = Tensor::new(
+            self.rows.into_iter().flatten().collect(),
+            vec![n, self.vocab],
+        )?;
+        DraftTree::new(self.tokens, self.parents, self.depths, qlogits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_hot(tok: i32, v: usize) -> Vec<f32> {
+        let mut row = vec![0.0; v];
+        row[tok as usize] = 50.0;
+        row
+    }
+
+    #[test]
+    fn chain_tree_shape() {
+        let q = Tensor::new(vec![0.0; 3 * 4], vec![3, 4]).unwrap();
+        let t = DraftTree::chain(vec![1, 2, 3], q);
+        assert_eq!(t.parents, vec![None, Some(0), Some(1)]);
+        assert_eq!(t.depths, vec![0, 1, 2]);
+        assert_eq!(t.as_chain(), Some(vec![1, 2, 3]));
+        assert_eq!(t.max_depth(), 3);
+        assert_eq!(t.leaf_count(), 1);
+    }
+
+    #[test]
+    fn builder_dedups_shared_prefixes() {
+        let v = 8;
+        let cfg = TreeConfig { branch: vec![2, 2, 2], max_nodes: 16 };
+        let mut b = TreeBuilder::new(v);
+        let path = |toks: &[i32]| -> Vec<(i32, Vec<f32>)> {
+            toks.iter().map(|&t| (t, one_hot(t, v))).collect()
+        };
+        b.add_path(&path(&[1, 2, 3]), &cfg);
+        b.add_path(&path(&[1, 2, 4]), &cfg); // shares [1, 2]
+        b.add_path(&path(&[5, 6, 7]), &cfg);
+        let t = b.build().unwrap();
+        // nodes: 1,2,3 then 4 (child of 2), then 5,6,7
+        assert_eq!(t.len(), 7);
+        assert_eq!(t.as_chain(), None);
+        assert_eq!(t.children_of(None).count(), 2); // 1 and 5
+        let node2 = t.tokens.iter().position(|&x| x == 2).unwrap();
+        assert_eq!(t.children_of(Some(node2)).count(), 2); // 3 and 4
+        assert_eq!(t.leaf_count(), 3);
+    }
+
+    #[test]
+    fn builder_respects_budgets() {
+        let v = 8;
+        let cfg = TreeConfig { branch: vec![1, 1], max_nodes: 16 };
+        let mut b = TreeBuilder::new(v);
+        let path = |toks: &[i32]| -> Vec<(i32, Vec<f32>)> {
+            toks.iter().map(|&t| (t, one_hot(t, v))).collect()
+        };
+        b.add_path(&path(&[1, 2, 3]), &cfg); // depth capped at 2
+        b.add_path(&path(&[4, 5]), &cfg); // root budget exhausted
+        let t = b.build().unwrap();
+        assert_eq!(t.tokens, vec![1, 2]);
+
+        let cfg = TreeConfig { branch: vec![4, 4], max_nodes: 3 };
+        let mut b = TreeBuilder::new(v);
+        b.add_path(&path(&[1, 2]), &cfg);
+        b.add_path(&path(&[3, 4]), &cfg); // node 4 exceeds max_nodes
+        let t = b.build().unwrap();
+        assert_eq!(t.tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn topk_fanout_orders_by_confidence() {
+        let v = 6;
+        let cfg = TreeConfig { branch: vec![2], max_nodes: 8 };
+        let mut b = TreeBuilder::new(v);
+        let qrow = vec![0.1, 5.0, 0.2, 3.0, 0.0, 0.0];
+        let first = b.add_topk_children(None, &qrow, 3, &cfg);
+        let t = b.build().unwrap();
+        assert_eq!(t.tokens, vec![1, 3]); // top-2 by logit, budget 2
+        assert_eq!(first, Some(0));
+    }
+
+    #[test]
+    fn invalid_trees_rejected() {
+        let q = Tensor::new(vec![0.0; 2 * 4], vec![2, 4]).unwrap();
+        // non-topological parent
+        assert!(DraftTree::new(vec![1, 2], vec![Some(1), None], vec![1, 0], q.clone()).is_err());
+        // depth inconsistent
+        assert!(DraftTree::new(vec![1, 2], vec![None, Some(0)], vec![0, 2], q).is_err());
+    }
+}

@@ -10,8 +10,6 @@
 use std::collections::HashMap;
 use std::fmt::Write as _;
 
-use thiserror::Error;
-
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -23,25 +21,36 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
-#[derive(Debug, Error)]
+/// Parse/accessor errors (`thiserror` is not in the offline vendored set;
+/// the Display/Error impls are written out by hand below).
+#[derive(Debug, Clone, PartialEq)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected byte {1:?} at {0}")]
     Unexpected(usize, char),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("invalid utf-8 in string at byte {0}")]
     BadUtf8(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("type error: expected {0}")]
     Type(&'static str),
-    #[error("missing key {0:?}")]
     Missing(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(i) => write!(f, "unexpected end of input at byte {i}"),
+            JsonError::Unexpected(i, c) => write!(f, "unexpected byte {c:?} at {i}"),
+            JsonError::BadNumber(i) => write!(f, "invalid number at byte {i}"),
+            JsonError::BadEscape(i) => write!(f, "invalid escape at byte {i}"),
+            JsonError::BadUtf8(i) => write!(f, "invalid utf-8 in string at byte {i}"),
+            JsonError::Trailing(i) => write!(f, "trailing garbage at byte {i}"),
+            JsonError::Type(t) => write!(f, "type error: expected {t}"),
+            JsonError::Missing(k) => write!(f, "missing key {k:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 pub type JResult<T> = Result<T, JsonError>;
 

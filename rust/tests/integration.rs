@@ -43,7 +43,8 @@ fn losslessness_greedy_spec_equals_target() {
         let drafter = models.drafter_for("qwensim-L", variant).unwrap();
         let dec = SpecDecoder::new(target.clone(), drafter);
         for (i, it) in items.iter().take(6).enumerate() {
-            let cfg = GenConfig { temperature: 0.0, top_p: 1.0, max_new: 48, seed: i as u64 };
+            let cfg =
+                GenConfig { temperature: 0.0, top_p: 1.0, max_new: 48, seed: i as u64, tree: None };
             let spec = dec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg).unwrap();
             let base = SpecDecoder::generate_baseline(
                 &target, &it.image, &it.prompt_ids, it.prompt_len, &cfg,

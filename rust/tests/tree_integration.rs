@@ -1,0 +1,218 @@
+//! End-to-end token-tree speculation over the scripted backend: request ->
+//! coordinator -> decoder -> protocol response, with no PJRT involved
+//! (`manifest.backend == "scripted"`, see models::scripted).  This is the
+//! integration tier the vendored-stub build can always run.
+
+use std::sync::Arc;
+
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
+use massv::util::json::Json;
+
+/// Write a scripted-backend artifact dir (manifest + vocab) under tmp.
+fn scripted_artifacts(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("massv_tree_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let vocab = 120usize;
+    let mut tokens: Vec<String> =
+        ["<pad>", "<bos>", "<eos>", "<sep>", "<img>"].iter().map(|s| s.to_string()).collect();
+    for i in tokens.len()..vocab {
+        tokens.push(format!("w{i}"));
+    }
+    let tokens_json: Vec<String> = tokens.iter().map(|t| format!("\"{t}\"")).collect();
+    std::fs::write(
+        dir.join("vocab.json"),
+        format!(
+            r#"{{"tokens":[{}],"pad_id":0,"bos_id":1,"eos_id":2,"sep_id":3,"img_id":4}}"#,
+            tokens_json.join(",")
+        ),
+    )
+    .unwrap();
+    let entry = |name: &str, kind: &str, extra: &str| {
+        format!(
+            r#"{{"name":"{name}","kind":"{kind}","family":"qwensim","paper_analog":"scripted",
+                "d_model":48,"n_layers":2,"n_heads":4,"d_head":12,"vocab":{vocab},
+                "window":null,"kv_shape":[2,2,4,128,12],"entries":{{}}{extra}}}"#
+        )
+    };
+    let manifest = format!(
+        r#"{{"schema":1,"backend":"scripted","gamma":5,"t_max":128,"p_max":32,
+            "n_visual":16,"gen_max":48,"vocab_size":{vocab},"pad_id":0,"bos_id":1,
+            "eos_id":2,"sep_id":3,"use_kernel":false,
+            "targets":[{target}],
+            "drafters":[{massv},{baseline}]}}"#,
+        vocab = vocab,
+        target = entry("qwensim-L", "target", ""),
+        massv = entry(
+            "qwensim-S",
+            "draft",
+            r#","variant":"massv","aligned_target":"qwensim-L","multimodal":true"#
+        ),
+        baseline = entry(
+            "qwensim-S",
+            "draft",
+            r#","variant":"baseline","aligned_target":"qwensim-L","multimodal":false"#
+        ),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir.to_str().unwrap().to_string()
+}
+
+fn image(phase: usize) -> Vec<f32> {
+    (0..768).map(|i| ((i + phase) % 7) as f32 * 0.11).collect()
+}
+
+fn request(engine: &Engine, mode: DecodeMode, prompt: &str, img_phase: usize) -> Request {
+    let mut req = Request::simple(engine.next_id(), prompt, image(img_phase));
+    req.mode = mode;
+    req
+}
+
+const PROMPTS: [&str; 4] = ["w5 w6 w7", "w8 w9", "w10 w11 w12 w13", "w14"];
+
+fn spec_mode() -> DecodeMode {
+    DecodeMode::Speculative { variant: "massv".into(), text_only_draft: false, adaptive: false }
+}
+
+fn tree_mode(adaptive: bool) -> DecodeMode {
+    DecodeMode::Tree { variant: "massv".into(), text_only_draft: false, adaptive }
+}
+
+/// Tree mode through Engine::run is lossless and at least as accepting as
+/// chain mode on the high-agreement ("massv") scripted workload.
+#[test]
+fn engine_tree_mode_lossless_and_mal_dominates_chain() {
+    let dir = scripted_artifacts("engine");
+    let engine = Engine::start(
+        &dir,
+        EngineConfig { default_target: "qwensim-L".into(), workers: 2, queue_capacity: 64 },
+    )
+    .unwrap();
+
+    let mut chain_mal_sum = 0.0;
+    let mut tree_mal_sum = 0.0;
+    for (i, prompt) in PROMPTS.iter().enumerate() {
+        let base = engine.run(request(&engine, DecodeMode::TargetOnly, prompt, i));
+        assert!(base.error.is_none(), "{:?}", base.error);
+        assert!(base.finished_by_eos);
+
+        let chain = engine.run(request(&engine, spec_mode(), prompt, i));
+        assert!(chain.error.is_none(), "{:?}", chain.error);
+        let tree = engine.run(request(&engine, tree_mode(false), prompt, i));
+        assert!(tree.error.is_none(), "{:?}", tree.error);
+
+        // losslessness through the whole serving stack
+        assert_eq!(chain.tokens, base.tokens, "chain != target-only on {prompt:?}");
+        assert_eq!(tree.tokens, base.tokens, "tree != target-only on {prompt:?}");
+        assert!(!tree.text.is_empty());
+
+        // tree bookkeeping made it to the response
+        assert!(tree.tree_nodes_drafted > 0);
+        assert!(tree.mean_path_depth > 0.0);
+        assert_eq!(chain.tree_nodes_drafted, 0);
+
+        chain_mal_sum += chain.mal;
+        tree_mal_sum += tree.mal;
+        assert!(
+            tree.mal + 1e-9 >= chain.mal,
+            "prompt {prompt:?}: tree MAL {:.3} < chain MAL {:.3}",
+            tree.mal,
+            chain.mal
+        );
+    }
+    assert!(
+        tree_mal_sum > chain_mal_sum,
+        "across the workload the recovery branch must raise MAL: tree {tree_mal_sum:.3} vs chain {chain_mal_sum:.3}"
+    );
+
+    // engine metrics picked up the tree iterations
+    assert!(engine.metrics.tree_requests.get() >= PROMPTS.len() as u64);
+    assert!(engine.metrics.tree_nodes_drafted.get() > 0);
+    assert!(engine.metrics.branch_utilization() > 0.0);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The adaptive controller in tree mode stays lossless end to end.
+#[test]
+fn engine_adaptive_tree_mode_lossless() {
+    let dir = scripted_artifacts("adaptive");
+    let engine = Engine::start(&dir, EngineConfig::default()).unwrap();
+    let base = engine.run(request(&engine, DecodeMode::TargetOnly, PROMPTS[0], 0));
+    let adaptive = engine.run(request(&engine, tree_mode(true), PROMPTS[0], 0));
+    assert!(adaptive.error.is_none(), "{:?}", adaptive.error);
+    assert_eq!(adaptive.tokens, base.tokens);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Full TCP round-trip: mode "tree" over the wire, new response fields, and
+/// tree metrics visible through the metrics op.
+#[test]
+fn server_tree_round_trip() {
+    let dir = scripted_artifacts("server");
+    let engine = Arc::new(
+        Engine::start(
+            &dir,
+            EngineConfig { default_target: "qwensim-L".into(), workers: 2, queue_capacity: 16 },
+        )
+        .unwrap(),
+    );
+    let server = massv::server::Server::new(engine);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let mut client = massv::server::Client::connect(&addr.to_string()).unwrap();
+    assert!(client.ping().unwrap());
+
+    let gen_req = |mode: &str| {
+        Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str(PROMPTS[0])),
+            ("image", Json::arr_f32(&image(0))),
+            ("mode", Json::str(mode)),
+            ("seed", Json::num(0.0)),
+        ])
+    };
+
+    let chain = client.call(&gen_req("massv")).unwrap();
+    assert!(chain.get("error").is_none(), "{chain:?}");
+    let tree = client.call(&gen_req("tree")).unwrap();
+    assert!(tree.get("error").is_none(), "{tree:?}");
+
+    // identical outputs (lossless), tree at least as accepting
+    assert_eq!(
+        tree.get("tokens").unwrap().to_i32_vec().unwrap(),
+        chain.get("tokens").unwrap().to_i32_vec().unwrap()
+    );
+    let chain_mal = chain.get("mal").unwrap().as_f64().unwrap();
+    let tree_mal = tree.get("mal").unwrap().as_f64().unwrap();
+    assert!(tree_mal + 1e-9 >= chain_mal, "tree {tree_mal:.3} < chain {chain_mal:.3}");
+    assert!(tree.get("mean_path_depth").unwrap().as_f64().unwrap() > 0.0);
+    assert!(tree.get("tree_nodes_drafted").unwrap().as_f64().unwrap() > 0.0);
+
+    let metrics = client.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    assert!(metrics.get("tree_requests").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(metrics.get("tree_iterations").unwrap().as_f64().unwrap() >= 1.0);
+
+    // a typo'd tree variant is a hard protocol error, not a silent
+    // target-only fallback
+    let bad = client
+        .call(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str(PROMPTS[0])),
+            ("image", Json::arr_f32(&image(0))),
+            ("mode", Json::str("tree")),
+            ("variant", Json::str("masv")),
+        ]))
+        .unwrap();
+    let err = bad.get("error").expect("typo'd variant must error").as_str().unwrap();
+    assert!(err.contains("variant"), "{err}");
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

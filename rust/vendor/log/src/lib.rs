@@ -1,0 +1,86 @@
+//! Offline shim for the `log` crate facade: `error!`/`warn!`/`info!`/
+//! `debug!`/`trace!` write directly to stderr, filtered by `RUST_LOG`
+//! (a plain level name; default `warn`).  No logger registration needed.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Max level enabled via RUST_LOG (error|warn|info|debug|trace).
+pub fn max_level() -> Level {
+    match std::env::var("RUST_LOG").ok().as_deref() {
+        Some("error") => Level::Error,
+        Some("info") => Level::Info,
+        Some("debug") => Level::Debug,
+        Some("trace") => Level::Trace,
+        Some("warn") | None | Some(_) => Level::Warn,
+    }
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if level <= max_level() {
+        eprintln!("[{}] {}", level.as_str(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::log($crate::Level::Error, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::log($crate::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log($crate::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log($crate::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::log($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn macros_do_not_panic() {
+        error!("e {}", 1);
+        warn!("w {}", 2);
+        info!("i {}", 3);
+        debug!("d {}", 4);
+        trace!("t {}", 5);
+    }
+}

@@ -1,0 +1,279 @@
+//! Offline stub of the `xla` crate (xla_extension bindings) covering the
+//! API subset `massv::runtime` uses.
+//!
+//! Host-side `Literal` construction/extraction is fully functional (it is
+//! plain Rust data), so everything that never touches PJRT -- the decoder
+//! against scripted backends, the tensor round-trip tests, the serving
+//! stack in scripted-artifact mode -- works in this build.  Compiling or
+//! executing HLO returns a clear `XlaError`; swap this path dependency for
+//! the real `xla` crate on a machine with the PJRT CPU plugin to serve
+//! from compiled artifacts (the code in `massv::runtime` is unchanged).
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "xla stub: {what} requires the real PJRT runtime (this build vendors \
+         the offline stub; see rust/vendor/xla)"
+    ))
+}
+
+// ---------------------------------------------------------------- literals
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl LiteralData {
+    fn len(&self) -> usize {
+        match self {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types `Literal` can hold (subset of xla::NativeType).
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::U32(v)
+    }
+
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host literal: an array with a shape, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    Array { data: LiteralData, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal::Array { data: T::wrap(vec![v]), dims: vec![] }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal::Array { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal::Tuple(parts)
+    }
+
+    pub fn reshape(self, new_dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, dims } => {
+                let old: i64 = dims.iter().product();
+                let new: i64 = new_dims.iter().product();
+                if old != new {
+                    return Err(XlaError(format!(
+                        "reshape {dims:?} -> {new_dims:?}: element count mismatch"
+                    )));
+                }
+                Ok(Literal::Array { data, dims: new_dims.to_vec() })
+            }
+            Literal::Tuple(_) => Err(XlaError("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::unwrap(data)
+                .ok_or_else(|| XlaError("literal element type mismatch".into())),
+            Literal::Tuple(_) => Err(XlaError("cannot extract a tuple literal".into())),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => Err(XlaError("tuple literal has no array shape".into())),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(std::mem::take(parts)),
+            Literal::Array { .. } => {
+                Err(XlaError("decompose_tuple on a non-tuple literal".into()))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ PJRT facade
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Succeeds so that artifact-free code paths (manifest loading, the
+    /// scripted serving backend) can construct a `Runtime`; only compiling
+    /// or executing HLO reports the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (no PJRT)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling an XlaComputation"))
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let _ = path;
+        Err(unavailable("parsing HLO text"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("syncing a device buffer"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a loaded executable"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_scalar_and_vec() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.5]);
+        assert!(s.to_vec::<i32>().is_err());
+        let v = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(v.array_shape().unwrap().dims(), &[3]);
+    }
+
+    #[test]
+    fn reshape_checks_counts() {
+        let v = Literal::vec1(&[0f32; 6]);
+        let r = v.clone().reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert!(v.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decompose() {
+        let mut t = Literal::tuple(vec![Literal::scalar(1i32), Literal::scalar(2i32)]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0f32).decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_stub_reports_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
