@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
                 default_target: "qwensim-L".into(),
                 workers,
                 queue_capacity: 1024,
+                ..EngineConfig::default()
             },
         )?;
         let items = workload::load_task(

@@ -1,0 +1,143 @@
+//! Engine scheduling microbenchmark (section Perf, layer 3): run-to-
+//! completion vs continuous batching on a mixed short/long workload.
+//!
+//! Uses the scripted backend (self-contained artifact dir under tmp), so it
+//! runs anywhere -- no PJRT artifacts needed.  The workload is the serving
+//! pattern continuous batching exists for: a burst of long batch decodes
+//! arrives first, then short interactive requests.  Reported per policy:
+//! p50/p99 client-perceived interactive latency (queue + service) and total
+//! token throughput.  The step-scheduled p99 must not regress vs the
+//! run-to-completion baseline -- it should collapse by orders of magnitude.
+//!
+//!     cargo bench --bench micro_engine
+
+mod harness;
+
+use std::time::Instant;
+
+use harness::BenchReport;
+use massv::coordinator::{
+    DecodeMode, Engine, EngineConfig, Priority, Request, SchedPolicy,
+};
+
+const GEN_MAX: usize = 4096;
+const N_LONG: usize = 8;
+const LONG_MAX_NEW: usize = 3000;
+const N_SHORT: usize = 24;
+const SHORT_MAX_NEW: usize = 16;
+
+fn image(phase: usize) -> Vec<f32> {
+    massv::models::scripted::demo_image(phase)
+}
+
+struct PolicyResult {
+    p50_ms: f64,
+    p99_ms: f64,
+    tokens: usize,
+    wall_s: f64,
+}
+
+/// One run: N_LONG batch decodes arrive, then N_SHORT interactive requests.
+/// Interactive latency is client-perceived (queue + service).
+fn run_policy(dir: &str, policy: SchedPolicy) -> anyhow::Result<PolicyResult> {
+    let engine = Engine::start(
+        dir,
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 2,
+            queue_capacity: 4096,
+            policy,
+        },
+    )?;
+    let t0 = Instant::now();
+    let long_rxs: Vec<_> = (0..N_LONG)
+        .map(|i| {
+            let mut req =
+                Request::simple(engine.next_id(), &format!("w{} w{}", 5 + i, 6 + i), image(i));
+            req.mode = DecodeMode::TargetOnly;
+            req.gen.max_new = LONG_MAX_NEW;
+            req.priority = Priority::Batch;
+            engine.submit(req)
+        })
+        .collect();
+    let short_rxs: Vec<_> = (0..N_SHORT)
+        .map(|i| {
+            let mut req =
+                Request::simple(engine.next_id(), &format!("w{}", 20 + i), image(i + 3));
+            req.gen.max_new = SHORT_MAX_NEW;
+            req.priority = Priority::Interactive;
+            engine.submit(req)
+        })
+        .collect();
+
+    let mut tokens = 0usize;
+    let interactive_ms = massv::metrics::Histogram::default();
+    for rx in short_rxs {
+        let r = rx.recv()?;
+        assert!(r.error.is_none(), "{:?}", r.error);
+        tokens += r.tokens.len();
+        interactive_ms.record(r.queue_ms + r.latency_ms);
+    }
+    for rx in long_rxs {
+        let r = rx.recv()?;
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), LONG_MAX_NEW, "batch decode must stay complete");
+        tokens += r.tokens.len();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    engine.shutdown();
+    Ok(PolicyResult {
+        p50_ms: interactive_ms.percentile(50.0),
+        p99_ms: interactive_ms.percentile(99.0),
+        tokens,
+        wall_s,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::new("micro_engine");
+    let dir = massv::models::scripted::write_test_artifacts("micro_engine", GEN_MAX, false);
+    report.line(format!(
+        "workload: {N_LONG} batch x {LONG_MAX_NEW} tok (arrive first) + \
+         {N_SHORT} interactive x {SHORT_MAX_NEW} tok, 2 workers"
+    ));
+
+    let mut results = Vec::new();
+    for (name, policy) in [
+        ("run-to-completion", SchedPolicy::RunToCompletion),
+        ("continuous-batching", SchedPolicy::Continuous),
+    ] {
+        let r = run_policy(&dir, policy)?;
+        report.line(format!(
+            "{name:<20} interactive p50 {:>8.3} ms  p99 {:>8.3} ms | \
+             {} tokens in {:.3}s -> {:>8.0} tok/s",
+            r.p50_ms,
+            r.p99_ms,
+            r.tokens,
+            r.wall_s,
+            r.tokens as f64 / r.wall_s
+        ));
+        results.push((name, r));
+    }
+
+    let rtc = &results[0].1;
+    let cont = &results[1].1;
+    report.line(format!(
+        "interactive p99 {:.3} ms -> {:.3} ms ({:.1}x); throughput {:.0} -> {:.0} tok/s",
+        rtc.p99_ms,
+        cont.p99_ms,
+        if cont.p99_ms > 0.0 { rtc.p99_ms / cont.p99_ms } else { f64::INFINITY },
+        rtc.tokens as f64 / rtc.wall_s,
+        cont.tokens as f64 / cont.wall_s,
+    ));
+    let ok = cont.p99_ms <= rtc.p99_ms * 1.5 + 1.0;
+    report.line(format!(
+        "step-scheduled p99 must not regress vs run-to-completion: {}",
+        if ok { "PASS" } else { "FAIL" }
+    ));
+    let (cont_p99, rtc_p99) = (cont.p99_ms, rtc.p99_ms);
+    report.finish();
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(ok, "continuous p99 {cont_p99:.3} ms regressed vs run-to-completion {rtc_p99:.3} ms");
+    Ok(())
+}

@@ -12,7 +12,12 @@ fn main() -> anyhow::Result<()> {
     let artifacts = massv::util::artifacts_dir();
     let engine = Engine::start(
         &artifacts,
-        EngineConfig { default_target: "qwensim-L".into(), workers: 1, queue_capacity: 8 },
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 1,
+            queue_capacity: 8,
+            ..EngineConfig::default()
+        },
     )?;
 
     // pick a captioning prompt + image from the fixed eval set

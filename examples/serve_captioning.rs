@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
             default_target: "qwensim-L".into(),
             workers,
             queue_capacity: 512,
+            ..EngineConfig::default()
         },
     )?);
     let items = workload::load_task(

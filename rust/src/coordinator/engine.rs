@@ -1,15 +1,36 @@
-//! The serving engine: a worker pool draining the scheduler, running
-//! speculative decoding against shared compiled executables.
+//! The serving engine: a worker pool over an iteration-level (continuous
+//! batching) scheduler.
 //!
-//! PJRT CPU executables are batch-1 (DESIGN.md section 3), so continuous
-//! batching happens at *request* granularity: N workers keep N sequences
-//! in flight, sharing the compiled target/drafter executables (which the
-//! TFRT CPU runtime executes concurrently on its own thread pool).  The
-//! scheduler provides the two-priority admission-controlled queue in
-//! front; the router picks the (target, drafter) pair per request.
+//! Requests are decoded as resumable `spec::session::DecodeSession`s.  The
+//! scheduler queue holds units of *work* -- admit-and-prefill a new request,
+//! or run ONE speculative iteration of an in-flight session -- and workers
+//! requeue a stepped session instead of parking on it, so a short
+//! interactive request admitted mid-flight interleaves with long batch
+//! decodes instead of waiting behind them.  The two-class aging policy in
+//! `scheduler.rs` therefore applies per step, not per request.
+//!
+//! The session model buys three serving capabilities threaded end to end
+//! here and through `server::protocol`:
+//!
+//!   * incremental token streaming (`Engine::submit_streaming` yields an
+//!     `Update::Chunk` per decode step, then `Update::Done` with the final
+//!     summary `Response`);
+//!   * client cancellation (`Engine::cancel`) and per-request deadlines
+//!     (`Request::deadline_ms`), both checked between steps -- the session
+//!     is dropped cleanly and the client receives the partial output;
+//!   * step-level metrics: active sessions, steps per request, time per
+//!     output token, cancelled/deadline-exceeded counters.
+//!
+//! PJRT CPU executables are batch-1 (DESIGN.md section 3), so parallelism
+//! across sequences still comes from the worker pool (the TFRT CPU runtime
+//! executes the shared compiled executables concurrently); what continuous
+//! batching changes is *scheduling*: N workers multiplex M >= N sessions at
+//! iteration granularity.  `SchedPolicy::RunToCompletion` restores the old
+//! request-at-a-time behavior for A/B comparison (`benches/micro_engine.rs`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -20,13 +41,25 @@ use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{Scheduler, Submit};
 use crate::metrics::Metrics;
 use crate::models::ModelSet;
-use crate::spec::{AdaptiveConfig, AdaptiveDecoder, GenStats, SpecDecoder, SpecMode};
+use crate::spec::{AdaptiveConfig, DecodeSession, GenStats, SpecMode, SpecParams, StepOutcome};
 use crate::tokenizer::Tokenizer;
+
+/// How workers treat an in-flight session after each decode step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Iteration-level scheduling: after one step the session goes back to
+    /// the queue, so admissions interleave with running decodes (default).
+    Continuous,
+    /// Legacy behavior: the popping worker drives the session to completion
+    /// before taking more work (kept for A/B benchmarking).
+    RunToCompletion,
+}
 
 pub struct EngineConfig {
     pub default_target: String,
     pub workers: usize,
     pub queue_capacity: usize,
+    pub policy: SchedPolicy,
 }
 
 impl Default for EngineConfig {
@@ -35,21 +68,77 @@ impl Default for EngineConfig {
             default_target: "qwensim-L".into(),
             workers: 4,
             queue_capacity: 256,
+            policy: SchedPolicy::Continuous,
         }
     }
+}
+
+/// Incremental delivery for streaming submissions.
+#[derive(Debug)]
+pub enum Update {
+    /// Tokens emitted by one decode step (prefill included).  Concatenating
+    /// every chunk of a request yields exactly `Response::tokens`.
+    Chunk(Vec<i32>),
+    /// Terminal frame: the full summary response (complete token list,
+    /// stats, finish_reason).
+    Done(Response),
+}
+
+#[derive(Clone)]
+enum Reply {
+    /// Final `Response` only (`Engine::submit` / `Engine::run`).
+    Oneshot(mpsc::Sender<Response>),
+    /// Per-step chunks then the final response (`Engine::submit_streaming`).
+    Stream(mpsc::Sender<Update>),
 }
 
 struct Job {
     req: Request,
     enqueued: Instant,
-    reply: mpsc::Sender<Response>,
+    reply: Reply,
+    cancel: Arc<AtomicBool>,
+}
+
+impl Job {
+    fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Deadline is measured from submission; `Some(0)` expires immediately.
+    fn deadline_exceeded(&self) -> bool {
+        self.req
+            .deadline_ms
+            .map(|ms| self.enqueued.elapsed().as_millis() as u64 >= ms)
+            .unwrap_or(false)
+    }
+}
+
+/// An admitted, prefilled, not-yet-finished request.
+struct Active {
+    job: Job,
+    session: DecodeSession,
+    /// when the first dispatch (prefill) began; latency_ms counts from here
+    started: Instant,
+    queue_ms: f64,
+    /// tokens already delivered as stream chunks
+    streamed: usize,
+    /// scheduler dispatches consumed (prefill + steps)
+    steps: usize,
+}
+
+enum Work {
+    /// Route + prefill a fresh request (one dispatch).
+    Admit(Job),
+    /// Run one decode iteration of an in-flight session.
+    Step(Box<Active>),
 }
 
 pub struct Engine {
     pub models: Arc<ModelSet>,
     pub tokenizer: Arc<Tokenizer>,
     pub metrics: Arc<Metrics>,
-    sched: Arc<Scheduler<Job>>,
+    sched: Arc<Scheduler<Work>>,
+    cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
 }
@@ -61,20 +150,23 @@ impl Engine {
         let metrics = Arc::new(Metrics::new());
         let sched = Arc::new(Scheduler::new(cfg.queue_capacity));
         let router = Arc::new(Router::new(cfg.default_target.clone()));
+        let cancels = Arc::new(Mutex::new(HashMap::new()));
 
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
-            let models = models.clone();
-            let tokenizer = tokenizer.clone();
-            let metrics = metrics.clone();
-            let sched = sched.clone();
-            let router = router.clone();
+            let w = Worker {
+                models: models.clone(),
+                tokenizer: tokenizer.clone(),
+                metrics: metrics.clone(),
+                sched: sched.clone(),
+                router: router.clone(),
+                cancels: cancels.clone(),
+                policy: cfg.policy,
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("massv-worker-{wid}"))
-                    .spawn(move || {
-                        worker_loop(&models, &tokenizer, &metrics, &sched, &router)
-                    })?,
+                    .spawn(move || w.run())?,
             );
         }
         Ok(Engine {
@@ -82,6 +174,7 @@ impl Engine {
             tokenizer,
             metrics,
             sched,
+            cancels,
             workers,
             next_id: AtomicU64::new(1),
         })
@@ -91,24 +184,52 @@ impl Engine {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Submit a request; the response arrives on the returned channel.
+    /// Submit a request; the final response arrives on the returned channel.
     /// Backpressure: a full queue yields an immediate rejected Response.
     pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
+        self.enqueue(req, Reply::Oneshot(tx));
+        rx
+    }
+
+    /// Submit a request for streaming delivery: one `Update::Chunk` per
+    /// decode step, then `Update::Done` with the summary response.  If the
+    /// receiver is dropped mid-stream the session is cancelled.
+    pub fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
+        let (tx, rx) = mpsc::channel();
+        self.enqueue(req, Reply::Stream(tx));
+        rx
+    }
+
+    fn enqueue(&self, req: Request, reply: Reply) {
         self.metrics.requests_received.inc();
         let id = req.id;
         let priority = req.priority;
-        let job = Job { req, enqueued: Instant::now(), reply: tx.clone() };
-        match self.sched.submit(job, priority) {
+        let cancel = Arc::new(AtomicBool::new(false));
+        // register before submit so a cancel can never race a fast worker
+        self.cancels.lock().unwrap().insert(id, cancel.clone());
+        let t0 = Instant::now();
+        let job = Job { req, enqueued: t0, reply: reply.clone(), cancel };
+        match self.sched.submit(Work::Admit(job), priority) {
             Submit::Accepted => {
                 self.metrics.queue_depth.set(self.sched.len() as i64);
             }
             Submit::Rejected => {
+                self.cancels.lock().unwrap().remove(&id);
                 self.metrics.requests_rejected.inc();
-                let _ = tx.send(Response::failure(id, "queue full (backpressure)".into()));
+                // rejections are terminal outcomes too: record their (tiny)
+                // queue time and latency instead of dropping them from the
+                // histograms
+                let ms = t0.elapsed().as_secs_f64() * 1000.0;
+                self.metrics.queue_ms.record(ms);
+                self.metrics.latency_ms.record(ms);
+                let mut resp = Response::failure(id, "queue full (backpressure)".into());
+                resp.finish_reason = "rejected".into();
+                resp.queue_ms = ms;
+                resp.latency_ms = ms;
+                send_final(&reply, resp);
             }
         }
-        rx
     }
 
     /// Submit and wait (convenience for examples/benches).
@@ -119,7 +240,35 @@ impl Engine {
             .unwrap_or_else(|_| Response::failure(id, "engine shut down".into()))
     }
 
-    /// Graceful shutdown: drain the queue, then join workers.
+    /// Cancel a queued or in-flight request.  Returns true if the request
+    /// was still live; the client receives a partial-output response with
+    /// `finish_reason = "cancelled"` once the worker observes the flag
+    /// (before its next decode step).
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.cancels.lock().unwrap().get(&id) {
+            Some(flag) => {
+                flag.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Current scheduler depth (queued admissions + runnable sessions).
+    pub fn queue_len(&self) -> usize {
+        self.sched.len()
+    }
+
+    /// Metrics snapshot with derived gauges refreshed under the scheduler
+    /// lock (the inline queue_depth updates race with worker pops; scrape
+    /// is authoritative).
+    pub fn scrape(&self) -> HashMap<String, f64> {
+        self.metrics.queue_depth.set(self.sched.len() as i64);
+        self.metrics.render()
+    }
+
+    /// Graceful shutdown: drain the queue (in-flight sessions finish; their
+    /// steps keep requeueing past close), then join workers.
     pub fn shutdown(mut self) {
         self.sched.close();
         for w in self.workers.drain(..) {
@@ -128,117 +277,319 @@ impl Engine {
     }
 }
 
-fn worker_loop(
-    models: &Arc<ModelSet>,
-    tokenizer: &Tokenizer,
-    metrics: &Arc<Metrics>,
-    sched: &Arc<Scheduler<Job>>,
-    router: &Router,
-) {
-    while let Some(job) = sched.pop() {
-        metrics.queue_depth.set(sched.len() as i64);
-        metrics.inflight.add(1);
-        let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1000.0;
-        let t0 = Instant::now();
-        let resp = match run_request(models, tokenizer, router, &job.req) {
-            Ok(stats) => {
-                let text = tokenizer.decode(
-                    &stats
-                        .tokens
-                        .iter()
-                        .filter(|&&t| t != models.manifest.eos_id)
-                        .map(|&t| t as u32)
-                        .collect::<Vec<_>>(),
-                );
-                metrics.requests_completed.inc();
-                metrics.tokens_generated.add(stats.tokens.len() as u64);
-                metrics.verify_calls.add(stats.verify_calls as u64);
-                metrics.draft_calls.add(stats.draft_calls as u64);
-                metrics.draft_tokens_accepted.add(stats.accepted_draft as u64);
-                metrics.prefill_ms.record(stats.prefill_micros as f64 / 1000.0);
-                if stats.verify_calls > 0 && stats.draft_calls > 0 {
-                    metrics.per_request_mal.record(stats.mal());
-                }
-                if !stats.per_iter_path_depth.is_empty() {
-                    metrics.tree_requests.inc();
-                    metrics.tree_nodes_drafted.add(stats.tree_nodes_drafted as u64);
-                    metrics
-                        .tree_iterations
-                        .add(stats.per_iter_path_depth.len() as u64);
-                    metrics
-                        .tree_path_accepted
-                        .add(stats.per_iter_path_depth.iter().sum::<usize>() as u64);
-                }
-                let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
-                metrics.latency_ms.record(latency_ms);
-                Response {
-                    id: job.req.id,
-                    text,
-                    mal: if stats.draft_calls > 0 { stats.mal() } else { 0.0 },
-                    verify_calls: stats.verify_calls,
-                    accepted_draft: stats.accepted_draft,
-                    mean_path_depth: stats.mean_path_depth(),
-                    tree_nodes_drafted: stats.tree_nodes_drafted,
-                    finished_by_eos: stats.finished_by_eos,
-                    tokens: stats.tokens,
-                    queue_ms,
-                    latency_ms,
-                    error: None,
-                }
-            }
-            Err(e) => {
-                log::error!("request {} failed: {e:#}", job.req.id);
-                Response::failure(job.req.id, format!("{e:#}"))
-            }
-        };
-        metrics.inflight.add(-1);
-        let _ = job.reply.send(resp);
+fn send_final(reply: &Reply, resp: Response) {
+    match reply {
+        Reply::Oneshot(tx) => {
+            let _ = tx.send(resp);
+        }
+        Reply::Stream(tx) => {
+            let _ = tx.send(Update::Done(resp));
+        }
     }
 }
 
-/// Resolve the route and run one request to completion.
-fn run_request(
-    models: &Arc<ModelSet>,
-    tokenizer: &Tokenizer,
-    router: &Router,
-    req: &Request,
-) -> Result<GenStats> {
-    let route = router
-        .route(req, &models.manifest)
-        .map_err(|e| anyhow::anyhow!(e))?;
-    let target = models.target(&route.target)?;
-    let (prompt_ids, len) = tokenizer.encode_prompt(&req.prompt, models.manifest.p_max)?;
+/// Per-thread serving state: shared handles plus the scheduling policy.
+struct Worker {
+    models: Arc<ModelSet>,
+    tokenizer: Arc<Tokenizer>,
+    metrics: Arc<Metrics>,
+    sched: Arc<Scheduler<Work>>,
+    router: Arc<Router>,
+    cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
+    policy: SchedPolicy,
+}
 
-    match (&req.mode, &route.drafter) {
-        (DecodeMode::TargetOnly, _) | (_, None) => {
-            SpecDecoder::generate_baseline(&target, &req.image, &prompt_ids, len, &req.gen)
-        }
-        (DecodeMode::Speculative { adaptive, .. }, Some((dname, variant))) => {
-            let drafter = models.drafter(dname, variant)?;
-            let mut dec = SpecDecoder::new(target, drafter);
-            dec.text_only_draft = route.text_only_draft;
-            if *adaptive {
-                AdaptiveDecoder::new(dec, AdaptiveConfig::default())
-                    .generate(&req.image, &prompt_ids, len, &req.gen)
-            } else {
-                dec.generate(&req.image, &prompt_ids, len, &req.gen)
-            }
-        }
-        (DecodeMode::Tree { adaptive, .. }, Some((dname, variant))) => {
-            let drafter = models.drafter(dname, variant)?;
-            let mut dec = SpecDecoder::new(target, drafter);
-            dec.text_only_draft = route.text_only_draft;
-            if *adaptive {
-                AdaptiveDecoder::new(dec, AdaptiveConfig::default()).generate_with_mode(
-                    SpecMode::Tree,
-                    &req.image,
-                    &prompt_ids,
-                    len,
-                    &req.gen,
-                )
-            } else {
-                dec.generate_tree(&req.image, &prompt_ids, len, &req.gen)
+impl Worker {
+    fn run(&self) {
+        while let Some(work) = self.sched.pop() {
+            self.metrics.queue_depth.set(self.sched.len() as i64);
+            match work {
+                Work::Admit(job) => self.admit(job),
+                Work::Step(active) => {
+                    if let Some(active) = self.step_once(active) {
+                        let prio = active.job.req.priority;
+                        self.sched.requeue(Work::Step(active), prio);
+                    }
+                }
             }
         }
     }
+
+    /// First dispatch of a request: route, prefill, emit the free token.
+    fn admit(&self, job: Job) {
+        let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1000.0;
+        let started = Instant::now();
+        self.metrics.inflight.add(1);
+        if job.cancelled() {
+            self.finalize(job, queue_ms, started, 0, GenStats::default(), Some("cancelled"));
+            return;
+        }
+        if job.deadline_exceeded() {
+            self.finalize(job, queue_ms, started, 0, GenStats::default(), Some("deadline"));
+            return;
+        }
+        let (mut session, prompt_ids, len) = match self.make_session(&job.req) {
+            Ok(parts) => parts,
+            Err(e) => {
+                log::error!("request {} failed: {e:#}", job.req.id);
+                self.finalize_failure(job, queue_ms, started, 1, GenStats::default(), format!("{e:#}"));
+                return;
+            }
+        };
+        match session.prefill(&job.req.image, &prompt_ids, len) {
+            Err(e) => {
+                log::error!("request {} failed in prefill: {e:#}", job.req.id);
+                self.finalize_failure(job, queue_ms, started, 1, GenStats::default(), format!("{e:#}"));
+            }
+            Ok(StepOutcome::Finished(stats)) => {
+                let active =
+                    Active { job, session, started, queue_ms, streamed: 0, steps: 1 };
+                self.flush_and_finalize(active, stats, None);
+            }
+            Ok(StepOutcome::Emitted(tokens)) => {
+                let mut active = Box::new(Active {
+                    job,
+                    session,
+                    started,
+                    queue_ms,
+                    streamed: 0,
+                    steps: 1,
+                });
+                self.send_chunk(&mut active, &tokens);
+                match self.policy {
+                    SchedPolicy::Continuous => {
+                        let prio = active.job.req.priority;
+                        self.sched.requeue(Work::Step(active), prio);
+                    }
+                    SchedPolicy::RunToCompletion => {
+                        let mut cur = active;
+                        while let Some(next) = self.step_once(cur) {
+                            cur = next;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One decode iteration of an in-flight session.  Returns the session
+    /// if it should be scheduled again, None if it terminated.
+    fn step_once(&self, mut active: Box<Active>) -> Option<Box<Active>> {
+        if active.job.cancelled() {
+            let stats = active.session.abort();
+            self.flush_and_finalize(*active, stats, Some("cancelled"));
+            return None;
+        }
+        if active.job.deadline_exceeded() {
+            let stats = active.session.abort();
+            self.flush_and_finalize(*active, stats, Some("deadline"));
+            return None;
+        }
+        active.steps += 1;
+        match active.session.step() {
+            Err(e) => {
+                log::error!("request {} failed mid-decode: {e:#}", active.job.req.id);
+                // deliver the partial output: flush the unstreamed tail so
+                // the chunk-concatenation invariant holds even for errors
+                let stats = active.session.abort();
+                if active.streamed < stats.tokens.len() {
+                    self.send_tail(&active.job, &stats.tokens[active.streamed..]);
+                }
+                let Active { job, queue_ms, started, steps, .. } = *active;
+                self.finalize_failure(job, queue_ms, started, steps, stats, format!("{e:#}"));
+                None
+            }
+            Ok(StepOutcome::Emitted(tokens)) => {
+                self.send_chunk(&mut active, &tokens);
+                Some(active)
+            }
+            Ok(StepOutcome::Finished(stats)) => {
+                self.flush_and_finalize(*active, stats, None);
+                None
+            }
+        }
+    }
+
+    /// Resolve the route and build a decode session for one request.
+    fn make_session(&self, req: &Request) -> Result<(DecodeSession, Vec<i32>, usize)> {
+        let route = self
+            .router
+            .route(req, &self.models.manifest)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let target = self.models.target(&route.target)?;
+        let (prompt_ids, len) =
+            self.tokenizer.encode_prompt(&req.prompt, self.models.manifest.p_max)?;
+        let params = SpecParams::from_manifest(&self.models.manifest);
+
+        let (drafter, start, adaptive) = match (&req.mode, &route.drafter) {
+            (DecodeMode::TargetOnly, _) | (_, None) => (None, None, None),
+            (DecodeMode::Speculative { adaptive, .. }, Some((dname, variant))) => (
+                Some(self.models.drafter(dname, variant)?),
+                Some(SpecMode::Chain),
+                if *adaptive { Some(AdaptiveConfig::default()) } else { None },
+            ),
+            (DecodeMode::Tree { adaptive, .. }, Some((dname, variant))) => (
+                Some(self.models.drafter(dname, variant)?),
+                Some(SpecMode::Tree),
+                if *adaptive { Some(AdaptiveConfig::default()) } else { None },
+            ),
+        };
+        let session = DecodeSession::new(
+            target,
+            drafter,
+            params,
+            req.gen.clone(),
+            start,
+            adaptive,
+            route.text_only_draft,
+        );
+        Ok((session, prompt_ids, len))
+    }
+
+    /// Deliver newly emitted tokens to a streaming client.  A dropped
+    /// receiver means the client went away: flag the session cancelled so
+    /// the next dispatch drops it.
+    fn send_chunk(&self, active: &mut Active, tokens: &[i32]) {
+        if tokens.is_empty() {
+            return;
+        }
+        active.streamed += tokens.len();
+        if let Reply::Stream(tx) = &active.job.reply {
+            if tx.send(Update::Chunk(tokens.to_vec())).is_err() {
+                active.job.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Flush any not-yet-streamed tail of `stats.tokens` (the terminal
+    /// iteration's tokens, or everything generated before an abort), then
+    /// finalize.  `reason` overrides the natural eos/length finish reason.
+    fn flush_and_finalize(&self, active: Active, stats: GenStats, reason: Option<&str>) {
+        if active.streamed < stats.tokens.len() {
+            self.send_tail(&active.job, &stats.tokens[active.streamed..]);
+        }
+        let Active { job, queue_ms, started, steps, .. } = active;
+        self.finalize(job, queue_ms, started, steps, stats, reason);
+    }
+
+    /// Terminal chunk delivery (no bookkeeping: the session is ending).
+    fn send_tail(&self, job: &Job, tokens: &[i32]) {
+        if tokens.is_empty() {
+            return;
+        }
+        if let Reply::Stream(tx) = &job.reply {
+            let _ = tx.send(Update::Chunk(tokens.to_vec()));
+        }
+    }
+
+    /// Terminal path for errors (routing, prefill, or mid-decode).  The
+    /// partial output generated before the error is still delivered in the
+    /// failure response, keeping streamed chunks consistent with `tokens`.
+    #[allow(clippy::too_many_arguments)]
+    fn finalize_failure(
+        &self,
+        job: Job,
+        queue_ms: f64,
+        started: Instant,
+        steps: usize,
+        stats: GenStats,
+        err: String,
+    ) {
+        self.metrics.inflight.add(-1);
+        self.cancels.lock().unwrap().remove(&job.req.id);
+        self.metrics.requests_failed.inc();
+        let latency_ms = started.elapsed().as_secs_f64() * 1000.0;
+        self.metrics.queue_ms.record(queue_ms);
+        self.metrics.latency_ms.record(latency_ms);
+        self.metrics.steps_per_request.record(steps as f64);
+        let mut resp = Response::failure(job.req.id, err);
+        resp.text = decode_text(&self.tokenizer, &stats.tokens, self.models.manifest.eos_id);
+        resp.tokens = stats.tokens;
+        resp.queue_ms = queue_ms;
+        resp.latency_ms = latency_ms;
+        resp.steps = steps;
+        send_final(&job.reply, resp);
+    }
+
+    /// Common terminal accounting + response construction.
+    fn finalize(
+        &self,
+        job: Job,
+        queue_ms: f64,
+        started: Instant,
+        steps: usize,
+        stats: GenStats,
+        reason_override: Option<&str>,
+    ) {
+        self.metrics.inflight.add(-1);
+        self.cancels.lock().unwrap().remove(&job.req.id);
+        let m = &self.metrics;
+        let finish_reason = match reason_override {
+            Some(r) => r.to_string(),
+            None if stats.finished_by_eos => "eos".to_string(),
+            None => "length".to_string(),
+        };
+        match finish_reason.as_str() {
+            "cancelled" => m.requests_cancelled.inc(),
+            "deadline" => m.requests_deadline_exceeded.inc(),
+            _ => m.requests_completed.inc(),
+        }
+        m.tokens_generated.add(stats.tokens.len() as u64);
+        m.verify_calls.add(stats.verify_calls as u64);
+        m.draft_calls.add(stats.draft_calls as u64);
+        m.draft_tokens_accepted.add(stats.accepted_draft as u64);
+        if steps > 0 {
+            // requests dropped before admission never ran prefill; a 0.0
+            // sample would drag the histogram toward zero
+            m.prefill_ms.record(stats.prefill_micros as f64 / 1000.0);
+        }
+        if stats.verify_calls > 0 && stats.draft_calls > 0 {
+            m.per_request_mal.record(stats.mal());
+        }
+        if !stats.per_iter_path_depth.is_empty() {
+            m.tree_requests.inc();
+            m.tree_nodes_drafted.add(stats.tree_nodes_drafted as u64);
+            m.tree_iterations.add(stats.per_iter_path_depth.len() as u64);
+            m.tree_path_accepted
+                .add(stats.per_iter_path_depth.iter().sum::<usize>() as u64);
+        }
+        let latency_ms = started.elapsed().as_secs_f64() * 1000.0;
+        m.latency_ms.record(latency_ms);
+        m.queue_ms.record(queue_ms);
+        m.steps_per_request.record(steps as f64);
+        if stats.tokens.len() > 1 {
+            let decode_ms = stats.decode_micros as f64 / 1000.0;
+            m.tpot_ms.record(decode_ms / (stats.tokens.len() - 1) as f64);
+        }
+        let text = decode_text(&self.tokenizer, &stats.tokens, self.models.manifest.eos_id);
+        let resp = Response {
+            id: job.req.id,
+            text,
+            mal: if stats.draft_calls > 0 { stats.mal() } else { 0.0 },
+            verify_calls: stats.verify_calls,
+            accepted_draft: stats.accepted_draft,
+            mean_path_depth: stats.mean_path_depth(),
+            tree_nodes_drafted: stats.tree_nodes_drafted,
+            finished_by_eos: stats.finished_by_eos,
+            steps,
+            finish_reason,
+            tokens: stats.tokens,
+            queue_ms,
+            latency_ms,
+            error: None,
+        };
+        send_final(&job.reply, resp);
+    }
+}
+
+/// Decode tokens to text, stripping only a *trailing* terminator: a
+/// legitimate mid-stream token equal to eos_id must survive into the text
+/// (the old path filtered every occurrence, which would silently corrupt
+/// such outputs).
+fn decode_text(tokenizer: &Tokenizer, tokens: &[i32], eos_id: i32) -> String {
+    let visible = match tokens.split_last() {
+        Some((&t, head)) if t == eos_id => head,
+        _ => tokens,
+    };
+    tokenizer.decode(&visible.iter().map(|&t| t as u32).collect::<Vec<_>>())
 }

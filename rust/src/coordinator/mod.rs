@@ -4,14 +4,16 @@
 //! serving coordinator (the paper's Figure-2 "deployment configuration").
 //! This module provides the vLLM-router-shaped stack: request types + FSM,
 //! two-class admission-controlled scheduler, family-aware model router,
-//! and a worker-pool engine over shared compiled executables.
+//! and a worker-pool engine that multiplexes resumable decode sessions at
+//! iteration granularity (continuous batching) over shared compiled
+//! executables, with streaming delivery, cancellation, and deadlines.
 
 pub mod engine;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Engine, EngineConfig, SchedPolicy, Update};
 pub use request::{DecodeMode, Priority, Request, Response};
 pub use router::{Route, Router};
 pub use scheduler::{Scheduler, Submit};

@@ -64,6 +64,11 @@ pub struct Request {
     pub mode: DecodeMode,
     pub gen: GenConfig,
     pub priority: Priority,
+    /// Per-request deadline in milliseconds, measured from submission.
+    /// Checked between decode steps: an expired session is dropped cleanly
+    /// and the client gets the partial output with `finish_reason =
+    /// "deadline"`.  `None` = no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
@@ -81,6 +86,7 @@ impl Request {
             },
             gen: GenConfig::default(),
             priority: Priority::Interactive,
+            deadline_ms: None,
         }
     }
 }
@@ -100,6 +106,13 @@ pub struct Response {
     /// candidate tree nodes drafted (0 outside tree mode)
     pub tree_nodes_drafted: usize,
     pub finished_by_eos: bool,
+    /// Decode steps (scheduler dispatches) this request consumed, prefill
+    /// included -- the unit of interleaving under continuous batching.
+    pub steps: usize,
+    /// Why the request terminated: "eos" | "length" | "cancelled" |
+    /// "deadline" | "rejected" | "error".  Cancelled/deadline responses
+    /// still carry the partial output generated so far.
+    pub finish_reason: String,
     pub queue_ms: f64,
     pub latency_ms: f64,
     pub error: Option<String>,
@@ -117,6 +130,8 @@ impl Response {
             mean_path_depth: 0.0,
             tree_nodes_drafted: 0,
             finished_by_eos: false,
+            steps: 0,
+            finish_reason: "error".into(),
             queue_ms: 0.0,
             latency_ms: 0.0,
             error: Some(err),
@@ -132,6 +147,9 @@ pub enum Lifecycle {
     Done,
     Failed,
     Rejected,
+    /// Dropped by client cancellation or deadline expiry (from the queue or
+    /// mid-decode); the client still receives the partial output.
+    Cancelled,
 }
 
 impl Lifecycle {
@@ -140,7 +158,12 @@ impl Lifecycle {
         use Lifecycle::*;
         matches!(
             (self, next),
-            (Queued, Running) | (Queued, Rejected) | (Running, Done) | (Running, Failed)
+            (Queued, Running)
+                | (Queued, Rejected)
+                | (Queued, Cancelled)
+                | (Running, Done)
+                | (Running, Failed)
+                | (Running, Cancelled)
         )
     }
 }
@@ -154,11 +177,14 @@ mod tests {
         use Lifecycle::*;
         assert!(Queued.can_transition(Running));
         assert!(Queued.can_transition(Rejected));
+        assert!(Queued.can_transition(Cancelled));
         assert!(Running.can_transition(Done));
         assert!(Running.can_transition(Failed));
+        assert!(Running.can_transition(Cancelled));
         assert!(!Done.can_transition(Running));
         assert!(!Rejected.can_transition(Running));
         assert!(!Queued.can_transition(Done));
+        assert!(!Cancelled.can_transition(Running));
     }
 
     #[test]

@@ -6,10 +6,25 @@
 //! bounded (`capacity`); when the queue is full the submitter gets an
 //! immediate `Rejected` -- backpressure instead of unbounded memory.
 //!
+//! Under continuous batching the queue holds *steps*, not requests: a
+//! worker pops one item, runs one decode iteration, and `requeue`s the
+//! resumed session.  Requeued sessions sit in the queue between steps, so
+//! `capacity` becomes a bound on requests *in the system* (waiting
+//! admissions + runnable in-flight sessions), vLLM `max_num_seqs`-style --
+//! NOT just on waiting requests as under run-to-completion.  Size it as
+//! "max concurrent requests", not "max backlog".  `requeue` itself never
+//! rejects (an in-flight session was already admitted) and ignores
+//! `closed`, so draining a shut-down engine still finishes every in-flight
+//! request.  Because requeued sessions re-enter the *back* of their class
+//! queue, the two-class aging policy applies per step: sessions of one
+//! class round-robin, and interactive steps preempt batch steps up to the
+//! aging limit.
+//!
 //! Invariants (property-tested below):
 //!   * FIFO within a class
 //!   * no starvation of either class
-//!   * queue depth never exceeds capacity
+//!   * admissions are rejected whenever depth >= capacity; only requeues
+//!     may push depth past it
 //!   * every submitted job is either dispatched exactly once or rejected
 
 use std::collections::VecDeque;
@@ -75,6 +90,21 @@ impl<T> Scheduler<T> {
         drop(s);
         self.cv.notify_one();
         Submit::Accepted
+    }
+
+    /// Requeue an in-flight item (one that was popped and needs another
+    /// turn).  Never rejects: the item was already admitted, and requeueing
+    /// must succeed after `close` so the drain path can finish running
+    /// sessions.  (In-flight items still count toward the depth `submit`
+    /// checks -- see the module docs on capacity semantics.)
+    pub fn requeue(&self, item: T, class: Priority) {
+        let mut s = self.state.lock().unwrap();
+        match class {
+            Priority::Interactive => s.interactive.push_back(item),
+            Priority::Batch => s.batch.push_back(item),
+        }
+        drop(s);
+        self.cv.notify_one();
     }
 
     /// Blocking pop; returns None once closed AND drained.
@@ -189,6 +219,40 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(30));
         s.submit(42, Priority::Interactive);
         assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn requeue_bypasses_capacity_and_close() {
+        let s = Scheduler::new(1);
+        assert_eq!(s.submit(1, Priority::Interactive), Submit::Accepted);
+        assert_eq!(s.submit(2, Priority::Interactive), Submit::Rejected);
+        // a popped item can always come back, even at capacity
+        let x = s.try_pop().unwrap();
+        assert_eq!(s.submit(3, Priority::Interactive), Submit::Accepted);
+        s.requeue(x, Priority::Interactive); // depth now 2 > capacity 1
+        assert_eq!(s.len(), 2);
+        // ...and even after close (drain must finish in-flight sessions)
+        s.close();
+        let y = s.try_pop().unwrap();
+        s.requeue(y, Priority::Batch);
+        assert_eq!(s.pop(), Some(1));
+        assert_eq!(s.pop(), Some(y));
+        assert_eq!(s.pop(), None);
+    }
+
+    #[test]
+    fn requeue_round_robins_within_class() {
+        // two "sessions" alternating steps: pop A, requeue A, pop B, ...
+        let s = Scheduler::new(8);
+        s.submit("a", Priority::Interactive);
+        s.submit("b", Priority::Interactive);
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let x = s.try_pop().unwrap();
+            order.push(x);
+            s.requeue(x, Priority::Interactive);
+        }
+        assert_eq!(order, vec!["a", "b", "a", "b", "a", "b"]);
     }
 
     #[test]

@@ -9,9 +9,11 @@
 //!   training pipeline (build time; produces `artifacts/`).
 //! * **L3** this crate — the request path: PJRT runtime, speculative
 //!   decoding engine (chain and token-tree drafting, see
-//!   `docs/tree_speculation.md`), coordinator (router/scheduler/worker
-//!   pool), TCP server, workload + evaluation harness.  Python never runs
-//!   here.
+//!   `docs/tree_speculation.md`; resumable per-request sessions,
+//!   `spec::session`), coordinator (router/scheduler/worker pool with
+//!   iteration-level continuous batching, streaming, cancellation, and
+//!   deadlines -- see `docs/serving.md`), TCP server, workload +
+//!   evaluation harness.  Python never runs here.
 //!
 //! Decoding modes (`coordinator::DecodeMode`): `Speculative` (the paper's
 //! chain algorithm), `Tree` (token-tree speculation with lossless

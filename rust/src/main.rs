@@ -62,6 +62,7 @@ fn engine(artifacts: &str, args: &Args) -> Result<Engine> {
             default_target: args.get_or("target", "qwensim-L").to_string(),
             workers: args.get_usize("workers", 4),
             queue_capacity: args.get_usize("queue", 256),
+            ..EngineConfig::default()
         },
     )
 }
@@ -116,6 +117,7 @@ fn generate(artifacts: &str, args: &Args) -> Result<()> {
             tree: None,
         },
         priority: massv::coordinator::Priority::Interactive,
+        deadline_ms: None,
     };
     let resp = eng.run(req);
     println!("prompt:    {}", item.prompt);

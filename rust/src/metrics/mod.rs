@@ -88,6 +88,12 @@ pub struct Metrics {
     pub requests_received: Counter,
     pub requests_completed: Counter,
     pub requests_rejected: Counter,
+    /// requests that errored during routing/prefill/decode
+    pub requests_failed: Counter,
+    /// requests dropped mid-flight by client cancellation
+    pub requests_cancelled: Counter,
+    /// requests dropped because their per-request deadline expired
+    pub requests_deadline_exceeded: Counter,
     pub tokens_generated: Counter,
     pub draft_tokens_accepted: Counter,
     pub verify_calls: Counter,
@@ -107,6 +113,14 @@ pub struct Metrics {
     pub latency_ms: Histogram,
     pub prefill_ms: Histogram,
     pub per_request_mal: Histogram,
+    /// time spent queued before the first dispatch, per terminal request
+    /// (rejections record it too -- their queue time is the time to the
+    /// rejection decision)
+    pub queue_ms: Histogram,
+    /// scheduler dispatches consumed per request (prefill + decode steps)
+    pub steps_per_request: Histogram,
+    /// time-per-output-token: decode wall time over non-prefill tokens
+    pub tpot_ms: Histogram,
     start: Mutex<Option<Instant>>,
 }
 
@@ -148,12 +162,26 @@ impl Metrics {
         out.insert("requests_received".into(), self.requests_received.get() as f64);
         out.insert("requests_completed".into(), self.requests_completed.get() as f64);
         out.insert("requests_rejected".into(), self.requests_rejected.get() as f64);
+        out.insert("requests_failed".into(), self.requests_failed.get() as f64);
+        out.insert("requests_cancelled".into(), self.requests_cancelled.get() as f64);
+        out.insert(
+            "requests_deadline_exceeded".into(),
+            self.requests_deadline_exceeded.get() as f64,
+        );
         out.insert("tokens_generated".into(), self.tokens_generated.get() as f64);
         out.insert("draft_tokens_accepted".into(), self.draft_tokens_accepted.get() as f64);
         out.insert("verify_calls".into(), self.verify_calls.get() as f64);
         out.insert("draft_calls".into(), self.draft_calls.get() as f64);
         out.insert("queue_depth".into(), self.queue_depth.get() as f64);
         out.insert("inflight".into(), self.inflight.get() as f64);
+        // `inflight` counts admitted-but-unfinished sessions; exported under
+        // the serving-layer name too
+        out.insert("active_sessions".into(), self.inflight.get() as f64);
+        out.insert("queue_ms_p50".into(), self.queue_ms.percentile(50.0));
+        out.insert("queue_ms_p99".into(), self.queue_ms.percentile(99.0));
+        out.insert("steps_per_request_mean".into(), self.steps_per_request.mean());
+        out.insert("tpot_ms_p50".into(), self.tpot_ms.percentile(50.0));
+        out.insert("tpot_ms_p99".into(), self.tpot_ms.percentile(99.0));
         out.insert("latency_ms_p50".into(), self.latency_ms.percentile(50.0));
         out.insert("latency_ms_p95".into(), self.latency_ms.percentile(95.0));
         out.insert("latency_ms_p99".into(), self.latency_ms.percentile(99.0));
@@ -240,6 +268,12 @@ mod tests {
         assert!(r.contains_key("latency_ms_p99"));
         assert!(r.contains_key("tree_path_depth_mean"));
         assert!(r.contains_key("branch_utilization"));
+        assert!(r.contains_key("active_sessions"));
+        assert!(r.contains_key("steps_per_request_mean"));
+        assert!(r.contains_key("tpot_ms_p99"));
+        assert!(r.contains_key("requests_cancelled"));
+        assert!(r.contains_key("requests_deadline_exceeded"));
+        assert!(r.contains_key("queue_ms_p99"));
     }
 
     #[test]

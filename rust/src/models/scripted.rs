@@ -251,6 +251,74 @@ pub fn draft_tree_drafter(
     b.build()
 }
 
+// --------------------------------------------------------------- fixtures
+
+/// Write a self-contained scripted-backend artifact directory (manifest +
+/// vocab, no HLO files) under the system temp dir -- the fixture the
+/// integration tests and benches use to drive the full serving stack
+/// without PJRT.  `gen_max` controls stream length (large values make
+/// decodes long enough to observe scheduling); `with_baseline_drafter`
+/// adds the text-only "baseline" drafter variant next to "massv".
+/// Returns the directory path; callers clean it up with `remove_dir_all`.
+/// Panics on io errors (it is test support, not serving-path code).
+pub fn write_test_artifacts(tag: &str, gen_max: usize, with_baseline_drafter: bool) -> String {
+    let dir = std::env::temp_dir().join(format!("massv_scripted_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let vocab = 120usize;
+    let mut tokens: Vec<String> =
+        ["<pad>", "<bos>", "<eos>", "<sep>", "<img>"].iter().map(|s| s.to_string()).collect();
+    for i in tokens.len()..vocab {
+        tokens.push(format!("w{i}"));
+    }
+    let tokens_json: Vec<String> = tokens.iter().map(|t| format!("\"{t}\"")).collect();
+    std::fs::write(
+        dir.join("vocab.json"),
+        format!(
+            r#"{{"tokens":[{}],"pad_id":0,"bos_id":1,"eos_id":2,"sep_id":3,"img_id":4}}"#,
+            tokens_json.join(",")
+        ),
+    )
+    .unwrap();
+    let entry = |name: &str, kind: &str, extra: &str| {
+        format!(
+            r#"{{"name":"{name}","kind":"{kind}","family":"qwensim","paper_analog":"scripted",
+                "d_model":48,"n_layers":2,"n_heads":4,"d_head":12,"vocab":{vocab},
+                "window":null,"kv_shape":[2,2,4,128,12],"entries":{{}}{extra}}}"#
+        )
+    };
+    let massv = entry(
+        "qwensim-S",
+        "draft",
+        r#","variant":"massv","aligned_target":"qwensim-L","multimodal":true"#,
+    );
+    let baseline = entry(
+        "qwensim-S",
+        "draft",
+        r#","variant":"baseline","aligned_target":"qwensim-L","multimodal":false"#,
+    );
+    let drafters = if with_baseline_drafter { format!("{massv},{baseline}") } else { massv };
+    let manifest = format!(
+        r#"{{"schema":1,"backend":"scripted","gamma":5,"t_max":128,"p_max":32,
+            "n_visual":16,"gen_max":{gen_max},"vocab_size":{vocab},"pad_id":0,"bos_id":1,
+            "eos_id":2,"sep_id":3,"use_kernel":false,
+            "targets":[{target}],
+            "drafters":[{drafters}]}}"#,
+        gen_max = gen_max,
+        vocab = vocab,
+        target = entry("qwensim-L", "target", ""),
+        drafters = drafters,
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir.to_str().unwrap().to_string()
+}
+
+/// Deterministic 16x16x3 demo image keyed by `phase` (fixture companion to
+/// `write_test_artifacts`; different phases yield different scripted
+/// streams).
+pub fn demo_image(phase: usize) -> Vec<f32> {
+    (0..crate::models::IMAGE_ELEMS).map(|i| ((i + phase) % 7) as f32 * 0.11).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

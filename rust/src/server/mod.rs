@@ -13,11 +13,18 @@
 //!              default "massv"), "temperature"?: f32, "top_p"?: f32,
 //!              "max_new"?: int, "seed"?: int,
 //!              "priority"?: "interactive"|"batch",
-//!              "text_only_draft"?: bool, "adaptive"?: bool}
-//!   request:  {"op":"metrics"}    |    {"op":"ping"}
-//!   response: {"id":n, "text":str, "tokens":[...], "mal":f,
-//!              "mean_path_depth":f, "tree_nodes_drafted":n, ...}
-//!             or {"error": str}
+//!              "text_only_draft"?: bool, "adaptive"?: bool,
+//!              "stream"?: bool, "deadline_ms"?: int}
+//!   request:  {"op":"metrics"}  |  {"op":"ping"}  |  {"op":"cancel","id":n}
+//!   response: {"id":n, "text":str, "tokens":[...], "mal":f, "steps":n,
+//!              "finish_reason":"eos"|"length"|"cancelled"|"deadline"|
+//!              "rejected"|"error", ...}   or {"error": str}
+//!
+//! With "stream": true the generate response becomes a frame sequence --
+//! one {"id":n, "chunk":[tokens...]} line per decode step, then the final
+//! summary object (no "chunk" field); chunk concatenation == "tokens".
+//! Streaming holds its connection until done; issue cancels for a
+//! streaming request from a second connection.
 
 pub mod protocol;
 
@@ -28,10 +35,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::Engine;
+use crate::coordinator::{Engine, Update};
 use crate::util::json::Json;
 
-pub use protocol::{parse_request, render_metrics, render_response};
+pub use protocol::{parse_request, render_chunk, render_metrics, render_response};
 
 pub struct Server {
     engine: Arc<Engine>,
@@ -98,10 +105,7 @@ fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<
                 if line.trim().is_empty() {
                     continue;
                 }
-                let reply = handle_line(&line, engine);
-                writer.write_all(reply.to_string().as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
+                handle_request(&line, engine, &mut writer)?;
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -115,16 +119,42 @@ fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<
     Ok(())
 }
 
-fn handle_line(line: &str, engine: &Engine) -> Json {
-    match parse_request(line, engine) {
+/// Handle one request line, writing one frame (or, for streaming
+/// generates, a chunk-frame sequence followed by the summary frame).
+fn handle_request(line: &str, engine: &Engine, writer: &mut TcpStream) -> Result<()> {
+    let reply = match parse_request(line, engine) {
         Ok(protocol::Op::Ping) => Json::obj(vec![("ok", Json::Bool(true))]),
         Ok(protocol::Op::Metrics) => render_metrics(engine),
-        Ok(protocol::Op::Generate(req)) => {
-            let resp = engine.run(req);
-            render_response(&resp)
+        Ok(protocol::Op::Cancel(id)) => Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("ok", Json::Bool(engine.cancel(id))),
+        ]),
+        Ok(protocol::Op::Generate { req, stream: false }) => render_response(&engine.run(req)),
+        Ok(protocol::Op::Generate { req, stream: true }) => {
+            let id = req.id;
+            let rx = engine.submit_streaming(req);
+            loop {
+                match rx.recv() {
+                    Ok(Update::Chunk(tokens)) => {
+                        write_frame(writer, &render_chunk(id, &tokens))?;
+                    }
+                    Ok(Update::Done(resp)) => break render_response(&resp),
+                    Err(_) => {
+                        break Json::obj(vec![("error", Json::str("engine shut down"))])
+                    }
+                }
+            }
         }
         Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
-    }
+    };
+    write_frame(writer, &reply)
+}
+
+fn write_frame(writer: &mut TcpStream, frame: &Json) -> Result<()> {
+    writer.write_all(frame.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
 }
 
 /// Minimal blocking client for examples, benches, and integration tests.
@@ -152,5 +182,25 @@ impl Client {
     pub fn ping(&mut self) -> Result<bool> {
         let r = self.call(&Json::obj(vec![("op", Json::str("ping"))]))?;
         Ok(r.get("ok").map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false))
+    }
+
+    /// Streaming call (`"stream": true` generates): collects the per-step
+    /// chunk frames and returns them with the final summary frame.
+    pub fn call_streaming(&mut self, req: &Json) -> Result<(Vec<Vec<i32>>, Json)> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut chunks = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(anyhow::anyhow!("connection closed mid-stream"));
+            }
+            let frame = crate::util::json::parse(&line)?;
+            match frame.get("chunk") {
+                Some(c) => chunks.push(c.to_i32_vec()?),
+                None => return Ok((chunks, frame)),
+            }
+        }
     }
 }

@@ -1,4 +1,12 @@
 //! Wire protocol: JSON <-> request/response mapping.
+//!
+//! Streaming (`"stream": true` on a generate) turns the single response
+//! line into a frame sequence: one `{"id": n, "chunk": [tokens...]}` line
+//! per decode step, terminated by the usual summary response object (the
+//! frame *without* a "chunk" field).  Concatenating the chunks yields
+//! exactly the summary's "tokens".  `{"op": "cancel", "id": n}` flags a
+//! queued or in-flight request; its submitter receives the partial output
+//! with `finish_reason = "cancelled"`.
 
 use anyhow::{anyhow, Result};
 
@@ -9,7 +17,8 @@ use crate::util::json::{parse, Json};
 pub enum Op {
     Ping,
     Metrics,
-    Generate(Request),
+    Generate { req: Request, stream: bool },
+    Cancel(u64),
 }
 
 pub fn parse_request(line: &str, engine: &Engine) -> Result<Op> {
@@ -17,7 +26,14 @@ pub fn parse_request(line: &str, engine: &Engine) -> Result<Op> {
     match v.req("op")?.as_str()? {
         "ping" => Ok(Op::Ping),
         "metrics" => Ok(Op::Metrics),
-        "generate" => Ok(Op::Generate(parse_generate(&v, engine)?)),
+        "generate" => {
+            let stream = v
+                .get("stream")
+                .map(|b| b.as_bool().unwrap_or(false))
+                .unwrap_or(false);
+            Ok(Op::Generate { req: parse_generate(&v, engine)?, stream })
+        }
+        "cancel" => Ok(Op::Cancel(v.req("id")?.as_usize()? as u64)),
         op => Err(anyhow!("unknown op {op:?}")),
     }
 }
@@ -72,6 +88,7 @@ fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
         Some("batch") => Priority::Batch,
         _ => Priority::Interactive,
     };
+    let deadline_ms = v.get("deadline_ms").and_then(|d| d.as_usize().ok()).map(|d| d as u64);
     Ok(Request {
         id: engine.next_id(),
         task: v
@@ -89,7 +106,13 @@ fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
         mode,
         gen,
         priority,
+        deadline_ms,
     })
+}
+
+/// One streaming frame: the tokens emitted by a single decode step.
+pub fn render_chunk(id: u64, tokens: &[i32]) -> Json {
+    Json::obj(vec![("id", Json::num(id as f64)), ("chunk", Json::arr_i32(tokens))])
 }
 
 pub fn render_response(r: &Response) -> Json {
@@ -103,6 +126,8 @@ pub fn render_response(r: &Response) -> Json {
         ("mean_path_depth", Json::num(r.mean_path_depth)),
         ("tree_nodes_drafted", Json::num(r.tree_nodes_drafted as f64)),
         ("finished_by_eos", Json::Bool(r.finished_by_eos)),
+        ("steps", Json::num(r.steps as f64)),
+        ("finish_reason", Json::str(r.finish_reason.clone())),
         ("queue_ms", Json::num(r.queue_ms)),
         ("latency_ms", Json::num(r.latency_ms)),
     ];
@@ -114,8 +139,7 @@ pub fn render_response(r: &Response) -> Json {
 
 pub fn render_metrics(engine: &Engine) -> Json {
     let mut fields: Vec<(String, Json)> = engine
-        .metrics
-        .render()
+        .scrape()
         .into_iter()
         .map(|(k, v)| (k, Json::num(v)))
         .collect();
@@ -157,6 +181,8 @@ mod tests {
             mean_path_depth: 2.5,
             tree_nodes_drafted: 18,
             finished_by_eos: true,
+            steps: 5,
+            finish_reason: "eos".into(),
             queue_ms: 0.5,
             latency_ms: 12.25,
             error: None,
@@ -169,7 +195,19 @@ mod tests {
         assert!((back.get("mal").unwrap().as_f64().unwrap() - 3.25).abs() < 1e-9);
         assert!((back.get("mean_path_depth").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
         assert_eq!(back.get("tree_nodes_drafted").unwrap().as_i64().unwrap(), 18);
+        assert_eq!(back.get("steps").unwrap().as_i64().unwrap(), 5);
+        assert_eq!(back.get("finish_reason").unwrap().as_str().unwrap(), "eos");
         assert!(back.get("error").is_none());
+    }
+
+    #[test]
+    fn render_chunk_frame_shape() {
+        let j = render_chunk(7, &[10, 11, 12]);
+        let back = parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("id").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(back.get("chunk").unwrap().to_i32_vec().unwrap(), vec![10, 11, 12]);
+        // the final summary frame is distinguished by the absent "chunk"
+        assert!(back.get("tokens").is_none());
     }
 
     #[test]
@@ -188,5 +226,6 @@ mod tests {
         let r = Response::failure(1, "boom".into());
         let j = render_response(&r);
         assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+        assert_eq!(j.get("finish_reason").unwrap().as_str().unwrap(), "error");
     }
 }

@@ -31,12 +31,8 @@
 
 use anyhow::Result;
 
-use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
-use crate::spec::decoder::{
-    sample_token, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams, TargetBackend,
-};
-use crate::util::rng::Rng;
-use std::time::Instant;
+use crate::spec::decoder::{DraftBackend, GenConfig, GenStats, SpecDecoder, TargetBackend};
+use crate::spec::session::DecodeSession;
 
 /// Which speculative drafting shape to run (the adaptive controller moves
 /// between these, and may abandon both for plain decoding).
@@ -100,7 +96,8 @@ impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
 
     /// Speculative generation with the full controller: starts in `start`
     /// mode, switches chain<->tree on the acceptance/utilization EMAs, and
-    /// abandons speculation entirely when it stops paying.
+    /// abandons speculation entirely when it stops paying.  The controller
+    /// itself lives in `spec::session`; this is the blocking driver.
     pub fn generate_with_mode(
         &self,
         start: SpecMode,
@@ -109,189 +106,16 @@ impl<T: TargetBackend, D: DraftBackend> AdaptiveDecoder<T, D> {
         len: usize,
         cfg: &GenConfig,
     ) -> Result<GenStats> {
-        let p: &SpecParams = &self.inner.params;
-        let eos = p.eos_id;
-        let tree_cfg = cfg.tree.clone().unwrap_or_else(|| p.tree.clone());
-        let mut rng = Rng::seeded(cfg.seed);
-        let mut scratch = Scratch::default();
-        let mut stats = GenStats::default();
-        let max_new = cfg.max_new.min(p.gen_max);
-
-        let t0 = Instant::now();
-        let (last_logits, mut tstate) = self.inner.target.prefill(image, prompt, len)?;
-        let mut dstate = self
-            .inner
-            .drafter
-            .prefill(Some(image), prompt, len, self.inner.text_only_draft)?;
-        stats.prefill_micros = t0.elapsed().as_micros() as u64;
-
-        let td = Instant::now();
-        let mut probs = Vec::new();
-        let t0_tok = sample_token(&last_logits, cfg, &mut probs, &mut rng);
-        stats.tokens.push(t0_tok);
-        if t0_tok == eos {
-            stats.finished_by_eos = true;
-            stats.decode_micros = td.elapsed().as_micros() as u64;
-            return Ok(stats);
-        }
-
-        let mut last = t0_tok;
-        let mut ema: Option<f64> = None;
-        let mut util_ema: Option<f64> = None;
-        let mut tree_iters = 0usize;
-        let mut mode = Some(start); // None = plain target decoding
-        let mut tree_banned = false;
-
-        'outer: while stats.tokens.len() < max_new {
-            let Some(cur_mode) = mode else {
-                // plain target decoding for the rest of the request
-                let logits = self.inner.target.decode(&mut tstate, last)?;
-                stats.verify_calls += 1;
-                let tok = sample_token(&logits, cfg, &mut probs, &mut rng);
-                stats.tokens.push(tok);
-                stats.per_iter_emitted.push(1);
-                if tok == eos {
-                    stats.finished_by_eos = true;
-                    break;
-                }
-                last = tok;
-                continue;
-            };
-
-            // ---- one speculative iteration (chain or tree) ----------------
-            let seed = rng.next_u32();
-            let (accepted_len, next_token, emitted) = match cur_mode {
-                SpecMode::Chain => {
-                    let out =
-                        self.inner.drafter.draft(&mut dstate, last, cfg.temperature, seed)?;
-                    stats.draft_calls += 1;
-                    let mut vtokens = Vec::with_capacity(p.gamma + 1);
-                    vtokens.push(last);
-                    vtokens.extend_from_slice(&out.tokens);
-                    let plogits = self.inner.target.verify(&mut tstate, &vtokens)?;
-                    stats.verify_calls += 1;
-                    let dec = accept_stochastic(
-                        &out.tokens, &out.qlogits, &plogits,
-                        cfg.temperature, cfg.top_p, &mut rng, &mut scratch,
-                    );
-
-                    let mut emitted = 0usize;
-                    for &tok in &out.tokens[..dec.accepted] {
-                        stats.tokens.push(tok);
-                        emitted += 1;
-                        if tok == eos {
-                            stats.finished_by_eos = true;
-                            stats.accepted_draft += emitted;
-                            stats.per_iter_emitted.push(emitted);
-                            break 'outer;
-                        }
-                        if stats.tokens.len() >= max_new {
-                            stats.accepted_draft += emitted;
-                            stats.per_iter_emitted.push(emitted);
-                            break 'outer;
-                        }
-                    }
-                    stats.accepted_draft += emitted;
-                    (dec.accepted, dec.next_token, emitted)
-                }
-                SpecMode::Tree => {
-                    let tree = self.inner.drafter.draft_tree(
-                        &mut dstate, last, &tree_cfg, cfg.temperature, seed,
-                    )?;
-                    stats.draft_calls += 1;
-                    stats.tree_nodes_drafted += tree.len();
-                    let plogits =
-                        self.inner.target.verify_tree(&mut tstate, last, &tree, p.gamma)?;
-                    stats.verify_calls += 1;
-                    let dec = accept_tree_stochastic(
-                        &tree, &plogits, cfg.temperature, cfg.top_p, &mut rng, &mut scratch,
-                    );
-
-                    let mut emitted = 0usize;
-                    for &node in &dec.path {
-                        let tok = tree.tokens[node];
-                        stats.tokens.push(tok);
-                        emitted += 1;
-                        if tok == eos {
-                            stats.finished_by_eos = true;
-                            stats.accepted_draft += emitted;
-                            stats.per_iter_emitted.push(emitted);
-                            stats.per_iter_path_depth.push(emitted);
-                            break 'outer;
-                        }
-                        if stats.tokens.len() >= max_new {
-                            stats.accepted_draft += emitted;
-                            stats.per_iter_emitted.push(emitted);
-                            stats.per_iter_path_depth.push(emitted);
-                            break 'outer;
-                        }
-                    }
-                    stats.accepted_draft += emitted;
-                    stats.per_iter_path_depth.push(dec.path.len());
-                    tree_iters += 1;
-                    let util = if tree.is_empty() {
-                        0.0
-                    } else {
-                        dec.path.len() as f64 / tree.len() as f64
-                    };
-                    let a = self.adaptive.ema_alpha;
-                    util_ema = Some(match util_ema {
-                        None => util,
-                        Some(u) => a * util + (1.0 - a) * u,
-                    });
-                    (dec.path.len(), dec.next_token, emitted)
-                }
-            };
-
-            stats.tokens.push(next_token);
-            let emitted = emitted + 1;
-            stats.per_iter_emitted.push(emitted);
-            if next_token == eos {
-                stats.finished_by_eos = true;
-                break;
-            }
-
-            // advance both caches past last + the accepted region
-            tstate.pos += 1 + accepted_len as i32;
-            dstate.pos += 1 + accepted_len as i32;
-            last = next_token;
-
-            // ---- controller update ---------------------------------------
-            let a = self.adaptive.ema_alpha;
-            ema = Some(match ema {
-                None => emitted as f64,
-                Some(e) => a * emitted as f64 + (1.0 - a) * e,
-            });
-            if stats.verify_calls >= self.adaptive.patience
-                && ema.unwrap() < self.adaptive.min_tau
-            {
-                mode = None;
-                stats.fallback_at = Some(stats.verify_calls);
-                // the target cache holds the accepted prefix; continue
-                // decoding from `last` at tstate.pos (write position)
-                continue;
-            }
-            match cur_mode {
-                SpecMode::Chain => {
-                    if !tree_banned
-                        && stats.verify_calls >= self.adaptive.patience
-                        && ema.unwrap() >= self.adaptive.tree_upgrade_tau
-                    {
-                        mode = Some(SpecMode::Tree);
-                    }
-                }
-                SpecMode::Tree => {
-                    if tree_iters >= self.adaptive.patience
-                        && util_ema.unwrap_or(0.0) < self.adaptive.min_branch_utilization
-                    {
-                        mode = Some(SpecMode::Chain);
-                        tree_banned = true; // don't flip-flop within a request
-                    }
-                }
-            }
-        }
-        stats.decode_micros = td.elapsed().as_micros() as u64;
-        Ok(stats)
+        DecodeSession::new(
+            &self.inner.target,
+            Some(&self.inner.drafter),
+            self.inner.params.clone(),
+            cfg.clone(),
+            Some(start),
+            Some(self.adaptive.clone()),
+            self.inner.text_only_draft,
+        )
+        .run_to_completion(image, prompt, len)
     }
 }
 

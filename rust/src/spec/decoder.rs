@@ -1,6 +1,11 @@
 //! The speculative decoding engine: drive a (target, drafter) pair through
 //! prefill -> [draft gamma -> verify -> accept]* for one request.
 //!
+//! The iteration loop itself lives in `spec::session::DecodeSession` (a
+//! resumable state machine the serving engine schedules step by step); the
+//! `generate*` entry points here are blocking drivers over it, kept for
+//! the eval harness, the examples, and the decoder-level property tests.
+//!
 //! The decoder is generic over `TargetBackend`/`DraftBackend` so its logic
 //! (EOS handling, budget truncation, MAL accounting, cache-position
 //! bookkeeping) is unit-testable against scripted mocks (`spec::testing`)
@@ -13,15 +18,14 @@
 //! fed to it as `last` on the next draft call -- so both caches stay
 //! consistent without any rollback (stale tails are position-masked).
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::manifest::Manifest;
 use crate::models::{DraftModel, DraftOutput, SeqState, TargetModel};
 use crate::runtime::Tensor;
-use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
+use crate::spec::adaptive::SpecMode;
 use crate::spec::sampler;
+use crate::spec::session::{DecodeSession, NoDraft};
 use crate::spec::tree::{DraftTree, TreeConfig};
 use crate::util::rng::Rng;
 
@@ -94,6 +98,34 @@ pub(crate) fn verify_tree_linearized<T: TargetBackend + ?Sized>(
     Tensor::new(full.data[..rows * w].to_vec(), vec![rows, w])
 }
 
+/// Backends are used through shared references (the decode loop only needs
+/// `&self`; per-sequence mutability lives in `SeqState`), so a `&T` is a
+/// backend too -- which lets `DecodeSession` either own its backends (the
+/// serving engine) or borrow them (the blocking `generate*` wrappers).
+impl<T: TargetBackend + ?Sized> TargetBackend for &T {
+    fn prefill(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)> {
+        (**self).prefill(image, prompt, len)
+    }
+
+    fn verify(&self, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor> {
+        (**self).verify(st, tokens)
+    }
+
+    fn decode(&self, st: &mut SeqState, token: i32) -> Result<Vec<f32>> {
+        (**self).decode(st, token)
+    }
+
+    fn verify_tree(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        tree: &DraftTree,
+        gamma: usize,
+    ) -> Result<Tensor> {
+        (**self).verify_tree(st, last, tree, gamma)
+    }
+}
+
 /// Drafter operations the decoder needs.
 pub trait DraftBackend {
     fn prefill(
@@ -144,6 +176,39 @@ pub(crate) fn draft_tree_via_chain<D: DraftBackend + ?Sized>(
         out.tokens[..depth].to_vec(),
         Tensor::new(out.qlogits.data[..depth * w].to_vec(), vec![depth, w])?,
     ))
+}
+
+impl<D: DraftBackend + ?Sized> DraftBackend for &D {
+    fn prefill(
+        &self,
+        image: Option<&[f32]>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState> {
+        (**self).prefill(image, prompt, len, text_only)
+    }
+
+    fn draft(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        temperature: f32,
+        seed: u32,
+    ) -> Result<DraftOutput> {
+        (**self).draft(st, last, temperature, seed)
+    }
+
+    fn draft_tree(
+        &self,
+        st: &mut SeqState,
+        last: i32,
+        cfg: &TreeConfig,
+        temperature: f32,
+        seed: u32,
+    ) -> Result<DraftTree> {
+        (**self).draft_tree(st, last, cfg, temperature, seed)
+    }
 }
 
 impl TargetBackend for TargetModel {
@@ -341,90 +406,16 @@ impl<T: TargetBackend, D: DraftBackend> SpecDecoder<T, D> {
         len: usize,
         cfg: &GenConfig,
     ) -> Result<GenStats> {
-        let eos = self.params.eos_id;
-        let mut rng = Rng::seeded(cfg.seed);
-        let mut scratch = Scratch::default();
-        let mut stats = GenStats::default();
-        let max_new = cfg.max_new.min(self.params.gen_max);
-
-        // ---- prefill both models -----------------------------------------
-        let t0 = Instant::now();
-        let (last_logits, mut tstate) = self.target.prefill(image, prompt, len)?;
-        let mut dstate =
-            self.drafter.prefill(Some(image), prompt, len, self.text_only_draft)?;
-        stats.prefill_micros = t0.elapsed().as_micros() as u64;
-
-        // the prefill gives the first token "for free" from the target
-        let td = Instant::now();
-        let mut probs = Vec::new();
-        let t0_tok = sample_token(&last_logits, cfg, &mut probs, &mut rng);
-        stats.tokens.push(t0_tok);
-        if t0_tok == eos {
-            stats.finished_by_eos = true;
-            stats.decode_micros = td.elapsed().as_micros() as u64;
-            return Ok(stats);
-        }
-
-        // ---- speculation loop ---------------------------------------------
-        let mut last = t0_tok;
-        'outer: while stats.tokens.len() < max_new {
-            let seed = rng.next_u32();
-            let out = self.drafter.draft(&mut dstate, last, cfg.temperature, seed)?;
-            stats.draft_calls += 1;
-
-            let mut vtokens = Vec::with_capacity(self.params.gamma + 1);
-            vtokens.push(last);
-            vtokens.extend_from_slice(&out.tokens);
-            let plogits = self.target.verify(&mut tstate, &vtokens)?;
-            stats.verify_calls += 1;
-
-            let dec = accept_stochastic(
-                &out.tokens,
-                &out.qlogits,
-                &plogits,
-                cfg.temperature,
-                cfg.top_p,
-                &mut rng,
-                &mut scratch,
-            );
-
-            // emit accepted prefix (may contain EOS), then the target token
-            let mut emitted = 0usize;
-            for &tok in &out.tokens[..dec.accepted] {
-                stats.tokens.push(tok);
-                emitted += 1;
-                if tok == eos {
-                    stats.finished_by_eos = true;
-                    stats.accepted_draft += emitted;
-                    stats.per_iter_emitted.push(emitted);
-                    break 'outer;
-                }
-                if stats.tokens.len() >= max_new {
-                    stats.accepted_draft += emitted;
-                    stats.per_iter_emitted.push(emitted);
-                    break 'outer;
-                }
-            }
-            stats.accepted_draft += emitted;
-            stats.tokens.push(dec.next_token);
-            emitted += 1;
-            stats.per_iter_emitted.push(emitted);
-            if dec.next_token == eos {
-                stats.finished_by_eos = true;
-                break;
-            }
-
-            // advance both caches past the accepted region:
-            //   target wrote [last, x1..xgamma] at tstate.pos; the accepted
-            //   prefix is last + accepted drafts = 1 + dec.accepted slots
-            tstate.pos += 1 + dec.accepted as i32;
-            //   drafter wrote [last, x1..xgamma-1] at dstate.pos; same
-            //   advance keeps it one token behind the target, by design
-            dstate.pos += 1 + dec.accepted as i32;
-            last = dec.next_token;
-        }
-        stats.decode_micros = td.elapsed().as_micros() as u64;
-        Ok(stats)
+        DecodeSession::new(
+            &self.target,
+            Some(&self.drafter),
+            self.params.clone(),
+            cfg.clone(),
+            Some(SpecMode::Chain),
+            None,
+            self.text_only_draft,
+        )
+        .run_to_completion(image, prompt, len)
     }
 
     /// Generate with token-tree speculation: each iteration drafts a
@@ -440,88 +431,16 @@ impl<T: TargetBackend, D: DraftBackend> SpecDecoder<T, D> {
         len: usize,
         cfg: &GenConfig,
     ) -> Result<GenStats> {
-        let eos = self.params.eos_id;
-        let tree_cfg = cfg.tree.clone().unwrap_or_else(|| self.params.tree.clone());
-        let mut rng = Rng::seeded(cfg.seed);
-        let mut scratch = Scratch::default();
-        let mut stats = GenStats::default();
-        let max_new = cfg.max_new.min(self.params.gen_max);
-
-        // ---- prefill both models -----------------------------------------
-        let t0 = Instant::now();
-        let (last_logits, mut tstate) = self.target.prefill(image, prompt, len)?;
-        let mut dstate =
-            self.drafter.prefill(Some(image), prompt, len, self.text_only_draft)?;
-        stats.prefill_micros = t0.elapsed().as_micros() as u64;
-
-        let td = Instant::now();
-        let mut probs = Vec::new();
-        let t0_tok = sample_token(&last_logits, cfg, &mut probs, &mut rng);
-        stats.tokens.push(t0_tok);
-        if t0_tok == eos {
-            stats.finished_by_eos = true;
-            stats.decode_micros = td.elapsed().as_micros() as u64;
-            return Ok(stats);
-        }
-
-        // ---- tree speculation loop ----------------------------------------
-        let mut last = t0_tok;
-        'outer: while stats.tokens.len() < max_new {
-            let seed = rng.next_u32();
-            let tree =
-                self.drafter.draft_tree(&mut dstate, last, &tree_cfg, cfg.temperature, seed)?;
-            stats.draft_calls += 1;
-            stats.tree_nodes_drafted += tree.len();
-
-            let plogits = self.target.verify_tree(&mut tstate, last, &tree, self.params.gamma)?;
-            stats.verify_calls += 1;
-
-            let dec = accept_tree_stochastic(
-                &tree,
-                &plogits,
-                cfg.temperature,
-                cfg.top_p,
-                &mut rng,
-                &mut scratch,
-            );
-
-            // emit the accepted path (may contain EOS), then the target token
-            let mut emitted = 0usize;
-            for &node in &dec.path {
-                let tok = tree.tokens[node];
-                stats.tokens.push(tok);
-                emitted += 1;
-                if tok == eos {
-                    stats.finished_by_eos = true;
-                    stats.accepted_draft += emitted;
-                    stats.per_iter_emitted.push(emitted);
-                    stats.per_iter_path_depth.push(emitted);
-                    break 'outer;
-                }
-                if stats.tokens.len() >= max_new {
-                    stats.accepted_draft += emitted;
-                    stats.per_iter_emitted.push(emitted);
-                    stats.per_iter_path_depth.push(emitted);
-                    break 'outer;
-                }
-            }
-            stats.accepted_draft += emitted;
-            stats.per_iter_path_depth.push(dec.path.len());
-            stats.tokens.push(dec.next_token);
-            emitted += 1;
-            stats.per_iter_emitted.push(emitted);
-            if dec.next_token == eos {
-                stats.finished_by_eos = true;
-                break;
-            }
-
-            // advance both caches past last + the accepted path
-            tstate.pos += 1 + dec.path.len() as i32;
-            dstate.pos += 1 + dec.path.len() as i32;
-            last = dec.next_token;
-        }
-        stats.decode_micros = td.elapsed().as_micros() as u64;
-        Ok(stats)
+        DecodeSession::new(
+            &self.target,
+            Some(&self.drafter),
+            self.params.clone(),
+            cfg.clone(),
+            Some(SpecMode::Tree),
+            None,
+            self.text_only_draft,
+        )
+        .run_to_completion(image, prompt, len)
     }
 }
 
@@ -535,32 +454,16 @@ pub fn generate_baseline<T: TargetBackend>(
     len: usize,
     cfg: &GenConfig,
 ) -> Result<GenStats> {
-    let eos = params.eos_id;
-    let mut rng = Rng::seeded(cfg.seed);
-    let mut stats = GenStats::default();
-    let max_new = cfg.max_new.min(params.gen_max);
-
-    let t0 = Instant::now();
-    let (mut logits, mut tstate) = target.prefill(image, prompt, len)?;
-    stats.prefill_micros = t0.elapsed().as_micros() as u64;
-
-    let td = Instant::now();
-    let mut probs = Vec::new();
-    loop {
-        let tok = sample_token(&logits, cfg, &mut probs, &mut rng);
-        stats.tokens.push(tok);
-        if tok == eos {
-            stats.finished_by_eos = true;
-            break;
-        }
-        if stats.tokens.len() >= max_new {
-            break;
-        }
-        logits = target.decode(&mut tstate, tok)?;
-        stats.verify_calls += 1; // one target forward per token
-    }
-    stats.decode_micros = td.elapsed().as_micros() as u64;
-    Ok(stats)
+    DecodeSession::<&T, NoDraft>::new(
+        target,
+        None,
+        params.clone(),
+        cfg.clone(),
+        None,
+        None,
+        false,
+    )
+    .run_to_completion(image, prompt, len)
 }
 
 impl SpecDecoder<TargetModel, DraftModel> {

@@ -6,6 +6,7 @@ pub mod acceptance;
 pub mod adaptive;
 pub mod decoder;
 pub mod sampler;
+pub mod session;
 pub mod testing;
 pub mod tree;
 
@@ -17,4 +18,5 @@ pub use adaptive::{AdaptiveConfig, AdaptiveDecoder, SpecMode};
 pub use decoder::{
     generate_baseline, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams, TargetBackend,
 };
+pub use session::{DecodeSession, NoDraft, StepOutcome};
 pub use tree::{DraftTree, TreeBuilder, TreeConfig};

@@ -1,0 +1,587 @@
+//! Resumable decode sessions: the speculative decoding loop split into an
+//! explicit state machine so the serving engine can interleave many
+//! requests at *iteration* granularity (continuous batching).
+//!
+//! A `DecodeSession` owns everything one in-flight request needs between
+//! speculative iterations -- both models' `SeqState`s, the sampler RNG,
+//! acceptance scratch, the adaptive controller, and the partial `GenStats`
+//! -- and exposes exactly two operations:
+//!
+//!   * `prefill(image, prompt, len)` runs both prefills and samples the
+//!     "free" first token;
+//!   * `step()` runs ONE speculative iteration (draft -> verify -> accept,
+//!     or a single plain decode for target-only / post-fallback sessions).
+//!
+//! Both return `StepOutcome`: `Emitted(tokens)` while the request is still
+//! running (the newly produced tokens, ready to stream), or
+//! `Finished(stats)` when the request terminated (EOS or token budget).
+//! Between calls the session is inert and can sit in a queue -- which is
+//! what lets one worker serve a short interactive request in the gaps of a
+//! long batch decode instead of parking a thread per request.
+//!
+//! The run-to-completion entry points (`SpecDecoder::generate`,
+//! `generate_tree`, `AdaptiveDecoder::generate_with_mode`,
+//! `generate_baseline`) are thin drivers over this state machine, so the
+//! decoder-level losslessness property tests in `spec::decoder` and
+//! `spec::adaptive` pin the session semantics: token streams, RNG draws,
+//! and every `GenStats` field are identical to the pre-session loops.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::models::{DraftModel, DraftOutput, SeqState, TargetModel};
+use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
+use crate::spec::adaptive::{AdaptiveConfig, SpecMode};
+use crate::spec::decoder::{
+    sample_token, DraftBackend, GenConfig, GenStats, SpecParams, TargetBackend,
+};
+use crate::spec::tree::TreeConfig;
+use crate::util::rng::Rng;
+
+/// Result of one `prefill`/`step` call.
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// The request is still running; these are the tokens this call
+    /// emitted (already appended to the session's `GenStats::tokens`).
+    Emitted(Vec<i32>),
+    /// The request terminated; the full generation record (the final
+    /// iteration's tokens are included in `stats.tokens` -- callers that
+    /// stream incrementally should flush `stats.tokens[streamed..]`).
+    Finished(GenStats),
+}
+
+/// Placeholder drafter type for target-only sessions (never invoked; every
+/// call path is gated on `mode.is_some()`, which requires a drafter).
+pub struct NoDraft;
+
+impl DraftBackend for NoDraft {
+    fn prefill(
+        &self,
+        _image: Option<&[f32]>,
+        _prompt: &[i32],
+        _len: usize,
+        _text_only: bool,
+    ) -> Result<SeqState> {
+        Err(anyhow!("target-only session has no drafter"))
+    }
+
+    fn draft(
+        &self,
+        _st: &mut SeqState,
+        _last: i32,
+        _temperature: f32,
+        _seed: u32,
+    ) -> Result<DraftOutput> {
+        Err(anyhow!("target-only session has no drafter"))
+    }
+}
+
+/// Adaptive-controller state carried across steps (mirrors the EMA logic
+/// documented in `spec::adaptive`).
+struct AdaptiveState {
+    cfg: AdaptiveConfig,
+    /// EMA of emitted-tokens-per-iteration.
+    ema: Option<f64>,
+    /// EMA of branch utilization over tree iterations.
+    util_ema: Option<f64>,
+    tree_iters: usize,
+    tree_banned: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Created,
+    Running,
+    Finished,
+}
+
+enum IterResult {
+    /// Newly emitted tokens; the session remains runnable.
+    Running(Vec<i32>),
+    Done,
+}
+
+pub struct DecodeSession<T: TargetBackend = TargetModel, D: DraftBackend = DraftModel> {
+    target: T,
+    drafter: Option<D>,
+    params: SpecParams,
+    cfg: GenConfig,
+    text_only_draft: bool,
+    tree_cfg: TreeConfig,
+    max_new: usize,
+    rng: Rng,
+    scratch: Scratch,
+    probs: Vec<f32>,
+    stats: GenStats,
+    tstate: Option<SeqState>,
+    dstate: Option<SeqState>,
+    last: i32,
+    /// Current drafting shape; `None` = plain target decoding (target-only
+    /// sessions, or an adaptive session after fallback).
+    mode: Option<SpecMode>,
+    adaptive: Option<AdaptiveState>,
+    /// Adaptive sessions record plain post-fallback decodes in
+    /// `per_iter_emitted` (they are SD-loop iterations); pure target-only
+    /// sessions do not (back-compat with `generate_baseline` accounting).
+    count_plain_iters: bool,
+    phase: Phase,
+}
+
+impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
+    /// Build a session.  `start` picks the drafting shape (`None` = plain
+    /// target-only decoding; forced to `None` when there is no drafter);
+    /// `adaptive` enables the chain<->tree/fallback controller.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        target: T,
+        drafter: Option<D>,
+        params: SpecParams,
+        cfg: GenConfig,
+        start: Option<SpecMode>,
+        adaptive: Option<AdaptiveConfig>,
+        text_only_draft: bool,
+    ) -> Self {
+        let tree_cfg = cfg.tree.clone().unwrap_or_else(|| params.tree.clone());
+        let max_new = cfg.max_new.min(params.gen_max);
+        let mode = if drafter.is_some() { start } else { None };
+        let count_plain_iters = adaptive.is_some();
+        DecodeSession {
+            rng: Rng::seeded(cfg.seed),
+            target,
+            drafter,
+            params,
+            cfg,
+            text_only_draft,
+            tree_cfg,
+            max_new,
+            scratch: Scratch::default(),
+            probs: Vec::new(),
+            stats: GenStats::default(),
+            tstate: None,
+            dstate: None,
+            last: 0,
+            mode,
+            adaptive: adaptive.map(|acfg| AdaptiveState {
+                cfg: acfg,
+                ema: None,
+                util_ema: None,
+                tree_iters: 0,
+                tree_banned: false,
+            }),
+            count_plain_iters,
+            phase: Phase::Created,
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Partial generation record so far (tokens already emitted, counters);
+    /// empty after the session finished (the stats moved out).
+    pub fn stats(&self) -> &GenStats {
+        &self.stats
+    }
+
+    /// Abort a running session (cancellation / deadline): marks it finished
+    /// and returns the partial generation record.
+    pub fn abort(&mut self) -> GenStats {
+        self.phase = Phase::Finished;
+        std::mem::take(&mut self.stats)
+    }
+
+    fn finish_now(&mut self) -> StepOutcome {
+        self.phase = Phase::Finished;
+        StepOutcome::Finished(std::mem::take(&mut self.stats))
+    }
+
+    /// Run both prefills and sample the free first token from the target's
+    /// prefill logits.
+    pub fn prefill(&mut self, image: &[f32], prompt: &[i32], len: usize) -> Result<StepOutcome> {
+        if self.phase != Phase::Created {
+            return Err(anyhow!("prefill on an already-started session"));
+        }
+        let t0 = Instant::now();
+        let (last_logits, tstate) = self.target.prefill(image, prompt, len)?;
+        self.tstate = Some(tstate);
+        if self.mode.is_some() {
+            let drafter = self.drafter.as_ref().expect("speculative session without drafter");
+            self.dstate =
+                Some(drafter.prefill(Some(image), prompt, len, self.text_only_draft)?);
+        }
+        self.stats.prefill_micros = t0.elapsed().as_micros() as u64;
+
+        let td = Instant::now();
+        let t0_tok = sample_token(&last_logits, &self.cfg, &mut self.probs, &mut self.rng);
+        self.stats.tokens.push(t0_tok);
+        self.last = t0_tok;
+        self.stats.decode_micros += td.elapsed().as_micros() as u64;
+        if t0_tok == self.params.eos_id {
+            self.stats.finished_by_eos = true;
+            return Ok(self.finish_now());
+        }
+        if self.stats.tokens.len() >= self.max_new {
+            return Ok(self.finish_now());
+        }
+        self.phase = Phase::Running;
+        Ok(StepOutcome::Emitted(vec![t0_tok]))
+    }
+
+    /// Run exactly one decode iteration: a full draft -> verify -> accept
+    /// round in chain/tree mode, or one plain target decode otherwise.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        match self.phase {
+            Phase::Created => return Err(anyhow!("step before prefill")),
+            Phase::Finished => return Err(anyhow!("step on a finished session")),
+            Phase::Running => {}
+        }
+        let td = Instant::now();
+        let r = self.iterate();
+        match r {
+            Ok(out) => {
+                self.stats.decode_micros += td.elapsed().as_micros() as u64;
+                match out {
+                    IterResult::Running(tokens) => Ok(StepOutcome::Emitted(tokens)),
+                    IterResult::Done => Ok(self.finish_now()),
+                }
+            }
+            Err(e) => {
+                self.phase = Phase::Finished;
+                Err(e)
+            }
+        }
+    }
+
+    /// Drive the session to completion (the classic blocking entry point;
+    /// `SpecDecoder::generate*` and friends are wrappers over this).
+    pub fn run_to_completion(
+        mut self,
+        image: &[f32],
+        prompt: &[i32],
+        len: usize,
+    ) -> Result<GenStats> {
+        if let StepOutcome::Finished(stats) = self.prefill(image, prompt, len)? {
+            return Ok(stats);
+        }
+        loop {
+            if let StepOutcome::Finished(stats) = self.step()? {
+                return Ok(stats);
+            }
+        }
+    }
+
+    fn iterate(&mut self) -> Result<IterResult> {
+        let eos = self.params.eos_id;
+        let Some(cur_mode) = self.mode else {
+            // plain target decoding (target-only, or adaptive fallback)
+            let logits = self.target.decode(self.tstate.as_mut().unwrap(), self.last)?;
+            self.stats.verify_calls += 1;
+            let tok = sample_token(&logits, &self.cfg, &mut self.probs, &mut self.rng);
+            self.stats.tokens.push(tok);
+            if self.count_plain_iters {
+                self.stats.per_iter_emitted.push(1);
+            }
+            if tok == eos {
+                self.stats.finished_by_eos = true;
+                return Ok(IterResult::Done);
+            }
+            if self.stats.tokens.len() >= self.max_new {
+                return Ok(IterResult::Done);
+            }
+            self.last = tok;
+            return Ok(IterResult::Running(vec![tok]));
+        };
+
+        // ---- one speculative iteration (chain or tree) -------------------
+        let seed = self.rng.next_u32();
+        let mut emitted_tokens: Vec<i32> = Vec::new();
+        let (accepted_len, next_token) = match cur_mode {
+            SpecMode::Chain => {
+                let out = self.drafter.as_ref().unwrap().draft(
+                    self.dstate.as_mut().unwrap(),
+                    self.last,
+                    self.cfg.temperature,
+                    seed,
+                )?;
+                self.stats.draft_calls += 1;
+                let mut vtokens = Vec::with_capacity(self.params.gamma + 1);
+                vtokens.push(self.last);
+                vtokens.extend_from_slice(&out.tokens);
+                let plogits = self.target.verify(self.tstate.as_mut().unwrap(), &vtokens)?;
+                self.stats.verify_calls += 1;
+                let dec = accept_stochastic(
+                    &out.tokens,
+                    &out.qlogits,
+                    &plogits,
+                    self.cfg.temperature,
+                    self.cfg.top_p,
+                    &mut self.rng,
+                    &mut self.scratch,
+                );
+
+                // emit the accepted prefix (may contain EOS)
+                let mut emitted = 0usize;
+                for &tok in &out.tokens[..dec.accepted] {
+                    self.stats.tokens.push(tok);
+                    emitted_tokens.push(tok);
+                    emitted += 1;
+                    if tok == eos {
+                        self.stats.finished_by_eos = true;
+                        self.stats.accepted_draft += emitted;
+                        self.stats.per_iter_emitted.push(emitted);
+                        return Ok(IterResult::Done);
+                    }
+                    if self.stats.tokens.len() >= self.max_new {
+                        self.stats.accepted_draft += emitted;
+                        self.stats.per_iter_emitted.push(emitted);
+                        return Ok(IterResult::Done);
+                    }
+                }
+                self.stats.accepted_draft += emitted;
+                (dec.accepted, dec.next_token)
+            }
+            SpecMode::Tree => {
+                let tree = self.drafter.as_ref().unwrap().draft_tree(
+                    self.dstate.as_mut().unwrap(),
+                    self.last,
+                    &self.tree_cfg,
+                    self.cfg.temperature,
+                    seed,
+                )?;
+                self.stats.draft_calls += 1;
+                self.stats.tree_nodes_drafted += tree.len();
+                let plogits = self.target.verify_tree(
+                    self.tstate.as_mut().unwrap(),
+                    self.last,
+                    &tree,
+                    self.params.gamma,
+                )?;
+                self.stats.verify_calls += 1;
+                let dec = accept_tree_stochastic(
+                    &tree,
+                    &plogits,
+                    self.cfg.temperature,
+                    self.cfg.top_p,
+                    &mut self.rng,
+                    &mut self.scratch,
+                );
+
+                // emit the accepted root-to-leaf path (may contain EOS)
+                let mut emitted = 0usize;
+                for &node in &dec.path {
+                    let tok = tree.tokens[node];
+                    self.stats.tokens.push(tok);
+                    emitted_tokens.push(tok);
+                    emitted += 1;
+                    if tok == eos {
+                        self.stats.finished_by_eos = true;
+                        self.stats.accepted_draft += emitted;
+                        self.stats.per_iter_emitted.push(emitted);
+                        self.stats.per_iter_path_depth.push(emitted);
+                        return Ok(IterResult::Done);
+                    }
+                    if self.stats.tokens.len() >= self.max_new {
+                        self.stats.accepted_draft += emitted;
+                        self.stats.per_iter_emitted.push(emitted);
+                        self.stats.per_iter_path_depth.push(emitted);
+                        return Ok(IterResult::Done);
+                    }
+                }
+                self.stats.accepted_draft += emitted;
+                self.stats.per_iter_path_depth.push(dec.path.len());
+                if let Some(ad) = self.adaptive.as_mut() {
+                    ad.tree_iters += 1;
+                    let util = if tree.is_empty() {
+                        0.0
+                    } else {
+                        dec.path.len() as f64 / tree.len() as f64
+                    };
+                    let a = ad.cfg.ema_alpha;
+                    ad.util_ema = Some(match ad.util_ema {
+                        None => util,
+                        Some(u) => a * util + (1.0 - a) * u,
+                    });
+                }
+                (dec.path.len(), dec.next_token)
+            }
+        };
+
+        // the target-sampled token (correction or bonus) always emits
+        let emitted = emitted_tokens.len() + 1;
+        self.stats.tokens.push(next_token);
+        emitted_tokens.push(next_token);
+        self.stats.per_iter_emitted.push(emitted);
+        if next_token == eos {
+            self.stats.finished_by_eos = true;
+            return Ok(IterResult::Done);
+        }
+        if self.stats.tokens.len() >= self.max_new {
+            return Ok(IterResult::Done);
+        }
+
+        // advance both caches past `last` + the accepted region (stale
+        // tails are position-masked by the backends)
+        self.tstate.as_mut().unwrap().pos += 1 + accepted_len as i32;
+        self.dstate.as_mut().unwrap().pos += 1 + accepted_len as i32;
+        self.last = next_token;
+
+        // ---- adaptive controller update ----------------------------------
+        if let Some(ad) = self.adaptive.as_mut() {
+            let a = ad.cfg.ema_alpha;
+            ad.ema = Some(match ad.ema {
+                None => emitted as f64,
+                Some(e) => a * emitted as f64 + (1.0 - a) * e,
+            });
+            if self.stats.verify_calls >= ad.cfg.patience && ad.ema.unwrap() < ad.cfg.min_tau {
+                // speculation stopped paying: plain decoding from here on
+                self.mode = None;
+                self.stats.fallback_at = Some(self.stats.verify_calls);
+                return Ok(IterResult::Running(emitted_tokens));
+            }
+            match cur_mode {
+                SpecMode::Chain => {
+                    if !ad.tree_banned
+                        && self.stats.verify_calls >= ad.cfg.patience
+                        && ad.ema.unwrap() >= ad.cfg.tree_upgrade_tau
+                    {
+                        self.mode = Some(SpecMode::Tree);
+                    }
+                }
+                SpecMode::Tree => {
+                    if ad.tree_iters >= ad.cfg.patience
+                        && ad.util_ema.unwrap_or(0.0) < ad.cfg.min_branch_utilization
+                    {
+                        self.mode = Some(SpecMode::Chain);
+                        ad.tree_banned = true; // don't flip-flop within a request
+                    }
+                }
+            }
+        }
+        Ok(IterResult::Running(emitted_tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::testing::{params, MockDraft, MockTarget, MockTreeDraft};
+
+    #[test]
+    fn stepwise_emission_concatenates_to_generate_output() {
+        // the concatenation of Emitted chunks plus the terminal tokens must
+        // equal the one-shot generate() output, chunk boundaries at
+        // iteration boundaries
+        let script: Vec<i32> = (10..40).chain([2]).collect();
+        let mut dscript = script.clone();
+        dscript[4] = 99;
+        let oneshot = crate::spec::SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockDraft::new(dscript.clone()),
+            params(),
+        )
+        .generate(&[], &[0; 8], 3, &GenConfig::default())
+        .unwrap();
+
+        let mut sess = DecodeSession::new(
+            MockTarget::new(script.clone()),
+            Some(MockDraft::new(dscript)),
+            params(),
+            GenConfig::default(),
+            Some(SpecMode::Chain),
+            None,
+            false,
+        );
+        let mut streamed: Vec<i32> = Vec::new();
+        match sess.prefill(&[], &[0; 8], 3).unwrap() {
+            StepOutcome::Emitted(t) => streamed.extend(t),
+            StepOutcome::Finished(_) => panic!("finished at prefill"),
+        }
+        let stats = loop {
+            match sess.step().unwrap() {
+                StepOutcome::Emitted(t) => streamed.extend(t),
+                StepOutcome::Finished(stats) => break stats,
+            }
+        };
+        // flush the terminal iteration's tokens
+        streamed.extend_from_slice(&stats.tokens[streamed.len()..]);
+        assert_eq!(streamed, oneshot.tokens);
+        assert_eq!(stats.tokens, oneshot.tokens);
+        assert_eq!(stats.per_iter_emitted, oneshot.per_iter_emitted);
+        assert!(sess.finished());
+        assert!(sess.step().is_err(), "stepping a finished session errors");
+    }
+
+    #[test]
+    fn tree_session_matches_generate_tree() {
+        let script: Vec<i32> = (10..40).chain([2]).collect();
+        let mut alt = script.clone();
+        for i in (1..alt.len()).step_by(4) {
+            alt[i] = 77;
+        }
+        let cfg = GenConfig {
+            tree: Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }),
+            ..GenConfig::default()
+        };
+        let oneshot = crate::spec::SpecDecoder::with_params(
+            MockTarget::new(script.clone()),
+            MockTreeDraft::new(vec![script.clone(), alt.clone()]),
+            params(),
+        )
+        .generate_tree(&[], &[0; 8], 3, &cfg)
+        .unwrap();
+
+        let sess = DecodeSession::new(
+            MockTarget::new(script.clone()),
+            Some(MockTreeDraft::new(vec![script, alt])),
+            params(),
+            cfg,
+            Some(SpecMode::Tree),
+            None,
+            false,
+        );
+        let stats = sess.run_to_completion(&[], &[0; 8], 3).unwrap();
+        assert_eq!(stats.tokens, oneshot.tokens);
+        assert_eq!(stats.per_iter_path_depth, oneshot.per_iter_path_depth);
+        assert_eq!(stats.tree_nodes_drafted, oneshot.tree_nodes_drafted);
+    }
+
+    #[test]
+    fn abort_returns_partial_stats() {
+        let script: Vec<i32> = (10..60).collect(); // no EOS
+        let mut sess = DecodeSession::new(
+            MockTarget::new(script.clone()),
+            Some(MockDraft::new(script)),
+            params(),
+            GenConfig::default(),
+            Some(SpecMode::Chain),
+            None,
+            false,
+        );
+        sess.prefill(&[], &[0; 8], 3).unwrap();
+        sess.step().unwrap();
+        let partial = sess.abort();
+        assert!(sess.finished());
+        assert!(!partial.tokens.is_empty());
+        assert!(partial.tokens.len() < 48, "aborted well before the budget");
+        assert!(!partial.finished_by_eos);
+    }
+
+    #[test]
+    fn target_only_session_needs_no_drafter() {
+        let script = vec![5, 6, 7, 2];
+        let sess = DecodeSession::<MockTarget, NoDraft>::new(
+            MockTarget::new(script.clone()),
+            None,
+            params(),
+            GenConfig::default(),
+            None,
+            None,
+            false,
+        );
+        let stats = sess.run_to_completion(&[], &[0; 8], 3).unwrap();
+        assert_eq!(stats.tokens, script);
+        assert_eq!(stats.verify_calls, 3);
+        assert!(stats.finished_by_eos);
+    }
+}

@@ -191,7 +191,12 @@ fn engine_concurrent_requests() {
     let Some(dir) = artifacts() else { return };
     let engine = Engine::start(
         &dir,
-        EngineConfig { default_target: "qwensim-L".into(), workers: 3, queue_capacity: 64 },
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 3,
+            queue_capacity: 64,
+            ..EngineConfig::default()
+        },
     )
     .unwrap();
     let tok = &engine.tokenizer;
@@ -241,7 +246,12 @@ fn server_round_trip() {
     let engine = Arc::new(
         Engine::start(
             &dir,
-            EngineConfig { default_target: "qwensim-L".into(), workers: 2, queue_capacity: 16 },
+            EngineConfig {
+                default_target: "qwensim-L".into(),
+                workers: 2,
+                queue_capacity: 16,
+                ..EngineConfig::default()
+            },
         )
         .unwrap(),
     );
@@ -285,7 +295,12 @@ fn engine_backpressure_rejects() {
     let Some(dir) = artifacts() else { return };
     let engine = Engine::start(
         &dir,
-        EngineConfig { default_target: "qwensim-L".into(), workers: 1, queue_capacity: 2 },
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 1,
+            queue_capacity: 2,
+            ..EngineConfig::default()
+        },
     )
     .unwrap();
     let items =

@@ -1,0 +1,406 @@
+//! Continuous-batching serving tests over the scripted backend: iteration-
+//! level scheduling, streaming delivery, cancellation, deadlines, and the
+//! run-to-completion fallback policy -- all with no PJRT involved
+//! (`manifest.backend == "scripted"`).
+
+use std::sync::{Arc, Mutex};
+
+use massv::coordinator::{
+    DecodeMode, Engine, EngineConfig, Priority, Request, SchedPolicy, Update,
+};
+use massv::util::json::Json;
+
+/// Scripted-backend artifact dir under tmp (shared fixture; `gen_max`
+/// controls the stream length -- large values make decodes long enough to
+/// observe interleaving deterministically).
+fn scripted_artifacts(tag: &str, gen_max: usize) -> String {
+    massv::models::scripted::write_test_artifacts(tag, gen_max, false)
+}
+
+fn image(phase: usize) -> Vec<f32> {
+    massv::models::scripted::demo_image(phase)
+}
+
+fn request(engine: &Engine, mode: DecodeMode, prompt: &str, img_phase: usize) -> Request {
+    let mut req = Request::simple(engine.next_id(), prompt, image(img_phase));
+    req.mode = mode;
+    req
+}
+
+fn one_worker(dir: &str, queue: usize) -> Engine {
+    Engine::start(
+        dir,
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 1,
+            queue_capacity: queue,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Drain a streaming receiver: returns (concatenated chunks, final response).
+fn drain(rx: std::sync::mpsc::Receiver<Update>) -> (Vec<i32>, massv::coordinator::Response) {
+    let mut streamed = Vec::new();
+    loop {
+        match rx.recv().expect("stream ended without a Done frame") {
+            Update::Chunk(toks) => streamed.extend(toks),
+            Update::Done(resp) => return (streamed, resp),
+        }
+    }
+}
+
+/// THE continuous-batching property: with ONE worker, a short interactive
+/// request submitted while a long batch request is mid-decode finishes
+/// first (iteration-level scheduling interleaves them), and the batch
+/// request still completes losslessly.
+#[test]
+fn interactive_preempts_long_batch_decode_with_one_worker() {
+    let dir = scripted_artifacts("interleave", 16384);
+    let engine = one_worker(&dir, 64);
+
+    // long batch decode: 16000 target-only steps
+    let mut batch = request(&engine, DecodeMode::TargetOnly, "w5 w6 w7", 0);
+    batch.priority = Priority::Batch;
+    batch.gen.max_new = 16000;
+    let batch_rx = engine.submit_streaming(batch);
+
+    // wait until the batch request is mid-decode (prefill chunk arrived)
+    match batch_rx.recv().unwrap() {
+        Update::Chunk(_) => {}
+        Update::Done(r) => panic!("batch finished instantly: {r:?}"),
+    }
+
+    // now a short interactive request arrives
+    let mut inter = request(&engine, DecodeMode::TargetOnly, "w8 w9", 1);
+    inter.gen.max_new = 4;
+    let inter_rx = engine.submit(inter);
+
+    let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+    let o1 = order.clone();
+    let batch_handle = std::thread::spawn(move || {
+        let (streamed, resp) = drain(batch_rx);
+        o1.lock().unwrap().push("batch");
+        (streamed, resp)
+    });
+    let o2 = order.clone();
+    let inter_handle = std::thread::spawn(move || {
+        let resp = inter_rx.recv().unwrap();
+        o2.lock().unwrap().push("interactive");
+        resp
+    });
+
+    let inter_resp = inter_handle.join().unwrap();
+    let (batch_streamed, batch_resp) = batch_handle.join().unwrap();
+
+    assert_eq!(
+        order.lock().unwrap().first().copied(),
+        Some("interactive"),
+        "interactive request must finish before the long batch decode"
+    );
+    assert!(inter_resp.error.is_none(), "{:?}", inter_resp.error);
+    assert_eq!(inter_resp.tokens.len(), 4);
+    assert!(
+        inter_resp.steps <= 6,
+        "interactive took {} dispatches; expected a handful",
+        inter_resp.steps
+    );
+    assert!(
+        inter_resp.latency_ms < batch_resp.latency_ms,
+        "interactive latency {:.1}ms must undercut batch {:.1}ms",
+        inter_resp.latency_ms,
+        batch_resp.latency_ms
+    );
+
+    // the interleaved batch decode is still lossless
+    assert!(batch_resp.error.is_none(), "{:?}", batch_resp.error);
+    assert_eq!(batch_resp.finish_reason, "length");
+    assert_eq!(batch_resp.tokens.len(), 16000);
+    assert_eq!(batch_streamed, batch_resp.tokens, "chunks must concatenate to the output");
+    let mut reference = request(&engine, DecodeMode::TargetOnly, "w5 w6 w7", 0);
+    reference.gen.max_new = 16000;
+    let reference = engine.run(reference);
+    assert_eq!(batch_resp.tokens, reference.tokens, "interleaving must not change tokens");
+
+    assert_eq!(engine.metrics.requests_completed.get(), 3);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cancellation mid-decode returns a partial response and frees the
+/// session (registry entry removed, active_sessions back to zero).
+#[test]
+fn cancel_mid_decode_returns_partial_output() {
+    let dir = scripted_artifacts("cancel", 16384);
+    let engine = one_worker(&dir, 16);
+
+    let mut req = request(&engine, DecodeMode::TargetOnly, "w10 w11", 2);
+    req.gen.max_new = 16000;
+    let id = req.id;
+    let rx = engine.submit_streaming(req);
+    match rx.recv().unwrap() {
+        Update::Chunk(_) => {}
+        Update::Done(r) => panic!("finished before cancel: {r:?}"),
+    }
+
+    assert!(engine.cancel(id), "id must still be live");
+    let (streamed, resp) = drain(rx);
+    assert_eq!(resp.finish_reason, "cancelled");
+    assert!(resp.error.is_none(), "cancellation is not an error: {:?}", resp.error);
+    assert!(!resp.tokens.is_empty(), "partial output must be delivered");
+    assert!(resp.tokens.len() < 16000, "cancel must cut the decode short");
+    assert!(!resp.finished_by_eos);
+    assert_eq!(streamed, resp.tokens);
+
+    assert_eq!(engine.metrics.requests_cancelled.get(), 1);
+    assert_eq!(engine.metrics.inflight.get(), 0, "session must be freed");
+    assert!(!engine.cancel(id), "finished request is no longer cancellable");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Deadlines: an already-expired deadline drops the request at admission
+/// with zero output; a mid-decode expiry returns the partial output.
+#[test]
+fn deadline_exceeded_drops_cleanly() {
+    let dir = scripted_artifacts("deadline", 16384);
+    let engine = one_worker(&dir, 16);
+
+    // expired on arrival
+    let mut req = request(&engine, DecodeMode::TargetOnly, "w12", 3);
+    req.deadline_ms = Some(0);
+    let resp = engine.run(req);
+    assert_eq!(resp.finish_reason, "deadline");
+    assert!(resp.tokens.is_empty());
+    assert!(resp.error.is_none());
+
+    // expires mid-decode
+    let mut req = request(&engine, DecodeMode::TargetOnly, "w13 w14", 4);
+    req.gen.max_new = 16000;
+    req.deadline_ms = Some(2);
+    let resp = engine.run(req);
+    assert_eq!(resp.finish_reason, "deadline");
+    assert!(resp.tokens.len() < 16000, "deadline must cut the decode short");
+    assert!(!resp.finished_by_eos);
+
+    assert_eq!(engine.metrics.requests_deadline_exceeded.get(), 2);
+    assert_eq!(engine.metrics.inflight.get(), 0);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Streaming equivalence property: seed for seed, the concatenation of
+/// streamed chunks equals the one-shot Response.tokens, for chain and tree
+/// modes (plus target-only), greedy and T=1.
+#[test]
+fn prop_streamed_chunks_equal_oneshot_tokens() {
+    let dir = scripted_artifacts("stream_eq", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let prompts = ["w5 w6 w7", "w8 w9", "w10 w11 w12 w13", "w14"];
+
+    let eng = engine.clone();
+    massv::util::prop::propcheck("streamed chunks == one-shot tokens", 24, move |rng| {
+        let prompt = prompts[rng.range(prompts.len())];
+        let phase = rng.range(5);
+        let mode = match rng.range(3) {
+            0 => DecodeMode::Speculative {
+                variant: "massv".into(),
+                text_only_draft: false,
+                adaptive: rng.range(2) == 0,
+            },
+            1 => DecodeMode::Tree {
+                variant: "massv".into(),
+                text_only_draft: false,
+                adaptive: rng.range(2) == 0,
+            },
+            _ => DecodeMode::TargetOnly,
+        };
+        let temperature = if rng.range(2) == 0 { 0.0 } else { 1.0 };
+        let seed = rng.next_u64();
+
+        let mut oneshot = request(&eng, mode.clone(), prompt, phase);
+        oneshot.gen.temperature = temperature;
+        oneshot.gen.seed = seed;
+        let mut streaming = request(&eng, mode, prompt, phase);
+        streaming.gen.temperature = temperature;
+        streaming.gen.seed = seed;
+
+        let oneshot = eng.run(oneshot);
+        if oneshot.error.is_some() {
+            return Err(format!("one-shot failed: {:?}", oneshot.error));
+        }
+        let rx = eng.submit_streaming(streaming);
+        let mut streamed = Vec::new();
+        let resp = loop {
+            match rx.recv().map_err(|e| format!("stream dropped: {e}"))? {
+                Update::Chunk(toks) => streamed.extend(toks),
+                Update::Done(resp) => break resp,
+            }
+        };
+        if resp.error.is_some() {
+            return Err(format!("streaming failed: {:?}", resp.error));
+        }
+        if streamed != resp.tokens {
+            return Err(format!(
+                "chunk concat {streamed:?} != summary tokens {:?}",
+                resp.tokens
+            ));
+        }
+        if resp.tokens != oneshot.tokens {
+            return Err(format!(
+                "streamed tokens {:?} != one-shot tokens {:?}",
+                resp.tokens, oneshot.tokens
+            ));
+        }
+        Ok(())
+    });
+
+    let engine = Arc::try_unwrap(engine).unwrap_or_else(|_| panic!("engine still shared"));
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The legacy run-to-completion policy still serves correctly (A/B knob
+/// for benches) and produces the same tokens as continuous batching.
+#[test]
+fn run_to_completion_policy_matches_continuous() {
+    let dir = scripted_artifacts("rtc", 48);
+    let continuous = Engine::start(&dir, EngineConfig::default()).unwrap();
+    let rtc = Engine::start(
+        &dir,
+        EngineConfig { policy: SchedPolicy::RunToCompletion, ..EngineConfig::default() },
+    )
+    .unwrap();
+
+    for (i, prompt) in ["w5 w6 w7", "w8 w9"].iter().enumerate() {
+        let spec = DecodeMode::Speculative {
+            variant: "massv".into(),
+            text_only_draft: false,
+            adaptive: false,
+        };
+        let a = continuous.run(request(&continuous, spec.clone(), prompt, i));
+        let b = rtc.run(request(&rtc, spec, prompt, i));
+        assert!(a.error.is_none() && b.error.is_none());
+        assert_eq!(a.tokens, b.tokens, "policies must agree on {prompt:?}");
+
+        // streaming works under run-to-completion too
+        let rx = rtc.submit_streaming(request(
+            &rtc,
+            DecodeMode::Tree { variant: "massv".into(), text_only_draft: false, adaptive: false },
+            prompt,
+            i,
+        ));
+        let (streamed, resp) = drain(rx);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(streamed, resp.tokens);
+    }
+    continuous.shutdown();
+    rtc.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Rejected submissions are terminal outcomes: finish_reason "rejected"
+/// and queue/latency samples recorded (the old path dropped them).
+#[test]
+fn rejections_record_metrics() {
+    let dir = scripted_artifacts("reject", 16384);
+    let engine = one_worker(&dir, 2);
+
+    let rxs: Vec<_> = (0..10)
+        .map(|i| {
+            let mut req = request(&engine, DecodeMode::TargetOnly, "w15 w16", i);
+            req.gen.max_new = 2000;
+            req.priority = Priority::Batch;
+            engine.submit(req)
+        })
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let rejected = responses.iter().filter(|r| r.finish_reason == "rejected").count();
+    let completed = responses.iter().filter(|r| r.error.is_none()).count();
+    assert_eq!(rejected + completed, 10);
+    assert!(rejected > 0, "capacity 2 must reject part of a 10-deep flood");
+    assert!(completed >= 2, "the queue must still drain");
+    assert_eq!(engine.metrics.requests_rejected.get() as usize, rejected);
+    // every terminal outcome -- completed or rejected -- left a sample
+    assert_eq!(engine.metrics.queue_ms.count(), 10);
+    assert_eq!(engine.metrics.latency_ms.count(), 10);
+    assert_eq!(engine.metrics.steps_per_request.count(), completed);
+    assert!(engine.metrics.steps_per_request.mean() > 1.0);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Full TCP round-trip for the new wire surface: streaming frames and the
+/// cancel op.
+#[test]
+fn server_streaming_and_cancel_round_trip() {
+    let dir = scripted_artifacts("server_stream", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let server = massv::server::Server::new(engine);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut client = massv::server::Client::connect(&addr.to_string()).unwrap();
+
+    let gen_req = |mode: &str, stream: bool| {
+        Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("w5 w6 w7")),
+            ("image", Json::arr_f32(&image(0))),
+            ("mode", Json::str(mode)),
+            ("seed", Json::num(0.0)),
+            ("stream", Json::Bool(stream)),
+        ])
+    };
+
+    for mode in ["massv", "tree", "target_only"] {
+        let oneshot = client.call(&gen_req(mode, false)).unwrap();
+        assert!(oneshot.get("error").is_none(), "{oneshot:?}");
+        let (chunks, summary) = client.call_streaming(&gen_req(mode, true)).unwrap();
+        assert!(summary.get("error").is_none(), "{summary:?}");
+        assert!(chunks.len() > 1, "{mode}: expected multiple frames");
+        let concat: Vec<i32> = chunks.into_iter().flatten().collect();
+        assert_eq!(
+            concat,
+            summary.get("tokens").unwrap().to_i32_vec().unwrap(),
+            "{mode}: chunk concatenation must equal the summary tokens"
+        );
+        assert_eq!(
+            concat,
+            oneshot.get("tokens").unwrap().to_i32_vec().unwrap(),
+            "{mode}: streaming must not change the tokens"
+        );
+        assert!(summary.get("finish_reason").is_some());
+        assert!(summary.get("steps").unwrap().as_i64().unwrap() >= 1);
+    }
+
+    // cancel of an already-finished id reports ok: false
+    let done_id = client
+        .call(&gen_req("massv", false))
+        .unwrap()
+        .get("id")
+        .unwrap()
+        .as_i64()
+        .unwrap();
+    let cancel = client
+        .call(&Json::obj(vec![
+            ("op", Json::str("cancel")),
+            ("id", Json::num(done_id as f64)),
+        ]))
+        .unwrap();
+    assert!(!cancel.get("ok").unwrap().as_bool().unwrap());
+
+    // metrics expose the serving-layer gauges
+    let metrics = client.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    assert!(metrics.get("active_sessions").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(metrics.get("steps_per_request_mean").unwrap().as_f64().unwrap() > 1.0);
+    assert!(metrics.get("tpot_ms_p50").is_some());
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

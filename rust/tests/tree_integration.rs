@@ -8,57 +8,14 @@ use std::sync::Arc;
 use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
 use massv::util::json::Json;
 
-/// Write a scripted-backend artifact dir (manifest + vocab) under tmp.
+/// Scripted-backend artifact dir under tmp (shared fixture, with the
+/// "baseline" drafter variant alongside "massv").
 fn scripted_artifacts(tag: &str) -> String {
-    let dir = std::env::temp_dir().join(format!("massv_tree_it_{tag}_{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    let vocab = 120usize;
-    let mut tokens: Vec<String> =
-        ["<pad>", "<bos>", "<eos>", "<sep>", "<img>"].iter().map(|s| s.to_string()).collect();
-    for i in tokens.len()..vocab {
-        tokens.push(format!("w{i}"));
-    }
-    let tokens_json: Vec<String> = tokens.iter().map(|t| format!("\"{t}\"")).collect();
-    std::fs::write(
-        dir.join("vocab.json"),
-        format!(
-            r#"{{"tokens":[{}],"pad_id":0,"bos_id":1,"eos_id":2,"sep_id":3,"img_id":4}}"#,
-            tokens_json.join(",")
-        ),
-    )
-    .unwrap();
-    let entry = |name: &str, kind: &str, extra: &str| {
-        format!(
-            r#"{{"name":"{name}","kind":"{kind}","family":"qwensim","paper_analog":"scripted",
-                "d_model":48,"n_layers":2,"n_heads":4,"d_head":12,"vocab":{vocab},
-                "window":null,"kv_shape":[2,2,4,128,12],"entries":{{}}{extra}}}"#
-        )
-    };
-    let manifest = format!(
-        r#"{{"schema":1,"backend":"scripted","gamma":5,"t_max":128,"p_max":32,
-            "n_visual":16,"gen_max":48,"vocab_size":{vocab},"pad_id":0,"bos_id":1,
-            "eos_id":2,"sep_id":3,"use_kernel":false,
-            "targets":[{target}],
-            "drafters":[{massv},{baseline}]}}"#,
-        vocab = vocab,
-        target = entry("qwensim-L", "target", ""),
-        massv = entry(
-            "qwensim-S",
-            "draft",
-            r#","variant":"massv","aligned_target":"qwensim-L","multimodal":true"#
-        ),
-        baseline = entry(
-            "qwensim-S",
-            "draft",
-            r#","variant":"baseline","aligned_target":"qwensim-L","multimodal":false"#
-        ),
-    );
-    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    dir.to_str().unwrap().to_string()
+    massv::models::scripted::write_test_artifacts(tag, 48, true)
 }
 
 fn image(phase: usize) -> Vec<f32> {
-    (0..768).map(|i| ((i + phase) % 7) as f32 * 0.11).collect()
+    massv::models::scripted::demo_image(phase)
 }
 
 fn request(engine: &Engine, mode: DecodeMode, prompt: &str, img_phase: usize) -> Request {
@@ -84,7 +41,12 @@ fn engine_tree_mode_lossless_and_mal_dominates_chain() {
     let dir = scripted_artifacts("engine");
     let engine = Engine::start(
         &dir,
-        EngineConfig { default_target: "qwensim-L".into(), workers: 2, queue_capacity: 64 },
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 2,
+            queue_capacity: 64,
+            ..EngineConfig::default()
+        },
     )
     .unwrap();
 
@@ -153,7 +115,12 @@ fn server_tree_round_trip() {
     let engine = Arc::new(
         Engine::start(
             &dir,
-            EngineConfig { default_target: "qwensim-L".into(), workers: 2, queue_capacity: 16 },
+            EngineConfig {
+                default_target: "qwensim-L".into(),
+                workers: 2,
+                queue_capacity: 16,
+                ..EngineConfig::default()
+            },
         )
         .unwrap(),
     );
