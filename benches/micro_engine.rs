@@ -47,6 +47,7 @@ fn run_policy(dir: &str, policy: SchedPolicy) -> anyhow::Result<PolicyResult> {
             workers: 2,
             queue_capacity: 4096,
             policy,
+            ..EngineConfig::default()
         },
     )?;
     let t0 = Instant::now();

@@ -1,0 +1,161 @@
+//! Prefix-cache microbenchmark (section Perf, layer 3): warm vs cold
+//! multimodal prefill on a repeated-image workload.
+//!
+//! Uses the scripted backend (self-contained artifact dir under tmp), so it
+//! runs anywhere -- no PJRT artifacts needed.  The workload is the pattern
+//! the prefix cache exists for (SpecVLM/ViSpec's vision-token redundancy
+//! argument): multi-turn chat and eval sweeps keep re-sending the same few
+//! images, so most prefills repeat a (target, drafter, image, prompt)
+//! prefix the engine has already built.  Arrivals come from
+//! `workload::repeated_image_schedule` (image-pool + reuse-probability
+//! knobs).
+//!
+//! Reported: mean/p95 prefill latency split by cache outcome (cold = miss,
+//! warm = prefix hit), the hit rate, encode dedup counts, and total token
+//! throughput.  The run fails if warm prefill does not beat cold prefill.
+//!
+//! Besides the human-readable report, the run writes machine-readable
+//! `target/paper/BENCH_prefix.json` -- CI smoke-runs this bench and
+//! archives the JSON, seeding the perf trajectory for the cache.
+//!
+//!     cargo bench --bench micro_prefix [-- --quick]
+
+mod harness;
+
+use std::time::Instant;
+
+use harness::BenchReport;
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
+use massv::metrics::Histogram;
+use massv::util::json::Json;
+use massv::workload::{repeated_image_schedule, RepeatKnobs};
+
+/// Long scripted streams make cold prefill cost visible (the stream build
+/// is the scripted stand-in for the image-conditioned prefill pass).
+const GEN_MAX: usize = 8192;
+const IMAGE_POOL: usize = 6;
+const REUSE_PROB: f64 = 0.6;
+
+fn image(phase: usize) -> Vec<f32> {
+    massv::models::scripted::demo_image(phase)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MASSV_BENCH_QUICK").ok().as_deref() == Some("1");
+    let n_requests = if quick { 60 } else { 200 };
+
+    let mut report = BenchReport::new("micro_prefix");
+    let dir = massv::models::scripted::write_test_artifacts("micro_prefix", GEN_MAX, false);
+    let engine = Engine::start(
+        &dir,
+        EngineConfig { workers: 2, queue_capacity: 4096, ..EngineConfig::default() },
+    )?;
+
+    let prompts = ["w5 w6 w7", "w8 w9", "w10 w11 w12", "w13"];
+    let knobs = RepeatKnobs { image_pool: IMAGE_POOL, reuse_prob: REUSE_PROB };
+    // rate is irrelevant (closed submission); only the item/image draws matter
+    let schedule = repeated_image_schedule(n_requests, 1e6, prompts.len(), &knobs, 7);
+    report.line(format!(
+        "workload: {n_requests} requests, {} prompts x {IMAGE_POOL} images, \
+         reuse_prob {REUSE_PROB}, gen_max {GEN_MAX}, 2 workers",
+        prompts.len()
+    ));
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = schedule
+        .iter()
+        .map(|a| {
+            let mut req =
+                Request::simple(engine.next_id(), prompts[a.item], image(a.image));
+            req.mode = DecodeMode::Speculative {
+                variant: "massv".into(),
+                text_only_draft: false,
+                adaptive: false,
+            };
+            req.gen.max_new = 8;
+            engine.submit(req)
+        })
+        .collect();
+
+    let cold_ms = Histogram::default();
+    let warm_ms = Histogram::default();
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let r = rx.recv()?;
+        assert!(r.error.is_none(), "{:?}", r.error);
+        tokens += r.tokens.len();
+        if r.cache_hit {
+            warm_ms.record(r.prefill_ms);
+        } else {
+            cold_ms.record(r.prefill_ms);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = engine.scrape();
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert!(cold_ms.count() > 0 && warm_ms.count() > 0, "workload must mix cold and warm");
+    let cold_mean = cold_ms.mean();
+    let warm_mean = warm_ms.mean();
+    let hit_rate = metrics["prefix_cache_hit_rate"];
+    let throughput = tokens as f64 / wall_s;
+
+    report.line(format!(
+        "cold prefill (miss) n={:<4} mean {:>8.4} ms  p95 {:>8.4} ms",
+        cold_ms.count(),
+        cold_mean,
+        cold_ms.percentile(95.0)
+    ));
+    report.line(format!(
+        "warm prefill (hit)  n={:<4} mean {:>8.4} ms  p95 {:>8.4} ms",
+        warm_ms.count(),
+        warm_mean,
+        warm_ms.percentile(95.0)
+    ));
+    report.line(format!(
+        "hit rate {:.3} | encode fills {} hits {} | evictions {} | \
+         {} tokens in {:.3}s -> {:>8.0} tok/s",
+        hit_rate,
+        metrics["vision_encode_fills"],
+        metrics["vision_encode_hits"],
+        metrics["prefix_cache_evictions"],
+        tokens,
+        wall_s,
+        throughput
+    ));
+    let speedup = if warm_mean > 0.0 { cold_mean / warm_mean } else { f64::INFINITY };
+    let ok = warm_mean < cold_mean;
+    report.line(format!(
+        "warm-prefill speedup {speedup:.1}x over cold: {}",
+        if ok { "PASS" } else { "FAIL" }
+    ));
+
+    // machine-readable record for CI / the perf trajectory
+    let json = Json::obj(vec![
+        ("bench", Json::str("micro_prefix")),
+        ("requests", Json::num(n_requests as f64)),
+        ("image_pool", Json::num(IMAGE_POOL as f64)),
+        ("reuse_prob", Json::num(REUSE_PROB)),
+        ("gen_max", Json::num(GEN_MAX as f64)),
+        ("cold_prefill_ms_mean", Json::num(cold_mean)),
+        ("cold_prefill_ms_p95", Json::num(cold_ms.percentile(95.0))),
+        ("warm_prefill_ms_mean", Json::num(warm_mean)),
+        ("warm_prefill_ms_p95", Json::num(warm_ms.percentile(95.0))),
+        ("warm_speedup", Json::num(speedup)),
+        ("hit_rate", Json::num(hit_rate)),
+        ("encode_fills", Json::num(metrics["vision_encode_fills"])),
+        ("encode_hits", Json::num(metrics["vision_encode_hits"])),
+        ("throughput_tps", Json::num(throughput)),
+    ]);
+    std::fs::create_dir_all("target/paper").ok();
+    std::fs::write("target/paper/BENCH_prefix.json", format!("{}\n", json.to_string()))?;
+    report.line("[json saved to target/paper/BENCH_prefix.json]");
+    report.finish();
+    assert!(
+        ok,
+        "warm prefill mean {warm_mean:.4} ms must beat cold prefill mean {cold_mean:.4} ms"
+    );
+    Ok(())
+}

@@ -1,0 +1,578 @@
+//! Multimodal prefix cache: content-addressed reuse of the expensive,
+//! request-independent parts of multimodal prefill across the serving
+//! stack (the vLLM-prefix-caching idea generalized to the dual
+//! target+drafter KV state MASSV sessions carry).
+//!
+//! Three content-addressed tables share one byte budget:
+//!
+//!   * **pixels** -- image hash -> raw pixels.  Lets clients send an image
+//!     once and reference it by `image_id` afterwards (multi-turn chat,
+//!     eval sweeps over one image).
+//!   * **encodings** -- image hash -> `VisionEncoding` (the projected
+//!     vision embedding; prompt-independent prefill stage 1).  Filled
+//!     under *single-flight*: concurrent requests for the same image wait
+//!     on one encode instead of racing.
+//!   * **prefixes** -- `PrefixKey` (target, drafter config, image, prompt)
+//!     -> `PrefixSnapshot` (post-prefill forkable KV for both models plus
+//!     the prefill logits).  Also single-flight; a warm request forks the
+//!     snapshot instead of running either model's prefill.
+//!
+//! Snapshots are taken *before* the free first token is sampled, so
+//! per-request sampling config (seed, temperature, top_p) stays out of the
+//! key and warm prefill is bit-identical to cold prefill -- the property
+//! tests in `spec::session` and `tests/serving_integration.rs` pin this.
+//!
+//! **Ref-counting.** Payloads are `Arc`s: eviction drops the cache's
+//! reference, but any session still holding a fork source (or a resolved
+//! pixel buffer) keeps the data alive until it finishes -- eviction can
+//! never invalidate in-flight work.
+//!
+//! **Eviction.** LRU over `Ready` entries across all three tables,
+//! triggered whenever an insert pushes the total over the byte budget.
+//! In-progress (`Filling`) slots are pinned.  Size accounting comes from
+//! `PrefixSnapshot::bytes` / `VisionEncoding::bytes` / pixel length.
+//!
+//! **Waiting.** Single-flight waiters block on a condvar, so under the
+//! engine's worker pool a waiting admission occupies its worker for at
+//! most one cold prefill/encode of the same key -- bounded, but it does
+//! delay unrelated decode steps when every worker waits at once.  A
+//! future refinement is to requeue same-key admissions and resubmit them
+//! when the fill completes instead of parking the thread.
+//!
+//! Hit/miss/eviction counters and the bytes/entries gauges are reported
+//! through the engine's `Metrics` registry (see `docs/prefix_cache.md`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::Metrics;
+use crate::models::{PrefixSnapshot, VisionEncoding};
+
+/// Content address of an image: FNV-1a over every pixel's bit pattern
+/// plus the length.  (The scripted stream seed subsamples pixels for
+/// speed; the cache key hashes all of them.)  A 64-bit non-cryptographic
+/// hash is a testbed simplification: it makes accidental aliasing
+/// vanishingly unlikely at this scale but is neither collision- nor
+/// forgery-resistant -- `image_id`s are content addresses, not
+/// capabilities, and any client of a shared server can reference any
+/// cached image.  A production deployment would use a 128/256-bit
+/// cryptographic hash and scope ids per tenant.
+pub fn image_hash(image: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in image {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h = (h ^ image.len() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    h
+}
+
+/// Wire form of an image id: 16 lowercase hex digits.
+pub fn format_image_id(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+pub fn parse_image_id(s: &str) -> Result<u64> {
+    u64::from_str_radix(s.trim(), 16)
+        .map_err(|_| anyhow!("malformed image_id {s:?} (expected up to 16 hex digits)"))
+}
+
+/// Everything that determines a post-prefill state.  Sampling config is
+/// deliberately absent: snapshots are pre-sampling, so one prefix serves
+/// every (seed, temperature, top_p) combination.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PrefixKey {
+    pub target: String,
+    /// `(drafter name, variant, text_only)` for speculative sessions;
+    /// `None` for target-only requests (their prefix carries no drafter
+    /// KV, so it must not be shared with speculative ones).
+    pub drafter: Option<(String, String, bool)>,
+    /// content address of the image (`image_hash`)
+    pub image: u64,
+    /// the true (unpadded) prompt ids
+    pub prompt: Vec<i32>,
+}
+
+/// Fixed per-entry overhead charged on top of payload bytes (map slot,
+/// key, Arc bookkeeping) so byte budgets stay honest for tiny payloads.
+const ENTRY_OVERHEAD: usize = 64;
+
+enum Slot<V> {
+    /// A single-flight fill is in progress; same-key callers sleep on the
+    /// condvar.  Filling slots are pinned (never evicted) and carry no
+    /// bytes yet.
+    Filling,
+    Ready(Entry<V>),
+}
+
+struct Entry<V> {
+    value: V,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Clone)]
+enum Victim {
+    Image(u64),
+    Encoding(u64),
+    Prefix(PrefixKey),
+}
+
+struct Inner {
+    images: HashMap<u64, Entry<Arc<Vec<f32>>>>,
+    encodings: HashMap<u64, Slot<Arc<VisionEncoding>>>,
+    prefixes: HashMap<PrefixKey, Slot<Arc<PrefixSnapshot>>>,
+    bytes: usize,
+    tick: u64,
+}
+
+impl Inner {
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn entries(&self) -> usize {
+        self.images.len() + self.encodings.len() + self.prefixes.len()
+    }
+
+    /// Drop LRU `Ready` entries (any table) until the byte total fits the
+    /// budget.  Returns the number evicted.  The victim search is a full
+    /// O(entries) scan per eviction under the cache mutex -- fine at this
+    /// testbed's entry counts; a `BTreeMap` keyed by `last_used` would
+    /// make it O(log n) if profiles ever show pressure here.
+    fn evict_to(&mut self, budget: usize) -> u64 {
+        fn better(best: &Option<(u64, Victim)>, used: u64) -> bool {
+            match best {
+                Some((t, _)) => used < *t,
+                None => true,
+            }
+        }
+        let mut evicted = 0u64;
+        while self.bytes > budget {
+            let mut best: Option<(u64, Victim)> = None;
+            for (k, e) in &self.images {
+                if better(&best, e.last_used) {
+                    best = Some((e.last_used, Victim::Image(*k)));
+                }
+            }
+            for (k, s) in &self.encodings {
+                if let Slot::Ready(e) = s {
+                    if better(&best, e.last_used) {
+                        best = Some((e.last_used, Victim::Encoding(*k)));
+                    }
+                }
+            }
+            for (k, s) in &self.prefixes {
+                if let Slot::Ready(e) = s {
+                    if better(&best, e.last_used) {
+                        best = Some((e.last_used, Victim::Prefix(k.clone())));
+                    }
+                }
+            }
+            let Some((_, victim)) = best else { break };
+            let freed = match victim {
+                Victim::Image(k) => self.images.remove(&k).map(|e| e.bytes),
+                Victim::Encoding(k) => match self.encodings.remove(&k) {
+                    Some(Slot::Ready(e)) => Some(e.bytes),
+                    _ => None,
+                },
+                Victim::Prefix(k) => match self.prefixes.remove(&k) {
+                    Some(Slot::Ready(e)) => Some(e.bytes),
+                    _ => None,
+                },
+            };
+            self.bytes -= freed.unwrap_or(0);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+/// Result of a prefix lookup.
+pub enum PrefixLookup {
+    /// A cached snapshot; fork it and skip prefill entirely.
+    Hit(Arc<PrefixSnapshot>),
+    /// This caller is the single-flight filler for the key: run the cold
+    /// prefill, then `fill()` the guard (dropping it unfilled wakes the
+    /// waiters so one of them takes over).
+    Fill(PrefixFill),
+}
+
+/// Single-flight fill obligation for one prefix key.
+pub struct PrefixFill {
+    cache: Arc<PrefixCache>,
+    key: PrefixKey,
+    armed: bool,
+}
+
+impl PrefixFill {
+    /// Publish the snapshot, waking any same-key waiters.
+    pub fn fill(mut self, snap: Arc<PrefixSnapshot>) {
+        self.armed = false;
+        self.cache.complete_prefix(&self.key, snap);
+    }
+}
+
+impl Drop for PrefixFill {
+    fn drop(&mut self) {
+        if self.armed {
+            self.cache.abort_prefix(&self.key);
+        }
+    }
+}
+
+/// Unwind/error guard for an in-flight encoding fill: reopens the slot
+/// (and wakes waiters) if it is still `Filling` when dropped.
+struct EncodeAbort<'a> {
+    cache: &'a PrefixCache,
+    image: u64,
+}
+
+impl Drop for EncodeAbort<'_> {
+    fn drop(&mut self) {
+        let mut inner = self.cache.inner.lock().unwrap();
+        if let Some(Slot::Filling) = inner.encodings.get(&self.image) {
+            inner.encodings.remove(&self.image);
+        }
+        drop(inner);
+        self.cache.cv.notify_all();
+    }
+}
+
+pub struct PrefixCache {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    budget: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl PrefixCache {
+    pub fn new(budget_bytes: usize, metrics: Arc<Metrics>) -> Arc<PrefixCache> {
+        Arc::new(PrefixCache {
+            inner: Mutex::new(Inner {
+                images: HashMap::new(),
+                encodings: HashMap::new(),
+                prefixes: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
+            cv: Condvar::new(),
+            budget: budget_bytes,
+            metrics,
+        })
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// (bytes, entries) currently held -- mirrors the exported gauges.
+    pub fn stats(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.bytes, inner.entries())
+    }
+
+    fn sync_gauges(&self, inner: &Inner) {
+        self.metrics.prefix_cache_bytes.set(inner.bytes as i64);
+        self.metrics.prefix_cache_entries.set(inner.entries() as i64);
+    }
+
+    /// Register pixels under their content hash (idempotent; refreshes
+    /// LRU).  Returns the id and a shared handle the caller keeps even if
+    /// the entry is evicted immediately.
+    pub fn put_image(&self, pixels: &[f32]) -> (u64, Arc<Vec<f32>>) {
+        let id = image_hash(pixels);
+        (id, self.put_image_hashed(id, pixels))
+    }
+
+    /// `put_image` with a precomputed content hash -- the engine hashes
+    /// once at submission and reuses the id on the admission hot path.
+    pub fn put_image_hashed(&self, id: u64, pixels: &[f32]) -> Arc<Vec<f32>> {
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.next_tick();
+        if let Some(e) = inner.images.get_mut(&id) {
+            e.last_used = tick;
+            return e.value.clone();
+        }
+        let value = Arc::new(pixels.to_vec());
+        let bytes = pixels.len() * 4 + ENTRY_OVERHEAD;
+        inner.images.insert(id, Entry { value: value.clone(), bytes, last_used: tick });
+        inner.bytes += bytes;
+        let ev = inner.evict_to(self.budget);
+        self.metrics.prefix_cache_evictions.add(ev);
+        self.sync_gauges(&inner);
+        value
+    }
+
+    /// Resolve an `image_id` back to pixels (refreshes LRU).
+    pub fn get_image(&self, id: u64) -> Option<Arc<Vec<f32>>> {
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.next_tick();
+        let e = inner.images.get_mut(&id)?;
+        e.last_used = tick;
+        Some(e.value.clone())
+    }
+
+    /// Single-flight image encode: returns the cached encoding, or runs
+    /// `make` exactly once per image while concurrent same-image callers
+    /// wait.  The bool is true on a cache hit (including waited-for
+    /// fills).  `make` runs outside the cache lock.
+    pub fn encoding(
+        &self,
+        image: u64,
+        make: impl FnOnce() -> Result<VisionEncoding>,
+    ) -> Result<(Arc<VisionEncoding>, bool)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let tick = inner.tick + 1;
+            match inner.encodings.get_mut(&image) {
+                Some(Slot::Ready(e)) => {
+                    e.last_used = tick;
+                    let v = e.value.clone();
+                    inner.tick = tick;
+                    self.metrics.vision_encode_hits.inc();
+                    return Ok((v, true));
+                }
+                Some(Slot::Filling) => {
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                None => {
+                    inner.encodings.insert(image, Slot::Filling);
+                    break;
+                }
+            }
+        }
+        drop(inner);
+        // reopen the slot on Err *or unwind*: a panicking `make` must not
+        // wedge the key forever (the guard's Drop is a no-op once the slot
+        // is Ready, so the success path just pays a redundant notify)
+        let _guard = EncodeAbort { cache: self, image };
+        let enc = make()?;
+        let value = Arc::new(enc);
+        let bytes = value.bytes() + ENTRY_OVERHEAD;
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.next_tick();
+        inner.encodings.insert(
+            image,
+            Slot::Ready(Entry { value: value.clone(), bytes, last_used: tick }),
+        );
+        inner.bytes += bytes;
+        let ev = inner.evict_to(self.budget);
+        self.metrics.prefix_cache_evictions.add(ev);
+        self.metrics.vision_encode_fills.inc();
+        self.sync_gauges(&inner);
+        drop(inner);
+        self.cv.notify_all();
+        Ok((value, false))
+    }
+
+    /// Prefix lookup with single-flight fill: `Hit` returns the snapshot
+    /// to fork; `Fill` makes this caller responsible for producing it
+    /// while same-key callers wait.  (Associated fn, not a method: the
+    /// returned `PrefixFill` keeps its own `Arc` on the cache so its Drop
+    /// can reopen the slot.)
+    pub fn prefix(cache: &Arc<PrefixCache>, key: &PrefixKey) -> PrefixLookup {
+        let mut inner = cache.inner.lock().unwrap();
+        loop {
+            let tick = inner.tick + 1;
+            match inner.prefixes.get_mut(key) {
+                Some(Slot::Ready(e)) => {
+                    e.last_used = tick;
+                    let v = e.value.clone();
+                    inner.tick = tick;
+                    cache.metrics.prefix_cache_hits.inc();
+                    return PrefixLookup::Hit(v);
+                }
+                Some(Slot::Filling) => {
+                    inner = cache.cv.wait(inner).unwrap();
+                }
+                None => {
+                    inner.prefixes.insert(key.clone(), Slot::Filling);
+                    cache.metrics.prefix_cache_misses.inc();
+                    return PrefixLookup::Fill(PrefixFill {
+                        cache: cache.clone(),
+                        key: key.clone(),
+                        armed: true,
+                    });
+                }
+            }
+        }
+    }
+
+    fn complete_prefix(&self, key: &PrefixKey, snap: Arc<PrefixSnapshot>) {
+        let bytes = snap.bytes() + ENTRY_OVERHEAD;
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.next_tick();
+        inner
+            .prefixes
+            .insert(key.clone(), Slot::Ready(Entry { value: snap, bytes, last_used: tick }));
+        inner.bytes += bytes;
+        let ev = inner.evict_to(self.budget);
+        self.metrics.prefix_cache_evictions.add(ev);
+        self.sync_gauges(&inner);
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    fn abort_prefix(&self, key: &PrefixKey) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(Slot::Filling) = inner.prefixes.get(key) {
+            inner.prefixes.remove(key);
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::SeqState;
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::new())
+    }
+
+    fn snapshot(kv_elems: usize) -> Arc<PrefixSnapshot> {
+        Arc::new(PrefixSnapshot {
+            last_logits: vec![0.0; 8],
+            tstate: SeqState {
+                kv: xla::Literal::vec1(&vec![0.0f32; kv_elems]),
+                pos: 0,
+                script: None,
+            },
+            dstate: None,
+        })
+    }
+
+    fn key(image: u64, prompt: i32) -> PrefixKey {
+        PrefixKey {
+            target: "t".into(),
+            drafter: Some(("d".into(), "massv".into(), false)),
+            image,
+            prompt: vec![prompt],
+        }
+    }
+
+    #[test]
+    fn image_ids_round_trip_and_detect_content() {
+        let a = vec![0.1f32; 16];
+        let b = vec![0.2f32; 16];
+        assert_eq!(image_hash(&a), image_hash(&a));
+        assert_ne!(image_hash(&a), image_hash(&b));
+        // every pixel matters, unlike the subsampled stream seed
+        let mut c = a.clone();
+        c[1] += 1.0;
+        assert_ne!(image_hash(&a), image_hash(&c));
+        let id = image_hash(&a);
+        assert_eq!(parse_image_id(&format_image_id(id)).unwrap(), id);
+        assert!(parse_image_id("not-hex").is_err());
+    }
+
+    #[test]
+    fn prefix_hit_after_fill_and_miss_before() {
+        let cache = PrefixCache::new(1 << 20, metrics());
+        let k = key(1, 5);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k) else {
+            panic!("first lookup must be a miss");
+        };
+        fill.fill(snapshot(4));
+        match PrefixCache::prefix(&cache, &k) {
+            PrefixLookup::Hit(s) => assert_eq!(s.last_logits.len(), 8),
+            PrefixLookup::Fill(_) => panic!("second lookup must hit"),
+        }
+        // different prompt -> different key
+        assert!(matches!(PrefixCache::prefix(&cache, &key(1, 6)), PrefixLookup::Fill(_)));
+        let m = cache.metrics.clone();
+        assert_eq!(m.prefix_cache_hits.get(), 1);
+        assert_eq!(m.prefix_cache_misses.get(), 2);
+    }
+
+    #[test]
+    fn dropped_fill_guard_reopens_the_slot() {
+        let cache = PrefixCache::new(1 << 20, metrics());
+        let k = key(2, 1);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k) else { panic!() };
+        drop(fill); // cold prefill failed -> slot must reopen
+        assert!(matches!(PrefixCache::prefix(&cache, &k), PrefixLookup::Fill(_)));
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        let m = metrics();
+        let cache = PrefixCache::new(3000, m.clone());
+        // each snapshot ~ 1000 bytes of KV + logits + overhead
+        for i in 0..4u64 {
+            let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &key(i, 0)) else {
+                panic!()
+            };
+            fill.fill(snapshot(250));
+        }
+        let (bytes, entries) = cache.stats();
+        assert!(bytes <= 3000, "budget violated: {bytes}");
+        assert!(entries < 4, "something must have been evicted");
+        assert!(m.prefix_cache_evictions.get() > 0);
+        // the oldest key is gone; the newest survives
+        assert!(matches!(PrefixCache::prefix(&cache, &key(0, 0)), PrefixLookup::Fill(_)));
+        assert!(matches!(PrefixCache::prefix(&cache, &key(3, 0)), PrefixLookup::Hit(_)));
+        assert_eq!(m.prefix_cache_bytes.get() as usize, cache.stats().0);
+    }
+
+    #[test]
+    fn eviction_does_not_invalidate_outstanding_refs() {
+        let cache = PrefixCache::new(64, metrics()); // everything evicts
+        let (id, pixels) = cache.put_image(&[0.5f32; 256]);
+        // the entry is already gone (budget 64 B), but our Arc survives
+        assert!(cache.get_image(id).is_none());
+        assert_eq!(pixels.len(), 256);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &key(9, 9)) else { panic!() };
+        fill.fill(snapshot(64));
+        let (bytes, _) = cache.stats();
+        assert!(bytes <= 64);
+    }
+
+    #[test]
+    fn encoding_single_flight_runs_make_once() {
+        let m = metrics();
+        let cache = PrefixCache::new(1 << 20, m.clone());
+        let cache2 = cache.clone();
+        let img = 77u64;
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let b2 = barrier.clone();
+        let t = std::thread::spawn(move || {
+            b2.wait();
+            cache2
+                .encoding(img, || Ok(VisionEncoding::Scripted { image_seed: 1 }))
+                .unwrap()
+        });
+        barrier.wait();
+        let (enc_a, _) =
+            cache.encoding(img, || Ok(VisionEncoding::Scripted { image_seed: 1 })).unwrap();
+        let (enc_b, _) = t.join().unwrap();
+        assert_eq!(enc_a.scripted_seed(), 1);
+        assert_eq!(enc_b.scripted_seed(), 1);
+        assert_eq!(m.vision_encode_fills.get(), 1, "exactly one encode may run");
+        assert_eq!(m.vision_encode_hits.get(), 1);
+        // a failing fill propagates and reopens the slot
+        assert!(cache.encoding(88, || Err(anyhow!("boom"))).is_err());
+        let (_, hit) = cache
+            .encoding(88, || Ok(VisionEncoding::Scripted { image_seed: 2 }))
+            .unwrap();
+        assert!(!hit);
+    }
+
+    #[test]
+    fn image_store_round_trips_and_touches_lru() {
+        let cache = PrefixCache::new(1 << 20, metrics());
+        let px: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let (id, _) = cache.put_image(&px);
+        assert_eq!(cache.get_image(id).unwrap().as_slice(), px.as_slice());
+        assert!(cache.get_image(id ^ 1).is_none());
+        // idempotent: same content, same id, no duplicate entry
+        let (id2, _) = cache.put_image(&px);
+        assert_eq!(id, id2);
+        assert_eq!(cache.stats().1, 1);
+    }
+}

@@ -21,6 +21,18 @@
 //!   * step-level metrics: active sessions, steps per request, time per
 //!     output token, cancelled/deadline-exceeded counters.
 //!
+//! Admission is *cache-aware* (`crate::cache`, `docs/prefix_cache.md`):
+//! the first dispatch resolves the request's image (inline pixels are
+//! registered under their content hash; `image_id` references resolve to
+//! previously sent pixels), then looks up the (target, drafter, image,
+//! prompt) prefix.  A hit forks the cached post-prefill KV snapshots for
+//! both models instead of running either prefill; a miss runs the cold
+//! prefill under single-flight (concurrent same-image requests wait on one
+//! image encode, same-prefix requests on one prefill) and fills the cache.
+//! Warm output is bit-identical to cold output -- the snapshot is taken
+//! before the free token is sampled, so per-request sampling config never
+//! enters the cache key.
+//!
 //! PJRT CPU executables are batch-1 (DESIGN.md section 3), so parallelism
 //! across sequences still comes from the worker pool (the TFRT CPU runtime
 //! executes the shared compiled executables concurrently); what continuous
@@ -36,11 +48,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cache::{self, PrefixCache, PrefixKey, PrefixLookup};
 use crate::coordinator::request::{DecodeMode, Request, Response};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{Scheduler, Submit};
 use crate::metrics::Metrics;
-use crate::models::ModelSet;
+use crate::models::{ModelSet, TargetModel, VisionEncoding};
 use crate::spec::{AdaptiveConfig, DecodeSession, GenStats, SpecMode, SpecParams, StepOutcome};
 use crate::tokenizer::Tokenizer;
 
@@ -60,6 +73,11 @@ pub struct EngineConfig {
     pub workers: usize,
     pub queue_capacity: usize,
     pub policy: SchedPolicy,
+    /// Byte budget for the multimodal prefix cache (pixels + vision
+    /// encodings + post-prefill KV snapshots for both models).  `0`
+    /// disables retention in practice (every insert is immediately
+    /// evicted); admission still single-flights concurrent encodes.
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for EngineConfig {
@@ -69,6 +87,7 @@ impl Default for EngineConfig {
             workers: 4,
             queue_capacity: 256,
             policy: SchedPolicy::Continuous,
+            prefix_cache_bytes: 64 << 20,
         }
     }
 }
@@ -97,6 +116,10 @@ struct Job {
     enqueued: Instant,
     reply: Reply,
     cancel: Arc<AtomicBool>,
+    /// Content address of the request's image: hashed from inline pixels
+    /// at submission, or the client-supplied `image_id`.  `None` only for
+    /// malformed requests (neither pixels nor id), which fail at admission.
+    image_id: Option<u64>,
 }
 
 impl Job {
@@ -137,6 +160,7 @@ pub struct Engine {
     pub models: Arc<ModelSet>,
     pub tokenizer: Arc<Tokenizer>,
     pub metrics: Arc<Metrics>,
+    pub cache: Arc<PrefixCache>,
     sched: Arc<Scheduler<Work>>,
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
     workers: Vec<JoinHandle<()>>,
@@ -148,6 +172,7 @@ impl Engine {
         let models = ModelSet::load(artifacts_dir)?;
         let tokenizer = Arc::new(Tokenizer::load(artifacts_dir)?);
         let metrics = Arc::new(Metrics::new());
+        let cache = PrefixCache::new(cfg.prefix_cache_bytes, metrics.clone());
         let sched = Arc::new(Scheduler::new(cfg.queue_capacity));
         let router = Arc::new(Router::new(cfg.default_target.clone()));
         let cancels = Arc::new(Mutex::new(HashMap::new()));
@@ -158,6 +183,7 @@ impl Engine {
                 models: models.clone(),
                 tokenizer: tokenizer.clone(),
                 metrics: metrics.clone(),
+                cache: cache.clone(),
                 sched: sched.clone(),
                 router: router.clone(),
                 cancels: cancels.clone(),
@@ -173,6 +199,7 @@ impl Engine {
             models,
             tokenizer,
             metrics,
+            cache,
             sched,
             cancels,
             workers,
@@ -206,10 +233,17 @@ impl Engine {
         let id = req.id;
         let priority = req.priority;
         let cancel = Arc::new(AtomicBool::new(false));
+        // content-address the image up front so every terminal response --
+        // including rejections -- can report the reusable image_id
+        let image_id = if req.image.is_empty() {
+            req.image_id
+        } else {
+            Some(cache::image_hash(&req.image))
+        };
         // register before submit so a cancel can never race a fast worker
         self.cancels.lock().unwrap().insert(id, cancel.clone());
         let t0 = Instant::now();
-        let job = Job { req, enqueued: t0, reply: reply.clone(), cancel };
+        let job = Job { req, enqueued: t0, reply: reply.clone(), cancel, image_id };
         match self.sched.submit(Work::Admit(job), priority) {
             Submit::Accepted => {
                 self.metrics.queue_depth.set(self.sched.len() as i64);
@@ -227,6 +261,7 @@ impl Engine {
                 resp.finish_reason = "rejected".into();
                 resp.queue_ms = ms;
                 resp.latency_ms = ms;
+                resp.image_id = image_id.map(cache::format_image_id).unwrap_or_default();
                 send_final(&reply, resp);
             }
         }
@@ -293,10 +328,22 @@ struct Worker {
     models: Arc<ModelSet>,
     tokenizer: Arc<Tokenizer>,
     metrics: Arc<Metrics>,
+    cache: Arc<PrefixCache>,
     sched: Arc<Scheduler<Work>>,
     router: Arc<Router>,
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
     policy: SchedPolicy,
+}
+
+/// Everything `make_session` resolves for one admission.
+struct SessionParts {
+    session: DecodeSession,
+    /// target handle retained for the (cacheable) image-encode stage
+    target: TargetModel,
+    prompt_ids: Vec<i32>,
+    len: usize,
+    /// drafter identity for the prefix-cache key (None = target-only)
+    drafter_key: Option<(String, String, bool)>,
 }
 
 impl Worker {
@@ -315,7 +362,8 @@ impl Worker {
         }
     }
 
-    /// First dispatch of a request: route, prefill, emit the free token.
+    /// First dispatch of a request: route, resolve the image, prefill
+    /// (cache-aware), emit the free token.
     fn admit(&self, job: Job) {
         let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1000.0;
         let started = Instant::now();
@@ -328,15 +376,33 @@ impl Worker {
             self.finalize(job, queue_ms, started, 0, GenStats::default(), Some("deadline"));
             return;
         }
-        let (mut session, prompt_ids, len) = match self.make_session(&job.req) {
-            Ok(parts) => parts,
+        let parts = match self.make_session(&job.req) {
+            Ok(x) => x,
             Err(e) => {
                 log::error!("request {} failed: {e:#}", job.req.id);
                 self.finalize_failure(job, queue_ms, started, 1, GenStats::default(), format!("{e:#}"));
                 return;
             }
         };
-        match session.prefill(&job.req.image, &prompt_ids, len) {
+        let Some(image_id) = job.image_id else {
+            let err = "request carries neither image pixels nor image_id".to_string();
+            log::error!("request {} failed: {err}", job.req.id);
+            self.finalize_failure(job, queue_ms, started, 1, GenStats::default(), err);
+            return;
+        };
+        // keep the pixel store warm for image_id-only follow-ups (an LRU
+        // touch when the content is already there)
+        if !job.req.image.is_empty() {
+            self.cache.put_image_hashed(image_id, &job.req.image);
+        }
+        let SessionParts { mut session, target, prompt_ids, len, drafter_key } = parts;
+        let key = PrefixKey {
+            target: target.name().to_string(),
+            drafter: drafter_key,
+            image: image_id,
+            prompt: prompt_ids[..len].to_vec(),
+        };
+        match self.prefill_with_cache(&mut session, &target, &key, &job, &prompt_ids, len) {
             Err(e) => {
                 log::error!("request {} failed in prefill: {e:#}", job.req.id);
                 self.finalize_failure(job, queue_ms, started, 1, GenStats::default(), format!("{e:#}"));
@@ -411,7 +477,7 @@ impl Worker {
     }
 
     /// Resolve the route and build a decode session for one request.
-    fn make_session(&self, req: &Request) -> Result<(DecodeSession, Vec<i32>, usize)> {
+    fn make_session(&self, req: &Request) -> Result<SessionParts> {
         let route = self
             .router
             .route(req, &self.models.manifest)
@@ -434,8 +500,18 @@ impl Worker {
                 if *adaptive { Some(AdaptiveConfig::default()) } else { None },
             ),
         };
+        // the prefix-cache key must pin everything that shapes the
+        // post-prefill state: the drafter identity (incl. text-only
+        // drafting) but NOT sampling config or the adaptive flag, which
+        // only act after prefill
+        let drafter_key = match (&drafter, &route.drafter) {
+            (Some(_), Some((dname, variant))) => {
+                Some((dname.clone(), variant.clone(), route.text_only_draft))
+            }
+            _ => None,
+        };
         let session = DecodeSession::new(
-            target,
+            target.clone(),
             drafter,
             params,
             req.gen.clone(),
@@ -443,7 +519,67 @@ impl Worker {
             adaptive,
             route.text_only_draft,
         );
-        Ok((session, prompt_ids, len))
+        Ok(SessionParts { session, target, prompt_ids, len, drafter_key })
+    }
+
+    /// Resolve request pixels for a cold encode: inline pixels are served
+    /// (and registered) from the store; id-only requests must hit it.
+    /// Only called when the encode itself must run -- prefix hits and
+    /// cached encodings never need pixels, so an id-only request survives
+    /// pixel eviction as long as its downstream cache lines are warm.
+    fn resolve_pixels(&self, job: &Job, image_id: u64) -> Result<Arc<Vec<f32>>> {
+        if !job.req.image.is_empty() {
+            return Ok(self.cache.put_image_hashed(image_id, &job.req.image));
+        }
+        self.cache.get_image(image_id).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown image_id {} (never sent to this server or evicted; \
+                 resend the pixels)",
+                cache::format_image_id(image_id)
+            )
+        })
+    }
+
+    /// Cache-aware prefill: fork a cached prefix on hit; on miss run the
+    /// cold prefill under single-flight (the image encode is itself
+    /// single-flighted and shared across prompts) and fill the cache.
+    /// Pixels are only touched when the encode actually runs.
+    fn prefill_with_cache(
+        &self,
+        session: &mut DecodeSession,
+        target: &TargetModel,
+        key: &PrefixKey,
+        job: &Job,
+        prompt_ids: &[i32],
+        len: usize,
+    ) -> Result<StepOutcome> {
+        match PrefixCache::prefix(&self.cache, key) {
+            PrefixLookup::Hit(snap) => session.prefill_from(&snap),
+            PrefixLookup::Fill(fill) => {
+                let mut encode_us = 0u64;
+                let (enc, _hit) = self.cache.encoding(key.image, || {
+                    let pixels = self.resolve_pixels(job, key.image)?;
+                    let t0 = Instant::now();
+                    let enc = target.encode_image(&pixels)?;
+                    encode_us = t0.elapsed().as_micros() as u64;
+                    // share the pixel Arc we already hold instead of the
+                    // copy the raw-encode fallback made, so the encodings
+                    // table never stores a second pixel buffer
+                    Ok(match enc {
+                        VisionEncoding::Raw(_) => VisionEncoding::Raw(pixels),
+                        other => other,
+                    })
+                })?;
+                let out = session.prefill_encoded(&enc, prompt_ids, len, encode_us)?;
+                // the snapshot is taken before any decode step; a session
+                // that finished at prefill (EOS as the free token) still
+                // exports a valid prefix
+                if let Some(snap) = session.export_prefix() {
+                    fill.fill(Arc::new(snap));
+                }
+                Ok(out)
+            }
+        }
     }
 
     /// Deliver newly emitted tokens to a streaming client.  A dropped
@@ -502,12 +638,30 @@ impl Worker {
         self.metrics.queue_ms.record(queue_ms);
         self.metrics.latency_ms.record(latency_ms);
         self.metrics.steps_per_request.record(steps as f64);
+        // failed requests that actually ran a prefill are terminal
+        // outcomes too: keep the prefill/tpot histograms consistent with
+        // the success path (routing failures have prefill_micros == 0 and
+        // are skipped, same as never-admitted requests)
+        if stats.prefill_micros > 0 {
+            self.metrics.prefill_ms.record(stats.prefill_micros as f64 / 1000.0);
+            self.metrics.prefill_encode_ms.record(stats.encode_micros as f64 / 1000.0);
+            self.metrics.prefill_text_ms.record(
+                stats.prefill_micros.saturating_sub(stats.encode_micros) as f64 / 1000.0,
+            );
+        }
+        if stats.tokens.len() > 1 {
+            let decode_ms = stats.decode_micros as f64 / 1000.0;
+            self.metrics.tpot_ms.record(decode_ms / (stats.tokens.len() - 1) as f64);
+        }
         let mut resp = Response::failure(job.req.id, err);
         resp.text = decode_text(&self.tokenizer, &stats.tokens, self.models.manifest.eos_id);
         resp.tokens = stats.tokens;
         resp.queue_ms = queue_ms;
         resp.latency_ms = latency_ms;
         resp.steps = steps;
+        resp.image_id = job.image_id.map(cache::format_image_id).unwrap_or_default();
+        resp.cache_hit = stats.prefill_cache_hit;
+        resp.prefill_ms = stats.prefill_micros as f64 / 1000.0;
         send_final(&job.reply, resp);
     }
 
@@ -542,6 +696,10 @@ impl Worker {
             // requests dropped before admission never ran prefill; a 0.0
             // sample would drag the histogram toward zero
             m.prefill_ms.record(stats.prefill_micros as f64 / 1000.0);
+            // prefill-time split: image encode vs prompt/KV build
+            m.prefill_encode_ms.record(stats.encode_micros as f64 / 1000.0);
+            m.prefill_text_ms
+                .record(stats.prefill_micros.saturating_sub(stats.encode_micros) as f64 / 1000.0);
         }
         if stats.verify_calls > 0 && stats.draft_calls > 0 {
             m.per_request_mal.record(stats.mal());
@@ -576,6 +734,9 @@ impl Worker {
             tokens: stats.tokens,
             queue_ms,
             latency_ms,
+            image_id: job.image_id.map(cache::format_image_id).unwrap_or_default(),
+            cache_hit: stats.prefill_cache_hit,
+            prefill_ms: stats.prefill_micros as f64 / 1000.0,
             error: None,
         };
         send_final(&job.reply, resp);

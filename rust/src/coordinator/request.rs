@@ -57,8 +57,12 @@ pub struct Request {
     /// task label (metrics bucketing only)
     pub task: String,
     pub prompt: String,
-    /// 16x16x3 row-major image; required (targets are multimodal)
+    /// Row-major image pixels (`Manifest::image_shape`); may be empty when
+    /// `image_id` references pixels a previous request already sent
     pub image: Vec<f32>,
+    /// Content address of a previously sent image (see `crate::cache`);
+    /// requests must carry pixels, an id, or both (pixels win)
+    pub image_id: Option<u64>,
     /// target model override; empty -> engine default
     pub target: String,
     pub mode: DecodeMode,
@@ -78,6 +82,7 @@ impl Request {
             task: "adhoc".into(),
             prompt: prompt.into(),
             image,
+            image_id: None,
             target: String::new(),
             mode: DecodeMode::Speculative {
                 variant: "massv".into(),
@@ -115,6 +120,16 @@ pub struct Response {
     pub finish_reason: String,
     pub queue_ms: f64,
     pub latency_ms: f64,
+    /// Content address of this request's image -- clients reuse it as
+    /// `image_id` on follow-up requests to skip resending pixels.  Empty
+    /// when the request never resolved an image (e.g. rejected with
+    /// neither pixels nor id).
+    pub image_id: String,
+    /// True when prefill was served from the prefix cache (forked KV
+    /// snapshots; no model forward pass ran).
+    pub cache_hit: bool,
+    /// Prefill wall time in ms (encode + prompt KV build; ~0 on hits).
+    pub prefill_ms: f64,
     pub error: Option<String>,
 }
 
@@ -134,6 +149,9 @@ impl Response {
             finish_reason: "error".into(),
             queue_ms: 0.0,
             latency_ms: 0.0,
+            image_id: String::new(),
+            cache_hit: false,
+            prefill_ms: 0.0,
             error: Some(err),
         }
     }

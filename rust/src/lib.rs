@@ -12,7 +12,9 @@
 //!   `docs/tree_speculation.md`; resumable per-request sessions,
 //!   `spec::session`), coordinator (router/scheduler/worker pool with
 //!   iteration-level continuous batching, streaming, cancellation, and
-//!   deadlines -- see `docs/serving.md`), TCP server, workload +
+//!   deadlines -- see `docs/serving.md`), multimodal prefix cache
+//!   (content-addressed vision-encode reuse + KV snapshot forking,
+//!   `cache`, see `docs/prefix_cache.md`), TCP server, workload +
 //!   evaluation harness.  Python never runs here.
 //!
 //! Decoding modes (`coordinator::DecodeMode`): `Speculative` (the paper's
@@ -36,6 +38,7 @@
 //! println!("{} (mal {:.2})", resp.text, resp.mal);
 //! ```
 
+pub mod cache;
 pub mod coordinator;
 pub mod eval;
 pub mod manifest;

@@ -107,6 +107,7 @@ fn generate(artifacts: &str, args: &Args) -> Result<()> {
         task: task.to_string(),
         prompt,
         image: item.image.clone(),
+        image_id: None,
         target: args.get_or("target", "").to_string(),
         mode,
         gen: GenConfig {

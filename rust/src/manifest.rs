@@ -22,6 +22,10 @@ pub struct Manifest {
     pub n_visual: usize,
     pub gen_max: usize,
     pub vocab_size: usize,
+    /// Raw image tensor shape the vision tower consumes (row-major
+    /// [h, w, c]); absent in older manifests, defaulting to the original
+    /// hard-coded 16x16x3.
+    pub image_shape: Vec<usize>,
     pub pad_id: i32,
     pub bos_id: i32,
     pub eos_id: i32,
@@ -112,6 +116,14 @@ impl Manifest {
             n_visual: v.req("n_visual")?.as_usize()?,
             gen_max: v.req("gen_max")?.as_usize()?,
             vocab_size: v.req("vocab_size")?.as_usize()?,
+            image_shape: match v.get("image_shape") {
+                Some(s) => s
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize().map_err(Into::into))
+                    .collect::<Result<_>>()?,
+                None => vec![16, 16, 3],
+            },
             pad_id: v.req("pad_id")?.as_i64()? as i32,
             bos_id: v.req("bos_id")?.as_i64()? as i32,
             eos_id: v.req("eos_id")?.as_i64()? as i32,
@@ -136,6 +148,12 @@ impl Manifest {
         Manifest::from_json(&crate::util::read_file(&format!(
             "{artifacts_dir}/manifest.json"
         ))?)
+    }
+
+    /// Total f32 elements of one raw input image (the wire/protocol and
+    /// prefill layers validate against this instead of a hard-coded size).
+    pub fn image_elems(&self) -> usize {
+        self.image_shape.iter().product()
     }
 
     pub fn target(&self, name: &str) -> Result<&ModelEntry> {
@@ -190,6 +208,18 @@ mod tests {
          "variant": "massv", "aligned_target": "qwensim-L", "multimodal": true}
       ]
     }"#;
+
+    #[test]
+    fn image_shape_defaults_and_parses() {
+        let m = Manifest::from_json(TOY).unwrap();
+        assert_eq!(m.image_shape, vec![16, 16, 3]);
+        assert_eq!(m.image_elems(), 768);
+        let custom =
+            TOY.replacen("\"schema\": 1,", "\"schema\": 1, \"image_shape\": [8, 8, 3],", 1);
+        let m = Manifest::from_json(&custom).unwrap();
+        assert_eq!(m.image_shape, vec![8, 8, 3]);
+        assert_eq!(m.image_elems(), 192);
+    }
 
     #[test]
     fn backend_defaults_to_pjrt() {

@@ -110,8 +110,30 @@ pub struct Metrics {
     /// (a counter, not a histogram: one sample per SD iteration would grow
     /// without bound on a long-lived server)
     pub tree_path_accepted: Counter,
+    /// prefix-cache hits: requests whose entire prefill came from a forked
+    /// KV snapshot
+    pub prefix_cache_hits: Counter,
+    /// prefix-cache misses: requests that ran a cold prefill (and filled
+    /// the cache, single-flight)
+    pub prefix_cache_misses: Counter,
+    /// entries dropped by the LRU byte-budget policy
+    pub prefix_cache_evictions: Counter,
+    /// image encodes served from the cache (or a concurrent single-flight
+    /// fill the request waited on)
+    pub vision_encode_hits: Counter,
+    /// image encodes actually executed
+    pub vision_encode_fills: Counter,
+    /// bytes currently held by the prefix cache (pixels + encodings + KV
+    /// snapshots)
+    pub prefix_cache_bytes: Gauge,
+    /// entries currently held by the prefix cache (all three tables)
+    pub prefix_cache_entries: Gauge,
     pub latency_ms: Histogram,
     pub prefill_ms: Histogram,
+    /// image-encode share of prefill time (0 for warm encodes/prefixes)
+    pub prefill_encode_ms: Histogram,
+    /// prefill time minus the image encode (the text/KV-build share)
+    pub prefill_text_ms: Histogram,
     pub per_request_mal: Histogram,
     /// time spent queued before the first dispatch, per terminal request
     /// (rejections record it too -- their queue time is the time to the
@@ -189,12 +211,36 @@ impl Metrics {
         out.insert("overall_mal".into(), self.overall_mal());
         out.insert("throughput_tps".into(), self.throughput_tokens_per_sec());
         out.insert("uptime_secs".into(), self.uptime_secs());
+        out.insert("prefix_cache_hits".into(), self.prefix_cache_hits.get() as f64);
+        out.insert("prefix_cache_misses".into(), self.prefix_cache_misses.get() as f64);
+        out.insert("prefix_cache_hit_rate".into(), self.prefix_cache_hit_rate());
+        out.insert(
+            "prefix_cache_evictions".into(),
+            self.prefix_cache_evictions.get() as f64,
+        );
+        out.insert("vision_encode_hits".into(), self.vision_encode_hits.get() as f64);
+        out.insert("vision_encode_fills".into(), self.vision_encode_fills.get() as f64);
+        out.insert("prefix_cache_bytes".into(), self.prefix_cache_bytes.get() as f64);
+        out.insert("prefix_cache_entries".into(), self.prefix_cache_entries.get() as f64);
+        out.insert("prefill_ms_mean".into(), self.prefill_ms.mean());
+        out.insert("prefill_encode_ms_mean".into(), self.prefill_encode_ms.mean());
+        out.insert("prefill_text_ms_mean".into(), self.prefill_text_ms.mean());
         out.insert("tree_requests".into(), self.tree_requests.get() as f64);
         out.insert("tree_nodes_drafted".into(), self.tree_nodes_drafted.get() as f64);
         out.insert("tree_iterations".into(), self.tree_iterations.get() as f64);
         out.insert("tree_path_depth_mean".into(), self.tree_path_depth_mean());
         out.insert("branch_utilization".into(), self.branch_utilization());
         out
+    }
+
+    /// Fraction of admitted prefills served from the prefix cache.
+    pub fn prefix_cache_hit_rate(&self) -> f64 {
+        let h = self.prefix_cache_hits.get();
+        let total = h + self.prefix_cache_misses.get();
+        if total == 0 {
+            return 0.0;
+        }
+        h as f64 / total as f64
     }
 
     /// Mean accepted root-to-leaf path length per tree iteration.
@@ -274,6 +320,21 @@ mod tests {
         assert!(r.contains_key("requests_cancelled"));
         assert!(r.contains_key("requests_deadline_exceeded"));
         assert!(r.contains_key("queue_ms_p99"));
+        assert!(r.contains_key("prefix_cache_hit_rate"));
+        assert!(r.contains_key("prefix_cache_bytes"));
+        assert!(r.contains_key("prefix_cache_evictions"));
+        assert!(r.contains_key("vision_encode_fills"));
+        assert!(r.contains_key("prefill_encode_ms_mean"));
+        assert!(r.contains_key("prefill_text_ms_mean"));
+    }
+
+    #[test]
+    fn prefix_cache_hit_rate_aggregates() {
+        let m = Metrics::new();
+        assert_eq!(m.prefix_cache_hit_rate(), 0.0);
+        m.prefix_cache_hits.add(3);
+        m.prefix_cache_misses.add(1);
+        assert!((m.prefix_cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -7,8 +7,25 @@
 //! `TargetModel` / `DraftModel` expose the serving-level operations the
 //! speculative decoder composes:
 //!
-//!   target:  prefill_mm -> verify(gamma+1) / decode(1)
-//!   drafter: prefill_mm | prefill_text -> draft(gamma, fused) / decode(1)
+//!   target:  encode_image -> prefill_encoded -> verify(gamma+1) / decode(1)
+//!   drafter: prefill_encoded | prefill_text -> draft(gamma, fused) / decode(1)
+//!
+//! Prefill is split into two stages so the prefix cache (`crate::cache`)
+//! can reuse work across requests:
+//!
+//!   * `encode_image` produces a `VisionEncoding` -- the content-addressed,
+//!     prompt-independent part of multimodal prefill (the vision tower +
+//!     projector in a real VLM; the image's stream-seed contribution under
+//!     the scripted backend).  One encoding serves every prompt over the
+//!     same image, for both target and drafter.
+//!   * `prefill_encoded` consumes an encoding plus the prompt and builds
+//!     the post-prefill `SeqState`.  `prefill_mm` remains as the fused
+//!     convenience (encode + prefill in one call).
+//!
+//! `SeqState::fork` snapshots a sequence state for the cache: a warm
+//! request resumes from a fork of the cached post-prefill state instead of
+//! re-running either stage (`prefill_from`).  `SeqState::bytes` gives the
+//! size accounting the cache's byte budget is enforced against.
 //!
 //! KV caches stay opaque `xla::Literal`s between calls -- the coordinator
 //! never parses them, it just threads them through (DESIGN.md section 3).
@@ -25,6 +42,9 @@ use crate::runtime::tensor::to_vec_i32;
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, scalar_u32, Exec, Runtime, Tensor};
 use crate::spec::tree::DraftTree;
 
+/// Default raw-image element count (16x16x3); the runtime checks request
+/// images against `Manifest::image_elems()`, which falls back to this for
+/// manifests that predate the `image_shape` field.
 pub const IMAGE_ELEMS: usize = 16 * 16 * 3;
 
 pub struct ModelSet {
@@ -89,6 +109,81 @@ impl ModelSet {
     }
 }
 
+/// Destructure an executable's output tuple, erroring -- with the entry
+/// point named -- when the artifact returns a different arity than the
+/// entry point's contract promises (previously a panic via `nth().unwrap()`).
+fn expect_outputs<const N: usize>(
+    out: Vec<xla::Literal>,
+    entry: &str,
+) -> Result<[xla::Literal; N]> {
+    let got = out.len();
+    <[xla::Literal; N]>::try_from(out)
+        .map_err(|_| anyhow!("{entry}: expected {N} outputs from the compiled artifact, got {got}"))
+}
+
+/// The reusable, prompt-independent product of multimodal prefill stage 1:
+/// what a vision tower + projector emits for one image.  Content-addressed
+/// by image hash in `crate::cache`, shared by target and drafter.
+#[derive(Debug, Clone)]
+pub enum VisionEncoding {
+    /// Scripted backend: the image's FNV contribution to the deterministic
+    /// stream seed (`models::scripted::image_seed`) -- the scripted
+    /// stand-in for "projected vision embeddings".
+    Scripted { image_seed: u64 },
+    /// Backends without a separate encode entry point (the fused PJRT
+    /// prefill executables, mock backends): the raw pixels, carried
+    /// through to the fused prefill call.  Nothing but the bytes is
+    /// reused, which is still what the `image_id` protocol saves on the
+    /// wire.
+    Raw(Arc<Vec<f32>>),
+}
+
+impl VisionEncoding {
+    pub fn raw(image: &[f32]) -> VisionEncoding {
+        VisionEncoding::Raw(Arc::new(image.to_vec()))
+    }
+
+    /// Raw pixels, when this encoding carries them.
+    pub fn pixels(&self) -> Option<&[f32]> {
+        match self {
+            VisionEncoding::Raw(px) => Some(px),
+            VisionEncoding::Scripted { .. } => None,
+        }
+    }
+
+    /// The scripted stream-seed contribution (computed from pixels for raw
+    /// encodings, so the scripted backend accepts either form).
+    pub fn scripted_seed(&self) -> u64 {
+        match self {
+            VisionEncoding::Scripted { image_seed } => *image_seed,
+            VisionEncoding::Raw(px) => scripted::image_seed(px),
+        }
+    }
+
+    /// Size accounting for the cache byte budget.
+    pub fn bytes(&self) -> usize {
+        match self {
+            VisionEncoding::Scripted { .. } => 8,
+            VisionEncoding::Raw(px) => px.len() * 4,
+        }
+    }
+}
+
+/// Heap bytes behind one opaque KV literal (cache size accounting).
+fn literal_bytes(l: &xla::Literal) -> usize {
+    match l {
+        xla::Literal::Array { data, dims } => {
+            let elems = match data {
+                xla::LiteralData::F32(v) => v.len(),
+                xla::LiteralData::I32(v) => v.len(),
+                xla::LiteralData::U32(v) => v.len(),
+            };
+            elems * 4 + dims.len() * 8
+        }
+        xla::Literal::Tuple(parts) => parts.iter().map(literal_bytes).sum(),
+    }
+}
+
 /// Per-sequence decoding state: an opaque device-format KV cache plus the
 /// absolute position where the next token will be written.  Under the
 /// scripted backend `pos` is the stream index and `script` carries the
@@ -99,11 +194,64 @@ pub struct SeqState {
     pub script: Option<Arc<scripted::ScriptSet>>,
 }
 
+impl SeqState {
+    /// Snapshot this state so two sequences can continue independently
+    /// (the prefix cache stores post-prefill forks; every warm request
+    /// forks again).  KV literals are value types between calls, so a fork
+    /// is a deep copy of the KV plus a shared handle on the script.
+    pub fn fork(&self) -> SeqState {
+        SeqState { kv: self.kv.clone(), pos: self.pos, script: self.script.clone() }
+    }
+
+    /// Approximate heap size of this state, for the cache byte budget.
+    /// The script is `Arc`-shared between forks but counted in full: the
+    /// cache holds the longest-lived reference, so its budget should bear
+    /// the content.
+    pub fn bytes(&self) -> usize {
+        let script = self.script.as_ref().map_or(0, |s| {
+            (s.primary.len() + s.alts.iter().map(Vec::len).sum::<usize>()) * 4
+        });
+        literal_bytes(&self.kv) + script + std::mem::size_of::<SeqState>()
+    }
+}
+
+/// Forkable post-prefill snapshot of everything a warm start needs: the
+/// target's last-position prefill logits plus both models' sequence
+/// states, taken *before* the first token is sampled (so per-request
+/// sampling config stays out of the cache key).
+pub struct PrefixSnapshot {
+    pub last_logits: Vec<f32>,
+    pub tstate: SeqState,
+    /// `None` for target-only prefixes (no drafter state was built).
+    pub dstate: Option<SeqState>,
+}
+
+impl PrefixSnapshot {
+    /// Size accounting for the cache byte budget.
+    pub fn bytes(&self) -> usize {
+        self.last_logits.len() * 4
+            + self.tstate.bytes()
+            + self.dstate.as_ref().map_or(0, SeqState::bytes)
+    }
+}
+
 fn prompt_literal(prompt: &[i32], p_max: usize) -> Result<xla::Literal> {
     if prompt.len() != p_max {
         return Err(anyhow!("prompt must be padded to {p_max}, got {}", prompt.len()));
     }
     lit_i32(prompt, &[p_max])
+}
+
+fn check_image(m: &Manifest, image: &[f32]) -> Result<()> {
+    if image.len() != m.image_elems() {
+        return Err(anyhow!(
+            "image must have {} elems (shape {:?}), got {}",
+            m.image_elems(),
+            m.image_shape,
+            image.len()
+        ));
+    }
+    Ok(())
 }
 
 #[derive(Clone)]
@@ -125,25 +273,63 @@ impl TargetModel {
         self.set.manifest.backend == "scripted"
     }
 
-    /// Multimodal prefill.  Returns last-position logits and the sequence
-    /// state positioned at the first generation slot.
-    pub fn prefill_mm(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)> {
-        if image.len() != IMAGE_ELEMS {
-            return Err(anyhow!("image must have {IMAGE_ELEMS} elems, got {}", image.len()));
+    /// Prefill stage 1: the prompt-independent image encode.  Cacheable by
+    /// image content hash and shared with the drafter.
+    pub fn encode_image(&self, image: &[f32]) -> Result<VisionEncoding> {
+        check_image(&self.set.manifest, image)?;
+        if self.is_scripted() {
+            return Ok(VisionEncoding::Scripted { image_seed: scripted::image_seed(image) });
         }
+        // the fused PJRT prefill executables have no separate vision-tower
+        // entry point: carry the pixels through to the fused call
+        Ok(VisionEncoding::raw(image))
+    }
+
+    /// Prefill stage 2: build the post-prefill state from an encoding.
+    /// Returns last-position logits and the sequence state positioned at
+    /// the first generation slot.
+    pub fn prefill_encoded(
+        &self,
+        enc: &VisionEncoding,
+        prompt: &[i32],
+        len: usize,
+    ) -> Result<(Vec<f32>, SeqState)> {
         let m = &self.set.manifest;
         if self.is_scripted() {
-            return scripted::prefill_target(m, self.entry.vocab, image, prompt, len);
+            return scripted::prefill_target_seeded(
+                m,
+                self.entry.vocab,
+                enc.scripted_seed(),
+                prompt,
+                len,
+            );
         }
+        let image = enc.pixels().ok_or_else(|| {
+            anyhow!("target {}: PJRT prefill needs a raw vision encoding", self.entry.name)
+        })?;
         let exec = self.set.exec(&self.entry, "prefill_mm")?;
         let out = exec.call(&[
-            lit_f32(image, &[16, 16, 3])?,
+            lit_f32(image, &m.image_shape)?,
             prompt_literal(prompt, m.p_max)?,
             scalar_i32(len as i32),
         ])?;
-        let logits = crate::runtime::to_vec_f32(&out[0])?;
-        let kv = out.into_iter().nth(1).unwrap();
+        let [logits, kv] = expect_outputs::<2>(out, "target::prefill_mm")?;
+        let logits = crate::runtime::to_vec_f32(&logits)?;
         Ok((logits, SeqState { kv, pos: (m.n_visual + len) as i32, script: None }))
+    }
+
+    /// Fused multimodal prefill (stage 1 + stage 2 in one call; the
+    /// cold-path convenience the eval harness and benches use).
+    pub fn prefill_mm(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)> {
+        let enc = self.encode_image(image)?;
+        self.prefill_encoded(&enc, prompt, len)
+    }
+
+    /// Warm-start a sequence from a cached post-prefill prefix: the fork
+    /// *is* the whole operation (KV snapshots are immutable between calls),
+    /// so a warm prefill costs one state copy instead of a forward pass.
+    pub fn prefill_from(&self, prefix: &SeqState) -> SeqState {
+        prefix.fork()
     }
 
     /// Verify gamma+1 tokens written at `state.pos`.  Returns per-position
@@ -163,11 +349,12 @@ impl TargetModel {
             scalar_i32(state.pos),
             state.kv.clone(),
         ])?;
+        let [logits, kv] = expect_outputs::<2>(out, "target::verify")?;
         let logits = Tensor::new(
-            crate::runtime::to_vec_f32(&out[0])?,
+            crate::runtime::to_vec_f32(&logits)?,
             vec![gamma1, self.entry.vocab],
         )?;
-        state.kv = out.into_iter().nth(1).unwrap();
+        state.kv = kv;
         Ok(logits)
     }
 
@@ -200,8 +387,9 @@ impl TargetModel {
             scalar_i32(state.pos),
             state.kv.clone(),
         ])?;
-        let logits = crate::runtime::to_vec_f32(&out[0])?;
-        state.kv = out.into_iter().nth(1).unwrap();
+        let [logits, kv] = expect_outputs::<2>(out, "target::decode")?;
+        let logits = crate::runtime::to_vec_f32(&logits)?;
+        state.kv = kv;
         state.pos += 1;
         Ok(logits)
     }
@@ -237,23 +425,25 @@ impl DraftModel {
         self.set.manifest.backend == "scripted"
     }
 
-    /// Drafter prefill.  Multimodal drafters consume the image unless
-    /// `text_only` (Table-3 mode: visual tokens discarded); the baseline
-    /// drafter has no multimodal entry point at all.
-    pub fn prefill(
+    /// Drafter prefill from a shared vision encoding (stage 2; stage 1 is
+    /// the target's `encode_image`, reused here).  Multimodal drafters
+    /// consume the encoding unless `text_only` (Table-3 mode: visual
+    /// tokens discarded); the baseline drafter has no multimodal entry
+    /// point at all.
+    pub fn prefill_encoded(
         &self,
-        image: Option<&[f32]>,
+        enc: Option<&VisionEncoding>,
         prompt: &[i32],
         len: usize,
         text_only: bool,
     ) -> Result<SeqState> {
         let m = &self.set.manifest;
         if self.is_scripted() {
-            return scripted::prefill_drafter(
+            return scripted::prefill_drafter_seeded(
                 m,
                 self.variant(),
                 self.entry.multimodal,
-                image,
+                enc.map(VisionEncoding::scripted_seed),
                 prompt,
                 len,
                 text_only,
@@ -261,21 +451,54 @@ impl DraftModel {
         }
         let prompt_lit = prompt_literal(prompt, m.p_max)?;
         if self.entry.multimodal && !text_only {
-            let image = image.ok_or_else(|| anyhow!("multimodal drafter needs an image"))?;
+            let enc = enc.ok_or_else(|| anyhow!("multimodal drafter needs an image"))?;
+            let image = enc.pixels().ok_or_else(|| {
+                anyhow!("drafter {}: PJRT prefill needs a raw vision encoding", self.entry.name)
+            })?;
             let exec = self.set.exec(&self.entry, "prefill_mm")?;
             let out = exec.call(&[
-                lit_f32(image, &[16, 16, 3])?,
+                lit_f32(image, &m.image_shape)?,
                 prompt_lit,
                 scalar_i32(len as i32),
             ])?;
-            let kv = out.into_iter().nth(1).unwrap();
+            // drafter prefills return (logits, kv); the logits are unused
+            // (the first draft call starts from the target's token)
+            let [_logits, kv] = expect_outputs::<2>(out, "drafter::prefill_mm")?;
             Ok(SeqState { kv, pos: (m.n_visual + len) as i32, script: None })
         } else {
             let exec = self.set.exec(&self.entry, "prefill_text")?;
             let out = exec.call(&[prompt_lit, scalar_i32(len as i32)])?;
-            let kv = out.into_iter().nth(1).unwrap();
+            let [_logits, kv] = expect_outputs::<2>(out, "drafter::prefill_text")?;
             Ok(SeqState { kv, pos: len as i32, script: None })
         }
+    }
+
+    /// Fused drafter prefill over raw pixels (cold-path convenience).
+    pub fn prefill(
+        &self,
+        image: Option<&[f32]>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState> {
+        let enc = match image {
+            Some(px) => {
+                check_image(&self.set.manifest, px)?;
+                Some(if self.is_scripted() {
+                    VisionEncoding::Scripted { image_seed: scripted::image_seed(px) }
+                } else {
+                    VisionEncoding::raw(px)
+                })
+            }
+            None => None,
+        };
+        self.prefill_encoded(enc.as_ref(), prompt, len, text_only)
+    }
+
+    /// Warm-start from a cached post-prefill prefix (see
+    /// `TargetModel::prefill_from`).
+    pub fn prefill_from(&self, prefix: &SeqState) -> SeqState {
+        prefix.fork()
     }
 
     /// Fused on-device draft loop: writes `last` at `state.pos`, samples
@@ -303,12 +526,13 @@ impl DraftModel {
             scalar_f32(temperature),
             scalar_u32(seed),
         ])?;
-        let tokens = to_vec_i32(&out[0])?;
+        let [tokens, qlogits, kv] = expect_outputs::<3>(out, "drafter::draft")?;
+        let tokens = to_vec_i32(&tokens)?;
         let qlogits = Tensor::new(
-            crate::runtime::to_vec_f32(&out[1])?,
+            crate::runtime::to_vec_f32(&qlogits)?,
             vec![gamma, self.entry.vocab],
         )?;
-        state.kv = out.into_iter().nth(2).unwrap();
+        state.kv = kv;
         Ok(DraftOutput { tokens, qlogits })
     }
 
@@ -343,9 +567,72 @@ impl DraftModel {
             scalar_i32(state.pos),
             state.kv.clone(),
         ])?;
-        let logits = crate::runtime::to_vec_f32(&out[0])?;
-        state.kv = out.into_iter().nth(1).unwrap();
+        let [logits, kv] = expect_outputs::<2>(out, "drafter::decode")?;
+        let logits = crate::runtime::to_vec_f32(&logits)?;
+        state.kv = kv;
         state.pos += 1;
         Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expect_outputs_names_entry_and_arity() {
+        let out = vec![xla::Literal::scalar(0.0f32)];
+        let err = expect_outputs::<2>(out, "target::verify").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("target::verify"), "{msg}");
+        assert!(msg.contains("expected 2"), "{msg}");
+        assert!(msg.contains("got 1"), "{msg}");
+        let [a] = expect_outputs::<1>(vec![xla::Literal::scalar(3i32)], "x").unwrap();
+        assert_eq!(a, xla::Literal::scalar(3i32));
+    }
+
+    #[test]
+    fn seq_state_fork_is_independent() {
+        let script = Arc::new(scripted::ScriptSet::single(vec![5, 6, 7]));
+        let st = SeqState {
+            kv: xla::Literal::vec1(&[1.0f32, 2.0]),
+            pos: 9,
+            script: Some(script.clone()),
+        };
+        let mut fork = st.fork();
+        fork.pos += 3;
+        assert_eq!(st.pos, 9, "fork must not alias positions");
+        assert_eq!(fork.kv, st.kv);
+        assert!(Arc::ptr_eq(fork.script.as_ref().unwrap(), &script), "scripts are shared");
+        assert!(st.bytes() > 0 && st.bytes() == fork.bytes());
+    }
+
+    #[test]
+    fn snapshot_bytes_cover_all_parts() {
+        let st = |n: usize| SeqState {
+            kv: xla::Literal::vec1(&vec![0.0f32; n]),
+            pos: 0,
+            script: None,
+        };
+        let without = PrefixSnapshot { last_logits: vec![0.0; 8], tstate: st(4), dstate: None };
+        let with = PrefixSnapshot {
+            last_logits: vec![0.0; 8],
+            tstate: st(4),
+            dstate: Some(st(16)),
+        };
+        assert!(with.bytes() > without.bytes());
+        assert!(without.bytes() >= 8 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn vision_encoding_seed_matches_either_form() {
+        let img: Vec<f32> = (0..IMAGE_ELEMS).map(|i| i as f32 * 0.01).collect();
+        let raw = VisionEncoding::raw(&img);
+        let scripted_enc = VisionEncoding::Scripted { image_seed: scripted::image_seed(&img) };
+        assert_eq!(raw.scripted_seed(), scripted_enc.scripted_seed());
+        assert!(raw.pixels().is_some());
+        assert!(scripted_enc.pixels().is_none());
+        assert_eq!(scripted_enc.bytes(), 8);
+        assert_eq!(raw.bytes(), IMAGE_ELEMS * 4);
     }
 }

@@ -54,23 +54,45 @@ pub fn sharp_row(tok: i32, vocab: usize) -> Vec<f32> {
     row
 }
 
-/// FNV-1a over the true prompt prefix and a subsample of the image: the
-/// deterministic per-request seed.
-pub fn stream_seed(image: &[f32], prompt: &[i32], len: usize) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &t in prompt.iter().take(len) {
-        h = (h ^ t as u64).wrapping_mul(0x0000_0100_0000_01b3);
-    }
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a subsample of the image: the prompt-independent half of
+/// the stream seed.  This is the scripted backend's "vision encode" --
+/// the cacheable product `VisionEncoding::Scripted` carries, so a warm
+/// prefill over a cached encoding skips the image walk entirely.
+pub fn image_seed(image: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
     for v in image.iter().step_by(29) {
-        h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        h = (h ^ v.to_bits() as u64).wrapping_mul(FNV_PRIME);
     }
     h
+}
+
+/// Mix the true prompt prefix into an image seed: the deterministic
+/// per-request stream seed, stage 2 of the split prefill.
+pub fn stream_seed_from(image_seed: u64, prompt: &[i32], len: usize) -> u64 {
+    let mut h = image_seed;
+    for &t in prompt.iter().take(len) {
+        h = (h ^ t as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fused seed over (image, prompt) -- `image_seed` + `stream_seed_from`.
+pub fn stream_seed(image: &[f32], prompt: &[i32], len: usize) -> u64 {
+    stream_seed_from(image_seed(image), prompt, len)
 }
 
 /// The target's token stream for one request: `gen_max - 2` content tokens
 /// from the non-special vocabulary range, then EOS.
 pub fn target_stream(m: &Manifest, image: &[f32], prompt: &[i32], len: usize) -> Vec<i32> {
-    let mut rng = Rng::seeded(stream_seed(image, prompt, len));
+    target_stream_seeded(m, stream_seed(image, prompt, len))
+}
+
+/// `target_stream` from a precomputed stream seed.
+pub fn target_stream_seeded(m: &Manifest, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::seeded(seed);
     let lo = content_floor(m);
     let n = m.gen_max.saturating_sub(2).max(4);
     let mut s: Vec<i32> = (0..n)
@@ -161,7 +183,18 @@ pub fn prefill_target(
     prompt: &[i32],
     len: usize,
 ) -> Result<(Vec<f32>, SeqState)> {
-    let stream = target_stream(m, image, prompt, len);
+    prefill_target_seeded(m, vocab, image_seed(image), prompt, len)
+}
+
+/// `prefill_target` from a cached image seed (the split-prefill stage 2).
+pub fn prefill_target_seeded(
+    m: &Manifest,
+    vocab: usize,
+    image_seed: u64,
+    prompt: &[i32],
+    len: usize,
+) -> Result<(Vec<f32>, SeqState)> {
+    let stream = target_stream_seeded(m, stream_seed_from(image_seed, prompt, len));
     let logits = sharp_row(stream[0], vocab);
     Ok((logits, state(ScriptSet::single(stream))))
 }
@@ -206,11 +239,35 @@ pub fn prefill_drafter(
     len: usize,
     text_only: bool,
 ) -> Result<SeqState> {
+    prefill_drafter_seeded(
+        m,
+        variant,
+        multimodal,
+        image.map(image_seed),
+        prompt,
+        len,
+        text_only,
+    )
+}
+
+/// `prefill_drafter` from a cached image seed.  The drafter always needs
+/// the seed to reconstruct the target's stream (agreement is positional);
+/// whether it "sees" the image only modulates the corruption period.
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_drafter_seeded(
+    m: &Manifest,
+    variant: &str,
+    multimodal: bool,
+    image_seed_in: Option<u64>,
+    prompt: &[i32],
+    len: usize,
+    text_only: bool,
+) -> Result<SeqState> {
     // the drafter only "sees" the image when it is multimodal and not in
     // Table-3 text-only mode; alignment degrades otherwise
-    let aligned = multimodal && !text_only && image.is_some();
-    let img: &[f32] = image.unwrap_or(&[]);
-    let stream = target_stream(m, img, prompt, len);
+    let aligned = multimodal && !text_only && image_seed_in.is_some();
+    let iseed = image_seed_in.unwrap_or_else(|| image_seed(&[]));
+    let stream = target_stream_seeded(m, stream_seed_from(iseed, prompt, len));
     Ok(state(drafter_scripts(m, &stream, variant, aligned)))
 }
 
@@ -348,6 +405,31 @@ mod tests {
         assert_ne!(s1, target_stream(&m, &img_b, &prompt, 4), "image changes the stream");
         assert_eq!(*s1.last().unwrap(), m.eos_id);
         assert!(s1[..s1.len() - 1].iter().all(|&t| t >= 4 && (t as usize) < m.vocab_size));
+    }
+
+    #[test]
+    fn stream_seed_decomposes_through_image_seed() {
+        // the split prefill must reproduce the fused path exactly: seeding
+        // from a cached image_seed is the warm-encode correctness argument
+        let m = toy_manifest();
+        let img: Vec<f32> = (0..768).map(|i| (i % 11) as f32 * 0.07).collect();
+        let prompt = vec![1, 5, 9, 3, 0, 0];
+        assert_eq!(
+            stream_seed(&img, &prompt, 4),
+            stream_seed_from(image_seed(&img), &prompt, 4)
+        );
+        assert_eq!(
+            target_stream(&m, &img, &prompt, 4),
+            target_stream_seeded(&m, stream_seed_from(image_seed(&img), &prompt, 4))
+        );
+        let (lg_cold, st_cold) = prefill_target(&m, 120, &img, &prompt, 4).unwrap();
+        let (lg_warm, st_warm) =
+            prefill_target_seeded(&m, 120, image_seed(&img), &prompt, 4).unwrap();
+        assert_eq!(lg_cold, lg_warm);
+        assert_eq!(
+            st_cold.script.as_ref().unwrap().primary,
+            st_warm.script.as_ref().unwrap().primary
+        );
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! free of any Python.
 //!
 //! Protocol (one JSON object per line, both directions):
-//!   request:  {"op":"generate", "prompt": str, "image": [f32;768],
+//!   request:  {"op":"generate", "prompt": str,
+//!              "image"?: [f32; manifest image_shape product],
+//!              "image_id"?: hex str (a previously reported image's
+//!              content address; pixels win when both are present),
 //!              "task"?: str, "target"?: str, "mode"?: "massv"|
 //!              "massv_wo_sdvit"|"baseline"|"tree"|"target_only",
 //!              "variant"?: str (drafter variant for mode "tree";
@@ -17,6 +20,7 @@
 //!              "stream"?: bool, "deadline_ms"?: int}
 //!   request:  {"op":"metrics"}  |  {"op":"ping"}  |  {"op":"cancel","id":n}
 //!   response: {"id":n, "text":str, "tokens":[...], "mal":f, "steps":n,
+//!              "image_id": hex str, "cache_hit": bool, "prefill_ms": f,
 //!              "finish_reason":"eos"|"length"|"cancelled"|"deadline"|
 //!              "rejected"|"error", ...}   or {"error": str}
 //!

@@ -7,9 +7,16 @@
 //! exactly the summary's "tokens".  `{"op": "cancel", "id": n}` flags a
 //! queued or in-flight request; its submitter receives the partial output
 //! with `finish_reason = "cancelled"`.
+//!
+//! Images: a generate request carries `"image"` (raw pixels, validated
+//! against the manifest's `image_shape`), `"image_id"` (the content
+//! address a previous response reported, skipping the pixel payload), or
+//! both (pixels win).  Every response echoes `image_id` plus `cache_hit`
+//! and `prefill_ms` -- see `docs/prefix_cache.md`.
 
 use anyhow::{anyhow, Result};
 
+use crate::cache::parse_image_id;
 use crate::coordinator::{DecodeMode, Engine, Priority, Request, Response};
 use crate::spec::GenConfig;
 use crate::util::json::{parse, Json};
@@ -40,9 +47,26 @@ pub fn parse_request(line: &str, engine: &Engine) -> Result<Op> {
 
 fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
     let prompt = v.req("prompt")?.as_str()?.to_string();
-    let image = v.req("image")?.to_f32_vec()?;
-    if image.len() != 16 * 16 * 3 {
-        return Err(anyhow!("image must have 768 floats, got {}", image.len()));
+    let image = match v.get("image") {
+        Some(img) => img.to_f32_vec()?,
+        None => Vec::new(),
+    };
+    let image_id = match v.get("image_id") {
+        Some(id) => Some(parse_image_id(id.as_str()?)?),
+        None => None,
+    };
+    if image.is_empty() && image_id.is_none() {
+        return Err(anyhow!("generate needs \"image\" pixels or an \"image_id\""));
+    }
+    // expected dims come from the artifact manifest, not a hard-coded shape
+    let m = &engine.models.manifest;
+    if !image.is_empty() && image.len() != m.image_elems() {
+        return Err(anyhow!(
+            "image must have {} floats (shape {:?}), got {}",
+            m.image_elems(),
+            m.image_shape,
+            image.len()
+        ));
     }
     let text_only_draft = v
         .get("text_only_draft")
@@ -98,6 +122,7 @@ fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
             .to_string(),
         prompt,
         image,
+        image_id,
         target: v
             .get("target")
             .and_then(|t| t.as_str().ok())
@@ -130,6 +155,9 @@ pub fn render_response(r: &Response) -> Json {
         ("finish_reason", Json::str(r.finish_reason.clone())),
         ("queue_ms", Json::num(r.queue_ms)),
         ("latency_ms", Json::num(r.latency_ms)),
+        ("image_id", Json::str(r.image_id.clone())),
+        ("cache_hit", Json::Bool(r.cache_hit)),
+        ("prefill_ms", Json::num(r.prefill_ms)),
     ];
     if let Some(e) = &r.error {
         fields.push(("error", Json::str(e.clone())));
@@ -185,11 +213,17 @@ mod tests {
             finish_reason: "eos".into(),
             queue_ms: 0.5,
             latency_ms: 12.25,
+            image_id: "00000000deadbeef".into(),
+            cache_hit: true,
+            prefill_ms: 1.5,
             error: None,
         };
         let j = render_response(&r);
         let back = parse(&j.to_string()).unwrap();
         assert_eq!(back.get("id").unwrap().as_i64().unwrap(), 9);
+        assert_eq!(back.get("image_id").unwrap().as_str().unwrap(), "00000000deadbeef");
+        assert!(back.get("cache_hit").unwrap().as_bool().unwrap());
+        assert!((back.get("prefill_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
         assert_eq!(back.get("text").unwrap().as_str().unwrap(), "the red circle .");
         assert_eq!(back.get("tokens").unwrap().to_i32_vec().unwrap(), vec![5, 6, 7, 8]);
         assert!((back.get("mal").unwrap().as_f64().unwrap() - 3.25).abs() < 1e-9);

@@ -18,10 +18,10 @@
 //! fed to it as `last` on the next draft call -- so both caches stay
 //! consistent without any rollback (stale tails are position-masked).
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::manifest::Manifest;
-use crate::models::{DraftModel, DraftOutput, SeqState, TargetModel};
+use crate::models::{DraftModel, DraftOutput, SeqState, TargetModel, VisionEncoding};
 use crate::runtime::Tensor;
 use crate::spec::adaptive::SpecMode;
 use crate::spec::sampler;
@@ -36,6 +36,29 @@ use crate::util::rng::Rng;
 /// Target-model operations the decoder needs.
 pub trait TargetBackend {
     fn prefill(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)>;
+
+    /// Prefill stage 1: the prompt-independent image encode (cacheable by
+    /// content hash, shared with the drafter).  Backends without a
+    /// separable vision stage wrap the raw pixels, so stage 2 degenerates
+    /// to the fused `prefill`.
+    fn encode_image(&self, image: &[f32]) -> Result<VisionEncoding> {
+        Ok(VisionEncoding::raw(image))
+    }
+
+    /// Prefill stage 2: build the post-prefill state from an encoding.
+    fn prefill_encoded(
+        &self,
+        enc: &VisionEncoding,
+        prompt: &[i32],
+        len: usize,
+    ) -> Result<(Vec<f32>, SeqState)> {
+        match enc.pixels() {
+            Some(px) => self.prefill(px, prompt, len),
+            None => Err(anyhow!(
+                "this target backend cannot prefill from a non-raw vision encoding"
+            )),
+        }
+    }
     /// Verify gamma+1 tokens written at `st.pos`; returns [(gamma+1) x V]
     /// logits.  Must NOT advance `st.pos` (the decoder advances by the
     /// accepted count).
@@ -107,6 +130,19 @@ impl<T: TargetBackend + ?Sized> TargetBackend for &T {
         (**self).prefill(image, prompt, len)
     }
 
+    fn encode_image(&self, image: &[f32]) -> Result<VisionEncoding> {
+        (**self).encode_image(image)
+    }
+
+    fn prefill_encoded(
+        &self,
+        enc: &VisionEncoding,
+        prompt: &[i32],
+        len: usize,
+    ) -> Result<(Vec<f32>, SeqState)> {
+        (**self).prefill_encoded(enc, prompt, len)
+    }
+
     fn verify(&self, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor> {
         (**self).verify(st, tokens)
     }
@@ -135,6 +171,26 @@ pub trait DraftBackend {
         len: usize,
         text_only: bool,
     ) -> Result<SeqState>;
+
+    /// Prefill from a shared vision encoding (the target's stage-1 output
+    /// is reused by the drafter so one cached encode serves both models).
+    fn prefill_encoded(
+        &self,
+        enc: Option<&VisionEncoding>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState> {
+        match enc {
+            None => self.prefill(None, prompt, len, text_only),
+            Some(e) => match e.pixels() {
+                Some(px) => self.prefill(Some(px), prompt, len, text_only),
+                None => Err(anyhow!(
+                    "this draft backend cannot prefill from a non-raw vision encoding"
+                )),
+            },
+        }
+    }
     /// Fused gamma-token draft starting from `last` written at `st.pos`.
     /// Advances `st.pos` past `last` only.
     fn draft(&self, st: &mut SeqState, last: i32, temperature: f32, seed: u32)
@@ -189,6 +245,16 @@ impl<D: DraftBackend + ?Sized> DraftBackend for &D {
         (**self).prefill(image, prompt, len, text_only)
     }
 
+    fn prefill_encoded(
+        &self,
+        enc: Option<&VisionEncoding>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState> {
+        (**self).prefill_encoded(enc, prompt, len, text_only)
+    }
+
     fn draft(
         &self,
         st: &mut SeqState,
@@ -214,6 +280,19 @@ impl<D: DraftBackend + ?Sized> DraftBackend for &D {
 impl TargetBackend for TargetModel {
     fn prefill(&self, image: &[f32], prompt: &[i32], len: usize) -> Result<(Vec<f32>, SeqState)> {
         self.prefill_mm(image, prompt, len)
+    }
+
+    fn encode_image(&self, image: &[f32]) -> Result<VisionEncoding> {
+        TargetModel::encode_image(self, image)
+    }
+
+    fn prefill_encoded(
+        &self,
+        enc: &VisionEncoding,
+        prompt: &[i32],
+        len: usize,
+    ) -> Result<(Vec<f32>, SeqState)> {
+        TargetModel::prefill_encoded(self, enc, prompt, len)
     }
 
     fn verify(&self, st: &mut SeqState, tokens: &[i32]) -> Result<Tensor> {
@@ -244,6 +323,16 @@ impl DraftBackend for DraftModel {
         text_only: bool,
     ) -> Result<SeqState> {
         DraftModel::prefill(self, image, prompt, len, text_only)
+    }
+
+    fn prefill_encoded(
+        &self,
+        enc: Option<&VisionEncoding>,
+        prompt: &[i32],
+        len: usize,
+        text_only: bool,
+    ) -> Result<SeqState> {
+        DraftModel::prefill_encoded(self, enc, prompt, len, text_only)
     }
 
     fn draft(
@@ -334,6 +423,12 @@ pub struct GenStats {
     pub per_iter_path_depth: Vec<usize>,
     /// total candidate nodes drafted across tree-mode iterations
     pub tree_nodes_drafted: usize,
+    /// true when prefill was served from the prefix cache (forked KV
+    /// snapshots instead of model forward passes)
+    pub prefill_cache_hit: bool,
+    /// image-encode share of `prefill_micros` (0 on prefix-cache hits and
+    /// for requests whose vision encoding was already cached)
+    pub encode_micros: u64,
 }
 
 impl GenStats {
@@ -358,6 +453,22 @@ impl GenStats {
         }
         let total: usize = self.per_iter_path_depth.iter().sum();
         total as f64 / self.per_iter_path_depth.len() as f64
+    }
+
+    /// Equality modulo wall-clock timing (`*_micros`) and cache provenance
+    /// (`prefill_cache_hit`) -- the relation the cold-vs-warm prefill
+    /// losslessness property asserts: every semantic field of the
+    /// generation record must be bit-identical.
+    pub fn same_generation(&self, other: &GenStats) -> bool {
+        self.tokens == other.tokens
+            && self.verify_calls == other.verify_calls
+            && self.draft_calls == other.draft_calls
+            && self.accepted_draft == other.accepted_draft
+            && self.per_iter_emitted == other.per_iter_emitted
+            && self.finished_by_eos == other.finished_by_eos
+            && self.fallback_at == other.fallback_at
+            && self.per_iter_path_depth == other.per_iter_path_depth
+            && self.tree_nodes_drafted == other.tree_nodes_drafted
     }
 
     /// Fraction of drafted tree nodes that ended up on an accepted path

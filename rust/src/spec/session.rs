@@ -30,7 +30,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::models::{DraftModel, DraftOutput, SeqState, TargetModel};
+use crate::models::{DraftModel, DraftOutput, PrefixSnapshot, SeqState, TargetModel, VisionEncoding};
 use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
 use crate::spec::adaptive::{AdaptiveConfig, SpecMode};
 use crate::spec::decoder::{
@@ -116,6 +116,10 @@ pub struct DecodeSession<T: TargetBackend = TargetModel, D: DraftBackend = Draft
     stats: GenStats,
     tstate: Option<SeqState>,
     dstate: Option<SeqState>,
+    /// The target's prefill logits, retained between prefill and the first
+    /// step so `export_prefix` can snapshot the complete warm-start state;
+    /// cleared on the first `step()` (exports are only valid post-prefill).
+    prefill_logits: Option<Vec<f32>>,
     last: i32,
     /// Current drafting shape; `None` = plain target decoding (target-only
     /// sessions, or an adaptive session after fallback).
@@ -160,6 +164,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             stats: GenStats::default(),
             tstate: None,
             dstate: None,
+            prefill_logits: None,
             last: 0,
             mode,
             adaptive: adaptive.map(|acfg| AdaptiveState {
@@ -196,24 +201,75 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
         StepOutcome::Finished(std::mem::take(&mut self.stats))
     }
 
-    /// Run both prefills and sample the free first token from the target's
-    /// prefill logits.
+    /// Run both prefills (image encode included) and sample the free first
+    /// token from the target's prefill logits.
     pub fn prefill(&mut self, image: &[f32], prompt: &[i32], len: usize) -> Result<StepOutcome> {
         if self.phase != Phase::Created {
             return Err(anyhow!("prefill on an already-started session"));
         }
         let t0 = Instant::now();
-        let (last_logits, tstate) = self.target.prefill(image, prompt, len)?;
+        let enc = self.target.encode_image(image)?;
+        let encode_micros = t0.elapsed().as_micros() as u64;
+        self.prefill_encoded(&enc, prompt, len, encode_micros)
+    }
+
+    /// Prefill from an already-built vision encoding (the engine's
+    /// cache-aware admission path: the encode may have been served from
+    /// the prefix cache or run once under single-flight for many waiting
+    /// requests).  `encode_micros` is the time *this* request spent
+    /// encoding -- 0 when the encoding was cached.
+    pub fn prefill_encoded(
+        &mut self,
+        enc: &VisionEncoding,
+        prompt: &[i32],
+        len: usize,
+        encode_micros: u64,
+    ) -> Result<StepOutcome> {
+        if self.phase != Phase::Created {
+            return Err(anyhow!("prefill on an already-started session"));
+        }
+        let t0 = Instant::now();
+        let (last_logits, tstate) = self.target.prefill_encoded(enc, prompt, len)?;
         self.tstate = Some(tstate);
         if self.mode.is_some() {
             let drafter = self.drafter.as_ref().expect("speculative session without drafter");
             self.dstate =
-                Some(drafter.prefill(Some(image), prompt, len, self.text_only_draft)?);
+                Some(drafter.prefill_encoded(Some(enc), prompt, len, self.text_only_draft)?);
         }
-        self.stats.prefill_micros = t0.elapsed().as_micros() as u64;
+        self.stats.encode_micros = encode_micros;
+        self.stats.prefill_micros = encode_micros + t0.elapsed().as_micros() as u64;
+        self.finish_prefill(last_logits)
+    }
 
+    /// Warm-start from a cached post-prefill prefix: fork both snapshots
+    /// instead of running either model.  Sampling (the free first token,
+    /// this session's RNG/seed/temperature) happens exactly as on the cold
+    /// path, so warm output is bit-identical to cold output.
+    pub fn prefill_from(&mut self, prefix: &PrefixSnapshot) -> Result<StepOutcome> {
+        if self.phase != Phase::Created {
+            return Err(anyhow!("prefill on an already-started session"));
+        }
+        if self.mode.is_some() && prefix.dstate.is_none() {
+            return Err(anyhow!(
+                "cached prefix carries no drafter state but this session speculates"
+            ));
+        }
+        let t0 = Instant::now();
+        self.tstate = Some(prefix.tstate.fork());
+        if self.mode.is_some() {
+            self.dstate = prefix.dstate.as_ref().map(SeqState::fork);
+        }
+        self.stats.prefill_cache_hit = true;
+        self.stats.prefill_micros = t0.elapsed().as_micros() as u64;
+        self.finish_prefill(prefix.last_logits.clone())
+    }
+
+    /// Shared prefill tail: record the logits for `export_prefix`, sample
+    /// the free first token, and settle the phase.
+    fn finish_prefill(&mut self, last_logits: Vec<f32>) -> Result<StepOutcome> {
         let td = Instant::now();
         let t0_tok = sample_token(&last_logits, &self.cfg, &mut self.probs, &mut self.rng);
+        self.prefill_logits = Some(last_logits);
         self.stats.tokens.push(t0_tok);
         self.last = t0_tok;
         self.stats.decode_micros += td.elapsed().as_micros() as u64;
@@ -228,6 +284,22 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
         Ok(StepOutcome::Emitted(vec![t0_tok]))
     }
 
+    /// Snapshot the post-prefill prefix for the cache: forks of both model
+    /// states plus the prefill logits.  Only valid between prefill and the
+    /// first `step()` (decode steps mutate the states); returns `None`
+    /// otherwise.  Sampling state is deliberately excluded -- the snapshot
+    /// is taken *before* the free token draw, so one cached prefix serves
+    /// every (seed, temperature) combination losslessly.
+    pub fn export_prefix(&self) -> Option<PrefixSnapshot> {
+        let last_logits = self.prefill_logits.clone()?;
+        let tstate = self.tstate.as_ref()?;
+        Some(PrefixSnapshot {
+            last_logits,
+            tstate: tstate.fork(),
+            dstate: self.dstate.as_ref().map(SeqState::fork),
+        })
+    }
+
     /// Run exactly one decode iteration: a full draft -> verify -> accept
     /// round in chain/tree mode, or one plain target decode otherwise.
     pub fn step(&mut self) -> Result<StepOutcome> {
@@ -236,6 +308,9 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             Phase::Finished => return Err(anyhow!("step on a finished session")),
             Phase::Running => {}
         }
+        // decode steps mutate the model states, so the post-prefill prefix
+        // stops being exportable from here on
+        self.prefill_logits = None;
         let td = Instant::now();
         let r = self.iterate();
         match r {
@@ -465,7 +540,139 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::decoder::TargetBackend;
     use crate::spec::testing::{params, MockDraft, MockTarget, MockTreeDraft};
+
+    /// Drive a session to completion given its prefill outcome.
+    fn run_out<T: TargetBackend, D: DraftBackend>(
+        first: StepOutcome,
+        sess: &mut DecodeSession<T, D>,
+    ) -> Result<GenStats> {
+        if let StepOutcome::Finished(st) = first {
+            return Ok(st);
+        }
+        loop {
+            match sess.step()? {
+                StepOutcome::Emitted(_) => {}
+                StepOutcome::Finished(st) => return Ok(st),
+            }
+        }
+    }
+
+    /// THE cold-vs-warm losslessness property at the session level: a
+    /// session warm-started from an exported post-prefill prefix must
+    /// produce a bit-identical generation record -- tokens, RNG draws
+    /// (pinned by per-seed T=1 determinism over sharp logits), and every
+    /// semantic `GenStats` field -- across chain, tree, and adaptive
+    /// modes, including the drafter-side state.
+    #[test]
+    fn prop_warm_prefill_is_bit_identical_to_cold() {
+        crate::util::prop::propcheck("warm prefill == cold prefill", 48, |rng| {
+            let n = 3 + rng.range(24);
+            let mut script: Vec<i32> = (0..n).map(|_| 4 + rng.range(90) as i32).collect();
+            script.push(2); // EOS
+            let dscript: Vec<i32> = (0..n + 8)
+                .map(|i| {
+                    if rng.range(3) == 0 {
+                        *script.get(i).unwrap_or(&2)
+                    } else {
+                        4 + rng.range(90) as i32
+                    }
+                })
+                .collect();
+            let mode = rng.range(3); // 0 = chain, 1 = tree, 2 = adaptive
+            let cfg = GenConfig {
+                temperature: if rng.range(2) == 0 { 0.0 } else { 1.0 },
+                seed: rng.next_u64(),
+                tree: Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }),
+                ..GenConfig::default()
+            };
+            let make = || {
+                DecodeSession::new(
+                    MockTarget::new(script.clone()),
+                    Some(MockTreeDraft::new(vec![dscript.clone(), script.clone()])),
+                    params(),
+                    cfg.clone(),
+                    Some(if mode == 1 { SpecMode::Tree } else { SpecMode::Chain }),
+                    if mode == 2 { Some(AdaptiveConfig::default()) } else { None },
+                    false,
+                )
+            };
+
+            let mut cold = make();
+            let out = cold.prefill(&[], &[0; 8], 3).map_err(|e| format!("{e:#}"))?;
+            let snap = cold.export_prefix().ok_or("post-prefill export failed")?;
+            let cold_stats = run_out(out, &mut cold).map_err(|e| format!("{e:#}"))?;
+
+            let mut warm = make();
+            let out = warm.prefill_from(&snap).map_err(|e| format!("{e:#}"))?;
+            let warm_stats = run_out(out, &mut warm).map_err(|e| format!("{e:#}"))?;
+
+            if cold_stats.tokens != warm_stats.tokens {
+                return Err(format!(
+                    "mode {mode}: warm tokens {:?} != cold tokens {:?}",
+                    warm_stats.tokens, cold_stats.tokens
+                ));
+            }
+            if !cold_stats.same_generation(&warm_stats) {
+                return Err(format!(
+                    "mode {mode}: warm stats diverge: cold {cold_stats:?} warm {warm_stats:?}"
+                ));
+            }
+            if !warm_stats.prefill_cache_hit || cold_stats.prefill_cache_hit {
+                return Err("cache-hit flags mislabelled".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn export_prefix_only_valid_before_first_step() {
+        let script: Vec<i32> = (10..40).collect();
+        let mut sess = DecodeSession::new(
+            MockTarget::new(script.clone()),
+            Some(MockDraft::new(script)),
+            params(),
+            GenConfig::default(),
+            Some(SpecMode::Chain),
+            None,
+            false,
+        );
+        assert!(sess.export_prefix().is_none(), "nothing to export before prefill");
+        sess.prefill(&[], &[0; 8], 3).unwrap();
+        let snap = sess.export_prefix().expect("post-prefill export");
+        assert!(snap.dstate.is_some(), "speculative prefix carries drafter state");
+        sess.step().unwrap();
+        assert!(sess.export_prefix().is_none(), "stepped states are not a prefix");
+    }
+
+    #[test]
+    fn prefill_from_rejects_drafterless_prefix_for_speculation() {
+        let script = vec![5, 6, 7, 2];
+        // target-only cold session: its prefix has no drafter state
+        let mut cold = DecodeSession::<MockTarget, NoDraft>::new(
+            MockTarget::new(script.clone()),
+            None,
+            params(),
+            GenConfig::default(),
+            None,
+            None,
+            false,
+        );
+        cold.prefill(&[], &[0; 8], 3).unwrap();
+        let snap = cold.export_prefix().unwrap();
+        assert!(snap.dstate.is_none());
+        let mut warm = DecodeSession::new(
+            MockTarget::new(script.clone()),
+            Some(MockDraft::new(script)),
+            params(),
+            GenConfig::default(),
+            Some(SpecMode::Chain),
+            None,
+            false,
+        );
+        assert!(warm.prefill_from(&snap).is_err());
+    }
 
     #[test]
     fn stepwise_emission_concatenates_to_generate_output() {

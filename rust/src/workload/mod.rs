@@ -86,6 +86,58 @@ pub fn poisson_schedule(n: usize, rate: f64, pool: usize, seed: u64) -> Vec<Arri
         .collect()
 }
 
+/// Knobs for the repeated-image / multi-turn arrival generator: benches
+/// and tests sweep these to move the prefix-cache hit regime (see
+/// `docs/prefix_cache.md`).
+#[derive(Debug, Clone)]
+pub struct RepeatKnobs {
+    /// distinct images in circulation
+    pub image_pool: usize,
+    /// probability an arrival keeps the previous arrival's image
+    /// (multi-turn chat continuing on one image); the rest draw uniformly
+    /// from the pool
+    pub reuse_prob: f64,
+}
+
+/// One multimodal arrival: a prompt-pool index plus an image-pool index.
+#[derive(Debug, Clone)]
+pub struct MmArrival {
+    /// offset from test start, seconds
+    pub at: f64,
+    /// index into the prompt/item pool
+    pub item: usize,
+    /// index into the image pool
+    pub image: usize,
+}
+
+/// Poisson arrivals over a prompt pool with correlated image reuse: with
+/// probability `reuse_prob` an arrival continues on the previous image
+/// (the multi-turn regime SpecVLM/ViSpec-style vision-token reuse
+/// targets), otherwise it picks a fresh image uniformly.  `reuse_prob = 0`
+/// gives i.i.d. images (hit rate bounded by pool reuse); `reuse_prob = 1`
+/// pins every request to one image (maximal warm-prefill regime).
+pub fn repeated_image_schedule(
+    n: usize,
+    rate: f64,
+    item_pool: usize,
+    knobs: &RepeatKnobs,
+    seed: u64,
+) -> Vec<MmArrival> {
+    assert!(item_pool > 0 && knobs.image_pool > 0, "pools must be non-empty");
+    let mut rng = Rng::seeded(seed);
+    let mut t = 0.0;
+    let mut image = 0usize;
+    (0..n)
+        .map(|i| {
+            t += rng.exponential(rate);
+            if i == 0 || rng.f64() >= knobs.reuse_prob {
+                image = rng.range(knobs.image_pool);
+            }
+            MmArrival { at: t, item: rng.range(item_pool), image }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +153,35 @@ mod tests {
         let rate = 5000.0 / span;
         assert!((rate - 20.0).abs() < 1.5, "rate {rate}");
         assert!(s.iter().all(|a| a.item < 10));
+    }
+
+    #[test]
+    fn repeated_image_schedule_sweeps_reuse_regimes() {
+        let knobs = |p| RepeatKnobs { image_pool: 8, reuse_prob: p };
+        for p in [0.0, 0.5, 0.9] {
+            let s = repeated_image_schedule(4000, 50.0, 4, &knobs(p), 11);
+            assert_eq!(s.len(), 4000);
+            for w in s.windows(2) {
+                assert!(w[0].at <= w[1].at, "arrivals must be time-ordered");
+            }
+            assert!(s.iter().all(|a| a.item < 4 && a.image < 8));
+            let repeats = s.windows(2).filter(|w| w[0].image == w[1].image).count();
+            let frac = repeats as f64 / (s.len() - 1) as f64;
+            // observed repeat fraction = reuse_prob + (1-reuse_prob)/pool
+            let expect = p + (1.0 - p) / 8.0;
+            assert!(
+                (frac - expect).abs() < 0.05,
+                "reuse_prob {p}: repeat fraction {frac:.3}, expected ~{expect:.3}"
+            );
+        }
+        // the extremes pin the hit regime
+        let pinned = repeated_image_schedule(100, 50.0, 4, &knobs(1.0), 3);
+        let first = pinned[0].image;
+        assert!(pinned.iter().all(|a| a.image == first), "reuse 1.0 = one image");
+        // determinism: same seed, same schedule
+        let a = repeated_image_schedule(64, 50.0, 4, &knobs(0.5), 9);
+        let b = repeated_image_schedule(64, 50.0, 4, &knobs(0.5), 9);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.image == y.image && x.item == y.item));
     }
 
     #[test]

@@ -331,6 +331,267 @@ fn rejections_record_metrics() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// THE prefix-cache property at the engine level: resubmitting an
+/// identical request must hit the cache and produce a bit-identical
+/// response (tokens, acceptance accounting, steps, finish reason) across
+/// chain, tree, adaptive, and target-only modes, greedy and T=1 -- and a
+/// third submission referencing the image by `image_id` alone must match
+/// too.
+#[test]
+fn prop_warm_prefill_matches_cold_across_modes() {
+    let dir = scripted_artifacts("prefix_prop", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let prompts = ["w5 w6 w7", "w8 w9", "w10 w11 w12 w13", "w14"];
+
+    let eng = engine.clone();
+    massv::util::prop::propcheck("warm prefill == cold prefill (engine)", 20, move |rng| {
+        let prompt = prompts[rng.range(prompts.len())];
+        let phase = rng.range(6);
+        let mode = match rng.range(4) {
+            0 => DecodeMode::Speculative {
+                variant: "massv".into(),
+                text_only_draft: false,
+                adaptive: false,
+            },
+            1 => DecodeMode::Tree {
+                variant: "massv".into(),
+                text_only_draft: false,
+                adaptive: false,
+            },
+            2 => DecodeMode::Speculative {
+                variant: "massv".into(),
+                text_only_draft: false,
+                adaptive: true,
+            },
+            _ => DecodeMode::TargetOnly,
+        };
+        let temperature = if rng.range(2) == 0 { 0.0 } else { 1.0 };
+        let seed = rng.next_u64();
+        let make = || {
+            let mut r = request(&eng, mode.clone(), prompt, phase);
+            r.gen.temperature = temperature;
+            r.gen.seed = seed;
+            r
+        };
+
+        let first = eng.run(make());
+        if first.error.is_some() {
+            return Err(format!("first run failed: {:?}", first.error));
+        }
+        let second = eng.run(make());
+        if second.error.is_some() {
+            return Err(format!("second run failed: {:?}", second.error));
+        }
+        if !second.cache_hit {
+            return Err("second identical request must hit the prefix cache".into());
+        }
+        if second.tokens != first.tokens {
+            return Err(format!(
+                "warm tokens {:?} != cold tokens {:?}",
+                second.tokens, first.tokens
+            ));
+        }
+        let same = second.verify_calls == first.verify_calls
+            && second.accepted_draft == first.accepted_draft
+            && second.steps == first.steps
+            && second.finish_reason == first.finish_reason
+            && second.finished_by_eos == first.finished_by_eos
+            && second.tree_nodes_drafted == first.tree_nodes_drafted
+            && (second.mal - first.mal).abs() < 1e-12
+            && (second.mean_path_depth - first.mean_path_depth).abs() < 1e-12;
+        if !same {
+            return Err(format!("warm stats diverge: {second:?} vs {first:?}"));
+        }
+
+        // image_id-only resubmission: no pixels on the wire at all
+        if first.image_id.is_empty() {
+            return Err("responses must report the image_id".into());
+        }
+        let mut by_id = make();
+        by_id.image = Vec::new();
+        by_id.image_id =
+            Some(massv::cache::parse_image_id(&first.image_id).map_err(|e| format!("{e:#}"))?);
+        let by_id = eng.run(by_id);
+        if by_id.error.is_some() {
+            return Err(format!("image_id run failed: {:?}", by_id.error));
+        }
+        if by_id.tokens != first.tokens {
+            return Err("image_id request must reproduce the pixel request".into());
+        }
+        Ok(())
+    });
+
+    let engine = Arc::try_unwrap(engine).unwrap_or_else(|_| panic!("engine still shared"));
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Eviction under pressure: a tiny byte budget must evict (counted in
+/// metrics), never exceed the budget, and never affect correctness --
+/// an evicted prefix simply re-runs cold with the same deterministic
+/// output.
+#[test]
+fn eviction_under_pressure_stays_within_budget_and_correct() {
+    let dir = scripted_artifacts("evict", 2048);
+    let engine = Engine::start(
+        &dir,
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 64,
+            prefix_cache_bytes: 64 * 1024,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let spec = || DecodeMode::Speculative {
+        variant: "massv".into(),
+        text_only_draft: false,
+        adaptive: false,
+    };
+    let mut req0 = request(&engine, spec(), "w5 w6", 0);
+    req0.gen.max_new = 6;
+    let first = engine.run(req0);
+    assert!(first.error.is_none(), "{:?}", first.error);
+
+    // flood with distinct images; each prefix is ~25 KB of scripts + KV,
+    // so a 64 KB budget forces evictions
+    for i in 1..10 {
+        let mut r = request(&engine, spec(), "w5 w6", i);
+        r.gen.max_new = 6;
+        let resp = engine.run(r);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let m = engine.scrape();
+    assert!(m["prefix_cache_evictions"] > 0.0, "pressure must evict: {m:?}");
+    assert!(
+        m["prefix_cache_bytes"] <= (64 * 1024) as f64,
+        "budget violated: {} bytes",
+        m["prefix_cache_bytes"]
+    );
+
+    // the first image's prefix was evicted long ago; re-running is cold
+    // again but bit-identical
+    let mut again = request(&engine, spec(), "w5 w6", 0);
+    again.gen.max_new = 6;
+    let again = engine.run(again);
+    assert!(again.error.is_none(), "{:?}", again.error);
+    assert_eq!(again.tokens, first.tokens, "eviction must not change outputs");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Single-flight dedup: six concurrent requests over the same fresh image
+/// (distinct prompts, so six prefix fills) must run exactly ONE image
+/// encode -- the rest wait on the in-flight fill and count as hits.
+#[test]
+fn single_flight_dedupes_concurrent_encodes() {
+    let dir = scripted_artifacts("singleflight", 4096);
+    let engine = Engine::start(
+        &dir,
+        EngineConfig { workers: 4, queue_capacity: 64, ..EngineConfig::default() },
+    )
+    .unwrap();
+    let img = image(9);
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            let mut r = Request::simple(engine.next_id(), &format!("w{}", 20 + i), img.clone());
+            r.mode = DecodeMode::TargetOnly;
+            r.gen.max_new = 4;
+            engine.submit(r)
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 4);
+    }
+    let m = engine.scrape();
+    assert_eq!(
+        m["vision_encode_fills"], 1.0,
+        "six concurrent same-image requests must encode once: {m:?}"
+    );
+    assert_eq!(m["vision_encode_hits"], 5.0);
+    assert_eq!(m["prefix_cache_misses"], 6.0, "six distinct prompts -> six prefix fills");
+    assert_eq!(m["prefix_cache_hits"], 0.0);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `image_id` over the wire: send pixels once, reference them afterwards;
+/// unknown and malformed ids produce clean errors.
+#[test]
+fn image_id_protocol_round_trip() {
+    let dir = scripted_artifacts("image_id", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let server = massv::server::Server::new(engine);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut client = massv::server::Client::connect(&addr.to_string()).unwrap();
+
+    let with_pixels = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5 w6 w7")),
+        ("image", Json::arr_f32(&image(2))),
+        ("seed", Json::num(0.0)),
+    ]);
+    let r1 = client.call(&with_pixels).unwrap();
+    assert!(r1.get("error").is_none(), "{r1:?}");
+    let id = r1.get("image_id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(id.len(), 16, "image_id is 16 hex digits: {id:?}");
+    assert!(!r1.get("cache_hit").unwrap().as_bool().unwrap(), "first touch is cold");
+    assert!(r1.get("prefill_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    // follow-up without pixels
+    let by_id = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5 w6 w7")),
+        ("image_id", Json::str(id.clone())),
+        ("seed", Json::num(0.0)),
+    ]);
+    let r2 = client.call(&by_id).unwrap();
+    assert!(r2.get("error").is_none(), "{r2:?}");
+    assert_eq!(
+        r2.get("tokens").unwrap().to_i32_vec().unwrap(),
+        r1.get("tokens").unwrap().to_i32_vec().unwrap(),
+        "image_id request must reproduce the pixel request"
+    );
+    assert!(r2.get("cache_hit").unwrap().as_bool().unwrap(), "identical request must be warm");
+    assert_eq!(r2.get("image_id").unwrap().as_str().unwrap(), id);
+
+    // unknown id: clean per-request error, server keeps serving
+    let unknown = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5")),
+        ("image_id", Json::str("00000000000000aa".to_string())),
+    ]);
+    let r3 = client.call(&unknown).unwrap();
+    let err = r3.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(err.contains("unknown image_id"), "{err}");
+
+    // malformed id: rejected at parse time
+    let malformed = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5")),
+        ("image_id", Json::str("not-hex".to_string())),
+    ]);
+    let r4 = client.call(&malformed).unwrap();
+    assert!(r4.get("error").unwrap().as_str().unwrap().contains("image_id"));
+
+    // neither pixels nor id
+    let neither = Json::obj(vec![("op", Json::str("generate")), ("prompt", Json::str("w5"))]);
+    let r5 = client.call(&neither).unwrap();
+    assert!(r5.get("error").is_some());
+
+    assert!(client.ping().unwrap(), "server must survive the error paths");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Full TCP round-trip for the new wire surface: streaming frames and the
 /// cancel op.
 #[test]
