@@ -33,12 +33,30 @@
 //! before the free token is sampled, so per-request sampling config never
 //! enters the cache key.
 //!
-//! PJRT CPU executables are batch-1 (DESIGN.md section 3), so parallelism
-//! across sequences still comes from the worker pool (the TFRT CPU runtime
-//! executes the shared compiled executables concurrently); what continuous
-//! batching changes is *scheduling*: N workers multiplex M >= N sessions at
-//! iteration granularity.  `SchedPolicy::RunToCompletion` restores the old
-//! request-at-a-time behavior for A/B comparison (`benches/micro_engine.rs`).
+//! Steps are *ganged* across requests (cross-request batching,
+//! `docs/serving.md`): a worker pops up to `EngineConfig::max_batch`
+//! compatible steps in one dispatch (`Scheduler::pop_batch`; compatible =
+//! same target-pass shape `spec::LaneKind` + same target + same drafter
+//! identity) and drives them through ONE fused tick -- every lane's
+//! `propose` half-step, then one batched drafter pass
+//! (`DraftModel::draft_batch` / `draft_tree_batch`), then one batched
+//! target pass (`decode_batch` / `verify_batch` / `verify_tree_batch`),
+//! then per-lane `absorb_*`.  All sampling state is per-session, so
+//! batched output is bit-identical to sequential stepping -- the
+//! `spec::testing::run_batched_vs_sequential` oracle and
+//! `rust/tests/batch_equivalence.rs` pin this.  Single-lane dispatches
+//! (and `max_batch == 1`) take the pre-batching `step_once` path
+//! unchanged; admissions are never ganged.
+//!
+//! PJRT CPU executables are batch-1 (DESIGN.md section 3) unless the
+//! artifact exports `*_batch` entry points, so on stock artifacts the
+//! fused tick's win is scheduler amortization (one pop/requeue round-trip
+//! per tick instead of per step) while parallelism across sequences still
+//! comes from the worker pool; what continuous batching changes is
+//! *scheduling*: N workers multiplex M >= N sessions at iteration
+//! granularity.  `SchedPolicy::RunToCompletion` restores the old
+//! request-at-a-time behavior for A/B comparison (`benches/micro_engine.rs`;
+//! `benches/micro_batch.rs` A/Bs ganged vs per-step dispatch).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -53,8 +71,10 @@ use crate::coordinator::request::{DecodeMode, Request, Response};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{Scheduler, Submit};
 use crate::metrics::Metrics;
-use crate::models::{ModelSet, TargetModel, VisionEncoding};
-use crate::spec::{AdaptiveConfig, DecodeSession, GenStats, SpecMode, SpecParams, StepOutcome};
+use crate::models::{DraftModel, ModelSet, SeqState, TargetModel, VisionEncoding};
+use crate::spec::{
+    AdaptiveConfig, DecodeSession, GenStats, LaneKind, SpecMode, SpecParams, StepOutcome,
+};
 use crate::tokenizer::Tokenizer;
 
 /// How workers treat an in-flight session after each decode step.
@@ -78,6 +98,11 @@ pub struct EngineConfig {
     /// disables retention in practice (every insert is immediately
     /// evicted); admission still single-flights concurrent encodes.
     pub prefix_cache_bytes: usize,
+    /// Upper bound on compatible sessions ganged into one fused batched
+    /// tick (`Continuous` policy only).  `1` disables ganging -- pure
+    /// per-step dispatch, the pre-batching behavior.  Admissions are
+    /// never ganged.
+    pub max_batch: usize,
 }
 
 impl Default for EngineConfig {
@@ -88,6 +113,7 @@ impl Default for EngineConfig {
             queue_capacity: 256,
             policy: SchedPolicy::Continuous,
             prefix_cache_bytes: 64 << 20,
+            max_batch: 8,
         }
     }
 }
@@ -147,6 +173,43 @@ struct Active {
     streamed: usize,
     /// scheduler dispatches consumed (prefill + steps)
     steps: usize,
+    /// model handles retained for fused batched passes (clones of the
+    /// session's own handles, so a ganged pass runs the same compiled
+    /// executables a sequential step would)
+    target: TargetModel,
+    drafter: Option<DraftModel>,
+    /// Pre-joined model identities, computed once at admission: the gang
+    /// key is evaluated per scanned queue item under the scheduler lock,
+    /// so it must not allocate.  `model_key` pins target + drafter +
+    /// variant; `target_key` pins the target alone.
+    model_key: Arc<str>,
+    target_key: Arc<str>,
+}
+
+impl Active {
+    /// Lane-compatibility key: sessions gang into one fused tick only when
+    /// their next target pass has the same shape AND runs the same models
+    /// (same batched executables, comparable windows).  Plain lanes only
+    /// run the target decode, so they key on the target alone -- an
+    /// adaptive session that fell back to plain decoding gangs with
+    /// target-only sessions.  Cloning is a refcount bump; `Arc<str>`
+    /// equality compares contents.
+    fn batch_key(&self) -> (LaneKind, Arc<str>) {
+        let kind = self.session.lane_kind();
+        let key = match kind {
+            LaneKind::Plain => self.target_key.clone(),
+            LaneKind::Chain | LaneKind::Tree => self.model_key.clone(),
+        };
+        (kind, key)
+    }
+}
+
+/// Build an `Active::model_key` from the resolved model handles.
+fn model_key(target: &TargetModel, drafter: &Option<DraftModel>) -> Arc<str> {
+    match drafter {
+        Some(d) => format!("{}|{}|{}", target.name(), d.name(), d.variant()).into(),
+        None => format!("{}|", target.name()).into(),
+    }
 }
 
 enum Work {
@@ -177,6 +240,7 @@ impl Engine {
         let router = Arc::new(Router::new(cfg.default_target.clone()));
         let cancels = Arc::new(Mutex::new(HashMap::new()));
 
+        metrics.batch_max_lanes.set(cfg.max_batch.max(1) as i64);
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let w = Worker {
@@ -188,6 +252,8 @@ impl Engine {
                 router: router.clone(),
                 cancels: cancels.clone(),
                 policy: cfg.policy,
+                max_batch: cfg.max_batch.max(1),
+                workers: cfg.workers.max(1),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -312,6 +378,17 @@ impl Engine {
     }
 }
 
+/// Per-lane shares of a fused pass's wall time.  Plain integer division
+/// would drop the remainder -- zeroing `decode_micros` (and therefore
+/// tpot) entirely on microsecond-scale scripted passes -- so the first
+/// `total % n` lanes carry one extra microsecond and the shares always
+/// sum to `total_us`.
+fn time_shares(total_us: u64, n: usize) -> impl Iterator<Item = u64> {
+    let n64 = n.max(1) as u64;
+    let (q, r) = (total_us / n64, total_us % n64);
+    (0..n64).map(move |i| q + u64::from(i < r))
+}
+
 fn send_final(reply: &Reply, resp: Response) {
     match reply {
         Reply::Oneshot(tx) => {
@@ -333,13 +410,20 @@ struct Worker {
     router: Arc<Router>,
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
     policy: SchedPolicy,
+    /// Ganging bound for fused batched ticks (>= 1).
+    max_batch: usize,
+    /// Pool size, for the fair-share gang bound (see `Worker::run`).
+    workers: usize,
 }
 
 /// Everything `make_session` resolves for one admission.
 struct SessionParts {
     session: DecodeSession,
-    /// target handle retained for the (cacheable) image-encode stage
+    /// target handle retained for the (cacheable) image-encode stage and
+    /// for fused batched passes
     target: TargetModel,
+    /// drafter handle retained for fused batched passes (None = target-only)
+    drafter: Option<DraftModel>,
     prompt_ids: Vec<i32>,
     len: usize,
     /// drafter identity for the prefix-cache key (None = target-only)
@@ -348,16 +432,42 @@ struct SessionParts {
 
 impl Worker {
     fn run(&self) {
-        while let Some(work) = self.sched.pop() {
+        loop {
+            // gang compatible steps into one dispatch under continuous
+            // scheduling; pop_batch never mixes keys, so a dispatch is
+            // either one admission or a homogeneous group of steps.  The
+            // gang is additionally bounded by the backlog's fair share per
+            // worker: when the backend has no `*_batch` entry points the
+            // fused pass degenerates to a per-lane loop, and without this
+            // bound one worker would drain steps the rest of the pool
+            // could run in parallel, idling the other threads.
+            let fair = self.sched.len().div_ceil(self.workers).max(1);
+            let bound = self.max_batch.min(fair);
+            let works = if self.policy == SchedPolicy::Continuous && bound > 1 {
+                self.sched.pop_batch(bound, |w| match w {
+                    Work::Step(active) => Some(active.batch_key()),
+                    Work::Admit(_) => None,
+                })
+            } else {
+                self.sched.pop().map(|w| vec![w])
+            };
+            let Some(works) = works else { break };
             self.metrics.queue_depth.set(self.sched.len() as i64);
-            match work {
-                Work::Admit(job) => self.admit(job),
-                Work::Step(active) => {
+            let mut steps = Vec::with_capacity(works.len());
+            for work in works {
+                match work {
+                    Work::Admit(job) => self.admit(job),
+                    Work::Step(active) => steps.push(active),
+                }
+            }
+            if steps.len() <= 1 {
+                if let Some(active) = steps.pop() {
                     if let Some(active) = self.step_once(active) {
-                        let prio = active.job.req.priority;
-                        self.sched.requeue(Work::Step(active), prio);
+                        self.requeue_step(active);
                     }
                 }
+            } else {
+                self.step_batch(steps);
             }
         }
     }
@@ -395,7 +505,7 @@ impl Worker {
         if !job.req.image.is_empty() {
             self.cache.put_image_hashed(image_id, &job.req.image);
         }
-        let SessionParts { mut session, target, prompt_ids, len, drafter_key } = parts;
+        let SessionParts { mut session, target, drafter, prompt_ids, len, drafter_key } = parts;
         let key = PrefixKey {
             target: target.name().to_string(),
             drafter: drafter_key,
@@ -408,11 +518,25 @@ impl Worker {
                 self.finalize_failure(job, queue_ms, started, 1, GenStats::default(), format!("{e:#}"));
             }
             Ok(StepOutcome::Finished(stats)) => {
-                let active =
-                    Active { job, session, started, queue_ms, streamed: 0, steps: 1 };
+                let model_key = model_key(&target, &drafter);
+                let target_key: Arc<str> = target.name().into();
+                let active = Active {
+                    job,
+                    session,
+                    started,
+                    queue_ms,
+                    streamed: 0,
+                    steps: 1,
+                    target,
+                    drafter,
+                    model_key,
+                    target_key,
+                };
                 self.flush_and_finalize(active, stats, None);
             }
             Ok(StepOutcome::Emitted(tokens)) => {
+                let model_key = model_key(&target, &drafter);
+                let target_key: Arc<str> = target.name().into();
                 let mut active = Box::new(Active {
                     job,
                     session,
@@ -420,13 +544,14 @@ impl Worker {
                     queue_ms,
                     streamed: 0,
                     steps: 1,
+                    target,
+                    drafter,
+                    model_key,
+                    target_key,
                 });
                 self.send_chunk(&mut active, &tokens);
                 match self.policy {
-                    SchedPolicy::Continuous => {
-                        let prio = active.job.req.priority;
-                        self.sched.requeue(Work::Step(active), prio);
-                    }
+                    SchedPolicy::Continuous => self.requeue_step(active),
                     SchedPolicy::RunToCompletion => {
                         let mut cur = active;
                         while let Some(next) = self.step_once(cur) {
@@ -452,17 +577,36 @@ impl Worker {
             return None;
         }
         active.steps += 1;
-        match active.session.step() {
+        self.drive_step(active)
+    }
+
+    /// Run one fused `session.step()` and conclude it (the pre-batching
+    /// single-lane path; liveness checks and step accounting already done).
+    fn drive_step(&self, mut active: Box<Active>) -> Option<Box<Active>> {
+        let outcome = active.session.step();
+        self.conclude(active, outcome)
+    }
+
+    /// Put a still-running session back in the queue for its next turn.
+    fn requeue_step(&self, active: Box<Active>) {
+        let prio = active.job.req.priority;
+        self.sched.requeue(Work::Step(active), prio);
+    }
+
+    /// `conclude` plus the requeue of a still-running lane (the shared
+    /// tail of every batched-absorb arm).
+    fn conclude_and_requeue(&self, active: Box<Active>, outcome: Result<StepOutcome>) {
+        if let Some(active) = self.conclude(active, outcome) {
+            self.requeue_step(active);
+        }
+    }
+
+    /// Shared step epilogue: deliver/emit/finalize one step outcome.
+    /// Returns the session if it should be scheduled again.
+    fn conclude(&self, mut active: Box<Active>, outcome: Result<StepOutcome>) -> Option<Box<Active>> {
+        match outcome {
             Err(e) => {
-                log::error!("request {} failed mid-decode: {e:#}", active.job.req.id);
-                // deliver the partial output: flush the unstreamed tail so
-                // the chunk-concatenation invariant holds even for errors
-                let stats = active.session.abort();
-                if active.streamed < stats.tokens.len() {
-                    self.send_tail(&active.job, &stats.tokens[active.streamed..]);
-                }
-                let Active { job, queue_ms, started, steps, .. } = *active;
-                self.finalize_failure(job, queue_ms, started, steps, stats, format!("{e:#}"));
+                self.fail_step(active, e);
                 None
             }
             Ok(StepOutcome::Emitted(tokens)) => {
@@ -472,6 +616,209 @@ impl Worker {
             Ok(StepOutcome::Finished(stats)) => {
                 self.flush_and_finalize(*active, stats, None);
                 None
+            }
+        }
+    }
+
+    /// Terminal path for a step that errored (sequential or mid-batch):
+    /// deliver the partial output -- flush the unstreamed tail so the
+    /// chunk-concatenation invariant holds even for errors -- then run the
+    /// full failure accounting (queue/tpot/latency samples included).
+    fn fail_step(&self, mut active: Box<Active>, e: anyhow::Error) {
+        log::error!("request {} failed mid-decode: {e:#}", active.job.req.id);
+        let stats = active.session.abort();
+        if active.streamed < stats.tokens.len() {
+            self.send_tail(&active.job, &stats.tokens[active.streamed..]);
+        }
+        let Active { job, queue_ms, started, steps, .. } = *active;
+        self.finalize_failure(job, queue_ms, started, steps, stats, format!("{e:#}"));
+    }
+
+    /// One fused batched tick over a gang of compatible lanes: liveness
+    /// checks, then every lane's `propose`, then ONE batched drafter pass,
+    /// then ONE batched target pass, then per-lane `absorb_*`.  Per-lane
+    /// failures drop only that lane (with full metric accounting); the
+    /// rest of the gang proceeds.  Sampling state is per-session, so this
+    /// tick is bit-identical to stepping each lane sequentially.
+    fn step_batch(&self, batch: Vec<Box<Active>>) {
+        // phase 0: drop dead lanes before any model work
+        let mut group: Vec<Box<Active>> = Vec::with_capacity(batch.len());
+        for mut active in batch {
+            if active.job.cancelled() {
+                let stats = active.session.abort();
+                self.flush_and_finalize(*active, stats, Some("cancelled"));
+            } else if active.job.deadline_exceeded() {
+                let stats = active.session.abort();
+                self.flush_and_finalize(*active, stats, Some("deadline"));
+            } else {
+                active.steps += 1;
+                group.push(active);
+            }
+        }
+        if group.len() <= 1 {
+            // single-lane ticks fall back to the existing per-step path
+            if let Some(active) = group.pop() {
+                if let Some(active) = self.drive_step(active) {
+                    self.requeue_step(active);
+                }
+            }
+            return;
+        }
+        let kind = group[0].session.lane_kind();
+        self.metrics.batch_ticks.inc();
+        self.metrics.batched_lane_steps.add(group.len() as u64);
+        self.metrics.batch_occupancy_peak.max_with(group.len() as i64);
+
+        // phase 1: stage every lane (draws per-lane draft seeds)
+        let mut survivors: Vec<Box<Active>> = Vec::with_capacity(group.len());
+        for mut active in group {
+            match active.session.propose() {
+                Ok(_) => survivors.push(active),
+                Err(e) => self.fail_step(active, e),
+            }
+        }
+        // phase 2: one fused drafter pass (chain/tree lanes only)
+        let survivors = self.batched_draft(kind, survivors);
+        // phase 3: one fused target pass, then per-lane absorb + epilogue
+        self.batched_verify_and_absorb(kind, survivors);
+    }
+
+    /// Fused drafter pass for a staged gang; scatters outputs back into
+    /// the sessions.  Returns the lanes still alive.
+    fn batched_draft(&self, kind: LaneKind, mut lanes: Vec<Box<Active>>) -> Vec<Box<Active>> {
+        if kind == LaneKind::Plain || lanes.is_empty() {
+            return lanes;
+        }
+        let drafter = lanes[0]
+            .drafter
+            .clone()
+            .expect("speculative lanes always carry a drafter handle");
+        let t0 = Instant::now();
+        match kind {
+            LaneKind::Chain => {
+                let results = {
+                    let mut dl: Vec<(&mut SeqState, i32, f32, u32)> =
+                        Vec::with_capacity(lanes.len());
+                    for a in lanes.iter_mut() {
+                        dl.push(
+                            a.session
+                                .chain_draft_parts()
+                                .expect("staged chain lane must expose draft parts"),
+                        );
+                    }
+                    drafter.draft_batch(&mut dl)
+                };
+                let shares = time_shares(t0.elapsed().as_micros() as u64, lanes.len());
+                let mut alive = Vec::with_capacity(lanes.len());
+                for ((mut a, res), share) in lanes.into_iter().zip(results).zip(shares) {
+                    a.session.add_decode_micros(share);
+                    match res.and_then(|out| a.session.supply_draft(out)) {
+                        Ok(()) => alive.push(a),
+                        Err(e) => self.fail_step(a, e),
+                    }
+                }
+                alive
+            }
+            LaneKind::Tree => {
+                let results = {
+                    let mut dl: Vec<(
+                        &mut SeqState,
+                        i32,
+                        &crate::spec::TreeConfig,
+                        f32,
+                        u32,
+                    )> = Vec::with_capacity(lanes.len());
+                    for a in lanes.iter_mut() {
+                        dl.push(
+                            a.session
+                                .tree_draft_parts()
+                                .expect("staged tree lane must expose draft parts"),
+                        );
+                    }
+                    drafter.draft_tree_batch(&mut dl)
+                };
+                let shares = time_shares(t0.elapsed().as_micros() as u64, lanes.len());
+                let mut alive = Vec::with_capacity(lanes.len());
+                for ((mut a, res), share) in lanes.into_iter().zip(results).zip(shares) {
+                    a.session.add_decode_micros(share);
+                    match res.and_then(|tree| a.session.supply_draft_tree(tree)) {
+                        Ok(()) => alive.push(a),
+                        Err(e) => self.fail_step(a, e),
+                    }
+                }
+                alive
+            }
+            LaneKind::Plain => unreachable!(),
+        }
+    }
+
+    /// Fused target pass for a staged gang, then per-lane absorb and the
+    /// shared epilogue (chunk delivery, requeue, finalize).
+    fn batched_verify_and_absorb(&self, kind: LaneKind, mut lanes: Vec<Box<Active>>) {
+        if lanes.is_empty() {
+            return;
+        }
+        let target = lanes[0].target.clone();
+        let t0 = Instant::now();
+        match kind {
+            LaneKind::Plain => {
+                let results = {
+                    let mut vl: Vec<(&mut SeqState, i32)> = Vec::with_capacity(lanes.len());
+                    for a in lanes.iter_mut() {
+                        vl.push(
+                            a.session
+                                .plain_verify_parts()
+                                .expect("staged plain lane must expose verify parts"),
+                        );
+                    }
+                    target.decode_batch(&mut vl)
+                };
+                let shares = time_shares(t0.elapsed().as_micros() as u64, lanes.len());
+                for ((mut a, res), share) in lanes.into_iter().zip(results).zip(shares) {
+                    a.session.add_decode_micros(share);
+                    let outcome = res.and_then(|logits| a.session.absorb_decode(logits));
+                    self.conclude_and_requeue(a, outcome);
+                }
+            }
+            LaneKind::Chain => {
+                let results = {
+                    let mut vl: Vec<(&mut SeqState, &[i32])> = Vec::with_capacity(lanes.len());
+                    for a in lanes.iter_mut() {
+                        vl.push(
+                            a.session
+                                .chain_verify_parts()
+                                .expect("staged chain lane must expose verify parts"),
+                        );
+                    }
+                    target.verify_batch(&mut vl)
+                };
+                let shares = time_shares(t0.elapsed().as_micros() as u64, lanes.len());
+                for ((mut a, res), share) in lanes.into_iter().zip(results).zip(shares) {
+                    a.session.add_decode_micros(share);
+                    let outcome = res.and_then(|plogits| a.session.absorb_verify(plogits));
+                    self.conclude_and_requeue(a, outcome);
+                }
+            }
+            LaneKind::Tree => {
+                let gamma = lanes[0].session.gamma();
+                let results = {
+                    let mut vl: Vec<(&mut SeqState, i32, &crate::spec::DraftTree)> =
+                        Vec::with_capacity(lanes.len());
+                    for a in lanes.iter_mut() {
+                        vl.push(
+                            a.session
+                                .tree_verify_parts()
+                                .expect("staged tree lane must expose verify parts"),
+                        );
+                    }
+                    target.verify_tree_batch(&mut vl, gamma)
+                };
+                let shares = time_shares(t0.elapsed().as_micros() as u64, lanes.len());
+                for ((mut a, res), share) in lanes.into_iter().zip(results).zip(shares) {
+                    a.session.add_decode_micros(share);
+                    let outcome = res.and_then(|plogits| a.session.absorb_verify(plogits));
+                    self.conclude_and_requeue(a, outcome);
+                }
             }
         }
     }
@@ -512,14 +859,14 @@ impl Worker {
         };
         let session = DecodeSession::new(
             target.clone(),
-            drafter,
+            drafter.clone(),
             params,
             req.gen.clone(),
             start,
             adaptive,
             route.text_only_draft,
         );
-        Ok(SessionParts { session, target, prompt_ids, len, drafter_key })
+        Ok(SessionParts { session, target, drafter, prompt_ids, len, drafter_key })
     }
 
     /// Resolve request pixels for a cold encode: inline pixels are served
@@ -618,6 +965,29 @@ impl Worker {
         }
     }
 
+    /// Aggregate counters every terminal outcome contributes -- success,
+    /// cancel/deadline, or failure with partial progress: generated
+    /// tokens, model-call counts, and the MAL/tree accounting they feed.
+    /// Shared between `finalize` and `finalize_failure` so the two paths
+    /// cannot drift.
+    fn record_terminal_stats(&self, stats: &GenStats) {
+        let m = &self.metrics;
+        m.tokens_generated.add(stats.tokens.len() as u64);
+        m.verify_calls.add(stats.verify_calls as u64);
+        m.draft_calls.add(stats.draft_calls as u64);
+        m.draft_tokens_accepted.add(stats.accepted_draft as u64);
+        if stats.verify_calls > 0 && stats.draft_calls > 0 {
+            m.per_request_mal.record(stats.mal());
+        }
+        if !stats.per_iter_path_depth.is_empty() {
+            m.tree_requests.inc();
+            m.tree_nodes_drafted.add(stats.tree_nodes_drafted as u64);
+            m.tree_iterations.add(stats.per_iter_path_depth.len() as u64);
+            m.tree_path_accepted
+                .add(stats.per_iter_path_depth.iter().sum::<usize>() as u64);
+        }
+    }
+
     /// Terminal path for errors (routing, prefill, or mid-decode).  The
     /// partial output generated before the error is still delivered in the
     /// failure response, keeping streamed chunks consistent with `tokens`.
@@ -653,6 +1023,11 @@ impl Worker {
             let decode_ms = stats.decode_micros as f64 / 1000.0;
             self.metrics.tpot_ms.record(decode_ms / (stats.tokens.len() - 1) as f64);
         }
+        // partial progress before the error is real serving work: keep the
+        // aggregate token/call counters (and the MAL/tree accounting they
+        // feed) consistent with the success path, so a session that dies
+        // mid-batch after N tokens still shows up in throughput and MAL
+        self.record_terminal_stats(&stats);
         let mut resp = Response::failure(job.req.id, err);
         resp.text = decode_text(&self.tokenizer, &stats.tokens, self.models.manifest.eos_id);
         resp.tokens = stats.tokens;
@@ -688,10 +1063,7 @@ impl Worker {
             "deadline" => m.requests_deadline_exceeded.inc(),
             _ => m.requests_completed.inc(),
         }
-        m.tokens_generated.add(stats.tokens.len() as u64);
-        m.verify_calls.add(stats.verify_calls as u64);
-        m.draft_calls.add(stats.draft_calls as u64);
-        m.draft_tokens_accepted.add(stats.accepted_draft as u64);
+        self.record_terminal_stats(&stats);
         if steps > 0 {
             // requests dropped before admission never ran prefill; a 0.0
             // sample would drag the histogram toward zero
@@ -700,16 +1072,6 @@ impl Worker {
             m.prefill_encode_ms.record(stats.encode_micros as f64 / 1000.0);
             m.prefill_text_ms
                 .record(stats.prefill_micros.saturating_sub(stats.encode_micros) as f64 / 1000.0);
-        }
-        if stats.verify_calls > 0 && stats.draft_calls > 0 {
-            m.per_request_mal.record(stats.mal());
-        }
-        if !stats.per_iter_path_depth.is_empty() {
-            m.tree_requests.inc();
-            m.tree_nodes_drafted.add(stats.tree_nodes_drafted as u64);
-            m.tree_iterations.add(stats.per_iter_path_depth.len() as u64);
-            m.tree_path_accepted
-                .add(stats.per_iter_path_depth.iter().sum::<usize>() as u64);
         }
         let latency_ms = started.elapsed().as_secs_f64() * 1000.0;
         m.latency_ms.record(latency_ms);
@@ -753,4 +1115,123 @@ fn decode_text(tokenizer: &Tokenizer, tokens: &[i32], eos_id: i32) -> String {
         _ => tokens,
     };
     tokenizer.decode(&visible.iter().map(|&t| t as u32).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::scripted;
+
+    fn test_worker(dir: &str) -> Worker {
+        let models = ModelSet::load(dir).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        Worker {
+            tokenizer: Arc::new(Tokenizer::load(dir).unwrap()),
+            cache: PrefixCache::new(1 << 20, metrics.clone()),
+            metrics,
+            models,
+            sched: Arc::new(Scheduler::new(16)),
+            router: Arc::new(Router::new("qwensim-L".to_string())),
+            cancels: Arc::new(Mutex::new(HashMap::new())),
+            policy: SchedPolicy::Continuous,
+            max_batch: 8,
+            workers: 1,
+        }
+    }
+
+    /// The mid-batch failure path must leave the SAME metric samples a
+    /// successful terminal leaves: queue/latency/tpot/steps histograms plus
+    /// the aggregate token/call counters for the partial progress (the old
+    /// path dropped the counters, so a session that died after N tokens
+    /// vanished from throughput and MAL).
+    #[test]
+    fn failure_path_records_full_metrics_for_partial_progress() {
+        let dir = scripted::write_test_artifacts("engine_fail_metrics", 48, false);
+        let w = test_worker(&dir);
+        let (tx, rx) = mpsc::channel();
+        let id = 7u64;
+        let job = Job {
+            req: Request::simple(id, "w5 w6", scripted::demo_image(0)),
+            enqueued: Instant::now(),
+            reply: Reply::Oneshot(tx),
+            cancel: Arc::new(AtomicBool::new(false)),
+            image_id: Some(1),
+        };
+        w.cancels.lock().unwrap().insert(id, job.cancel.clone());
+        w.metrics.inflight.add(1);
+        let stats = GenStats {
+            tokens: vec![5, 6, 7, 8],
+            verify_calls: 3,
+            draft_calls: 3,
+            accepted_draft: 1,
+            per_iter_emitted: vec![2, 1, 1],
+            prefill_micros: 900,
+            decode_micros: 3000,
+            ..GenStats::default()
+        };
+        w.finalize_failure(
+            job,
+            2.5,
+            Instant::now(),
+            4,
+            stats,
+            "injected mid-batch failure".into(),
+        );
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.finish_reason, "error");
+        assert_eq!(resp.tokens, vec![5, 6, 7, 8], "partial output must be delivered");
+        assert!(resp.error.unwrap().contains("injected"));
+        assert_eq!(resp.steps, 4);
+        let m = &w.metrics;
+        assert_eq!(m.queue_ms.count(), 1, "queue_ms sample must be recorded");
+        assert_eq!(m.latency_ms.count(), 1);
+        assert_eq!(m.tpot_ms.count(), 1, "tpot_ms sample must be recorded");
+        assert_eq!(m.steps_per_request.count(), 1);
+        assert_eq!(m.prefill_ms.count(), 1);
+        assert_eq!(m.tokens_generated.get(), 4, "partial tokens count toward throughput");
+        assert_eq!(m.verify_calls.get(), 3);
+        assert_eq!(m.draft_calls.get(), 3);
+        assert_eq!(m.draft_tokens_accepted.get(), 1);
+        assert_eq!(m.per_request_mal.count(), 1, "partial MAL must be recorded");
+        assert_eq!(m.inflight.get(), 0, "session must be freed");
+        assert_eq!(m.requests_failed.get(), 1);
+        assert!(w.cancels.lock().unwrap().is_empty(), "cancel registry must be cleaned");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn time_shares_sum_to_total_without_truncation() {
+        let s: Vec<u64> = time_shares(10, 4).collect();
+        assert_eq!(s, vec![3, 3, 2, 2]);
+        assert_eq!(time_shares(3, 8).sum::<u64>(), 3, "sub-lane totals must not vanish");
+        assert_eq!(time_shares(0, 3).sum::<u64>(), 0);
+        assert_eq!(time_shares(7, 1).sum::<u64>(), 7);
+    }
+
+    /// Routing-level failures (no prefill ran) keep the pre-existing
+    /// skip rules: no prefill/tpot samples, zero counters.
+    #[test]
+    fn failure_path_without_progress_skips_model_histograms() {
+        let dir = scripted::write_test_artifacts("engine_fail_empty", 48, false);
+        let w = test_worker(&dir);
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            req: Request::simple(9, "w5", scripted::demo_image(1)),
+            enqueued: Instant::now(),
+            reply: Reply::Oneshot(tx),
+            cancel: Arc::new(AtomicBool::new(false)),
+            image_id: Some(2),
+        };
+        w.metrics.inflight.add(1);
+        w.finalize_failure(job, 0.5, Instant::now(), 1, GenStats::default(), "no route".into());
+        let resp = rx.recv().unwrap();
+        assert!(resp.tokens.is_empty());
+        let m = &w.metrics;
+        assert_eq!(m.queue_ms.count(), 1);
+        assert_eq!(m.prefill_ms.count(), 0, "no prefill ran -> no prefill sample");
+        assert_eq!(m.tpot_ms.count(), 0, "a single token cannot yield a tpot sample");
+        assert_eq!(m.tokens_generated.get(), 0);
+        assert_eq!(m.per_request_mal.count(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

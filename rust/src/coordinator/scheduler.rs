@@ -20,12 +20,20 @@
 //! class round-robin, and interactive steps preempt batch steps up to the
 //! aging limit.
 //!
+//! `pop_batch` extends the single pop for cross-request batching: the
+//! first item is chosen exactly as `pop` would (aging policy included),
+//! then up to `max - 1` queued items with the same caller-supplied key are
+//! ganged into the same dispatch -- the engine keys steps by lane
+//! compatibility (`coordinator::engine`) and leaves admissions keyless so
+//! they always dispatch alone.  A gang counts as one dispatch for aging.
+//!
 //! Invariants (property-tested below):
 //!   * FIFO within a class
 //!   * no starvation of either class
 //!   * admissions are rejected whenever depth >= capacity; only requeues
 //!     may push depth past it
 //!   * every submitted job is either dispatched exactly once or rejected
+//!     (gangs included: `pop_batch` never duplicates or drops an item)
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -113,6 +121,50 @@ impl<T> Scheduler<T> {
         loop {
             if let Some(item) = Self::pick(&mut s) {
                 return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Blocking batched pop: dispatch the first item exactly as `pop`
+    /// would (the two-class aging policy decides it), then gang up to
+    /// `max - 1` more items whose `key` equals the first's -- scanning
+    /// interactive then batch, front-to-back, so FIFO order is preserved
+    /// among the ganged items and untouched for everything skipped.
+    /// Items whose key is `None` are never ganged and never stolen (the
+    /// engine's admissions).  The whole gang counts as ONE dispatch for
+    /// the aging rule -- lanes riding along are free work on a pass that
+    /// runs anyway.  Returns None once closed AND drained.
+    pub fn pop_batch<K: PartialEq>(
+        &self,
+        max: usize,
+        key: impl Fn(&T) -> Option<K>,
+    ) -> Option<Vec<T>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(first) = Self::pick(&mut s) {
+                let k = key(&first);
+                let mut gang = Vec::with_capacity(max.max(1));
+                gang.push(first);
+                if let Some(k) = k {
+                    let State { interactive, batch, .. } = &mut *s;
+                    for q in [interactive, batch] {
+                        let mut i = 0;
+                        while i < q.len() && gang.len() < max {
+                            if key(&q[i]).is_some_and(|ki| ki == k) {
+                                if let Some(item) = q.remove(i) {
+                                    gang.push(item);
+                                }
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                }
+                return Some(gang);
             }
             if s.closed {
                 return None;
@@ -253,6 +305,118 @@ mod tests {
             s.requeue(x, Priority::Interactive);
         }
         assert_eq!(order, vec!["a", "b", "a", "b", "a", "b"]);
+    }
+
+    /// Key items by sign: positive values gang together, negative values
+    /// gang together, zero is an "admission" (never ganged, never stolen).
+    fn sign_key(x: &i64) -> Option<i64> {
+        match x.cmp(&0) {
+            std::cmp::Ordering::Greater => Some(1),
+            std::cmp::Ordering::Less => Some(-1),
+            std::cmp::Ordering::Equal => None,
+        }
+    }
+
+    #[test]
+    fn pop_batch_gangs_compatible_items_across_classes() {
+        let s = Scheduler::new(64);
+        s.submit(1i64, Priority::Interactive);
+        s.submit(-5, Priority::Interactive);
+        s.submit(2, Priority::Interactive);
+        s.submit(3, Priority::Batch);
+        let gang = s.pop_batch(8, sign_key).unwrap();
+        // first item decides the key; compatible items join from both
+        // queues in FIFO order, incompatible ones keep their place
+        assert_eq!(gang, vec![1, 2, 3]);
+        assert_eq!(s.pop_batch(8, sign_key).unwrap(), vec![-5]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_respects_max_and_keyless_items() {
+        let s = Scheduler::new(64);
+        for i in 1..=5i64 {
+            s.submit(i, Priority::Interactive);
+        }
+        let gang = s.pop_batch(3, sign_key).unwrap();
+        assert_eq!(gang, vec![1, 2, 3], "gang is capped at max");
+        assert_eq!(s.len(), 2);
+
+        // a keyless (admission) head is dispatched alone, and keyless
+        // items are never stolen into someone else's gang
+        let s = Scheduler::new(64);
+        s.submit(0i64, Priority::Interactive);
+        s.submit(7, Priority::Interactive);
+        s.submit(0, Priority::Interactive);
+        s.submit(8, Priority::Interactive);
+        assert_eq!(s.pop_batch(8, sign_key).unwrap(), vec![0]);
+        assert_eq!(s.pop_batch(8, sign_key).unwrap(), vec![7, 8]);
+        assert_eq!(s.pop_batch(8, sign_key).unwrap(), vec![0]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_drains_then_none_after_close() {
+        let s = Scheduler::new(8);
+        s.submit(4i64, Priority::Batch);
+        s.submit(5, Priority::Batch);
+        s.close();
+        assert_eq!(s.pop_batch(8, sign_key).unwrap(), vec![4, 5]);
+        assert_eq!(s.pop_batch(8, sign_key), None);
+    }
+
+    #[test]
+    fn prop_pop_batch_dispatches_exactly_once() {
+        propcheck("pop_batch exactly-once dispatch", 40, |rng: &mut Rng| {
+            let cap = 4 + rng.range(40);
+            let s = Scheduler::new(cap);
+            let mut submitted: Vec<i64> = Vec::new();
+            let mut popped: Vec<i64> = Vec::new();
+            let mut next = 1i64;
+            for _ in 0..(10 + rng.range(150)) {
+                if rng.range(2) == 0 {
+                    // value sign picks the gang key; ~1/5 are "admissions"
+                    let v = match rng.range(5) {
+                        0 => 0,
+                        n if n < 3 => next,
+                        _ => -next,
+                    };
+                    next += 1;
+                    let class = if rng.range(2) == 0 {
+                        Priority::Interactive
+                    } else {
+                        Priority::Batch
+                    };
+                    if s.submit(v, class) == Submit::Accepted {
+                        submitted.push(v);
+                    }
+                } else if !s.is_empty() {
+                    let max = 1 + rng.range(6);
+                    let gang = s.pop_batch(max, sign_key).unwrap();
+                    if gang.len() > 1 {
+                        let k = sign_key(&gang[0]);
+                        assert!(k.is_some(), "keyless items must dispatch alone");
+                        assert!(
+                            gang.iter().all(|x| sign_key(x) == k),
+                            "gang mixes keys: {gang:?}"
+                        );
+                        assert!(gang.len() <= max);
+                    }
+                    popped.extend(gang);
+                }
+            }
+            while !s.is_empty() {
+                popped.extend(s.pop_batch(4, sign_key).unwrap());
+            }
+            let mut a = submitted.clone();
+            let mut b = popped.clone();
+            a.sort();
+            b.sort();
+            if a != b {
+                return Err(format!("submitted {a:?} != dispatched {b:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

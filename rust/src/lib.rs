@@ -11,8 +11,9 @@
 //!   decoding engine (chain and token-tree drafting, see
 //!   `docs/tree_speculation.md`; resumable per-request sessions,
 //!   `spec::session`), coordinator (router/scheduler/worker pool with
-//!   iteration-level continuous batching, streaming, cancellation, and
-//!   deadlines -- see `docs/serving.md`), multimodal prefix cache
+//!   iteration-level continuous batching, cross-request batched model
+//!   execution with a bit-identity guarantee, streaming, cancellation,
+//!   and deadlines -- see `docs/serving.md`), multimodal prefix cache
 //!   (content-addressed vision-encode reuse + KV snapshot forking,
 //!   `cache`, see `docs/prefix_cache.md`), TCP server, workload +
 //!   evaluation harness.  Python never runs here.

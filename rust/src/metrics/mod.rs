@@ -37,6 +37,11 @@ impl Gauge {
         self.0.fetch_add(d, Ordering::Relaxed);
     }
 
+    /// Raise the gauge to `v` if it is below (running-maximum tracking).
+    pub fn max_with(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -128,6 +133,20 @@ pub struct Metrics {
     pub prefix_cache_bytes: Gauge,
     /// entries currently held by the prefix cache (all three tables)
     pub prefix_cache_entries: Gauge,
+    /// fused multi-lane ticks executed by the batched engine (single-lane
+    /// dispatches take the non-batched path and are not counted here)
+    pub batch_ticks: Counter,
+    /// decode steps executed inside fused ticks (sum of tick occupancies;
+    /// counters, not a histogram: one sample per tick would grow without
+    /// bound on a long-lived server -- same rationale as
+    /// `tree_path_accepted`.  Mean occupancy = batched_lane_steps /
+    /// batch_ticks)
+    pub batched_lane_steps: Counter,
+    /// configured ganging bound (`EngineConfig::max_batch`; 1 = batching
+    /// disabled)
+    pub batch_max_lanes: Gauge,
+    /// largest fused-tick occupancy observed (running maximum)
+    pub batch_occupancy_peak: Gauge,
     pub latency_ms: Histogram,
     pub prefill_ms: Histogram,
     /// image-encode share of prefill time (0 for warm encodes/prefixes)
@@ -225,12 +244,26 @@ impl Metrics {
         out.insert("prefill_ms_mean".into(), self.prefill_ms.mean());
         out.insert("prefill_encode_ms_mean".into(), self.prefill_encode_ms.mean());
         out.insert("prefill_text_ms_mean".into(), self.prefill_text_ms.mean());
+        out.insert("batch_ticks".into(), self.batch_ticks.get() as f64);
+        out.insert("batched_lane_steps".into(), self.batched_lane_steps.get() as f64);
+        out.insert("batch_max_lanes".into(), self.batch_max_lanes.get() as f64);
+        out.insert("batch_occupancy_mean".into(), self.batch_occupancy_mean());
+        out.insert("batch_occupancy_max".into(), self.batch_occupancy_peak.get() as f64);
         out.insert("tree_requests".into(), self.tree_requests.get() as f64);
         out.insert("tree_nodes_drafted".into(), self.tree_nodes_drafted.get() as f64);
         out.insert("tree_iterations".into(), self.tree_iterations.get() as f64);
         out.insert("tree_path_depth_mean".into(), self.tree_path_depth_mean());
         out.insert("branch_utilization".into(), self.branch_utilization());
         out
+    }
+
+    /// Mean lanes per fused tick (0.0 before any multi-lane tick ran).
+    pub fn batch_occupancy_mean(&self) -> f64 {
+        let ticks = self.batch_ticks.get();
+        if ticks == 0 {
+            return 0.0;
+        }
+        self.batched_lane_steps.get() as f64 / ticks as f64
     }
 
     /// Fraction of admitted prefills served from the prefix cache.
@@ -326,6 +359,31 @@ mod tests {
         assert!(r.contains_key("vision_encode_fills"));
         assert!(r.contains_key("prefill_encode_ms_mean"));
         assert!(r.contains_key("prefill_text_ms_mean"));
+        assert!(r.contains_key("batch_ticks"));
+        assert!(r.contains_key("batched_lane_steps"));
+        assert!(r.contains_key("batch_max_lanes"));
+        assert!(r.contains_key("batch_occupancy_mean"));
+        assert!(r.contains_key("batch_occupancy_max"));
+    }
+
+    #[test]
+    fn batch_occupancy_aggregates() {
+        let m = Metrics::new();
+        assert_eq!(m.batch_occupancy_mean(), 0.0);
+        m.batch_ticks.inc();
+        m.batch_ticks.inc();
+        m.batched_lane_steps.add(3);
+        m.batched_lane_steps.add(5);
+        m.batch_occupancy_peak.max_with(3);
+        m.batch_occupancy_peak.max_with(5);
+        m.batch_occupancy_peak.max_with(4); // running max keeps 5
+        m.batch_max_lanes.set(8);
+        let r = m.render();
+        assert_eq!(r["batch_ticks"], 2.0);
+        assert_eq!(r["batched_lane_steps"], 8.0);
+        assert_eq!(r["batch_max_lanes"], 8.0);
+        assert!((r["batch_occupancy_mean"] - 4.0).abs() < 1e-12);
+        assert_eq!(r["batch_occupancy_max"], 5.0);
     }
 
     #[test]

@@ -393,6 +393,154 @@ impl TargetModel {
         state.pos += 1;
         Ok(logits)
     }
+
+    /// Cross-request batched decode.  The scripted backend computes each
+    /// lane from its own per-sequence script state, in lane order, so lane
+    /// order cannot leak between requests; PJRT packs along a batch axis
+    /// when the artifact exports a `decode_batch` entry point and falls
+    /// back to per-lane calls otherwise.  Per-lane `Result`s isolate one
+    /// faulty lane from the rest of the batch.
+    pub fn decode_batch(&self, lanes: &mut [(&mut SeqState, i32)]) -> Vec<Result<Vec<f32>>> {
+        if self.is_scripted() || !self.entry.entries.contains_key("decode_batch") || lanes.len() < 2
+        {
+            return lanes.iter_mut().map(|(st, tok)| self.decode(st, *tok)).collect();
+        }
+        match self.decode_batch_packed(lanes) {
+            Ok(rows) => rows.into_iter().map(Ok).collect(),
+            Err(e) => {
+                // the packed path validates every output before mutating any
+                // lane, so a fused-call failure can retry per-lane: only the
+                // genuinely faulty lane errors, the rest of the gang proceeds
+                log::warn!("target::decode_batch packed call failed ({e:#}); retrying per-lane");
+                lanes.iter_mut().map(|(st, tok)| self.decode(st, *tok)).collect()
+            }
+        }
+    }
+
+    /// PJRT packed decode: tokens [B], positions [B], KVs as a tuple.
+    fn decode_batch_packed(&self, lanes: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
+        let b = lanes.len();
+        let exec = self.set.exec(&self.entry, "decode_batch")?;
+        let tokens: Vec<i32> = lanes.iter().map(|(_, t)| *t).collect();
+        let positions: Vec<i32> = lanes.iter().map(|(st, _)| st.pos).collect();
+        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, _)| st.kv.clone()).collect());
+        let out = exec.call(&[lit_i32(&tokens, &[b])?, lit_i32(&positions, &[b])?, kvs])?;
+        let [logits, kvs] = expect_outputs::<2>(out, "target::decode_batch")?;
+        let rows = unpack_rows(&logits, b, self.entry.vocab, "target::decode_batch")?;
+        scatter_kvs(lanes.iter_mut().map(|(st, _)| &mut **st), kvs, "target::decode_batch")?;
+        for (st, _) in lanes.iter_mut() {
+            st.pos += 1;
+        }
+        Ok(rows)
+    }
+
+    /// Cross-request batched verification (see `decode_batch` for the
+    /// lane-isolation and fallback contract).  Positions are not advanced
+    /// (same contract as `verify`).
+    pub fn verify_batch(&self, lanes: &mut [(&mut SeqState, &[i32])]) -> Vec<Result<Tensor>> {
+        let uniform = lanes
+            .windows(2)
+            .all(|w| w[0].1.len() == w[1].1.len());
+        if self.is_scripted()
+            || !self.entry.entries.contains_key("verify_batch")
+            || lanes.len() < 2
+            || !uniform
+        {
+            return lanes.iter_mut().map(|(st, toks)| self.verify(st, *toks)).collect();
+        }
+        match self.verify_batch_packed(lanes) {
+            Ok(rows) => rows.into_iter().map(Ok).collect(),
+            Err(e) => {
+                // no lane state was mutated (outputs validate before the KV
+                // scatter), so per-lane retry isolates the faulty lane
+                log::warn!("target::verify_batch packed call failed ({e:#}); retrying per-lane");
+                lanes.iter_mut().map(|(st, toks)| self.verify(st, *toks)).collect()
+            }
+        }
+    }
+
+    /// PJRT packed verify: tokens [B x (gamma+1)], positions [B], KV tuple;
+    /// returns per-lane [(gamma+1) x V] logits.
+    fn verify_batch_packed(&self, lanes: &mut [(&mut SeqState, &[i32])]) -> Result<Vec<Tensor>> {
+        let b = lanes.len();
+        let w = lanes[0].1.len();
+        let exec = self.set.exec(&self.entry, "verify_batch")?;
+        let tokens: Vec<i32> = lanes.iter().flat_map(|(_, t)| t.iter().copied()).collect();
+        let positions: Vec<i32> = lanes.iter().map(|(st, _)| st.pos).collect();
+        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, _)| st.kv.clone()).collect());
+        let out = exec.call(&[lit_i32(&tokens, &[b, w])?, lit_i32(&positions, &[b])?, kvs])?;
+        let [logits, kvs] = expect_outputs::<2>(out, "target::verify_batch")?;
+        let v = self.entry.vocab;
+        let flat = crate::runtime::to_vec_f32(&logits)?;
+        if flat.len() != b * w * v {
+            return Err(anyhow!(
+                "target::verify_batch: expected {b}x{w}x{v} logits, got {} values",
+                flat.len()
+            ));
+        }
+        // build every fallible output BEFORE the KV scatter: lane state
+        // must stay untouched on any Err so the caller's per-lane retry
+        // cannot double-apply the pass
+        let rows: Vec<Tensor> = flat
+            .chunks(w * v)
+            .map(|c| Tensor::new(c.to_vec(), vec![w, v]))
+            .collect::<Result<_>>()?;
+        scatter_kvs(lanes.iter_mut().map(|(st, _)| &mut **st), kvs, "target::verify_batch")?;
+        Ok(rows)
+    }
+
+    /// Cross-request batched tree verification.  Always per-lane: tree
+    /// linearization is lane-specific, and no batched tree-attention entry
+    /// point exists in the artifact schema yet.
+    pub fn verify_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &DraftTree)],
+        gamma: usize,
+    ) -> Vec<Result<Tensor>> {
+        lanes
+            .iter_mut()
+            .map(|(st, last, tree)| self.verify_tree(st, *last, *tree, gamma))
+            .collect()
+    }
+}
+
+/// Scatter a returned KV tuple back onto the lanes of a packed batch
+/// call.  Packed paths must call this only after validating every other
+/// output: once the scatter runs, lane state is committed, so the
+/// caller's per-lane fallback on error stays safe (no double-apply).
+fn scatter_kvs<'a>(
+    states: impl ExactSizeIterator<Item = &'a mut SeqState>,
+    kvs: xla::Literal,
+    entry: &str,
+) -> Result<()> {
+    let n = states.len();
+    let xla::Literal::Tuple(parts) = kvs else {
+        return Err(anyhow!("{entry}: expected a KV tuple output"));
+    };
+    if parts.len() != n {
+        return Err(anyhow!("{entry}: expected {n} KV parts, got {}", parts.len()));
+    }
+    for (st, kv) in states.zip(parts) {
+        st.kv = kv;
+    }
+    Ok(())
+}
+
+/// Split a packed [B x V] logits literal into per-lane rows.
+fn unpack_rows(
+    logits: &xla::Literal,
+    b: usize,
+    vocab: usize,
+    entry: &str,
+) -> Result<Vec<Vec<f32>>> {
+    let flat = crate::runtime::to_vec_f32(logits)?;
+    if flat.len() != b * vocab {
+        return Err(anyhow!(
+            "{entry}: expected {b}x{vocab} logits, got {} values",
+            flat.len()
+        ));
+    }
+    Ok(flat.chunks(vocab).map(|c| c.to_vec()).collect())
 }
 
 /// Tokens + raw q-logits produced by one fused draft call.
@@ -553,6 +701,104 @@ impl DraftModel {
         crate::spec::decoder::draft_tree_via_chain(self, state, last, cfg, temperature, seed)
     }
 
+    /// Cross-request batched drafting: each lane drafts from its own
+    /// state under its own (last, temperature, seed).  Scripted lanes are
+    /// computed independently in lane order (no cross-lane leakage); PJRT
+    /// packs along a batch axis when the artifact exports a `draft_batch`
+    /// entry point, else falls back to per-lane calls.
+    #[allow(clippy::type_complexity)]
+    pub fn draft_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, f32, u32)],
+    ) -> Vec<Result<DraftOutput>> {
+        if self.is_scripted() || !self.entry.entries.contains_key("draft_batch") || lanes.len() < 2
+        {
+            return lanes
+                .iter_mut()
+                .map(|(st, last, t, seed)| self.draft(st, *last, *t, *seed))
+                .collect();
+        }
+        match self.draft_batch_packed(lanes) {
+            Ok(outs) => outs.into_iter().map(Ok).collect(),
+            Err(e) => {
+                // no lane state was mutated (outputs validate before the KV
+                // scatter), so per-lane retry isolates the faulty lane
+                log::warn!("drafter::draft_batch packed call failed ({e:#}); retrying per-lane");
+                lanes
+                    .iter_mut()
+                    .map(|(st, last, t, seed)| self.draft(st, *last, *t, *seed))
+                    .collect()
+            }
+        }
+    }
+
+    /// PJRT packed draft: last [B], positions [B], KV tuple, temperatures
+    /// [B], seeds [B] -> tokens [B x gamma], qlogits [B x gamma x V], KVs.
+    #[allow(clippy::type_complexity)]
+    fn draft_batch_packed(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, f32, u32)],
+    ) -> Result<Vec<DraftOutput>> {
+        let b = lanes.len();
+        let gamma = self.set.manifest.gamma;
+        let exec = self.set.exec(&self.entry, "draft_batch")?;
+        let lasts: Vec<i32> = lanes.iter().map(|(_, l, _, _)| *l).collect();
+        let positions: Vec<i32> = lanes.iter().map(|(st, ..)| st.pos).collect();
+        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, ..)| st.kv.clone()).collect());
+        let temps: Vec<f32> = lanes.iter().map(|(_, _, t, _)| *t).collect();
+        let seeds: Vec<u32> = lanes.iter().map(|(_, _, _, s)| *s).collect();
+        let out = exec.call(&[
+            lit_i32(&lasts, &[b])?,
+            lit_i32(&positions, &[b])?,
+            kvs,
+            lit_f32(&temps, &[b])?,
+            xla::Literal::vec1(&seeds),
+        ])?;
+        let [tokens, qlogits, kvs] = expect_outputs::<3>(out, "drafter::draft_batch")?;
+        let v = self.entry.vocab;
+        if gamma == 0 || v == 0 {
+            return Err(anyhow!("drafter::draft_batch: degenerate gamma={gamma} vocab={v}"));
+        }
+        let toks = to_vec_i32(&tokens)?;
+        let flat = crate::runtime::to_vec_f32(&qlogits)?;
+        if toks.len() != b * gamma || flat.len() != b * gamma * v {
+            return Err(anyhow!(
+                "drafter::draft_batch: expected {b}x{gamma} tokens and {b}x{gamma}x{v} \
+                 qlogits, got {} and {}",
+                toks.len(),
+                flat.len()
+            ));
+        }
+        // build every fallible output BEFORE the KV scatter (see
+        // `verify_batch_packed`): on any Err, no lane state has changed
+        let outs: Vec<DraftOutput> = toks
+            .chunks(gamma)
+            .zip(flat.chunks(gamma * v))
+            .map(|(tc, qc)| {
+                Ok(DraftOutput {
+                    tokens: tc.to_vec(),
+                    qlogits: Tensor::new(qc.to_vec(), vec![gamma, v])?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        scatter_kvs(lanes.iter_mut().map(|(st, ..)| &mut **st), kvs, "drafter::draft_batch")?;
+        Ok(outs)
+    }
+
+    /// Cross-request batched tree drafting.  Always per-lane (per-lane
+    /// tree shapes; the fused PJRT drafters have no tree entry point, so
+    /// their per-lane path already degenerates to the chain draft).
+    #[allow(clippy::type_complexity)]
+    pub fn draft_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &crate::spec::tree::TreeConfig, f32, u32)],
+    ) -> Vec<Result<DraftTree>> {
+        lanes
+            .iter_mut()
+            .map(|(st, last, cfg, t, seed)| self.draft_tree(st, *last, *cfg, *t, *seed))
+            .collect()
+    }
+
     /// Step-wise decode (reference path + TVD distribution analysis).
     pub fn decode(&self, state: &mut SeqState, token: i32) -> Result<Vec<f32>> {
         if self.is_scripted() {
@@ -622,6 +868,57 @@ mod tests {
         };
         assert!(with.bytes() > without.bytes());
         assert!(without.bytes() >= 8 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn scripted_batch_entry_points_match_per_lane_calls() {
+        // batched decode/verify over the scripted backend must equal the
+        // per-lane calls and be independent of lane order: each lane owns
+        // its script + position, so nothing can leak across lanes
+        let dir = scripted::write_test_artifacts("models_batch", 48, false);
+        let set = ModelSet::load(&dir).unwrap();
+        let target = set.target("qwensim-L").unwrap();
+        let prefill = |phase: usize| {
+            let img = scripted::demo_image(phase);
+            let enc = target.encode_image(&img).unwrap();
+            target.prefill_encoded(&enc, &[1, 5, 9], 3).unwrap().1
+        };
+        let (mut a, mut b) = (prefill(0), prefill(1));
+        let (mut a2, mut b2) = (prefill(0), prefill(1));
+        let mut fwd_lanes = vec![(&mut a, 7), (&mut b, 9)];
+        let fwd: Vec<Vec<f32>> = target
+            .decode_batch(&mut fwd_lanes)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        let mut rev_lanes = vec![(&mut b2, 9), (&mut a2, 7)];
+        let rev: Vec<Vec<f32>> = target
+            .decode_batch(&mut rev_lanes)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(fwd[0], rev[1], "lane order must not leak between scripted streams");
+        assert_eq!(fwd[1], rev[0]);
+        assert_eq!(a.pos, 1);
+        // per-lane reference call
+        let mut r = prefill(1);
+        assert_eq!(fwd[1], target.decode(&mut r, 9).unwrap());
+
+        // verify_batch leaves positions untouched and matches verify()
+        let gamma1 = set.manifest.gamma + 1;
+        let (mut a, mut b) = (prefill(2), prefill(3));
+        let pos_before = a.pos;
+        let (wa, wb) = (vec![5i32; gamma1], vec![6i32; gamma1]);
+        let mut lanes: Vec<(&mut SeqState, &[i32])> = vec![(&mut a, &wa), (&mut b, &wb)];
+        let out: Vec<_> = target
+            .verify_batch(&mut lanes)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(a.pos, pos_before, "verify must not advance positions");
+        let mut r = prefill(3);
+        assert_eq!(out[1].data, target.verify(&mut r, &wb).unwrap().data);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //! script deterministically and T>0 losslessness is testable seed by seed.
 //! `SeqState.pos` holds the *stream* index (same convention as
 //! `spec::testing`); the opaque KV literal is never read.
+//!
+//! Every op here reads ONLY the `SeqState` it is handed -- there is no
+//! module-level state -- so the batched entry points
+//! (`TargetModel::decode_batch` et al) can interleave lanes in any order
+//! and each lane still follows its own script exactly: the scripted half
+//! of the cross-request batching determinism argument
+//! (`spec::testing::run_batched_vs_sequential`).
 
 use std::sync::Arc;
 
@@ -472,6 +479,41 @@ mod tests {
                 .count()
         };
         assert!(agree(true) > agree(false));
+    }
+
+    #[test]
+    fn interleaved_lanes_follow_their_own_scripts() {
+        // any interleaving of per-lane ops must equal the isolated runs:
+        // the invariant batched execution (decode_batch/verify_batch)
+        // relies on to keep ganged requests bit-identical to sequential
+        let m = toy_manifest();
+        let img_a = vec![0.2f32; 768];
+        let img_b = vec![0.9f32; 768];
+        let prompt = vec![1, 5, 6];
+        let run_isolated = |img: &[f32]| {
+            let (_, mut st) = prefill_target(&m, m.vocab_size, img, &prompt, 3).unwrap();
+            (0..6)
+                .map(|_| {
+                    crate::spec::sampler::argmax(&decode_target(m.vocab_size, &mut st).unwrap())
+                })
+                .collect::<Vec<_>>()
+        };
+        let (iso_a, iso_b) = (run_isolated(&img_a), run_isolated(&img_b));
+        assert_ne!(iso_a, iso_b, "distinct images must yield distinct streams");
+
+        let (_, mut a) = prefill_target(&m, m.vocab_size, &img_a, &prompt, 3).unwrap();
+        let (_, mut b) = prefill_target(&m, m.vocab_size, &img_b, &prompt, 3).unwrap();
+        let mut inter_a = Vec::new();
+        let mut inter_b = Vec::new();
+        for i in 0..12 {
+            // alternate lanes (the fused-tick interleaving)
+            let (st, out) = if i % 2 == 0 { (&mut a, &mut inter_a) } else { (&mut b, &mut inter_b) };
+            out.push(crate::spec::sampler::argmax(
+                &decode_target(m.vocab_size, st).unwrap(),
+            ));
+        }
+        assert_eq!(inter_a, iso_a, "interleaving must not perturb lane A");
+        assert_eq!(inter_b, iso_b, "interleaving must not perturb lane B");
     }
 
     #[test]

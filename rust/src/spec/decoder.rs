@@ -86,6 +86,34 @@ pub trait TargetBackend {
     ) -> Result<Tensor> {
         verify_tree_linearized(self, st, last, tree, gamma)
     }
+
+    /// Batched single-token decode across independent lanes.  The default
+    /// computes each lane from its own per-sequence state in lane order --
+    /// exactly the sequential semantics, so lane order cannot leak between
+    /// requests.  Backends with a batched executable override this to pack
+    /// along a batch axis (`models::TargetModel`).  Per-lane `Result`s
+    /// isolate one faulty lane from the rest of the batch.
+    fn decode_batch(&self, lanes: &mut [(&mut SeqState, i32)]) -> Vec<Result<Vec<f32>>> {
+        lanes.iter_mut().map(|(st, tok)| self.decode(st, *tok)).collect()
+    }
+
+    /// Batched (gamma+1)-window verification across independent lanes
+    /// (see `decode_batch` for the lane-isolation contract).
+    fn verify_batch(&self, lanes: &mut [(&mut SeqState, &[i32])]) -> Vec<Result<Tensor>> {
+        lanes.iter_mut().map(|(st, toks)| self.verify(st, *toks)).collect()
+    }
+
+    /// Batched flattened-tree verification across independent lanes.
+    fn verify_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &DraftTree)],
+        gamma: usize,
+    ) -> Vec<Result<Tensor>> {
+        lanes
+            .iter_mut()
+            .map(|(st, last, tree)| self.verify_tree(st, *last, *tree, gamma))
+            .collect()
+    }
 }
 
 /// Chain-fallback tree verification: pad the linearized tree to the fixed
@@ -160,6 +188,22 @@ impl<T: TargetBackend + ?Sized> TargetBackend for &T {
     ) -> Result<Tensor> {
         (**self).verify_tree(st, last, tree, gamma)
     }
+
+    fn decode_batch(&self, lanes: &mut [(&mut SeqState, i32)]) -> Vec<Result<Vec<f32>>> {
+        (**self).decode_batch(lanes)
+    }
+
+    fn verify_batch(&self, lanes: &mut [(&mut SeqState, &[i32])]) -> Vec<Result<Tensor>> {
+        (**self).verify_batch(lanes)
+    }
+
+    fn verify_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &DraftTree)],
+        gamma: usize,
+    ) -> Vec<Result<Tensor>> {
+        (**self).verify_tree_batch(lanes, gamma)
+    }
 }
 
 /// Drafter operations the decoder needs.
@@ -209,6 +253,34 @@ pub trait DraftBackend {
         seed: u32,
     ) -> Result<DraftTree> {
         draft_tree_via_chain(self, st, last, cfg, temperature, seed)
+    }
+
+    /// Batched fused drafting across independent lanes, each with its own
+    /// (last, temperature, seed) -- per-lane sampling state, so lane order
+    /// cannot leak between requests.  Default loops; backends with a
+    /// batched executable pack along a batch axis (`models::DraftModel`).
+    #[allow(clippy::type_complexity)]
+    fn draft_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, f32, u32)],
+    ) -> Vec<Result<DraftOutput>> {
+        lanes
+            .iter_mut()
+            .map(|(st, last, t, seed)| self.draft(st, *last, *t, *seed))
+            .collect()
+    }
+
+    /// Batched tree drafting across independent lanes (per-lane tree
+    /// shape; see `draft_batch` for the lane-isolation contract).
+    #[allow(clippy::type_complexity)]
+    fn draft_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &TreeConfig, f32, u32)],
+    ) -> Vec<Result<DraftTree>> {
+        lanes
+            .iter_mut()
+            .map(|(st, last, cfg, t, seed)| self.draft_tree(st, *last, *cfg, *t, *seed))
+            .collect()
     }
 }
 
@@ -275,6 +347,22 @@ impl<D: DraftBackend + ?Sized> DraftBackend for &D {
     ) -> Result<DraftTree> {
         (**self).draft_tree(st, last, cfg, temperature, seed)
     }
+
+    #[allow(clippy::type_complexity)]
+    fn draft_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, f32, u32)],
+    ) -> Vec<Result<DraftOutput>> {
+        (**self).draft_batch(lanes)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn draft_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &TreeConfig, f32, u32)],
+    ) -> Vec<Result<DraftTree>> {
+        (**self).draft_tree_batch(lanes)
+    }
 }
 
 impl TargetBackend for TargetModel {
@@ -311,6 +399,22 @@ impl TargetBackend for TargetModel {
         gamma: usize,
     ) -> Result<Tensor> {
         TargetModel::verify_tree(self, st, last, tree, gamma)
+    }
+
+    fn decode_batch(&self, lanes: &mut [(&mut SeqState, i32)]) -> Vec<Result<Vec<f32>>> {
+        TargetModel::decode_batch(self, lanes)
+    }
+
+    fn verify_batch(&self, lanes: &mut [(&mut SeqState, &[i32])]) -> Vec<Result<Tensor>> {
+        TargetModel::verify_batch(self, lanes)
+    }
+
+    fn verify_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &DraftTree)],
+        gamma: usize,
+    ) -> Vec<Result<Tensor>> {
+        TargetModel::verify_tree_batch(self, lanes, gamma)
     }
 }
 
@@ -354,6 +458,22 @@ impl DraftBackend for DraftModel {
         seed: u32,
     ) -> Result<DraftTree> {
         DraftModel::draft_tree(self, st, last, cfg, temperature, seed)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn draft_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, f32, u32)],
+    ) -> Vec<Result<DraftOutput>> {
+        DraftModel::draft_batch(self, lanes)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn draft_tree_batch(
+        &self,
+        lanes: &mut [(&mut SeqState, i32, &TreeConfig, f32, u32)],
+    ) -> Vec<Result<DraftTree>> {
+        DraftModel::draft_tree_batch(self, lanes)
     }
 }
 
@@ -1018,6 +1138,41 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn batch_defaults_match_per_lane_calls_and_stay_independent() {
+        // the trait-default batch entry points must equal per-lane calls,
+        // and a lane's result must not depend on its batch position
+        let t = MockTarget::new((10..40).collect());
+        let mk = |pos: i32| SeqState { kv: xla::Literal::scalar(0.0f32), pos, script: None };
+        // forward order
+        let (mut a, mut b) = (mk(0), mk(7));
+        let mut lanes = vec![(&mut a, 10), (&mut b, 17)];
+        let fwd: Vec<Vec<f32>> =
+            t.decode_batch(&mut lanes).into_iter().map(|r| r.unwrap()).collect();
+        // reverse order over fresh states
+        let (mut a2, mut b2) = (mk(0), mk(7));
+        let mut lanes = vec![(&mut b2, 17), (&mut a2, 10)];
+        let rev: Vec<Vec<f32>> =
+            t.decode_batch(&mut lanes).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(fwd[0], rev[1], "lane order must not leak into results");
+        assert_eq!(fwd[1], rev[0]);
+        assert_eq!(a.pos, 1, "decode advances each lane's own position");
+        assert_eq!(b.pos, 8);
+        // per-lane reference
+        let mut r = mk(0);
+        let single = t.decode(&mut r, 10).unwrap();
+        assert_eq!(fwd[0], single);
+
+        // verify_batch: windows per lane, positions untouched
+        let (mut a, mut b) = (mk(0), mk(3));
+        let (wa, wb) = (vec![10; MOCK_GAMMA + 1], vec![13; MOCK_GAMMA + 1]);
+        let mut lanes: Vec<(&mut SeqState, &[i32])> = vec![(&mut a, &wa), (&mut b, &wb)];
+        let out: Vec<_> = t.verify_batch(&mut lanes).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(a.pos, 0, "verify must not advance positions");
+        let mut r = mk(3);
+        assert_eq!(out[1].data, t.verify(&mut r, &wb).unwrap().data);
     }
 
     #[test]

@@ -18,5 +18,5 @@ pub use adaptive::{AdaptiveConfig, AdaptiveDecoder, SpecMode};
 pub use decoder::{
     generate_baseline, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams, TargetBackend,
 };
-pub use session::{DecodeSession, NoDraft, StepOutcome};
+pub use session::{DecodeSession, LaneKind, NoDraft, StepOutcome};
 pub use tree::{DraftTree, TreeBuilder, TreeConfig};

@@ -19,6 +19,26 @@
 //! what lets one worker serve a short interactive request in the gaps of a
 //! long batch decode instead of parking a thread per request.
 //!
+//! `step()` is itself composed of two resumable *half-steps* so the engine
+//! can gang model passes across sessions (`coordinator::engine`'s batched
+//! tick, `docs/serving.md`):
+//!
+//!   * `propose()` stages one iteration: it draws the per-iteration draft
+//!     seed from the session RNG and records what the models owe this lane
+//!     (a drafter pass for chain/tree lanes, then a target pass);
+//!   * `absorb_decode` / `absorb_verify` consume the target's logits and
+//!     run acceptance, emission, cache-position bookkeeping, and the
+//!     adaptive-controller update.
+//!
+//! Between the halves the engine extracts per-lane model arguments
+//! (`chain_draft_parts`, `plain_verify_parts`, ...) and runs the fused
+//! batched entry points (`TargetBackend::verify_batch` et al).  All
+//! cross-iteration state -- the RNG, both `SeqState`s, the adaptive EMAs --
+//! is per-session, so batched execution consumes exactly the same RNG
+//! draws and produces exactly the same tokens as sequential `step()`
+//! loops: the bit-identity property `spec::testing::
+//! run_batched_vs_sequential` checks.
+//!
 //! The run-to-completion entry points (`SpecDecoder::generate`,
 //! `generate_tree`, `AdaptiveDecoder::generate_with_mode`,
 //! `generate_baseline`) are thin drivers over this state machine, so the
@@ -31,13 +51,44 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::models::{DraftModel, DraftOutput, PrefixSnapshot, SeqState, TargetModel, VisionEncoding};
+use crate::runtime::Tensor;
 use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
 use crate::spec::adaptive::{AdaptiveConfig, SpecMode};
 use crate::spec::decoder::{
     sample_token, DraftBackend, GenConfig, GenStats, SpecParams, TargetBackend,
 };
-use crate::spec::tree::TreeConfig;
+use crate::spec::tree::{DraftTree, TreeConfig};
 use crate::util::rng::Rng;
+
+/// Target-pass shape of a session's next decode step.  The engine's batch
+/// planner gangs lanes of the same kind (and the same model identity) into
+/// one fused pass; the kind only changes inside `absorb_*` (the adaptive
+/// controller), never between scheduling and execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LaneKind {
+    /// One plain target decode (target-only sessions, post-fallback).
+    Plain,
+    /// Chain speculation: a fused gamma-draft then a (gamma+1)-window
+    /// verify.
+    Chain,
+    /// Tree speculation: a branching draft then a flattened tree verify.
+    Tree,
+}
+
+/// In-flight half-step state between `propose()` and `absorb_*`.
+enum Pending {
+    None,
+    /// `propose()` staged a drafter pass (chain/tree lanes): the drafter
+    /// owes a draft from `last` under this per-iteration `seed`.
+    AwaitDraft { last: i32, seed: u32 },
+    /// Plain lane: the target owes one decode of `last`.
+    VerifyPlain { last: i32 },
+    /// Chain lane: the target owes a verify of `vtokens` (= `last` + the
+    /// drafted window); `out` is retained for acceptance.
+    VerifyChain { vtokens: Vec<i32>, out: DraftOutput },
+    /// Tree lane: the target owes a flattened tree verify.
+    VerifyTree { last: i32, tree: DraftTree },
+}
 
 /// Result of one `prefill`/`step` call.
 #[derive(Debug)]
@@ -130,6 +181,9 @@ pub struct DecodeSession<T: TargetBackend = TargetModel, D: DraftBackend = Draft
     /// sessions do not (back-compat with `generate_baseline` accounting).
     count_plain_iters: bool,
     phase: Phase,
+    /// Half-step state between `propose()` and `absorb_*` (always `None`
+    /// when the session sits in a scheduler queue).
+    pending: Pending,
 }
 
 impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
@@ -176,6 +230,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             }),
             count_plain_iters,
             phase: Phase::Created,
+            pending: Pending::None,
         }
     }
 
@@ -190,9 +245,11 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
     }
 
     /// Abort a running session (cancellation / deadline): marks it finished
-    /// and returns the partial generation record.
+    /// and returns the partial generation record.  Any staged half-step is
+    /// discarded.
     pub fn abort(&mut self) -> GenStats {
         self.phase = Phase::Finished;
+        self.pending = Pending::None;
         std::mem::take(&mut self.stats)
     }
 
@@ -302,29 +359,276 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
 
     /// Run exactly one decode iteration: a full draft -> verify -> accept
     /// round in chain/tree mode, or one plain target decode otherwise.
+    /// Composed of the `propose`/`absorb_*` half-steps, driving this
+    /// session's own backends -- the sequential reference the batched
+    /// engine path must reproduce bit for bit.
     pub fn step(&mut self) -> Result<StepOutcome> {
+        let td = Instant::now();
+        let kind = self.propose()?;
+        let r = self.drive_staged(kind);
+        if r.is_ok() {
+            self.stats.decode_micros += td.elapsed().as_micros() as u64;
+        }
+        r
+    }
+
+    /// Target-pass shape of this session's next `step()` (the batch
+    /// planner's lane-compatibility input).
+    pub fn lane_kind(&self) -> LaneKind {
+        match self.mode {
+            None => LaneKind::Plain,
+            Some(SpecMode::Chain) => LaneKind::Chain,
+            Some(SpecMode::Tree) => LaneKind::Tree,
+        }
+    }
+
+    /// The verify-window draft length (for `verify_tree_batch` callers).
+    pub fn gamma(&self) -> usize {
+        self.params.gamma
+    }
+
+    /// Credit externally measured model time to this session's decode
+    /// clock (the engine's per-lane share of a fused batched pass --
+    /// `step()` times its own model calls instead).
+    pub fn add_decode_micros(&mut self, micros: u64) {
+        self.stats.decode_micros += micros;
+    }
+
+    /// Half-step 1: stage one decode iteration.  Draws the per-iteration
+    /// draft seed from the session RNG for chain/tree lanes -- the draw
+    /// order is identical to `step()`, so batched and sequential execution
+    /// consume the RNG identically.  Returns the staged lane kind.
+    pub fn propose(&mut self) -> Result<LaneKind> {
         match self.phase {
             Phase::Created => return Err(anyhow!("step before prefill")),
             Phase::Finished => return Err(anyhow!("step on a finished session")),
             Phase::Running => {}
         }
+        if !matches!(self.pending, Pending::None) {
+            return Err(anyhow!("propose while a half-step is already staged"));
+        }
         // decode steps mutate the model states, so the post-prefill prefix
         // stops being exportable from here on
         self.prefill_logits = None;
-        let td = Instant::now();
-        let r = self.iterate();
-        match r {
-            Ok(out) => {
-                self.stats.decode_micros += td.elapsed().as_micros() as u64;
-                match out {
-                    IterResult::Running(tokens) => Ok(StepOutcome::Emitted(tokens)),
-                    IterResult::Done => Ok(self.finish_now()),
-                }
+        match self.mode {
+            None => self.pending = Pending::VerifyPlain { last: self.last },
+            Some(_) => {
+                let seed = self.rng.next_u32();
+                self.pending = Pending::AwaitDraft { last: self.last, seed };
             }
+        }
+        Ok(self.lane_kind())
+    }
+
+    /// Per-lane arguments for the ganged chain draft pass: the drafter
+    /// state plus (last, temperature, seed) staged by `propose()`.
+    pub fn chain_draft_parts(&mut self) -> Result<(&mut SeqState, i32, f32, u32)> {
+        let (last, seed) = match self.pending {
+            Pending::AwaitDraft { last, seed } => (last, seed),
+            _ => return Err(anyhow!("no draft staged (propose a chain lane first)")),
+        };
+        if self.mode != Some(SpecMode::Chain) {
+            return Err(anyhow!("staged lane is not in chain mode"));
+        }
+        let t = self.cfg.temperature;
+        let st = self
+            .dstate
+            .as_mut()
+            .ok_or_else(|| anyhow!("speculative session without drafter state"))?;
+        Ok((st, last, t, seed))
+    }
+
+    /// Per-lane arguments for the ganged tree draft pass.
+    pub fn tree_draft_parts(&mut self) -> Result<(&mut SeqState, i32, &TreeConfig, f32, u32)> {
+        let (last, seed) = match self.pending {
+            Pending::AwaitDraft { last, seed } => (last, seed),
+            _ => return Err(anyhow!("no draft staged (propose a tree lane first)")),
+        };
+        if self.mode != Some(SpecMode::Tree) {
+            return Err(anyhow!("staged lane is not in tree mode"));
+        }
+        let t = self.cfg.temperature;
+        match self.dstate.as_mut() {
+            Some(st) => Ok((st, last, &self.tree_cfg, t, seed)),
+            None => Err(anyhow!("speculative session without drafter state")),
+        }
+    }
+
+    /// Hand the drafter's chain output back (stages the verify window).
+    pub fn supply_draft(&mut self, out: DraftOutput) -> Result<()> {
+        let last = match self.pending {
+            Pending::AwaitDraft { last, .. } => last,
+            _ => return Err(anyhow!("no draft staged to supply")),
+        };
+        if self.mode != Some(SpecMode::Chain) {
+            return Err(anyhow!("staged lane is not in chain mode"));
+        }
+        self.stats.draft_calls += 1;
+        let mut vtokens = Vec::with_capacity(self.params.gamma + 1);
+        vtokens.push(last);
+        vtokens.extend_from_slice(&out.tokens);
+        self.pending = Pending::VerifyChain { vtokens, out };
+        Ok(())
+    }
+
+    /// Hand the drafter's tree back (stages the tree verify).
+    pub fn supply_draft_tree(&mut self, tree: DraftTree) -> Result<()> {
+        let last = match self.pending {
+            Pending::AwaitDraft { last, .. } => last,
+            _ => return Err(anyhow!("no draft staged to supply")),
+        };
+        if self.mode != Some(SpecMode::Tree) {
+            return Err(anyhow!("staged lane is not in tree mode"));
+        }
+        self.stats.draft_calls += 1;
+        self.stats.tree_nodes_drafted += tree.len();
+        self.pending = Pending::VerifyTree { last, tree };
+        Ok(())
+    }
+
+    /// Per-lane arguments for the ganged plain decode pass.
+    pub fn plain_verify_parts(&mut self) -> Result<(&mut SeqState, i32)> {
+        let last = match self.pending {
+            Pending::VerifyPlain { last } => last,
+            _ => return Err(anyhow!("no plain decode staged")),
+        };
+        Ok((self.tstate.as_mut().expect("running session without target state"), last))
+    }
+
+    /// Per-lane arguments for the ganged chain verify pass.
+    pub fn chain_verify_parts(&mut self) -> Result<(&mut SeqState, &[i32])> {
+        match &self.pending {
+            Pending::VerifyChain { vtokens, .. } => Ok((
+                self.tstate.as_mut().expect("running session without target state"),
+                vtokens,
+            )),
+            _ => Err(anyhow!("no chain verify staged")),
+        }
+    }
+
+    /// Per-lane arguments for the ganged tree verify pass.
+    pub fn tree_verify_parts(&mut self) -> Result<(&mut SeqState, i32, &DraftTree)> {
+        match &self.pending {
+            Pending::VerifyTree { last, tree } => Ok((
+                self.tstate.as_mut().expect("running session without target state"),
+                *last,
+                tree,
+            )),
+            _ => Err(anyhow!("no tree verify staged")),
+        }
+    }
+
+    /// Half-step 2 for plain lanes: consume the target's decode logits
+    /// (the decode already advanced the state position), sample, emit.
+    pub fn absorb_decode(&mut self, logits: Vec<f32>) -> Result<StepOutcome> {
+        match self.pending {
+            Pending::VerifyPlain { .. } => {}
+            _ => return Err(anyhow!("no plain decode staged")),
+        }
+        self.pending = Pending::None;
+        let r = self.absorb_decode_inner(&logits);
+        self.settle(r)
+    }
+
+    /// Half-step 2 for speculative lanes: consume the target's verify
+    /// logits, run acceptance, emit, advance both caches, and update the
+    /// adaptive controller -- identical math and RNG consumption to the
+    /// fused `step()`.
+    pub fn absorb_verify(&mut self, plogits: Tensor) -> Result<StepOutcome> {
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let r = match pending {
+            Pending::VerifyChain { out, .. } => self.absorb_chain(out, plogits),
+            Pending::VerifyTree { tree, .. } => self.absorb_tree(tree, plogits),
+            other => {
+                self.pending = other;
+                return Err(anyhow!("no verify staged"));
+            }
+        };
+        self.settle(r)
+    }
+
+    /// Map an iteration result onto the session phase (any error finishes
+    /// the session, matching the pre-split `step()` contract).
+    fn settle(&mut self, r: Result<IterResult>) -> Result<StepOutcome> {
+        match r {
+            Ok(IterResult::Running(tokens)) => Ok(StepOutcome::Emitted(tokens)),
+            Ok(IterResult::Done) => Ok(self.finish_now()),
             Err(e) => {
                 self.phase = Phase::Finished;
                 Err(e)
             }
+        }
+    }
+
+    /// Sequential driver over the staged half-step: run the owed model
+    /// passes with this session's own backends, then absorb.
+    fn drive_staged(&mut self, kind: LaneKind) -> Result<StepOutcome> {
+        let r = self.drive_staged_inner(kind);
+        if r.is_err() {
+            self.phase = Phase::Finished;
+        }
+        r
+    }
+
+    fn drive_staged_inner(&mut self, kind: LaneKind) -> Result<StepOutcome> {
+        if kind != LaneKind::Plain {
+            let (last, seed) = match self.pending {
+                Pending::AwaitDraft { last, seed } => (last, seed),
+                _ => return Err(anyhow!("no draft staged")),
+            };
+            let drafter = self.drafter.as_ref().expect("speculative session without drafter");
+            match kind {
+                LaneKind::Chain => {
+                    let out = drafter.draft(
+                        self.dstate.as_mut().unwrap(),
+                        last,
+                        self.cfg.temperature,
+                        seed,
+                    )?;
+                    self.supply_draft(out)?;
+                }
+                LaneKind::Tree => {
+                    let tree = drafter.draft_tree(
+                        self.dstate.as_mut().unwrap(),
+                        last,
+                        &self.tree_cfg,
+                        self.cfg.temperature,
+                        seed,
+                    )?;
+                    self.supply_draft_tree(tree)?;
+                }
+                LaneKind::Plain => unreachable!(),
+            }
+        }
+        enum Absorb {
+            Decode(Vec<f32>),
+            Verify(Tensor),
+        }
+        let gamma = self.params.gamma;
+        let staged = match &self.pending {
+            Pending::VerifyPlain { last } => {
+                let last = *last;
+                Absorb::Decode(self.target.decode(self.tstate.as_mut().unwrap(), last)?)
+            }
+            Pending::VerifyChain { vtokens, .. } => {
+                Absorb::Verify(self.target.verify(self.tstate.as_mut().unwrap(), vtokens)?)
+            }
+            Pending::VerifyTree { last, tree } => {
+                let last = *last;
+                Absorb::Verify(self.target.verify_tree(
+                    self.tstate.as_mut().unwrap(),
+                    last,
+                    tree,
+                    gamma,
+                )?)
+            }
+            Pending::None | Pending::AwaitDraft { .. } => {
+                return Err(anyhow!("no verify staged"))
+            }
+        };
+        match staged {
+            Absorb::Decode(logits) => self.absorb_decode(logits),
+            Absorb::Verify(plogits) => self.absorb_verify(plogits),
         }
     }
 
@@ -346,143 +650,127 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
         }
     }
 
-    fn iterate(&mut self) -> Result<IterResult> {
+    /// Plain target decoding (target-only, or adaptive fallback): the
+    /// decode already ran (and advanced `tstate.pos`); sample and emit.
+    fn absorb_decode_inner(&mut self, logits: &[f32]) -> Result<IterResult> {
         let eos = self.params.eos_id;
-        let Some(cur_mode) = self.mode else {
-            // plain target decoding (target-only, or adaptive fallback)
-            let logits = self.target.decode(self.tstate.as_mut().unwrap(), self.last)?;
-            self.stats.verify_calls += 1;
-            let tok = sample_token(&logits, &self.cfg, &mut self.probs, &mut self.rng);
+        self.stats.verify_calls += 1;
+        let tok = sample_token(logits, &self.cfg, &mut self.probs, &mut self.rng);
+        self.stats.tokens.push(tok);
+        if self.count_plain_iters {
+            self.stats.per_iter_emitted.push(1);
+        }
+        if tok == eos {
+            self.stats.finished_by_eos = true;
+            return Ok(IterResult::Done);
+        }
+        if self.stats.tokens.len() >= self.max_new {
+            return Ok(IterResult::Done);
+        }
+        self.last = tok;
+        Ok(IterResult::Running(vec![tok]))
+    }
+
+    /// Chain acceptance: emit the accepted prefix (may contain EOS), then
+    /// the shared iteration tail.
+    fn absorb_chain(&mut self, out: DraftOutput, plogits: Tensor) -> Result<IterResult> {
+        let eos = self.params.eos_id;
+        self.stats.verify_calls += 1;
+        let dec = accept_stochastic(
+            &out.tokens,
+            &out.qlogits,
+            &plogits,
+            self.cfg.temperature,
+            self.cfg.top_p,
+            &mut self.rng,
+            &mut self.scratch,
+        );
+        let mut emitted_tokens: Vec<i32> = Vec::new();
+        let mut emitted = 0usize;
+        for &tok in &out.tokens[..dec.accepted] {
             self.stats.tokens.push(tok);
-            if self.count_plain_iters {
-                self.stats.per_iter_emitted.push(1);
-            }
+            emitted_tokens.push(tok);
+            emitted += 1;
             if tok == eos {
                 self.stats.finished_by_eos = true;
+                self.stats.accepted_draft += emitted;
+                self.stats.per_iter_emitted.push(emitted);
                 return Ok(IterResult::Done);
             }
             if self.stats.tokens.len() >= self.max_new {
+                self.stats.accepted_draft += emitted;
+                self.stats.per_iter_emitted.push(emitted);
                 return Ok(IterResult::Done);
             }
-            self.last = tok;
-            return Ok(IterResult::Running(vec![tok]));
-        };
+        }
+        self.stats.accepted_draft += emitted;
+        self.finish_iteration(SpecMode::Chain, dec.accepted, dec.next_token, emitted_tokens)
+    }
 
-        // ---- one speculative iteration (chain or tree) -------------------
-        let seed = self.rng.next_u32();
+    /// Tree acceptance: emit the accepted root-to-leaf path (may contain
+    /// EOS), update the branch-utilization EMA, then the shared tail.
+    fn absorb_tree(&mut self, tree: DraftTree, plogits: Tensor) -> Result<IterResult> {
+        let eos = self.params.eos_id;
+        self.stats.verify_calls += 1;
+        let dec = accept_tree_stochastic(
+            &tree,
+            &plogits,
+            self.cfg.temperature,
+            self.cfg.top_p,
+            &mut self.rng,
+            &mut self.scratch,
+        );
         let mut emitted_tokens: Vec<i32> = Vec::new();
-        let (accepted_len, next_token) = match cur_mode {
-            SpecMode::Chain => {
-                let out = self.drafter.as_ref().unwrap().draft(
-                    self.dstate.as_mut().unwrap(),
-                    self.last,
-                    self.cfg.temperature,
-                    seed,
-                )?;
-                self.stats.draft_calls += 1;
-                let mut vtokens = Vec::with_capacity(self.params.gamma + 1);
-                vtokens.push(self.last);
-                vtokens.extend_from_slice(&out.tokens);
-                let plogits = self.target.verify(self.tstate.as_mut().unwrap(), &vtokens)?;
-                self.stats.verify_calls += 1;
-                let dec = accept_stochastic(
-                    &out.tokens,
-                    &out.qlogits,
-                    &plogits,
-                    self.cfg.temperature,
-                    self.cfg.top_p,
-                    &mut self.rng,
-                    &mut self.scratch,
-                );
-
-                // emit the accepted prefix (may contain EOS)
-                let mut emitted = 0usize;
-                for &tok in &out.tokens[..dec.accepted] {
-                    self.stats.tokens.push(tok);
-                    emitted_tokens.push(tok);
-                    emitted += 1;
-                    if tok == eos {
-                        self.stats.finished_by_eos = true;
-                        self.stats.accepted_draft += emitted;
-                        self.stats.per_iter_emitted.push(emitted);
-                        return Ok(IterResult::Done);
-                    }
-                    if self.stats.tokens.len() >= self.max_new {
-                        self.stats.accepted_draft += emitted;
-                        self.stats.per_iter_emitted.push(emitted);
-                        return Ok(IterResult::Done);
-                    }
-                }
+        let mut emitted = 0usize;
+        for &node in &dec.path {
+            let tok = tree.tokens[node];
+            self.stats.tokens.push(tok);
+            emitted_tokens.push(tok);
+            emitted += 1;
+            if tok == eos {
+                self.stats.finished_by_eos = true;
                 self.stats.accepted_draft += emitted;
-                (dec.accepted, dec.next_token)
+                self.stats.per_iter_emitted.push(emitted);
+                self.stats.per_iter_path_depth.push(emitted);
+                return Ok(IterResult::Done);
             }
-            SpecMode::Tree => {
-                let tree = self.drafter.as_ref().unwrap().draft_tree(
-                    self.dstate.as_mut().unwrap(),
-                    self.last,
-                    &self.tree_cfg,
-                    self.cfg.temperature,
-                    seed,
-                )?;
-                self.stats.draft_calls += 1;
-                self.stats.tree_nodes_drafted += tree.len();
-                let plogits = self.target.verify_tree(
-                    self.tstate.as_mut().unwrap(),
-                    self.last,
-                    &tree,
-                    self.params.gamma,
-                )?;
-                self.stats.verify_calls += 1;
-                let dec = accept_tree_stochastic(
-                    &tree,
-                    &plogits,
-                    self.cfg.temperature,
-                    self.cfg.top_p,
-                    &mut self.rng,
-                    &mut self.scratch,
-                );
-
-                // emit the accepted root-to-leaf path (may contain EOS)
-                let mut emitted = 0usize;
-                for &node in &dec.path {
-                    let tok = tree.tokens[node];
-                    self.stats.tokens.push(tok);
-                    emitted_tokens.push(tok);
-                    emitted += 1;
-                    if tok == eos {
-                        self.stats.finished_by_eos = true;
-                        self.stats.accepted_draft += emitted;
-                        self.stats.per_iter_emitted.push(emitted);
-                        self.stats.per_iter_path_depth.push(emitted);
-                        return Ok(IterResult::Done);
-                    }
-                    if self.stats.tokens.len() >= self.max_new {
-                        self.stats.accepted_draft += emitted;
-                        self.stats.per_iter_emitted.push(emitted);
-                        self.stats.per_iter_path_depth.push(emitted);
-                        return Ok(IterResult::Done);
-                    }
-                }
+            if self.stats.tokens.len() >= self.max_new {
                 self.stats.accepted_draft += emitted;
-                self.stats.per_iter_path_depth.push(dec.path.len());
-                if let Some(ad) = self.adaptive.as_mut() {
-                    ad.tree_iters += 1;
-                    let util = if tree.is_empty() {
-                        0.0
-                    } else {
-                        dec.path.len() as f64 / tree.len() as f64
-                    };
-                    let a = ad.cfg.ema_alpha;
-                    ad.util_ema = Some(match ad.util_ema {
-                        None => util,
-                        Some(u) => a * util + (1.0 - a) * u,
-                    });
-                }
-                (dec.path.len(), dec.next_token)
+                self.stats.per_iter_emitted.push(emitted);
+                self.stats.per_iter_path_depth.push(emitted);
+                return Ok(IterResult::Done);
             }
-        };
+        }
+        self.stats.accepted_draft += emitted;
+        self.stats.per_iter_path_depth.push(dec.path.len());
+        if let Some(ad) = self.adaptive.as_mut() {
+            ad.tree_iters += 1;
+            let util = if tree.is_empty() {
+                0.0
+            } else {
+                dec.path.len() as f64 / tree.len() as f64
+            };
+            let a = ad.cfg.ema_alpha;
+            ad.util_ema = Some(match ad.util_ema {
+                None => util,
+                Some(u) => a * util + (1.0 - a) * u,
+            });
+        }
+        self.finish_iteration(SpecMode::Tree, dec.path.len(), dec.next_token, emitted_tokens)
+    }
 
-        // the target-sampled token (correction or bonus) always emits
+    /// Shared speculative-iteration tail: the target-sampled token
+    /// (correction or bonus) always emits; advance both caches past `last`
+    /// plus the accepted region (stale tails are position-masked by the
+    /// backends); run the adaptive-controller update.
+    fn finish_iteration(
+        &mut self,
+        cur_mode: SpecMode,
+        accepted_len: usize,
+        next_token: i32,
+        mut emitted_tokens: Vec<i32>,
+    ) -> Result<IterResult> {
+        let eos = self.params.eos_id;
         let emitted = emitted_tokens.len() + 1;
         self.stats.tokens.push(next_token);
         emitted_tokens.push(next_token);
@@ -495,8 +783,6 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             return Ok(IterResult::Done);
         }
 
-        // advance both caches past `last` + the accepted region (stale
-        // tails are position-masked by the backends)
         self.tstate.as_mut().unwrap().pos += 1 + accepted_len as i32;
         self.dstate.as_mut().unwrap().pos += 1 + accepted_len as i32;
         self.last = next_token;
@@ -541,7 +827,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
 mod tests {
     use super::*;
     use crate::spec::decoder::TargetBackend;
-    use crate::spec::testing::{params, MockDraft, MockTarget, MockTreeDraft};
+    use crate::spec::testing::{params, MockDraft, MockTarget, MockTreeDraft, MOCK_GAMMA};
 
     /// Drive a session to completion given its prefill outcome.
     fn run_out<T: TargetBackend, D: DraftBackend>(
@@ -772,6 +1058,157 @@ mod tests {
         assert!(!partial.tokens.is_empty());
         assert!(partial.tokens.len() < 48, "aborted well before the budget");
         assert!(!partial.finished_by_eos);
+    }
+
+    /// Drive a session with explicit half-steps (the engine's batched
+    /// protocol) against twin backends, checking bit-identity with the
+    /// fused `step()` driver -- chain, tree, and plain lanes.
+    #[test]
+    fn prop_half_steps_match_fused_step() {
+        crate::util::prop::propcheck("half-steps == step()", 40, |rng| {
+            let n = 3 + rng.range(20);
+            let mut script: Vec<i32> = (0..n).map(|_| 4 + rng.range(90) as i32).collect();
+            script.push(2); // EOS
+            let dscript: Vec<i32> = (0..n + 8)
+                .map(|i| {
+                    if rng.range(3) == 0 {
+                        *script.get(i).unwrap_or(&2)
+                    } else {
+                        4 + rng.range(90) as i32
+                    }
+                })
+                .collect();
+            let mode = rng.range(3); // 0 = chain, 1 = tree, 2 = plain
+            let cfg = GenConfig {
+                temperature: if rng.range(2) == 0 { 0.0 } else { 1.0 },
+                seed: rng.next_u64(),
+                tree: Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }),
+                ..GenConfig::default()
+            };
+            let make = || {
+                DecodeSession::new(
+                    MockTarget::new(script.clone()),
+                    if mode == 2 {
+                        None
+                    } else {
+                        Some(MockTreeDraft::new(vec![dscript.clone(), script.clone()]))
+                    },
+                    params(),
+                    cfg.clone(),
+                    if mode == 2 {
+                        None
+                    } else {
+                        Some(if mode == 1 { SpecMode::Tree } else { SpecMode::Chain })
+                    },
+                    None,
+                    false,
+                )
+            };
+            // twin backends for the external (engine-side) model calls
+            let target = MockTarget::new(script.clone());
+            let drafter = MockTreeDraft::new(vec![dscript.clone(), script.clone()]);
+
+            let mut fused = make();
+            let out = fused.prefill(&[], &[0; 8], 3).map_err(|e| format!("{e:#}"))?;
+            let fused_stats = run_out(out, &mut fused).map_err(|e| format!("{e:#}"))?;
+
+            let mut half = make();
+            let mut out = half.prefill(&[], &[0; 8], 3).map_err(|e| format!("{e:#}"))?;
+            let half_stats = loop {
+                match out {
+                    StepOutcome::Finished(st) => break st,
+                    StepOutcome::Emitted(_) => {}
+                }
+                let kind = half.propose().map_err(|e| format!("{e:#}"))?;
+                out = (|| -> Result<StepOutcome> {
+                    match kind {
+                        LaneKind::Plain => {
+                            let (st, last) = half.plain_verify_parts()?;
+                            let logits = target.decode(st, last)?;
+                            half.absorb_decode(logits)
+                        }
+                        LaneKind::Chain => {
+                            let d = {
+                                let (st, last, t, seed) = half.chain_draft_parts()?;
+                                drafter.draft(st, last, t, seed)?
+                            };
+                            half.supply_draft(d)?;
+                            let p = {
+                                let (st, toks) = half.chain_verify_parts()?;
+                                target.verify(st, toks)?
+                            };
+                            half.absorb_verify(p)
+                        }
+                        LaneKind::Tree => {
+                            let d = {
+                                let (st, last, cfg, t, seed) = half.tree_draft_parts()?;
+                                drafter.draft_tree(st, last, cfg, t, seed)?
+                            };
+                            half.supply_draft_tree(d)?;
+                            let p = {
+                                let (st, last, tree) = half.tree_verify_parts()?;
+                                target.verify_tree(st, last, tree, MOCK_GAMMA)?
+                            };
+                            half.absorb_verify(p)
+                        }
+                    }
+                })()
+                .map_err(|e| format!("{e:#}"))?;
+            };
+            if fused_stats.tokens != half_stats.tokens {
+                return Err(format!(
+                    "mode {mode}: half-step tokens {:?} != step() tokens {:?}",
+                    half_stats.tokens, fused_stats.tokens
+                ));
+            }
+            if !fused_stats.same_generation(&half_stats) {
+                return Err(format!(
+                    "mode {mode}: half-step stats diverge: {half_stats:?} vs {fused_stats:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn half_step_protocol_rejects_misuse() {
+        let script: Vec<i32> = (10..40).collect();
+        let mut sess = DecodeSession::new(
+            MockTarget::new(script.clone()),
+            Some(MockDraft::new(script.clone())),
+            params(),
+            GenConfig::default(),
+            Some(SpecMode::Chain),
+            None,
+            false,
+        );
+        assert!(sess.propose().is_err(), "propose before prefill must error");
+        sess.prefill(&[], &[0; 8], 3).unwrap();
+        assert!(sess.absorb_verify(Tensor::new(vec![0.0], vec![1, 1]).unwrap()).is_err());
+        assert_eq!(sess.propose().unwrap(), LaneKind::Chain);
+        assert!(sess.propose().is_err(), "double propose must error");
+        assert!(sess.plain_verify_parts().is_err(), "chain lane has no plain decode staged");
+        assert!(sess.chain_verify_parts().is_err(), "verify not staged before the draft");
+        // supplying the draft stages the verify window
+        let target = MockTarget::new(script.clone());
+        let drafter = MockDraft::new(script.clone());
+        let d = {
+            let (st, last, t, seed) = sess.chain_draft_parts().unwrap();
+            drafter.draft(st, last, t, seed).unwrap()
+        };
+        sess.supply_draft(d).unwrap();
+        assert!(sess.chain_draft_parts().is_err(), "draft already supplied");
+        let p = {
+            let (st, toks) = sess.chain_verify_parts().unwrap();
+            assert_eq!(toks.len(), MOCK_GAMMA + 1);
+            target.verify(st, toks).unwrap()
+        };
+        match sess.absorb_verify(p).unwrap() {
+            StepOutcome::Emitted(tokens) => assert!(!tokens.is_empty()),
+            StepOutcome::Finished(_) => panic!("48-token budget cannot finish in one step"),
+        }
+        // the session is inert again: a fused step continues normally
+        sess.step().unwrap();
     }
 
     #[test]

@@ -22,13 +22,25 @@
 //!
 //! `SeqState.pos` is reused as the *stream* position (the mocks have no KV
 //! cache; the dummy literal is never read).
+//!
+//! This module also hosts the **batched-execution determinism oracle**
+//! (`run_batched_vs_sequential`): it replays a mix of sessions over the
+//! scripted model backend both sequentially (`DecodeSession::step` loops)
+//! and through engine-style fused ticks (propose -> batched draft ->
+//! batched verify -> absorb), asserting bit-identical tokens, emission
+//! boundaries, accept counts, and `GenStats` per lane -- the MASSV
+//! losslessness guarantee extended to cross-request batching.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::models::scripted::sharp_row;
-use crate::models::{DraftOutput, SeqState};
+use crate::models::{scripted, DraftOutput, ModelSet, SeqState};
 use crate::runtime::Tensor;
-use crate::spec::decoder::{DraftBackend, SpecParams, TargetBackend};
+use crate::spec::adaptive::{AdaptiveConfig, SpecMode};
+use crate::spec::decoder::{DraftBackend, GenConfig, GenStats, SpecParams, TargetBackend};
+use crate::spec::session::{DecodeSession, LaneKind, StepOutcome};
 use crate::spec::tree::{DraftTree, TreeBuilder, TreeConfig};
 
 pub const MOCK_VOCAB: usize = 100;
@@ -227,6 +239,270 @@ impl DraftBackend for MockTreeDraft {
         }
         b.build()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Batched-vs-sequential determinism oracle
+// ---------------------------------------------------------------------------
+
+/// One lane of the batched-vs-sequential oracle: how to build and prefill
+/// one session over the scripted model backend.
+#[derive(Debug, Clone)]
+pub struct OracleLane {
+    /// Drafting shape; `None` = target-only (a plain-decode lane).
+    pub mode: Option<SpecMode>,
+    /// Wrap the mode in the adaptive chain<->tree/fallback controller.
+    pub adaptive: bool,
+    pub cfg: GenConfig,
+    /// `models::scripted::demo_image` phase (distinct per-lane streams).
+    pub image_phase: usize,
+    pub prompt: Vec<i32>,
+    /// Replay through an exported post-prefill prefix (the prefix-cache
+    /// hit path) instead of a cold prefill.
+    pub warm: bool,
+}
+
+/// THE cross-request batching determinism oracle: replay `lanes` two ways
+/// -- sequential `step()` loops vs engine-style fused ticks (every lane's
+/// `propose`, then one batched drafter pass, one batched target pass, and
+/// per-lane `absorb_*`) -- and require bit-identical tokens, per-step
+/// emission boundaries, accept counts, and semantic `GenStats` per lane.
+/// Returns `Err` naming the first divergence (propcheck-style).
+pub fn run_batched_vs_sequential(
+    set: &Arc<ModelSet>,
+    target_name: &str,
+    drafter_variant: &str,
+    lanes: &[OracleLane],
+) -> std::result::Result<(), String> {
+    struct Run {
+        chunks: Vec<Vec<i32>>,
+        stats: GenStats,
+    }
+    let err = |e: anyhow::Error| format!("{e:#}");
+    let target = set.target(target_name).map_err(err)?;
+    let drafter = set.drafter_for(target_name, drafter_variant).map_err(err)?;
+    let params = SpecParams::from_manifest(&set.manifest);
+    let make = |lane: &OracleLane| {
+        DecodeSession::new(
+            target.clone(),
+            lane.mode.map(|_| drafter.clone()),
+            params.clone(),
+            lane.cfg.clone(),
+            lane.mode,
+            if lane.adaptive && lane.mode.is_some() {
+                Some(AdaptiveConfig::default())
+            } else {
+                None
+            },
+            false,
+        )
+    };
+    let prefill =
+        |sess: &mut DecodeSession, lane: &OracleLane| -> std::result::Result<StepOutcome, String> {
+            let image = scripted::demo_image(lane.image_phase);
+            let len = lane.prompt.len();
+            if lane.warm {
+                // the prefix-cache path: fork an exported post-prefill
+                // snapshot instead of running either model's prefill
+                let mut probe = make(lane);
+                probe.prefill(&image, &lane.prompt, len).map_err(err)?;
+                let snap = probe
+                    .export_prefix()
+                    .ok_or_else(|| "post-prefill export failed".to_string())?;
+                sess.prefill_from(&snap).map_err(err)
+            } else {
+                sess.prefill(&image, &lane.prompt, len).map_err(err)
+            }
+        };
+
+    // ---- way 1: each lane sequentially, one step() at a time ------------
+    let mut sequential: Vec<Run> = Vec::with_capacity(lanes.len());
+    for lane in lanes {
+        let mut sess = make(lane);
+        let mut chunks = Vec::new();
+        let mut out = prefill(&mut sess, lane)?;
+        let stats = loop {
+            match out {
+                StepOutcome::Finished(stats) => break stats,
+                StepOutcome::Emitted(t) => chunks.push(t),
+            }
+            out = sess.step().map_err(err)?;
+        };
+        sequential.push(Run { chunks, stats });
+    }
+
+    // ---- way 2: engine-style fused ticks over all live lanes ------------
+    let mut results: Vec<Option<Run>> = lanes.iter().map(|_| None).collect();
+    let mut live: Vec<(usize, DecodeSession, Vec<Vec<i32>>)> = Vec::new();
+    for (i, lane) in lanes.iter().enumerate() {
+        let mut sess = make(lane);
+        let mut chunks = Vec::new();
+        match prefill(&mut sess, lane)? {
+            StepOutcome::Finished(stats) => results[i] = Some(Run { chunks, stats }),
+            StepOutcome::Emitted(t) => {
+                chunks.push(t);
+                live.push((i, sess, chunks));
+            }
+        }
+    }
+    let gamma = params.gamma;
+    let mut guard = 0usize;
+    while !live.is_empty() {
+        guard += 1;
+        if guard > 100_000 {
+            return Err("batched replay did not terminate".into());
+        }
+        // lane kinds are snapshotted per tick: a lane the adaptive
+        // controller just switched joins its new group NEXT tick, exactly
+        // like a requeued session under the engine's keyed pop
+        let kinds: Vec<LaneKind> = live.iter().map(|l| l.1.lane_kind()).collect();
+        for kind in [LaneKind::Plain, LaneKind::Chain, LaneKind::Tree] {
+            if !kinds.contains(&kind) {
+                continue;
+            }
+            for (l, k) in live.iter_mut().zip(&kinds) {
+                if *k == kind {
+                    l.1.propose().map_err(err)?;
+                }
+            }
+            match kind {
+                LaneKind::Plain => {}
+                LaneKind::Chain => {
+                    let outs = {
+                        let mut dl = Vec::new();
+                        for (l, k) in live.iter_mut().zip(&kinds) {
+                            if *k == kind {
+                                dl.push(l.1.chain_draft_parts().map_err(err)?);
+                            }
+                        }
+                        drafter.draft_batch(&mut dl)
+                    };
+                    let mut outs = outs.into_iter();
+                    for (l, k) in live.iter_mut().zip(&kinds) {
+                        if *k == kind {
+                            let out = outs.next().expect("one draft per lane").map_err(err)?;
+                            l.1.supply_draft(out).map_err(err)?;
+                        }
+                    }
+                }
+                LaneKind::Tree => {
+                    let trees = {
+                        let mut dl = Vec::new();
+                        for (l, k) in live.iter_mut().zip(&kinds) {
+                            if *k == kind {
+                                dl.push(l.1.tree_draft_parts().map_err(err)?);
+                            }
+                        }
+                        drafter.draft_tree_batch(&mut dl)
+                    };
+                    let mut trees = trees.into_iter();
+                    for (l, k) in live.iter_mut().zip(&kinds) {
+                        if *k == kind {
+                            let tree = trees.next().expect("one tree per lane").map_err(err)?;
+                            l.1.supply_draft_tree(tree).map_err(err)?;
+                        }
+                    }
+                }
+            }
+            // ganged target pass + per-lane absorb
+            let mut absorbed: Vec<StepOutcome> = Vec::new();
+            match kind {
+                LaneKind::Plain => {
+                    let rows = {
+                        let mut vl = Vec::new();
+                        for (l, k) in live.iter_mut().zip(&kinds) {
+                            if *k == kind {
+                                vl.push(l.1.plain_verify_parts().map_err(err)?);
+                            }
+                        }
+                        target.decode_batch(&mut vl)
+                    };
+                    let mut rows = rows.into_iter();
+                    for (l, k) in live.iter_mut().zip(&kinds) {
+                        if *k == kind {
+                            let row = rows.next().expect("one decode per lane").map_err(err)?;
+                            absorbed.push(l.1.absorb_decode(row).map_err(err)?);
+                        }
+                    }
+                }
+                LaneKind::Chain => {
+                    let outs = {
+                        let mut vl = Vec::new();
+                        for (l, k) in live.iter_mut().zip(&kinds) {
+                            if *k == kind {
+                                vl.push(l.1.chain_verify_parts().map_err(err)?);
+                            }
+                        }
+                        target.verify_batch(&mut vl)
+                    };
+                    let mut outs = outs.into_iter();
+                    for (l, k) in live.iter_mut().zip(&kinds) {
+                        if *k == kind {
+                            let p = outs.next().expect("one verify per lane").map_err(err)?;
+                            absorbed.push(l.1.absorb_verify(p).map_err(err)?);
+                        }
+                    }
+                }
+                LaneKind::Tree => {
+                    let outs = {
+                        let mut vl = Vec::new();
+                        for (l, k) in live.iter_mut().zip(&kinds) {
+                            if *k == kind {
+                                vl.push(l.1.tree_verify_parts().map_err(err)?);
+                            }
+                        }
+                        target.verify_tree_batch(&mut vl, gamma)
+                    };
+                    let mut outs = outs.into_iter();
+                    for (l, k) in live.iter_mut().zip(&kinds) {
+                        if *k == kind {
+                            let p = outs.next().expect("one verify per lane").map_err(err)?;
+                            absorbed.push(l.1.absorb_verify(p).map_err(err)?);
+                        }
+                    }
+                }
+            }
+            // scatter outcomes back (chunk bookkeeping, terminal stats)
+            let mut absorbed = absorbed.into_iter();
+            for (l, k) in live.iter_mut().zip(&kinds) {
+                if *k == kind {
+                    match absorbed.next().expect("one outcome per lane") {
+                        StepOutcome::Emitted(t) => l.2.push(t),
+                        StepOutcome::Finished(stats) => {
+                            results[l.0] = Some(Run { chunks: std::mem::take(&mut l.2), stats });
+                        }
+                    }
+                }
+            }
+        }
+        live.retain(|l| !l.1.finished());
+    }
+
+    // ---- compare ---------------------------------------------------------
+    for (i, (seq, got)) in sequential.iter().zip(&results).enumerate() {
+        let Some(got) = got else {
+            return Err(format!("lane {i}: batched replay never finished"));
+        };
+        if got.stats.tokens != seq.stats.tokens {
+            return Err(format!(
+                "lane {i} ({:?}): batched tokens {:?} != sequential {:?}",
+                lanes[i].mode, got.stats.tokens, seq.stats.tokens
+            ));
+        }
+        if !got.stats.same_generation(&seq.stats) {
+            return Err(format!(
+                "lane {i} ({:?}): stats diverge: batched {:?} vs sequential {:?}",
+                lanes[i].mode, got.stats, seq.stats
+            ));
+        }
+        if got.chunks != seq.chunks {
+            return Err(format!(
+                "lane {i} ({:?}): emission boundaries diverge: {:?} vs {:?}",
+                lanes[i].mode, got.chunks, seq.chunks
+            ));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

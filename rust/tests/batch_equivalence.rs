@@ -1,0 +1,275 @@
+//! Cross-request batching tests: the batched-vs-sequential determinism
+//! property (session-level oracle over the scripted backend and the full
+//! engine), batch-occupancy observability, and a randomized scheduler soak
+//! (admit/cancel/deadline/stream interleavings) over the batched engine --
+//! no PJRT involved (`manifest.backend == "scripted"`).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use massv::coordinator::{
+    DecodeMode, Engine, EngineConfig, Priority, Request, Response, Update,
+};
+use massv::models::scripted::{demo_image, write_test_artifacts};
+use massv::models::ModelSet;
+use massv::spec::testing::{run_batched_vs_sequential, OracleLane};
+use massv::spec::{GenConfig, SpecMode, TreeConfig};
+use massv::util::rng::Rng;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// THE batched-execution determinism property at the session level: a
+/// random mix of chain/tree/adaptive/target-only lanes (greedy and T=1,
+/// cold and prefix-cache-warm prefills) replayed through engine-style
+/// fused ticks must be bit-identical -- tokens, accept counts, emission
+/// boundaries, GenStats -- to sequential stepping.
+#[test]
+fn prop_batched_replay_is_bit_identical_to_sequential() {
+    let dir = write_test_artifacts("batch_oracle", 48, false);
+    let set = ModelSet::load(&dir).unwrap();
+
+    massv::util::prop::propcheck("batched == sequential (oracle)", 24, |rng| {
+        let n_lanes = 1 + rng.range(7);
+        let lanes: Vec<OracleLane> = (0..n_lanes)
+            .map(|_| {
+                let mode = match rng.range(4) {
+                    0 => None, // target-only (plain-decode lane)
+                    1 => Some(SpecMode::Tree),
+                    _ => Some(SpecMode::Chain),
+                };
+                OracleLane {
+                    adaptive: mode.is_some() && rng.range(3) == 0,
+                    mode,
+                    cfg: GenConfig {
+                        temperature: if rng.range(2) == 0 { 0.0 } else { 1.0 },
+                        seed: rng.next_u64(),
+                        max_new: 8 + rng.range(40),
+                        tree: Some(TreeConfig {
+                            branch: vec![2, 2, 1, 1, 1],
+                            max_nodes: 16,
+                        }),
+                        ..GenConfig::default()
+                    },
+                    image_phase: rng.range(4),
+                    prompt: (0..(2 + rng.range(5)))
+                        .map(|_| 5 + rng.range(90) as i32)
+                        .collect(),
+                    warm: rng.range(3) == 0,
+                }
+            })
+            .collect();
+        run_batched_vs_sequential(&set, "qwensim-L", "massv", &lanes)
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The same property end-to-end through the engine: identical request sets
+/// served by an unbatched engine (`max_batch == 1`) and a ganging engine
+/// (`max_batch == 8`) must produce identical responses -- tokens, accept
+/// accounting, steps, finish reasons -- while the ganging engine actually
+/// fuses multi-lane ticks (occupancy metrics prove it ran batched).
+#[test]
+fn engine_batched_matches_unbatched_and_reports_occupancy() {
+    let dir = write_test_artifacts("batch_engine_eq", 2048, false);
+    let run_engine = |max_batch: usize| -> (Vec<Response>, std::collections::HashMap<String, f64>) {
+        let engine = Engine::start(
+            &dir,
+            EngineConfig {
+                workers: 2,
+                queue_capacity: 128,
+                max_batch,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..12)
+            .map(|i| {
+                let mut req = Request::simple(
+                    engine.next_id(),
+                    &format!("w{} w{}", 5 + i % 4, 9 + i % 3),
+                    demo_image(i % 3),
+                );
+                req.mode = match i % 3 {
+                    0 => DecodeMode::TargetOnly,
+                    1 => DecodeMode::Speculative {
+                        variant: "massv".into(),
+                        text_only_draft: false,
+                        adaptive: false,
+                    },
+                    _ => DecodeMode::Tree {
+                        variant: "massv".into(),
+                        text_only_draft: false,
+                        adaptive: false,
+                    },
+                };
+                req.gen.max_new = 48;
+                req.gen.temperature = if i % 2 == 0 { 0.0 } else { 1.0 };
+                req.gen.seed = 1000 + i as u64;
+                engine.submit(req)
+            })
+            .collect();
+        let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let metrics = engine.scrape();
+        engine.shutdown();
+        (responses, metrics)
+    };
+
+    let (unbatched, m1) = run_engine(1);
+    let (batched, m8) = run_engine(8);
+    assert_eq!(m1["batch_ticks"], 0.0, "max_batch=1 must never fuse ticks");
+    assert_eq!(m1["batch_max_lanes"], 1.0);
+    assert!(
+        m8["batch_ticks"] > 0.0,
+        "12 concurrent sessions on 2 workers must produce fused ticks: {m8:?}"
+    );
+    assert!(m8["batch_occupancy_mean"] > 1.0);
+    assert!(m8["batch_occupancy_max"] <= 8.0);
+    assert_eq!(m8["batch_max_lanes"], 8.0);
+
+    for (a, b) in unbatched.iter().zip(&batched) {
+        assert!(a.error.is_none() && b.error.is_none(), "{:?} / {:?}", a.error, b.error);
+        assert_eq!(a.tokens, b.tokens, "ganged decoding must not change tokens");
+        assert_eq!(a.verify_calls, b.verify_calls);
+        assert_eq!(a.accepted_draft, b.accepted_draft);
+        assert_eq!(a.finish_reason, b.finish_reason);
+        assert_eq!(a.finished_by_eos, b.finished_by_eos);
+        assert_eq!(a.tree_nodes_drafted, b.tree_nodes_drafted);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+enum PendingReply {
+    Oneshot(Receiver<Response>),
+    Stream(Receiver<Update>),
+}
+
+/// Scheduler soak over the batched engine: randomized admit / cancel /
+/// deadline / streaming interleavings for N seeded trials.  Asserts no
+/// lost sessions (every submission reaches exactly one terminal), no
+/// double completions (terminal counters sum to the submission count; no
+/// frames after a stream's Done), and monotone per-session token streams
+/// (chunks concatenate exactly to the final token list).
+#[test]
+fn soak_randomized_admit_cancel_deadline_stream_interleavings() {
+    let dir = write_test_artifacts("batch_soak", 4096, false);
+    for trial in 0..6u64 {
+        let mut rng = Rng::seeded(0x50AC + trial);
+        let engine = Engine::start(
+            &dir,
+            EngineConfig {
+                workers: 1 + (trial as usize % 3),
+                queue_capacity: 256,
+                max_batch: 2 + rng.range(7),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+
+        let n = 16 + rng.range(17);
+        let mut pending: Vec<(u64, PendingReply)> = Vec::new();
+        let mut submitted_ids: Vec<u64> = Vec::new();
+        for _ in 0..n {
+            let mut req = Request::simple(
+                engine.next_id(),
+                ["w5 w6", "w7 w8 w9", "w10", "w11 w12"][rng.range(4)],
+                demo_image(rng.range(4)),
+            );
+            req.mode = match rng.range(4) {
+                0 => DecodeMode::TargetOnly,
+                1 => DecodeMode::Tree {
+                    variant: "massv".into(),
+                    text_only_draft: false,
+                    adaptive: rng.range(2) == 0,
+                },
+                _ => DecodeMode::Speculative {
+                    variant: "massv".into(),
+                    text_only_draft: false,
+                    adaptive: rng.range(2) == 0,
+                },
+            };
+            req.gen.max_new = 4 + rng.range(60);
+            req.gen.temperature = if rng.range(2) == 0 { 0.0 } else { 1.0 };
+            req.gen.seed = rng.next_u64();
+            req.priority =
+                if rng.range(3) == 0 { Priority::Batch } else { Priority::Interactive };
+            if rng.range(6) == 0 {
+                req.deadline_ms = Some(rng.range(3) as u64);
+            }
+            let id = req.id;
+            submitted_ids.push(id);
+            let reply = if rng.range(2) == 0 {
+                PendingReply::Stream(engine.submit_streaming(req))
+            } else {
+                PendingReply::Oneshot(engine.submit(req))
+            };
+            pending.push((id, reply));
+            // interleave: occasionally cancel an earlier request mid-flight
+            if rng.range(4) == 0 && !submitted_ids.is_empty() {
+                let victim = submitted_ids[rng.range(submitted_ids.len())];
+                engine.cancel(victim); // false for already-finished ids: fine
+            }
+            if rng.range(3) == 0 {
+                std::thread::sleep(Duration::from_micros(50 + rng.range(400) as u64));
+            }
+        }
+
+        // every submission must reach exactly one terminal reply
+        for (id, reply) in pending {
+            match reply {
+                PendingReply::Oneshot(rx) => {
+                    let resp = rx
+                        .recv_timeout(RECV_TIMEOUT)
+                        .unwrap_or_else(|e| panic!("trial {trial}: lost session {id}: {e}"));
+                    assert_eq!(resp.id, id);
+                    assert!(
+                        rx.recv_timeout(Duration::from_millis(10)).is_err(),
+                        "trial {trial}: double completion for {id}"
+                    );
+                }
+                PendingReply::Stream(rx) => {
+                    let mut streamed: Vec<i32> = Vec::new();
+                    let resp = loop {
+                        match rx.recv_timeout(RECV_TIMEOUT) {
+                            Ok(Update::Chunk(toks)) => {
+                                assert!(!toks.is_empty(), "empty chunk frames are never sent");
+                                streamed.extend(toks); // chunks only append: monotone stream
+                            }
+                            Ok(Update::Done(resp)) => break resp,
+                            Err(e) => panic!("trial {trial}: lost stream {id}: {e}"),
+                        }
+                    };
+                    assert_eq!(resp.id, id);
+                    // the flush invariant holds for EVERY finish reason --
+                    // completed, cancelled, deadline, failed: chunk
+                    // concatenation equals the summary token list exactly
+                    assert_eq!(
+                        streamed, resp.tokens,
+                        "trial {trial}: stream of {id} ({}) diverges from summary",
+                        resp.finish_reason
+                    );
+                    match rx.recv_timeout(Duration::from_millis(10)) {
+                        Err(RecvTimeoutError::Disconnected) | Err(RecvTimeoutError::Timeout) => {}
+                        Ok(f) => panic!("trial {trial}: frame after Done for {id}: {f:?}"),
+                    }
+                }
+            }
+        }
+
+        // exactly-once terminal accounting across the whole trial
+        let m = engine.scrape();
+        let terminals = m["requests_completed"]
+            + m["requests_cancelled"]
+            + m["requests_deadline_exceeded"]
+            + m["requests_failed"]
+            + m["requests_rejected"];
+        assert_eq!(
+            terminals, n as f64,
+            "trial {trial}: terminal counters must sum to submissions: {m:?}"
+        );
+        assert_eq!(m["requests_received"], n as f64);
+        assert_eq!(m["inflight"], 0.0, "trial {trial}: sessions leaked");
+        assert_eq!(m["requests_failed"], 0.0, "trial {trial}: unexpected failures");
+        engine.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
