@@ -1,0 +1,142 @@
+//! Paged-KV microbenchmark (section Perf, layer 3): memory and fork cost
+//! of the block pool (`massv::kv`, docs/paged_kv.md) against the
+//! deep-copy baseline it replaced.
+//!
+//! Two axes, matching the reason the pool exists:
+//!
+//!   * **bytes per concurrent session** -- N sessions forked from one warm
+//!     prefix.  Deep copy charges a full KV per session; the pool charges
+//!     a block table (refcount bumps) until a fork diverges, and then only
+//!     the diverged blocks.
+//!   * **fork latency** -- `PagedKv::clone()` (O(table) refcount bumps)
+//!     vs cloning the whole literal.
+//!
+//! Pure in-process pool work, no engine and no PJRT: the numbers isolate
+//! the data structure.  Besides the human-readable report, the run writes
+//! machine-readable `target/paper/BENCH_paging.json`; CI smoke-runs this
+//! bench and archives the JSON.  A checked-in baseline lives at
+//! `benches/baselines/BENCH_paging.json`.
+//!
+//! The run FAILS (hard assert) if a fork's incremental pool cost stops
+//! being small next to a full sequence KV -- the pool's headline claim.
+//!
+//!     cargo bench --bench micro_paging [-- --quick]
+
+mod harness;
+
+use harness::{measure, summarize, BenchReport};
+use massv::kv::{KvPool, KvPoolConfig};
+use massv::util::json::Json;
+
+/// One sequence's KV: 16Ki f32 words (64 KiB) split into 16 pool blocks.
+const SEQ_WORDS: usize = 16 * 1024;
+const BLOCK_WORDS: usize = 1024;
+
+fn median(micros: &[f64]) -> f64 {
+    let mut v = micros.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MASSV_BENCH_QUICK").ok().as_deref() == Some("1");
+    let (forks, warmup, iters) = if quick { (16, 5, 60) } else { (64, 20, 400) };
+    let seq_bytes = SEQ_WORDS * 4;
+
+    let mut report = BenchReport::new("micro_paging");
+    report.line(format!(
+        "paged KV pool: seq {SEQ_WORDS} words ({seq_bytes} B), block {BLOCK_WORDS} words, \
+         {forks} concurrent forks"
+    ));
+
+    let kv: Vec<f32> = (0..SEQ_WORDS).map(|i| (i % 251) as f32 * 0.5).collect();
+    let lit = xla::Literal::vec1(&kv);
+
+    // ---- bytes per concurrent session --------------------------------
+    let pool = KvPool::new(KvPoolConfig {
+        block_words: BLOCK_WORDS,
+        budget_bytes: usize::MAX,
+    });
+    let base = pool.store(&lit);
+    let bytes_base = pool.bytes_used();
+
+    // fork: every session shares every block -- zero incremental bytes
+    let mut sessions: Vec<_> = (0..forks).map(|_| base.clone()).collect();
+    let shared_per_fork = (pool.bytes_used() - bytes_base) as f64 / forks as f64;
+
+    // diverge: each session rewrites its final block (one decode step's
+    // worth of drift) -- copy-on-write copies ONLY that block
+    let mut diverged = kv.clone();
+    for (i, s) in sessions.iter_mut().enumerate() {
+        diverged[SEQ_WORDS - 1] = 1000.0 + i as f32;
+        s.write(&xla::Literal::vec1(&diverged));
+    }
+    let diverged_per_fork = (pool.bytes_used() - bytes_base) as f64 / forks as f64;
+    let deep_per_fork = seq_bytes as f64; // deep copy charges the full KV
+
+    report.line(format!(
+        "bytes/session  deep-copy {deep_per_fork:>9.0} B   paged(shared) {shared_per_fork:>6.0} B   \
+         paged(diverged) {diverged_per_fork:>6.0} B   sharing {:.1}x",
+        deep_per_fork / diverged_per_fork.max(1.0)
+    ));
+
+    // every fork still reads back its own bit-exact content
+    let check = sessions[forks / 2].to_literal().to_vec::<f32>().unwrap();
+    assert_eq!(check[SEQ_WORDS - 1], 1000.0 + (forks / 2) as f32);
+    assert_eq!(&check[..SEQ_WORDS - 1], &kv[..SEQ_WORDS - 1]);
+
+    // ---- fork latency ------------------------------------------------
+    let paged_us = measure(warmup, iters, || {
+        let f = base.clone(); // refcount bump per block + drop decref
+        assert_eq!(f.blocks(), SEQ_WORDS / BLOCK_WORDS);
+    });
+    let deep_us = measure(warmup, iters, || {
+        let f = lit.clone(); // full payload copy + drop free
+        assert_eq!(f.element_count(), SEQ_WORDS);
+    });
+    report.line(summarize("fork latency: paged clone (block table)", &paged_us));
+    report.line(summarize("fork latency: deep copy (whole literal)", &deep_us));
+
+    // ---- swap round-trip (preemption path) ---------------------------
+    let swap_us = measure(warmup, iters, || {
+        let mut f = base.clone();
+        f.swap_out();
+        f.swap_in();
+        assert!(!f.is_swapped());
+    });
+    report.line(summarize("preemption: swap_out + swap_in round-trip", &swap_us));
+
+    drop(sessions);
+    drop(base);
+    assert_eq!(pool.bytes_used(), 0, "dropping every handle must free the pool");
+
+    let (paged_med, deep_med, swap_med) = (median(&paged_us), median(&deep_us), median(&swap_us));
+    let json = Json::obj(vec![
+        ("bench", Json::str("micro_paging")),
+        ("seq_words", Json::num(SEQ_WORDS as f64)),
+        ("block_words", Json::num(BLOCK_WORDS as f64)),
+        ("forks", Json::num(forks as f64)),
+        ("deep_bytes_per_fork", Json::num(deep_per_fork)),
+        ("paged_bytes_per_fork_shared", Json::num(shared_per_fork)),
+        ("paged_bytes_per_fork_diverged", Json::num(diverged_per_fork)),
+        ("sharing_factor", Json::num(deep_per_fork / diverged_per_fork.max(1.0))),
+        ("fork_us_paged_median", Json::num(paged_med)),
+        ("fork_us_deep_median", Json::num(deep_med)),
+        ("swap_roundtrip_us_median", Json::num(swap_med)),
+    ]);
+    std::fs::create_dir_all("target/paper").ok();
+    std::fs::write("target/paper/BENCH_paging.json", format!("{}\n", json.to_string()))?;
+    report.line("[json saved to target/paper/BENCH_paging.json]");
+    report.finish();
+
+    // Headline claims, enforced: a shared fork costs literally nothing,
+    // and a diverged fork costs one block -- far below a sequence's KV.
+    assert_eq!(shared_per_fork, 0.0, "undiverged forks must share every block");
+    assert!(
+        diverged_per_fork * 8.0 <= seq_bytes as f64,
+        "a diverged fork's incremental bytes ({diverged_per_fork:.0} B) must stay \
+         well below one sequence's KV ({seq_bytes} B)"
+    );
+    Ok(())
+}

@@ -69,7 +69,8 @@ fn main() -> anyhow::Result<()> {
     // KV literal round-trip cost (the host<->device copy we pay per call)
     let target = models.target("qwensim-L")?;
     let (_, st) = target.prefill_mm(&it.image, &it.prompt_ids, it.prompt_len)?;
-    let kv = Tensor::from_literal(&st.kv)?;
+    let kv_lit = st.kv.literal();
+    let kv = Tensor::from_literal(&kv_lit)?;
     report.line(format!(
         "KV cache: {:?} = {} f32 = {:.2} MiB",
         kv.dims,
@@ -77,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         kv.numel() as f64 * 4.0 / (1 << 20) as f64
     ));
     let us = measure(3, 50, || {
-        let t = Tensor::from_literal(&st.kv).unwrap();
+        let t = Tensor::from_literal(&kv_lit).unwrap();
         let _ = t.to_literal().unwrap();
     });
     report.line(summarize("kv literal host round-trip (down+up)", &us));
@@ -103,7 +104,7 @@ fn main() -> anyhow::Result<()> {
             let args = [
                 massv::runtime::lit_i32(&toks, &[gamma + 1])?,
                 massv::runtime::scalar_i32(st.pos),
-                st.kv.clone(),
+                st.kv.literal(),
             ];
             let us = measure(2, 10, || {
                 let _ = kexec.call(&args).unwrap();

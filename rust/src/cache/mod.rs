@@ -172,18 +172,30 @@ impl Inner {
                 }
             }
             let Some((_, victim)) = best else { break };
+            // The victim was selected as a live `Ready` entry under this
+            // same lock acquisition, so removal MUST find it in that state
+            // -- anything else is bookkeeping corruption.  (The old code
+            // tolerated a missing/`Filling` victim with `unwrap_or(0)`,
+            // counting a phantom eviction while freeing nothing; had the
+            // invariant ever broken, `bytes` would have drifted from the
+            // live-entry total and the loop could spin without progress.)
             let freed = match victim {
-                Victim::Image(k) => self.images.remove(&k).map(|e| e.bytes),
+                Victim::Image(k) => {
+                    self.images
+                        .remove(&k)
+                        .expect("eviction victim vanished under the lock")
+                        .bytes
+                }
                 Victim::Encoding(k) => match self.encodings.remove(&k) {
-                    Some(Slot::Ready(e)) => Some(e.bytes),
-                    _ => None,
+                    Some(Slot::Ready(e)) => e.bytes,
+                    _ => unreachable!("eviction victim not Ready under the lock"),
                 },
                 Victim::Prefix(k) => match self.prefixes.remove(&k) {
-                    Some(Slot::Ready(e)) => Some(e.bytes),
-                    _ => None,
+                    Some(Slot::Ready(e)) => e.bytes,
+                    _ => unreachable!("eviction victim not Ready under the lock"),
                 },
             };
-            self.bytes -= freed.unwrap_or(0);
+            self.bytes -= freed;
             evicted += 1;
         }
         evicted
@@ -326,12 +338,16 @@ impl PrefixCache {
     ) -> Result<(Arc<VisionEncoding>, bool)> {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            let tick = inner.tick + 1;
+            // one touch path for every table: `next_tick` is the only
+            // thing that advances the LRU clock.  (This loop used to
+            // hand-roll `inner.tick + 1` and commit it only on the hit
+            // arm -- duplicated clock logic that any refactor could
+            // desynchronize from the other tables' touches.)
+            let tick = inner.next_tick();
             match inner.encodings.get_mut(&image) {
                 Some(Slot::Ready(e)) => {
                     e.last_used = tick;
                     let v = e.value.clone();
-                    inner.tick = tick;
                     self.metrics.vision_encode_hits.inc();
                     return Ok((v, true));
                 }
@@ -376,12 +392,12 @@ impl PrefixCache {
     pub fn prefix(cache: &Arc<PrefixCache>, key: &PrefixKey) -> PrefixLookup {
         let mut inner = cache.inner.lock().unwrap();
         loop {
-            let tick = inner.tick + 1;
+            // same unified touch path as `encoding` -- see the note there
+            let tick = inner.next_tick();
             match inner.prefixes.get_mut(key) {
                 Some(Slot::Ready(e)) => {
                     e.last_used = tick;
                     let v = e.value.clone();
-                    inner.tick = tick;
                     cache.metrics.prefix_cache_hits.inc();
                     return PrefixLookup::Hit(v);
                 }
@@ -427,6 +443,40 @@ impl PrefixCache {
 }
 
 #[cfg(test)]
+impl PrefixCache {
+    /// Ground-truth byte total recomputed from the live entries, so tests
+    /// can pin the incremental `bytes` accounting against it.
+    fn recount_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let mut total: usize = inner.images.values().map(|e| e.bytes).sum();
+        for s in inner.encodings.values() {
+            if let Slot::Ready(e) = s {
+                total += e.bytes;
+            }
+        }
+        for s in inner.prefixes.values() {
+            if let Slot::Ready(e) = s {
+                total += e.bytes;
+            }
+        }
+        total
+    }
+
+    /// Presence probes that neither touch the LRU clock nor open slots.
+    fn has_image(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().images.contains_key(&id)
+    }
+
+    fn has_encoding(&self, image: u64) -> bool {
+        matches!(self.inner.lock().unwrap().encodings.get(&image), Some(Slot::Ready(_)))
+    }
+
+    fn has_prefix(&self, key: &PrefixKey) -> bool {
+        matches!(self.inner.lock().unwrap().prefixes.get(key), Some(Slot::Ready(_)))
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
     use crate::models::SeqState;
@@ -438,11 +488,7 @@ mod tests {
     fn snapshot(kv_elems: usize) -> Arc<PrefixSnapshot> {
         Arc::new(PrefixSnapshot {
             last_logits: vec![0.0; 8],
-            tstate: SeqState {
-                kv: xla::Literal::vec1(&vec![0.0f32; kv_elems]),
-                pos: 0,
-                script: None,
-            },
+            tstate: SeqState::new(xla::Literal::vec1(&vec![0.0f32; kv_elems]), 0, None),
             dstate: None,
         })
     }
@@ -574,5 +620,157 @@ mod tests {
         let (id2, _) = cache.put_image(&px);
         assert_eq!(id, id2);
         assert_eq!(cache.stats().1, 1);
+    }
+
+    /// Regression for the `evict_to` accounting bug: after a forced
+    /// eviction storm across all three tables, the incremental `bytes`
+    /// total (and the exported gauge) must equal the recomputed sum of
+    /// live entry bytes -- the old `freed.unwrap_or(0)` arm could count
+    /// phantom evictions without subtracting anything, letting `bytes`
+    /// drift above the live total forever.
+    #[test]
+    fn eviction_storm_keeps_bytes_equal_to_live_entries() {
+        let m = metrics();
+        let cache = PrefixCache::new(4096, m.clone());
+        for i in 0..40u64 {
+            match i % 3 {
+                0 => {
+                    cache.put_image(&vec![i as f32 + 0.5; 64 + (i as usize % 7) * 32]);
+                }
+                1 => {
+                    cache
+                        .encoding(i, || Ok(VisionEncoding::Scripted { image_seed: i }))
+                        .unwrap();
+                }
+                _ => {
+                    let PrefixLookup::Fill(fill) =
+                        PrefixCache::prefix(&cache, &key(i, i as i32))
+                    else {
+                        panic!("fresh key must miss")
+                    };
+                    fill.fill(snapshot(100 + (i as usize % 5) * 50));
+                }
+            }
+            assert_eq!(
+                cache.stats().0,
+                cache.recount_bytes(),
+                "bytes drifted from live entries at step {i}"
+            );
+        }
+        assert!(m.prefix_cache_evictions.get() > 0, "storm must actually evict");
+        let (bytes, _) = cache.stats();
+        assert!(bytes <= 4096, "budget violated: {bytes}");
+        assert_eq!(bytes, cache.recount_bytes());
+        assert_eq!(m.prefix_cache_bytes.get() as usize, bytes);
+    }
+
+    /// The LRU clock is shared by all three tables: with hits interleaved
+    /// across images/encodings/prefixes, an eviction must pick the entry
+    /// whose *last touch* -- in any table -- is globally oldest.
+    #[test]
+    fn interleaved_touches_across_tables_evict_the_true_lru() {
+        // measure the real per-entry charges first (payload + overhead)
+        let probe = PrefixCache::new(1 << 20, metrics());
+        let px = vec![0.25f32; 64];
+        probe.put_image(&px);
+        let sz_img = probe.stats().0;
+        probe.encoding(7, || Ok(VisionEncoding::Scripted { image_seed: 7 })).unwrap();
+        let sz_enc = probe.stats().0 - sz_img;
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&probe, &key(1, 1)) else {
+            panic!()
+        };
+        fill.fill(snapshot(64));
+        let sz_pre = probe.stats().0 - sz_img - sz_enc;
+
+        // budget fits image + encoding + one snapshot, but adding a second
+        // snapshot forces exactly one eviction
+        let m = metrics();
+        let cache = PrefixCache::new(sz_img + sz_enc + 2 * sz_pre - 1, m.clone());
+        let (img_id, _) = cache.put_image(&px);
+        cache.encoding(7, || Ok(VisionEncoding::Scripted { image_seed: 7 })).unwrap();
+        let k_c = key(1, 1);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k_c) else { panic!() };
+        fill.fill(snapshot(64));
+        // touch the image and the prefix, leaving the ENCODING as the
+        // globally least-recently-used entry
+        cache.get_image(img_id).unwrap();
+        assert!(matches!(PrefixCache::prefix(&cache, &k_c), PrefixLookup::Hit(_)));
+        // one more snapshot -> one eviction -> the encoding must be it
+        let k_d = key(2, 2);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k_d) else { panic!() };
+        fill.fill(snapshot(64));
+        assert_eq!(m.prefix_cache_evictions.get(), 1);
+        assert!(!cache.has_encoding(7), "the cross-table LRU entry must go first");
+        assert!(cache.has_image(img_id));
+        assert!(cache.has_prefix(&k_c));
+        assert!(cache.has_prefix(&k_d));
+        assert_eq!(cache.stats().0, cache.recount_bytes());
+    }
+
+    /// Eviction racing a single-flight fill: the `Filling` slot is pinned
+    /// through an eviction storm (waiters are never orphaned on the
+    /// condvar), storm accounting never double-subtracts, and the fill
+    /// completing after heavy eviction traffic re-inserts cleanly.
+    #[test]
+    fn filling_slot_survives_eviction_storm_and_waiters_resolve() {
+        let m = metrics();
+        let cache = PrefixCache::new(2048, m.clone());
+        let k = key(500, 1);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k) else { panic!() };
+        let c2 = cache.clone();
+        let k2 = k.clone();
+        let waiter = std::thread::spawn(move || match PrefixCache::prefix(&c2, &k2) {
+            PrefixLookup::Hit(s) => s.last_logits.len(),
+            PrefixLookup::Fill(_) => panic!("waiter must resolve to a hit"),
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // storm: every insert evicts earlier Ready entries while the
+        // Filling slot stays pinned
+        for i in 0..30u64 {
+            let PrefixLookup::Fill(f) = PrefixCache::prefix(&cache, &key(i, 0)) else {
+                panic!("fresh key must miss")
+            };
+            f.fill(snapshot(200));
+            assert_eq!(cache.stats().0, cache.recount_bytes(), "double-subtract at {i}");
+        }
+        assert!(m.prefix_cache_evictions.get() > 0);
+        // the delayed fill publishes cleanly and wakes the waiter
+        fill.fill(snapshot(64));
+        assert_eq!(waiter.join().unwrap(), 8);
+        assert!(cache.has_prefix(&k), "freshly filled entry must be resident");
+        assert_eq!(cache.stats().0, cache.recount_bytes());
+        assert!(cache.stats().0 <= 2048);
+    }
+
+    /// Paged-pool extension of the eviction story: a cached snapshot whose
+    /// sequence states live in the KV block pool holds refcounts, and
+    /// evicting the cache entry (the last reference) releases its blocks
+    /// back to the pool.
+    #[test]
+    fn evicting_a_paged_snapshot_releases_its_pool_blocks() {
+        use crate::kv::{KvPool, KvPoolConfig};
+        let pool = KvPool::with_metrics(
+            KvPoolConfig { block_words: 8, budget_bytes: 1 << 20 },
+            None,
+        );
+        let mut st = SeqState::new(xla::Literal::vec1(&vec![1.5f32; 64]), 0, None);
+        st.paginate(&pool);
+        assert!(pool.blocks_used() > 0);
+        let snap = Arc::new(PrefixSnapshot {
+            last_logits: vec![0.0; 8],
+            tstate: st,
+            dstate: None,
+        });
+        let cache = PrefixCache::new(64, metrics()); // evicts on insert
+        let k = key(9, 9);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k) else { panic!() };
+        fill.fill(snap);
+        assert!(!cache.has_prefix(&k), "tiny budget must evict immediately");
+        assert_eq!(
+            pool.blocks_used(),
+            0,
+            "dropping the cache's last snapshot ref must release its blocks"
+        );
+        assert_eq!(pool.bytes_used(), 0);
     }
 }

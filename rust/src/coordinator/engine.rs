@@ -33,6 +33,16 @@
 //! before the free token is sampled, so per-request sampling config never
 //! enters the cache key.
 //!
+//! Session KV lives in a shared *paged block pool* (`crate::kv`,
+//! `docs/paged_kv.md`) when `EngineConfig::paged_kv` is on (the default):
+//! prefix-cache hits and tree forks bump block refcounts instead of deep
+//! copying KV literals, divergence copies only the touched block
+//! (copy-on-write), and pool pressure is handled by *preemption* -- the
+//! lowest-priority backlogged session is swapped out of the pool
+//! (`Worker::maybe_preempt`) and restored bit-exactly when next popped --
+//! instead of rejecting at admission.  Decoded output is bit-identical
+//! with paging on or off.
+//!
 //! Steps are *ganged* across requests (cross-request batching,
 //! `docs/serving.md`): a worker pops up to `EngineConfig::max_batch`
 //! compatible steps in one dispatch (`Scheduler::pop_batch`; compatible =
@@ -70,6 +80,7 @@ use crate::cache::{self, PrefixCache, PrefixKey, PrefixLookup};
 use crate::coordinator::request::{DecodeMode, Request, Response};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{Scheduler, Submit};
+use crate::kv::{KvPool, KvPoolConfig};
 use crate::metrics::Metrics;
 use crate::models::{DraftModel, ModelSet, SeqState, TargetModel, VisionEncoding};
 use crate::spec::{
@@ -103,6 +114,22 @@ pub struct EngineConfig {
     /// per-step dispatch, the pre-batching behavior.  Admissions are
     /// never ganged.
     pub max_batch: usize,
+    /// Back per-session KV with the shared paged block pool
+    /// (`crate::kv`, `docs/paged_kv.md`): sequence forks -- prefix-cache
+    /// hits, tree branches, snapshot exports -- become refcount bumps on
+    /// shared blocks with copy-on-write isolation, instead of deep
+    /// literal clones.  Output is bit-identical either way (pinned by
+    /// `rust/tests/paged_equivalence.rs`); `false` restores the
+    /// owned-literal behavior for A/B comparison.
+    pub paged_kv: bool,
+    /// Byte budget for the paged KV pool.  The pool over-commits --
+    /// allocation never fails -- and workers respond to pressure by
+    /// swapping out the lowest-priority backlogged sessions
+    /// (`Worker::maybe_preempt`) until residency is back under budget.
+    pub kv_pool_bytes: usize,
+    /// Words (4 bytes each) per KV block.  Smaller blocks share more
+    /// aggressively on fork; larger blocks keep tables shorter.
+    pub kv_block_words: usize,
 }
 
 impl Default for EngineConfig {
@@ -114,6 +141,9 @@ impl Default for EngineConfig {
             policy: SchedPolicy::Continuous,
             prefix_cache_bytes: 64 << 20,
             max_batch: 8,
+            paged_kv: true,
+            kv_pool_bytes: 64 << 20,
+            kv_block_words: crate::kv::DEFAULT_BLOCK_WORDS,
         }
     }
 }
@@ -224,6 +254,8 @@ pub struct Engine {
     pub tokenizer: Arc<Tokenizer>,
     pub metrics: Arc<Metrics>,
     pub cache: Arc<PrefixCache>,
+    /// The shared paged KV block pool (`None` when `paged_kv` is off).
+    pub kv_pool: Option<Arc<KvPool>>,
     sched: Arc<Scheduler<Work>>,
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
     workers: Vec<JoinHandle<()>>,
@@ -241,6 +273,15 @@ impl Engine {
         let cancels = Arc::new(Mutex::new(HashMap::new()));
 
         metrics.batch_max_lanes.set(cfg.max_batch.max(1) as i64);
+        let kv_pool = cfg.paged_kv.then(|| {
+            KvPool::with_metrics(
+                KvPoolConfig {
+                    block_words: cfg.kv_block_words,
+                    budget_bytes: cfg.kv_pool_bytes,
+                },
+                Some(metrics.clone()),
+            )
+        });
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let w = Worker {
@@ -248,6 +289,7 @@ impl Engine {
                 tokenizer: tokenizer.clone(),
                 metrics: metrics.clone(),
                 cache: cache.clone(),
+                kv_pool: kv_pool.clone(),
                 sched: sched.clone(),
                 router: router.clone(),
                 cancels: cancels.clone(),
@@ -266,6 +308,7 @@ impl Engine {
             tokenizer,
             metrics,
             cache,
+            kv_pool,
             sched,
             cancels,
             workers,
@@ -406,6 +449,8 @@ struct Worker {
     tokenizer: Arc<Tokenizer>,
     metrics: Arc<Metrics>,
     cache: Arc<PrefixCache>,
+    /// Shared paged KV pool; `None` runs sessions on owned literals.
+    kv_pool: Option<Arc<KvPool>>,
     sched: Arc<Scheduler<Work>>,
     router: Arc<Router>,
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
@@ -469,6 +514,39 @@ impl Worker {
             } else {
                 self.step_batch(steps);
             }
+            self.maybe_preempt();
+        }
+    }
+
+    /// Relieve KV-pool pressure by swapping out backlogged sessions.  The
+    /// pool over-commits (allocation never fails), so admission never
+    /// rejects on memory; instead, whenever residency exceeds the byte
+    /// budget, the queued session the scheduler would dispatch LAST --
+    /// back of the batch class, then back of interactive
+    /// (`Scheduler::visit_backlog_mut`) -- has its KV blocks compacted out
+    /// of the pool.  The session stays queued; when it is next popped,
+    /// `kv_swap_in` restores its blocks bit-exactly before the step runs,
+    /// so preemption is invisible in the output (pinned by
+    /// `rust/tests/paged_equivalence.rs`).  Sessions mid-dispatch on other
+    /// workers are never touched: only items *in* the queue are visited,
+    /// and the visit holds the queue lock.
+    fn maybe_preempt(&self) {
+        let Some(pool) = &self.kv_pool else { return };
+        if !pool.over_budget() {
+            return;
+        }
+        let mut swapped = 0u32;
+        self.sched.visit_backlog_mut(|work| {
+            if let Work::Step(active) = work {
+                if !active.session.kv_swapped() {
+                    active.session.kv_swap_out();
+                    swapped += 1;
+                }
+            }
+            pool.over_budget() // keep walking only while still over
+        });
+        if swapped > 0 {
+            self.metrics.kv_preemptions.inc();
         }
     }
 
@@ -576,6 +654,8 @@ impl Worker {
             self.flush_and_finalize(*active, stats, Some("deadline"));
             return None;
         }
+        // a session preempted while queued resumes here, bit-exactly
+        active.session.kv_swap_in();
         active.steps += 1;
         self.drive_step(active)
     }
@@ -651,6 +731,7 @@ impl Worker {
                 let stats = active.session.abort();
                 self.flush_and_finalize(*active, stats, Some("deadline"));
             } else {
+                active.session.kv_swap_in();
                 active.steps += 1;
                 group.push(active);
             }
@@ -857,7 +938,7 @@ impl Worker {
             }
             _ => None,
         };
-        let session = DecodeSession::new(
+        let mut session = DecodeSession::new(
             target.clone(),
             drafter.clone(),
             params,
@@ -866,6 +947,9 @@ impl Worker {
             adaptive,
             route.text_only_draft,
         );
+        if let Some(pool) = &self.kv_pool {
+            session.set_kv_pool(pool.clone());
+        }
         Ok(SessionParts { session, target, drafter, prompt_ids, len, drafter_key })
     }
 
@@ -1128,6 +1212,10 @@ mod tests {
         Worker {
             tokenizer: Arc::new(Tokenizer::load(dir).unwrap()),
             cache: PrefixCache::new(1 << 20, metrics.clone()),
+            kv_pool: Some(KvPool::with_metrics(
+                KvPoolConfig::default(),
+                Some(metrics.clone()),
+            )),
             metrics,
             models,
             sched: Arc::new(Scheduler::new(16)),

@@ -178,6 +178,22 @@ impl<T> Scheduler<T> {
         Self::pick(&mut self.state.lock().unwrap())
     }
 
+    /// Visit every queued item in *reverse* dispatch priority -- the back
+    /// of the batch queue first, then the back of the interactive queue --
+    /// under the queue lock, without dequeuing anything.  `f` returns
+    /// `false` to stop early.  This is the engine's preemption-victim
+    /// order: the item the scheduler would dispatch LAST is the first one
+    /// asked to give up its KV blocks under pool pressure.
+    pub fn visit_backlog_mut(&self, mut f: impl FnMut(&mut T) -> bool) {
+        let mut s = self.state.lock().unwrap();
+        let State { interactive, batch, .. } = &mut *s;
+        for item in batch.iter_mut().rev().chain(interactive.iter_mut().rev()) {
+            if !f(item) {
+                return;
+            }
+        }
+    }
+
     fn pick(s: &mut State<T>) -> Option<T> {
         let force_batch = s.consecutive_interactive >= AGING_LIMIT && !s.batch.is_empty();
         if !force_batch {
@@ -305,6 +321,34 @@ mod tests {
             s.requeue(x, Priority::Interactive);
         }
         assert_eq!(order, vec!["a", "b", "a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn visit_backlog_walks_lowest_priority_first() {
+        let s = Scheduler::new(16);
+        s.submit(1, Priority::Interactive);
+        s.submit(2, Priority::Interactive);
+        s.submit(100, Priority::Batch);
+        s.submit(101, Priority::Batch);
+        // Victim order: back of batch, front of batch, back of interactive,
+        // front of interactive -- the exact reverse of dispatch order.
+        let mut seen = Vec::new();
+        s.visit_backlog_mut(|x| {
+            seen.push(*x);
+            true
+        });
+        assert_eq!(seen, vec![101, 100, 2, 1]);
+        // Early stop and in-place mutation both work; nothing is dequeued.
+        s.visit_backlog_mut(|x| {
+            *x += 1000;
+            false
+        });
+        assert_eq!(s.len(), 4);
+        let mut drained = Vec::new();
+        while let Some(x) = s.try_pop() {
+            drained.push(x);
+        }
+        assert_eq!(drained, vec![1, 2, 100, 1101]);
     }
 
     /// Key items by sign: positive values gang together, negative values

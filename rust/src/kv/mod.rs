@@ -1,0 +1,745 @@
+//! Paged KV block pool with copy-on-write sharing.
+//!
+//! Replaces whole-sequence KV deep copies with block-granular structural
+//! sharing (the vLLM paged-attention memory model, here over host-side
+//! `xla::Literal`s): a `KvPool` owns fixed-size blocks of 32-bit words,
+//! sequences hold block *tables* (`PagedKv`), and a fork is a refcount
+//! bump per block instead of a full KV clone.  The first divergent write
+//! to a shared block copies just that block (CoW); unchanged prefix
+//! blocks stay shared for the life of both sequences -- which is exactly
+//! the prefix-cache and tree-branch fork pattern (MASSV doubles every
+//! sequence's KV footprint with its drafter, so sharing has to be
+//! structural, not copy-based).
+//!
+//! Bit-exactness: block content is the literal's words verbatim (`f32`
+//! stored via `to_bits`), so materialize -> mutate -> write -> materialize
+//! round-trips are bit-identical and the decode path cannot observe
+//! whether paging is on.  That is the headline invariant the PR 4
+//! batched-vs-sequential oracle enforces end-to-end.
+//!
+//! Pressure: allocation never fails (over-commit); `over_budget()`
+//! reports when resident bytes exceed the configured budget and the
+//! engine responds by *preempting* -- swapping out the lowest-priority
+//! backlogged session's blocks (`PagedKv::swap_out`, a compacted host
+//! copy) instead of rejecting at admission.  Swap-in re-pages the copy;
+//! the round-trip is bit-exact, so a preempted request resumes with
+//! identical output (see `docs/paged_kv.md`).
+//!
+//! `KvBacking` is the `SeqState.kv` slot: `Owned` (the pre-paging deep
+//! literal, still the default for pool-less callers) or `Paged`.  Both
+//! expose the same materialize/replace surface, so the model layer is
+//! agnostic.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Metrics;
+
+/// Default block size in 32-bit words (4 KiB per block).
+pub const DEFAULT_BLOCK_WORDS: usize = 1024;
+
+#[derive(Debug, Clone)]
+pub struct KvPoolConfig {
+    /// Words per block.  Smaller blocks share more aggressively across
+    /// divergent forks; larger blocks cut table overhead.
+    pub block_words: usize,
+    /// Resident-byte budget the engine's preemption policy enforces
+    /// (allocation itself never fails -- see `KvPool::over_budget`).
+    pub budget_bytes: usize,
+}
+
+impl Default for KvPoolConfig {
+    fn default() -> Self {
+        KvPoolConfig { block_words: DEFAULT_BLOCK_WORDS, budget_bytes: 64 << 20 }
+    }
+}
+
+// ------------------------------------------------------- literal <-> words
+
+#[derive(Debug, Clone, PartialEq)]
+enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+/// Structure of a flattened literal, kept alongside the block table so the
+/// words can be re-materialized into an identical `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+enum LitShape {
+    Array { dtype: Dtype, dims: Vec<i64>, len: usize },
+    Tuple(Vec<LitShape>),
+}
+
+/// Append the literal's elements to `words` as raw 32-bit patterns
+/// (`f32::to_bits`: the round-trip is bit-exact, NaNs and -0.0 included)
+/// and return the shape descriptor that re-materializes them.
+fn flatten(lit: &xla::Literal, words: &mut Vec<u32>) -> LitShape {
+    match lit {
+        xla::Literal::Array { data, dims } => {
+            let (dtype, len) = match data {
+                xla::LiteralData::F32(v) => {
+                    words.extend(v.iter().map(|x| x.to_bits()));
+                    (Dtype::F32, v.len())
+                }
+                xla::LiteralData::I32(v) => {
+                    words.extend(v.iter().map(|x| *x as u32));
+                    (Dtype::I32, v.len())
+                }
+                xla::LiteralData::U32(v) => {
+                    words.extend_from_slice(v);
+                    (Dtype::U32, v.len())
+                }
+            };
+            LitShape::Array { dtype, dims: dims.clone(), len }
+        }
+        xla::Literal::Tuple(parts) => {
+            LitShape::Tuple(parts.iter().map(|p| flatten(p, words)).collect())
+        }
+    }
+}
+
+fn unflatten(shape: &LitShape, words: &[u32], cursor: &mut usize) -> xla::Literal {
+    match shape {
+        LitShape::Array { dtype, dims, len } => {
+            let slice = &words[*cursor..*cursor + *len];
+            *cursor += *len;
+            let data = match dtype {
+                Dtype::F32 => {
+                    xla::LiteralData::F32(slice.iter().map(|w| f32::from_bits(*w)).collect())
+                }
+                Dtype::I32 => xla::LiteralData::I32(slice.iter().map(|w| *w as i32).collect()),
+                Dtype::U32 => xla::LiteralData::U32(slice.to_vec()),
+            };
+            xla::Literal::Array { data, dims: dims.clone() }
+        }
+        LitShape::Tuple(shapes) => {
+            xla::Literal::Tuple(shapes.iter().map(|s| unflatten(s, words, cursor)).collect())
+        }
+    }
+}
+
+// ------------------------------------------------------------------- pool
+
+/// A pool slot.  `Free` slots are recycled through the free list; `Used`
+/// slots carry their word payload (the last block of a sequence may be
+/// partial) and a refcount shared by every table pointing at them.
+enum BlockSlot {
+    Free,
+    Used { data: Vec<u32>, refs: u32 },
+}
+
+struct PoolInner {
+    blocks: Vec<BlockSlot>,
+    free: Vec<u32>,
+    used_blocks: usize,
+    used_words: usize,
+}
+
+impl PoolInner {
+    fn alloc(&mut self, chunk: &[u32]) -> u32 {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.blocks.push(BlockSlot::Free);
+                (self.blocks.len() - 1) as u32
+            }
+        };
+        self.used_blocks += 1;
+        self.used_words += chunk.len();
+        self.blocks[id as usize] = BlockSlot::Used { data: chunk.to_vec(), refs: 1 };
+        id
+    }
+
+    fn incref(&mut self, id: u32) {
+        match &mut self.blocks[id as usize] {
+            BlockSlot::Used { refs, .. } => *refs += 1,
+            // a live table can only reference Used slots: Free here means a
+            // refcounting bug, never a recoverable condition
+            BlockSlot::Free => unreachable!("kv pool: incref on a free block"),
+        }
+    }
+
+    fn decref(&mut self, id: u32) {
+        let freed = match &mut self.blocks[id as usize] {
+            BlockSlot::Used { refs, data } => {
+                *refs -= 1;
+                if *refs == 0 {
+                    Some(data.len())
+                } else {
+                    None
+                }
+            }
+            BlockSlot::Free => unreachable!("kv pool: decref on a free block"),
+        };
+        if let Some(words) = freed {
+            self.used_blocks -= 1;
+            self.used_words -= words;
+            self.blocks[id as usize] = BlockSlot::Free;
+            self.free.push(id);
+        }
+    }
+
+    fn refs(&self, id: u32) -> u32 {
+        match &self.blocks[id as usize] {
+            BlockSlot::Used { refs, .. } => *refs,
+            BlockSlot::Free => unreachable!("kv pool: refs of a free block"),
+        }
+    }
+
+    fn read(&self, id: u32) -> &[u32] {
+        match &self.blocks[id as usize] {
+            BlockSlot::Used { data, .. } => data,
+            BlockSlot::Free => unreachable!("kv pool: read of a free block"),
+        }
+    }
+
+    /// Overwrite an exclusively-held block's payload (caller checked
+    /// `refs == 1`; shared blocks must go through CoW instead).
+    fn write_block(&mut self, id: u32, chunk: &[u32]) {
+        let old = match &mut self.blocks[id as usize] {
+            BlockSlot::Used { data, .. } => {
+                let old = data.len();
+                data.clear();
+                data.extend_from_slice(chunk);
+                old
+            }
+            BlockSlot::Free => unreachable!("kv pool: write to a free block"),
+        };
+        self.used_words += chunk.len();
+        self.used_words -= old;
+    }
+}
+
+/// The shared block pool.  One per engine; every `PagedKv` holds an `Arc`
+/// back to it, so drop order never dangles a table.
+pub struct KvPool {
+    cfg: KvPoolConfig,
+    inner: Mutex<PoolInner>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvPoolConfig) -> Arc<KvPool> {
+        KvPool::with_metrics(cfg, None)
+    }
+
+    pub fn with_metrics(mut cfg: KvPoolConfig, metrics: Option<Arc<Metrics>>) -> Arc<KvPool> {
+        cfg.block_words = cfg.block_words.max(1);
+        Arc::new(KvPool {
+            cfg,
+            inner: Mutex::new(PoolInner {
+                blocks: Vec::new(),
+                free: Vec::new(),
+                used_blocks: 0,
+                used_words: 0,
+            }),
+            metrics,
+        })
+    }
+
+    pub fn block_words(&self) -> usize {
+        self.cfg.block_words
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.cfg.budget_bytes
+    }
+
+    /// Resident (pooled) bytes across all live blocks.
+    pub fn bytes_used(&self) -> usize {
+        self.inner.lock().unwrap().used_words * 4
+    }
+
+    pub fn blocks_used(&self) -> usize {
+        self.inner.lock().unwrap().used_blocks
+    }
+
+    /// Pressure signal for the engine's preemption policy: allocation
+    /// itself never fails (over-commit), preemption brings it back down.
+    pub fn over_budget(&self) -> bool {
+        self.bytes_used() > self.cfg.budget_bytes
+    }
+
+    /// Page a literal into the pool, returning the owning table handle.
+    pub fn store(self: &Arc<Self>, lit: &xla::Literal) -> PagedKv {
+        let mut words = Vec::new();
+        let shape = flatten(lit, &mut words);
+        let mut inner = self.inner.lock().unwrap();
+        let table: Vec<u32> =
+            words.chunks(self.cfg.block_words).map(|c| inner.alloc(c)).collect();
+        self.sync_gauges(&inner);
+        drop(inner);
+        PagedKv { pool: self.clone(), shape, len_words: words.len(), table, swapped: None }
+    }
+
+    fn sync_gauges(&self, inner: &PoolInner) {
+        if let Some(m) = &self.metrics {
+            m.kv_pool_bytes.set((inner.used_words * 4) as i64);
+            m.kv_pool_blocks.set(inner.used_blocks as i64);
+        }
+    }
+
+    fn count(&self, f: impl FnOnce(&Metrics)) {
+        if let Some(m) = &self.metrics {
+            f(m);
+        }
+    }
+}
+
+// ------------------------------------------------------------ block tables
+
+/// One sequence's view of its KV: a table of pool block ids (resident) or
+/// a compacted host copy (swapped out under preemption).  `Clone` is the
+/// O(table) fork -- a refcount bump per block, no payload copy -- and
+/// `write` is chunk-wise copy-on-write, so forked sequences share every
+/// block they have not diverged on.
+pub struct PagedKv {
+    pool: Arc<KvPool>,
+    shape: LitShape,
+    len_words: usize,
+    table: Vec<u32>,
+    swapped: Option<Vec<u32>>,
+}
+
+impl PagedKv {
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    pub fn is_swapped(&self) -> bool {
+        self.swapped.is_some()
+    }
+
+    /// Blocks currently resident in the pool (0 while swapped out).
+    pub fn blocks(&self) -> usize {
+        self.table.len()
+    }
+
+    fn gather(&self) -> Vec<u32> {
+        if let Some(w) = &self.swapped {
+            return w.clone();
+        }
+        let inner = self.pool.inner.lock().unwrap();
+        let mut words = Vec::with_capacity(self.len_words);
+        for &id in &self.table {
+            words.extend_from_slice(inner.read(id));
+        }
+        words
+    }
+
+    /// Materialize the full literal (works resident or swapped).
+    pub fn to_literal(&self) -> xla::Literal {
+        let words = self.gather();
+        let mut cursor = 0;
+        let lit = unflatten(&self.shape, &words, &mut cursor);
+        debug_assert_eq!(cursor, words.len(), "kv shape/word-count mismatch");
+        lit
+    }
+
+    /// Replace the content with `lit`, chunk-wise: unchanged blocks are
+    /// kept (shared blocks *stay* shared), exclusively-held blocks are
+    /// overwritten in place, and a changed shared block is copied first --
+    /// the copy-on-write that makes forks safe.  Handles growth and
+    /// shrink (the PJRT executables return whole replacement KVs).
+    pub fn write(&mut self, lit: &xla::Literal) {
+        let mut words = Vec::new();
+        self.shape = flatten(lit, &mut words);
+        self.len_words = words.len();
+        if self.swapped.is_some() {
+            self.swapped = Some(words);
+            return;
+        }
+        let bw = self.pool.cfg.block_words;
+        let nblocks = words.len().div_ceil(bw);
+        let mut cow = 0u64;
+        let mut inner = self.pool.inner.lock().unwrap();
+        while self.table.len() > nblocks {
+            let id = self.table.pop().unwrap();
+            inner.decref(id);
+        }
+        for i in 0..nblocks {
+            let chunk = &words[i * bw..((i + 1) * bw).min(words.len())];
+            if i >= self.table.len() {
+                let id = inner.alloc(chunk);
+                self.table.push(id);
+                continue;
+            }
+            let id = self.table[i];
+            let (same, shared) = (inner.read(id) == chunk, inner.refs(id) > 1);
+            if same {
+                continue;
+            }
+            if shared {
+                inner.decref(id);
+                self.table[i] = inner.alloc(chunk);
+                cow += 1;
+            } else {
+                inner.write_block(id, chunk);
+            }
+        }
+        self.pool.sync_gauges(&inner);
+        drop(inner);
+        if cow > 0 {
+            self.pool.count(|m| m.kv_cow_copies.add(cow));
+        }
+    }
+
+    /// Preemption: compact the words to a host copy and release every
+    /// pool block (shared blocks just drop one reference -- the other
+    /// holders keep them resident).  Idempotent.
+    pub fn swap_out(&mut self) {
+        if self.swapped.is_some() {
+            return;
+        }
+        let words = self.gather();
+        {
+            let mut inner = self.pool.inner.lock().unwrap();
+            for &id in &self.table {
+                inner.decref(id);
+            }
+            self.pool.sync_gauges(&inner);
+        }
+        self.table.clear();
+        self.swapped = Some(words);
+        self.pool.count(|m| m.kv_swap_outs.inc());
+    }
+
+    /// Resume: re-page the swapped copy into fresh blocks.  The word
+    /// round-trip is verbatim, so the materialized literal is
+    /// bit-identical to the pre-swap state.  Idempotent.
+    pub fn swap_in(&mut self) {
+        let Some(words) = self.swapped.take() else { return };
+        let bw = self.pool.cfg.block_words;
+        let mut inner = self.pool.inner.lock().unwrap();
+        self.table = words.chunks(bw).map(|c| inner.alloc(c)).collect();
+        self.pool.sync_gauges(&inner);
+        drop(inner);
+        self.pool.count(|m| m.kv_swap_ins.inc());
+    }
+
+    /// Host bytes attributable to this handle alone: the block table plus
+    /// any swapped-out copy.  Resident block *content* is charged to the
+    /// pool gauge (`kv_pool_bytes`) once, shared across all forks -- the
+    /// block-based byte charging the cache budget sees.
+    pub fn bytes(&self) -> usize {
+        self.table.len() * 4 + self.swapped.as_ref().map_or(0, |w| w.len() * 4)
+    }
+}
+
+impl Clone for PagedKv {
+    fn clone(&self) -> PagedKv {
+        if !self.table.is_empty() {
+            let mut inner = self.pool.inner.lock().unwrap();
+            for &id in &self.table {
+                inner.incref(id);
+            }
+        }
+        self.pool.count(|m| m.kv_forks.inc());
+        PagedKv {
+            pool: self.pool.clone(),
+            shape: self.shape.clone(),
+            len_words: self.len_words,
+            table: self.table.clone(),
+            swapped: self.swapped.clone(),
+        }
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        if self.table.is_empty() {
+            return;
+        }
+        let mut inner = self.pool.inner.lock().unwrap();
+        for &id in &self.table {
+            inner.decref(id);
+        }
+        self.pool.sync_gauges(&inner);
+    }
+}
+
+impl fmt::Debug for PagedKv {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PagedKv")
+            .field("blocks", &self.table.len())
+            .field("len_words", &self.len_words)
+            .field("swapped", &self.swapped.is_some())
+            .finish()
+    }
+}
+
+// -------------------------------------------------------------- kv backing
+
+/// The `SeqState.kv` slot: an owned deep literal (pool-less callers, the
+/// pre-paging behavior) or a paged block table.  Both forms expose the
+/// same materialize/replace surface, so the model layer never branches on
+/// which one it holds.
+#[derive(Debug, Clone)]
+pub enum KvBacking {
+    Owned(xla::Literal),
+    Paged(PagedKv),
+}
+
+impl KvBacking {
+    /// Materialize the full literal (what the executable call consumes).
+    pub fn literal(&self) -> xla::Literal {
+        match self {
+            KvBacking::Owned(l) => l.clone(),
+            KvBacking::Paged(p) => p.to_literal(),
+        }
+    }
+
+    /// Replace the content (what the executable call returned).  Paged
+    /// backings write chunk-wise with CoW; owned backings just swap the
+    /// value.
+    pub fn set(&mut self, lit: xla::Literal) {
+        match self {
+            KvBacking::Owned(slot) => *slot = lit,
+            KvBacking::Paged(p) => p.write(&lit),
+        }
+    }
+
+    /// Size accounting for the cache byte budget.  Owned literals are
+    /// charged in full; paged tables charge only their handle (block
+    /// content lives on the pool gauge).
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvBacking::Owned(l) => crate::models::literal_bytes(l),
+            KvBacking::Paged(p) => p.bytes(),
+        }
+    }
+
+    /// Move an owned literal into the pool (no-op if already paged).
+    pub fn paginate(&mut self, pool: &Arc<KvPool>) {
+        if let KvBacking::Owned(l) = self {
+            *self = KvBacking::Paged(pool.store(l));
+        }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvBacking::Paged(_))
+    }
+
+    pub fn swap_out(&mut self) {
+        if let KvBacking::Paged(p) = self {
+            p.swap_out();
+        }
+    }
+
+    pub fn swap_in(&mut self) {
+        if let KvBacking::Paged(p) = self {
+            p.swap_in();
+        }
+    }
+
+    pub fn is_swapped(&self) -> bool {
+        matches!(self, KvBacking::Paged(p) if p.is_swapped())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool_with(block_words: usize, budget: usize) -> (Arc<KvPool>, Arc<Metrics>) {
+        let m = Arc::new(Metrics::new());
+        let p = KvPool::with_metrics(
+            KvPoolConfig { block_words, budget_bytes: budget },
+            Some(m.clone()),
+        );
+        (p, m)
+    }
+
+    /// A nested literal covering every dtype plus awkward f32 bit patterns
+    /// (NaN, -0.0, subnormal): the round-trip must be *bit* exact.
+    fn gnarly_literal(n: usize) -> xla::Literal {
+        let f: Vec<f32> = (0..n)
+            .map(|i| match i % 5 {
+                0 => f32::NAN,
+                1 => -0.0,
+                2 => f32::MIN_POSITIVE / 2.0, // subnormal
+                3 => -(i as f32) * 0.37,
+                _ => (i as f32).sqrt(),
+            })
+            .collect();
+        let i: Vec<i32> = (0..n).map(|x| -(x as i32) * 3).collect();
+        let u: Vec<u32> = (0..n).map(|x| (x as u32).wrapping_mul(0x9e3779b9)).collect();
+        xla::Literal::Tuple(vec![
+            xla::Literal::vec1(&f),
+            xla::Literal::Tuple(vec![xla::Literal::vec1(&i), xla::Literal::vec1(&u)]),
+            xla::Literal::scalar(7.25f32),
+        ])
+    }
+
+    fn bits_of(l: &xla::Literal) -> Vec<u32> {
+        let mut w = Vec::new();
+        flatten(l, &mut w);
+        w
+    }
+
+    #[test]
+    fn store_roundtrips_bit_exact() {
+        let (pool, _) = pool_with(8, 1 << 20);
+        let lit = gnarly_literal(100);
+        let paged = pool.store(&lit);
+        assert_eq!(bits_of(&paged.to_literal()), bits_of(&lit));
+        // shape survives too (dims, tuple nesting)
+        assert_eq!(paged.to_literal().element_count(), lit.element_count());
+    }
+
+    #[test]
+    fn fork_is_refcount_only_and_cow_isolates() {
+        let (pool, m) = pool_with(16, 1 << 20);
+        let base = xla::Literal::vec1(&(0..64).map(|i| i as f32).collect::<Vec<_>>());
+        let mut a = pool.store(&base);
+        let before = pool.bytes_used();
+        assert_eq!(before, 64 * 4);
+        let b = a.clone();
+        assert_eq!(pool.bytes_used(), before, "fork must not copy payload");
+        assert_eq!(m.kv_forks.get(), 1);
+
+        // diverge one word in block 2 of the original
+        let mut v: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        v[35] = 999.0;
+        a.write(&xla::Literal::vec1(&v));
+        // exactly one block (16 words) was copied
+        assert_eq!(pool.bytes_used(), before + 16 * 4);
+        assert_eq!(m.kv_cow_copies.get(), 1);
+        // the fork still sees the pre-divergence content, bit-exact
+        assert_eq!(bits_of(&b.to_literal()), bits_of(&base));
+        assert_eq!(a.to_literal().to_vec::<f32>().unwrap()[35], 999.0);
+    }
+
+    #[test]
+    fn unshared_write_is_in_place() {
+        let (pool, m) = pool_with(16, 1 << 20);
+        let mut a = pool.store(&xla::Literal::vec1(&vec![1.0f32; 64]));
+        let before = pool.bytes_used();
+        a.write(&xla::Literal::vec1(&vec![2.0f32; 64]));
+        assert_eq!(pool.bytes_used(), before, "exclusive blocks are overwritten in place");
+        assert_eq!(m.kv_cow_copies.get(), 0);
+        assert_eq!(a.to_literal().to_vec::<f32>().unwrap(), vec![2.0f32; 64]);
+    }
+
+    #[test]
+    fn growth_and_shrink_keep_accounting_exact() {
+        let (pool, _) = pool_with(16, 1 << 20);
+        let mut a = pool.store(&xla::Literal::vec1(&vec![1.0f32; 24]));
+        assert_eq!(pool.bytes_used(), 24 * 4);
+        assert_eq!(a.blocks(), 2); // 16 + 8 (partial tail)
+        a.write(&xla::Literal::vec1(&vec![1.0f32; 50]));
+        assert_eq!(pool.bytes_used(), 50 * 4);
+        assert_eq!(a.blocks(), 4);
+        a.write(&xla::Literal::vec1(&vec![1.0f32; 10]));
+        assert_eq!(pool.bytes_used(), 10 * 4);
+        assert_eq!(a.blocks(), 1);
+        assert_eq!(a.to_literal().to_vec::<f32>().unwrap(), vec![1.0f32; 10]);
+    }
+
+    #[test]
+    fn drop_releases_blocks_and_free_list_recycles() {
+        let (pool, _) = pool_with(8, 1 << 20);
+        let a = pool.store(&gnarly_literal(40));
+        let b = a.clone();
+        let blocks = pool.blocks_used();
+        assert!(blocks > 0);
+        drop(a);
+        assert_eq!(pool.blocks_used(), blocks, "shared blocks survive one holder");
+        drop(b);
+        assert_eq!(pool.blocks_used(), 0);
+        assert_eq!(pool.bytes_used(), 0);
+        // a fresh store reuses recycled slots rather than growing the arena
+        let c = pool.store(&gnarly_literal(40));
+        assert_eq!(pool.blocks_used(), blocks);
+        drop(c);
+    }
+
+    #[test]
+    fn swap_roundtrip_is_bit_exact_and_releases_residency() {
+        let (pool, m) = pool_with(8, 1 << 20);
+        let lit = gnarly_literal(60);
+        let mut a = pool.store(&lit);
+        let shared = a.clone(); // shared blocks must survive a's swap-out
+        let resident = pool.bytes_used();
+        a.swap_out();
+        a.swap_out(); // idempotent
+        assert!(a.is_swapped());
+        assert_eq!(a.blocks(), 0);
+        assert_eq!(
+            pool.bytes_used(),
+            resident,
+            "shared blocks keep their other holder resident"
+        );
+        drop(shared);
+        assert_eq!(pool.bytes_used(), 0, "swap-out releases all residency");
+        // materializes identically while swapped...
+        assert_eq!(bits_of(&a.to_literal()), bits_of(&lit));
+        a.swap_in();
+        a.swap_in(); // idempotent
+        assert!(!a.is_swapped());
+        // ...and after resuming
+        assert_eq!(bits_of(&a.to_literal()), bits_of(&lit));
+        assert_eq!(m.kv_swap_outs.get(), 1);
+        assert_eq!(m.kv_swap_ins.get(), 1);
+    }
+
+    #[test]
+    fn over_budget_signals_pressure() {
+        let (pool, _) = pool_with(8, 100);
+        assert!(!pool.over_budget());
+        let a = pool.store(&xla::Literal::vec1(&vec![0.0f32; 64]));
+        assert!(pool.over_budget(), "256 bytes resident > 100 byte budget");
+        drop(a);
+        assert!(!pool.over_budget());
+    }
+
+    #[test]
+    fn gauges_mirror_pool_state() {
+        let (pool, m) = pool_with(8, 1 << 20);
+        let a = pool.store(&xla::Literal::vec1(&vec![0.0f32; 20]));
+        assert_eq!(m.kv_pool_bytes.get(), pool.bytes_used() as i64);
+        assert_eq!(m.kv_pool_blocks.get(), pool.blocks_used() as i64);
+        drop(a);
+        assert_eq!(m.kv_pool_bytes.get(), 0);
+        assert_eq!(m.kv_pool_blocks.get(), 0);
+    }
+
+    #[test]
+    fn backing_paginate_and_set_match_owned_semantics() {
+        let (pool, _) = pool_with(8, 1 << 20);
+        let lit = gnarly_literal(30);
+        let mut owned = KvBacking::Owned(lit.clone());
+        let mut paged = KvBacking::Owned(lit.clone());
+        paged.paginate(&pool);
+        paged.paginate(&pool); // idempotent
+        assert!(paged.is_paged() && !owned.is_paged());
+        assert_eq!(bits_of(&owned.literal()), bits_of(&paged.literal()));
+        let next = gnarly_literal(33);
+        owned.set(next.clone());
+        paged.set(next.clone());
+        assert_eq!(bits_of(&owned.literal()), bits_of(&paged.literal()));
+        assert_eq!(bits_of(&paged.literal()), bits_of(&next));
+        // paged handle charges only its table; the content sits on the pool
+        assert!(paged.bytes() < owned.bytes());
+        // owned backings ignore swap requests (nothing to page out)
+        owned.swap_out();
+        assert!(!owned.is_swapped());
+        paged.swap_out();
+        assert!(paged.is_swapped());
+        paged.swap_in();
+        assert_eq!(bits_of(&paged.literal()), bits_of(&next));
+    }
+
+    #[test]
+    fn empty_literal_pages_cleanly() {
+        let (pool, _) = pool_with(8, 1 << 20);
+        let lit = xla::Literal::vec1(&[] as &[f32]);
+        let mut a = pool.store(&lit);
+        assert_eq!(a.blocks(), 0);
+        assert_eq!(bits_of(&a.to_literal()), bits_of(&lit));
+        a.swap_out();
+        a.swap_in();
+        assert_eq!(a.to_literal().to_vec::<f32>().unwrap(), Vec::<f32>::new());
+    }
+}

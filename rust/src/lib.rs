@@ -42,6 +42,7 @@
 pub mod cache;
 pub mod coordinator;
 pub mod eval;
+pub mod kv;
 pub mod manifest;
 pub mod metrics;
 pub mod models;

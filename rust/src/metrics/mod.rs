@@ -72,13 +72,19 @@ impl Histogram {
     }
 
     /// Exact percentile (nearest-rank).  `p` in [0, 100].
+    ///
+    /// Uses the ceil-based nearest-rank definition: the smallest sample
+    /// such that at least `p`% of the data is <= it.  `.round()` here was
+    /// a bug -- it could pick a sample *below* the requested percentile
+    /// (e.g. p99 of [1..=200] rounded 197.01 down to rank 197 = 198.0,
+    /// under which only 98.5% of samples sit).  Ceil never under-reports.
     pub fn percentile(&self, p: f64) -> f64 {
         let mut s = self.samples.lock().unwrap().clone();
         if s.is_empty() {
             return 0.0;
         }
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).ceil() as usize;
         s[rank.min(s.len() - 1)]
     }
 
@@ -147,6 +153,21 @@ pub struct Metrics {
     pub batch_max_lanes: Gauge,
     /// largest fused-tick occupancy observed (running maximum)
     pub batch_occupancy_peak: Gauge,
+    /// bytes resident in the paged KV block pool (block content only; the
+    /// per-sequence block-table handles are charged to their owners)
+    pub kv_pool_bytes: Gauge,
+    /// blocks currently allocated in the paged KV pool
+    pub kv_pool_blocks: Gauge,
+    /// sequence forks served as refcount bumps (no KV copy)
+    pub kv_forks: Counter,
+    /// blocks copied on first divergent write to a shared block
+    pub kv_cow_copies: Counter,
+    /// sessions swapped out of the pool under byte-budget pressure
+    pub kv_swap_outs: Counter,
+    /// swapped-out sessions brought back into the pool
+    pub kv_swap_ins: Counter,
+    /// preemption passes that swapped out at least one backlogged session
+    pub kv_preemptions: Counter,
     pub latency_ms: Histogram,
     pub prefill_ms: Histogram,
     /// image-encode share of prefill time (0 for warm encodes/prefixes)
@@ -249,6 +270,13 @@ impl Metrics {
         out.insert("batch_max_lanes".into(), self.batch_max_lanes.get() as f64);
         out.insert("batch_occupancy_mean".into(), self.batch_occupancy_mean());
         out.insert("batch_occupancy_max".into(), self.batch_occupancy_peak.get() as f64);
+        out.insert("kv_pool_bytes".into(), self.kv_pool_bytes.get() as f64);
+        out.insert("kv_pool_blocks".into(), self.kv_pool_blocks.get() as f64);
+        out.insert("kv_forks".into(), self.kv_forks.get() as f64);
+        out.insert("kv_cow_copies".into(), self.kv_cow_copies.get() as f64);
+        out.insert("kv_swap_outs".into(), self.kv_swap_outs.get() as f64);
+        out.insert("kv_swap_ins".into(), self.kv_swap_ins.get() as f64);
+        out.insert("kv_preemptions".into(), self.kv_preemptions.get() as f64);
         out.insert("tree_requests".into(), self.tree_requests.get() as f64);
         out.insert("tree_nodes_drafted".into(), self.tree_nodes_drafted.get() as f64);
         out.insert("tree_iterations".into(), self.tree_iterations.get() as f64);
@@ -325,6 +353,37 @@ mod tests {
     }
 
     #[test]
+    fn percentile_is_ceil_nearest_rank() {
+        // Hand-computed ranks on 1..=10: rank = ceil(p/100 * 9).
+        let h = Histogram::default();
+        for i in (1..=10).rev() {
+            h.record(i as f64); // reverse insertion: percentile must sort
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(50.0), 6.0); // ceil(4.5) = 5 -> 6.0
+        assert_eq!(h.percentile(90.0), 10.0); // ceil(8.1) = 9 -> 10.0
+        assert_eq!(h.percentile(99.0), 10.0); // ceil(8.91) = 9 -> 10.0
+        assert_eq!(h.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_never_under_reports() {
+        // Regression for the `.round()` nearest-rank bug: on 60 samples,
+        // p99's fractional rank is 0.99 * 59 = 58.41; rounding DOWN picked
+        // s[58] = 59.0, below which only 59/60 = 98.3% of samples sit.
+        // Ceil picks s[59] = 60.0.
+        let h = Histogram::default();
+        for i in 1..=60 {
+            h.record(i as f64);
+        }
+        let p99 = h.percentile(99.0);
+        assert_eq!(p99, 60.0);
+        let frac_below_or_eq =
+            h.snapshot().iter().filter(|&&v| v <= p99).count() as f64 / 60.0;
+        assert!(frac_below_or_eq >= 0.99, "p99 under-reports: {p99}");
+    }
+
+    #[test]
     fn empty_histogram_is_zero() {
         let h = Histogram::default();
         assert_eq!(h.percentile(99.0), 0.0);
@@ -364,6 +423,13 @@ mod tests {
         assert!(r.contains_key("batch_max_lanes"));
         assert!(r.contains_key("batch_occupancy_mean"));
         assert!(r.contains_key("batch_occupancy_max"));
+        assert!(r.contains_key("kv_pool_bytes"));
+        assert!(r.contains_key("kv_pool_blocks"));
+        assert!(r.contains_key("kv_forks"));
+        assert!(r.contains_key("kv_cow_copies"));
+        assert!(r.contains_key("kv_swap_outs"));
+        assert!(r.contains_key("kv_swap_ins"));
+        assert!(r.contains_key("kv_preemptions"));
     }
 
     #[test]

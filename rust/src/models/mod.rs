@@ -27,8 +27,12 @@
 //! re-running either stage (`prefill_from`).  `SeqState::bytes` gives the
 //! size accounting the cache's byte budget is enforced against.
 //!
-//! KV caches stay opaque `xla::Literal`s between calls -- the coordinator
-//! never parses them, it just threads them through (DESIGN.md section 3).
+//! KV caches stay opaque between calls -- the coordinator never parses
+//! them, it just threads them through (DESIGN.md section 3).  The slot is
+//! a `kv::KvBacking`: an owned `xla::Literal` by default, or a block
+//! table into the engine's paged pool once `SeqState::paginate` moves it
+//! there -- after which `fork` is a per-block refcount bump instead of a
+//! deep copy (see `docs/paged_kv.md`).
 
 pub mod scripted;
 
@@ -37,6 +41,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
+use crate::kv::{KvBacking, KvPool};
 use crate::manifest::{Manifest, ModelEntry};
 use crate::runtime::tensor::to_vec_i32;
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, scalar_u32, Exec, Runtime, Tensor};
@@ -170,7 +175,7 @@ impl VisionEncoding {
 }
 
 /// Heap bytes behind one opaque KV literal (cache size accounting).
-fn literal_bytes(l: &xla::Literal) -> usize {
+pub(crate) fn literal_bytes(l: &xla::Literal) -> usize {
     match l {
         xla::Literal::Array { data, dims } => {
             let elems = match data {
@@ -189,29 +194,45 @@ fn literal_bytes(l: &xla::Literal) -> usize {
 /// scripted backend `pos` is the stream index and `script` carries the
 /// deterministic token lines; PJRT states leave `script` as `None`.
 pub struct SeqState {
-    pub kv: xla::Literal,
+    pub kv: KvBacking,
     pub pos: i32,
     pub script: Option<Arc<scripted::ScriptSet>>,
 }
 
 impl SeqState {
+    /// Fresh post-prefill state over an owned KV literal (the form every
+    /// backend produces; `paginate` moves it into a pool afterwards).
+    pub fn new(kv: xla::Literal, pos: i32, script: Option<Arc<scripted::ScriptSet>>) -> SeqState {
+        SeqState { kv: KvBacking::Owned(kv), pos, script }
+    }
+
     /// Snapshot this state so two sequences can continue independently
     /// (the prefix cache stores post-prefill forks; every warm request
-    /// forks again).  KV literals are value types between calls, so a fork
-    /// is a deep copy of the KV plus a shared handle on the script.
+    /// forks again; tree branches fork per divergence).  Owned KV literals
+    /// deep-copy; paged tables bump per-block refcounts -- O(table), no
+    /// payload copy -- and diverge lazily via copy-on-write.
     pub fn fork(&self) -> SeqState {
         SeqState { kv: self.kv.clone(), pos: self.pos, script: self.script.clone() }
+    }
+
+    /// Move the KV into a paged pool (no-op when already paged).  From
+    /// here on `fork` is a refcount bump and divergent writes copy only
+    /// the blocks they touch.
+    pub fn paginate(&mut self, pool: &Arc<KvPool>) {
+        self.kv.paginate(pool);
     }
 
     /// Approximate heap size of this state, for the cache byte budget.
     /// The script is `Arc`-shared between forks but counted in full: the
     /// cache holds the longest-lived reference, so its budget should bear
-    /// the content.
+    /// the content.  Paged KV charges only the block-table handle here --
+    /// block content is accounted once on the pool gauge (`kv_pool_bytes`),
+    /// shared across every fork.
     pub fn bytes(&self) -> usize {
         let script = self.script.as_ref().map_or(0, |s| {
             (s.primary.len() + s.alts.iter().map(Vec::len).sum::<usize>()) * 4
         });
-        literal_bytes(&self.kv) + script + std::mem::size_of::<SeqState>()
+        self.kv.bytes() + script + std::mem::size_of::<SeqState>()
     }
 }
 
@@ -315,7 +336,7 @@ impl TargetModel {
         ])?;
         let [logits, kv] = expect_outputs::<2>(out, "target::prefill_mm")?;
         let logits = crate::runtime::to_vec_f32(&logits)?;
-        Ok((logits, SeqState { kv, pos: (m.n_visual + len) as i32, script: None }))
+        Ok((logits, SeqState::new(kv, (m.n_visual + len) as i32, None)))
     }
 
     /// Fused multimodal prefill (stage 1 + stage 2 in one call; the
@@ -347,14 +368,14 @@ impl TargetModel {
         let out = exec.call(&[
             lit_i32(tokens, &[gamma1])?,
             scalar_i32(state.pos),
-            state.kv.clone(),
+            state.kv.literal(),
         ])?;
         let [logits, kv] = expect_outputs::<2>(out, "target::verify")?;
         let logits = Tensor::new(
             crate::runtime::to_vec_f32(&logits)?,
             vec![gamma1, self.entry.vocab],
         )?;
-        state.kv = kv;
+        state.kv.set(kv);
         Ok(logits)
     }
 
@@ -385,11 +406,11 @@ impl TargetModel {
         let out = exec.call(&[
             lit_i32(&[token], &[1])?,
             scalar_i32(state.pos),
-            state.kv.clone(),
+            state.kv.literal(),
         ])?;
         let [logits, kv] = expect_outputs::<2>(out, "target::decode")?;
         let logits = crate::runtime::to_vec_f32(&logits)?;
-        state.kv = kv;
+        state.kv.set(kv);
         state.pos += 1;
         Ok(logits)
     }
@@ -423,7 +444,7 @@ impl TargetModel {
         let exec = self.set.exec(&self.entry, "decode_batch")?;
         let tokens: Vec<i32> = lanes.iter().map(|(_, t)| *t).collect();
         let positions: Vec<i32> = lanes.iter().map(|(st, _)| st.pos).collect();
-        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, _)| st.kv.clone()).collect());
+        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, _)| st.kv.literal()).collect());
         let out = exec.call(&[lit_i32(&tokens, &[b])?, lit_i32(&positions, &[b])?, kvs])?;
         let [logits, kvs] = expect_outputs::<2>(out, "target::decode_batch")?;
         let rows = unpack_rows(&logits, b, self.entry.vocab, "target::decode_batch")?;
@@ -467,7 +488,7 @@ impl TargetModel {
         let exec = self.set.exec(&self.entry, "verify_batch")?;
         let tokens: Vec<i32> = lanes.iter().flat_map(|(_, t)| t.iter().copied()).collect();
         let positions: Vec<i32> = lanes.iter().map(|(st, _)| st.pos).collect();
-        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, _)| st.kv.clone()).collect());
+        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, _)| st.kv.literal()).collect());
         let out = exec.call(&[lit_i32(&tokens, &[b, w])?, lit_i32(&positions, &[b])?, kvs])?;
         let [logits, kvs] = expect_outputs::<2>(out, "target::verify_batch")?;
         let v = self.entry.vocab;
@@ -521,7 +542,7 @@ fn scatter_kvs<'a>(
         return Err(anyhow!("{entry}: expected {n} KV parts, got {}", parts.len()));
     }
     for (st, kv) in states.zip(parts) {
-        st.kv = kv;
+        st.kv.set(kv);
     }
     Ok(())
 }
@@ -612,12 +633,12 @@ impl DraftModel {
             // drafter prefills return (logits, kv); the logits are unused
             // (the first draft call starts from the target's token)
             let [_logits, kv] = expect_outputs::<2>(out, "drafter::prefill_mm")?;
-            Ok(SeqState { kv, pos: (m.n_visual + len) as i32, script: None })
+            Ok(SeqState::new(kv, (m.n_visual + len) as i32, None))
         } else {
             let exec = self.set.exec(&self.entry, "prefill_text")?;
             let out = exec.call(&[prompt_lit, scalar_i32(len as i32)])?;
             let [_logits, kv] = expect_outputs::<2>(out, "drafter::prefill_text")?;
-            Ok(SeqState { kv, pos: len as i32, script: None })
+            Ok(SeqState::new(kv, len as i32, None))
         }
     }
 
@@ -670,7 +691,7 @@ impl DraftModel {
         let out = exec.call(&[
             scalar_i32(last),
             scalar_i32(state.pos),
-            state.kv.clone(),
+            state.kv.literal(),
             scalar_f32(temperature),
             scalar_u32(seed),
         ])?;
@@ -680,7 +701,7 @@ impl DraftModel {
             crate::runtime::to_vec_f32(&qlogits)?,
             vec![gamma, self.entry.vocab],
         )?;
-        state.kv = kv;
+        state.kv.set(kv);
         Ok(DraftOutput { tokens, qlogits })
     }
 
@@ -744,7 +765,7 @@ impl DraftModel {
         let exec = self.set.exec(&self.entry, "draft_batch")?;
         let lasts: Vec<i32> = lanes.iter().map(|(_, l, _, _)| *l).collect();
         let positions: Vec<i32> = lanes.iter().map(|(st, ..)| st.pos).collect();
-        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, ..)| st.kv.clone()).collect());
+        let kvs = xla::Literal::Tuple(lanes.iter().map(|(st, ..)| st.kv.literal()).collect());
         let temps: Vec<f32> = lanes.iter().map(|(_, _, t, _)| *t).collect();
         let seeds: Vec<u32> = lanes.iter().map(|(_, _, _, s)| *s).collect();
         let out = exec.call(&[
@@ -811,11 +832,11 @@ impl DraftModel {
         let out = exec.call(&[
             lit_i32(&[token], &[1])?,
             scalar_i32(state.pos),
-            state.kv.clone(),
+            state.kv.literal(),
         ])?;
         let [logits, kv] = expect_outputs::<2>(out, "drafter::decode")?;
         let logits = crate::runtime::to_vec_f32(&logits)?;
-        state.kv = kv;
+        state.kv.set(kv);
         state.pos += 1;
         Ok(logits)
     }
@@ -840,26 +861,41 @@ mod tests {
     #[test]
     fn seq_state_fork_is_independent() {
         let script = Arc::new(scripted::ScriptSet::single(vec![5, 6, 7]));
-        let st = SeqState {
-            kv: xla::Literal::vec1(&[1.0f32, 2.0]),
-            pos: 9,
-            script: Some(script.clone()),
-        };
+        let st = SeqState::new(
+            xla::Literal::vec1(&[1.0f32, 2.0]),
+            9,
+            Some(script.clone()),
+        );
         let mut fork = st.fork();
         fork.pos += 3;
         assert_eq!(st.pos, 9, "fork must not alias positions");
-        assert_eq!(fork.kv, st.kv);
+        assert_eq!(fork.kv.literal(), st.kv.literal());
         assert!(Arc::ptr_eq(fork.script.as_ref().unwrap(), &script), "scripts are shared");
         assert!(st.bytes() > 0 && st.bytes() == fork.bytes());
     }
 
     #[test]
+    fn paginated_fork_materializes_identically() {
+        // the same fork contract must hold once the state is paged: fork,
+        // diverge the original, and the fork still materializes the old KV
+        let pool = crate::kv::KvPool::new(crate::kv::KvPoolConfig {
+            block_words: 4,
+            budget_bytes: 1 << 20,
+        });
+        let mut st = SeqState::new(xla::Literal::vec1(&vec![1.5f32; 20]), 3, None);
+        st.paginate(&pool);
+        assert!(st.kv.is_paged());
+        let fork = st.fork();
+        st.kv.set(xla::Literal::vec1(&vec![2.5f32; 20]));
+        assert_eq!(fork.kv.literal(), xla::Literal::vec1(&vec![1.5f32; 20]));
+        assert_eq!(st.kv.literal(), xla::Literal::vec1(&vec![2.5f32; 20]));
+        // paged states charge the handle, not the payload
+        assert!(st.bytes() < 20 * 4 + std::mem::size_of::<SeqState>());
+    }
+
+    #[test]
     fn snapshot_bytes_cover_all_parts() {
-        let st = |n: usize| SeqState {
-            kv: xla::Literal::vec1(&vec![0.0f32; n]),
-            pos: 0,
-            script: None,
-        };
+        let st = |n: usize| SeqState::new(xla::Literal::vec1(&vec![0.0f32; n]), 0, None);
         let without = PrefixSnapshot { last_logits: vec![0.0; 8], tstate: st(4), dstate: None };
         let with = PrefixSnapshot {
             last_logits: vec![0.0; 8],

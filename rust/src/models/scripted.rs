@@ -172,7 +172,7 @@ pub fn drafter_scripts(
 }
 
 fn state(script: ScriptSet) -> SeqState {
-    SeqState { kv: xla::Literal::scalar(0.0f32), pos: 0, script: Some(Arc::new(script)) }
+    SeqState::new(xla::Literal::scalar(0.0f32), 0, Some(Arc::new(script)))
 }
 
 fn script_of(st: &SeqState) -> Result<&Arc<ScriptSet>> {

@@ -1145,7 +1145,7 @@ mod tests {
         // the trait-default batch entry points must equal per-lane calls,
         // and a lane's result must not depend on its batch position
         let t = MockTarget::new((10..40).collect());
-        let mk = |pos: i32| SeqState { kv: xla::Literal::scalar(0.0f32), pos, script: None };
+        let mk = |pos: i32| SeqState::new(xla::Literal::scalar(0.0f32), pos, None);
         // forward order
         let (mut a, mut b) = (mk(0), mk(7));
         let mut lanes = vec![(&mut a, 10), (&mut b, 17)];

@@ -46,10 +46,12 @@
 //! `spec::adaptive` pin the session semantics: token streams, RNG draws,
 //! and every `GenStats` field are identical to the pre-session loops.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::kv::KvPool;
 use crate::models::{DraftModel, DraftOutput, PrefixSnapshot, SeqState, TargetModel, VisionEncoding};
 use crate::runtime::Tensor;
 use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
@@ -184,6 +186,11 @@ pub struct DecodeSession<T: TargetBackend = TargetModel, D: DraftBackend = Draft
     /// Half-step state between `propose()` and `absorb_*` (always `None`
     /// when the session sits in a scheduler queue).
     pending: Pending,
+    /// When set, both model states are paged into this pool right after
+    /// prefill: forks (prefix-cache exports, tree branches) become
+    /// per-block refcount bumps, and the engine can preempt this session
+    /// by swapping its blocks out (`kv_swap_out`).
+    kv_pool: Option<Arc<KvPool>>,
 }
 
 impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
@@ -231,7 +238,57 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             count_plain_iters,
             phase: Phase::Created,
             pending: Pending::None,
+            kv_pool: None,
         }
+    }
+
+    /// Page this session's KV through `pool` (call before prefill; paging
+    /// is transparent to decoding -- block storage is bit-exact -- so
+    /// output is identical with or without it).
+    pub fn set_kv_pool(&mut self, pool: Arc<KvPool>) {
+        self.kv_pool = Some(pool);
+    }
+
+    fn paginate_states(&mut self) {
+        if let Some(pool) = &self.kv_pool {
+            if let Some(st) = self.tstate.as_mut() {
+                st.paginate(pool);
+            }
+            if let Some(st) = self.dstate.as_mut() {
+                st.paginate(pool);
+            }
+        }
+    }
+
+    /// Preemption: release this session's pool blocks to a compacted host
+    /// copy (no-op for unpaged states).  The session must be between
+    /// steps; the engine swaps backlogged queue entries, never the lane it
+    /// is executing.
+    pub fn kv_swap_out(&mut self) {
+        if let Some(st) = self.tstate.as_mut() {
+            st.kv.swap_out();
+        }
+        if let Some(st) = self.dstate.as_mut() {
+            st.kv.swap_out();
+        }
+    }
+
+    /// Resume a preempted session: re-page any swapped state.  The word
+    /// round-trip is bit-exact, so the continuation is identical to a
+    /// never-preempted run.
+    pub fn kv_swap_in(&mut self) {
+        if let Some(st) = self.tstate.as_mut() {
+            st.kv.swap_in();
+        }
+        if let Some(st) = self.dstate.as_mut() {
+            st.kv.swap_in();
+        }
+    }
+
+    /// Whether any of this session's states is currently swapped out.
+    pub fn kv_swapped(&self) -> bool {
+        self.tstate.as_ref().is_some_and(|st| st.kv.is_swapped())
+            || self.dstate.as_ref().is_some_and(|st| st.kv.is_swapped())
     }
 
     pub fn finished(&self) -> bool {
@@ -293,6 +350,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             self.dstate =
                 Some(drafter.prefill_encoded(Some(enc), prompt, len, self.text_only_draft)?);
         }
+        self.paginate_states();
         self.stats.encode_micros = encode_micros;
         self.stats.prefill_micros = encode_micros + t0.elapsed().as_micros() as u64;
         self.finish_prefill(last_logits)
@@ -316,6 +374,9 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
         if self.mode.is_some() {
             self.dstate = prefix.dstate.as_ref().map(SeqState::fork);
         }
+        // paged snapshots fork as refcount bumps, so this only pages
+        // owned-state snapshots (pool added after the cache was filled)
+        self.paginate_states();
         self.stats.prefill_cache_hit = true;
         self.stats.prefill_micros = t0.elapsed().as_micros() as u64;
         self.finish_prefill(prefix.last_logits.clone())
@@ -907,6 +968,105 @@ mod tests {
             }
             if !warm_stats.prefill_cache_hit || cold_stats.prefill_cache_hit {
                 return Err("cache-hit flags mislabelled".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// The cold-vs-warm property again with the paged KV pool attached on
+    /// both sides, against an unpaged reference -- plus a swap-out/swap-in
+    /// cycle before every warm step, emulating repeated engine preemption.
+    /// Paging, paged forking, and preemption must all be invisible in the
+    /// generation record.
+    #[test]
+    fn prop_paged_sessions_match_unpaged_and_survive_swaps() {
+        use crate::kv::{KvPool, KvPoolConfig};
+        crate::util::prop::propcheck("paged == unpaged (+preemption)", 32, |rng| {
+            let n = 3 + rng.range(24);
+            let mut script: Vec<i32> = (0..n).map(|_| 4 + rng.range(90) as i32).collect();
+            script.push(2); // EOS
+            let dscript: Vec<i32> = (0..n + 8)
+                .map(|i| {
+                    if rng.range(3) == 0 {
+                        *script.get(i).unwrap_or(&2)
+                    } else {
+                        4 + rng.range(90) as i32
+                    }
+                })
+                .collect();
+            let mode = rng.range(3); // 0 = chain, 1 = tree, 2 = adaptive
+            let cfg = GenConfig {
+                temperature: if rng.range(2) == 0 { 0.0 } else { 1.0 },
+                seed: rng.next_u64(),
+                tree: Some(TreeConfig { branch: vec![2, 2, 1, 1, 1], max_nodes: 16 }),
+                ..GenConfig::default()
+            };
+            let make = || {
+                DecodeSession::new(
+                    MockTarget::new(script.clone()),
+                    Some(MockTreeDraft::new(vec![dscript.clone(), script.clone()])),
+                    params(),
+                    cfg.clone(),
+                    Some(if mode == 1 { SpecMode::Tree } else { SpecMode::Chain }),
+                    if mode == 2 { Some(AdaptiveConfig::default()) } else { None },
+                    false,
+                )
+            };
+
+            // unpaged reference
+            let mut plain = make();
+            let out = plain.prefill(&[], &[0; 8], 3).map_err(|e| format!("{e:#}"))?;
+            let plain_stats = run_out(out, &mut plain).map_err(|e| format!("{e:#}"))?;
+
+            // paged cold session; tiny blocks to exercise multi-block tables
+            let pool = KvPool::with_metrics(
+                KvPoolConfig { block_words: 4, budget_bytes: 1 << 20 },
+                None,
+            );
+            let mut cold = make();
+            cold.set_kv_pool(pool.clone());
+            let out = cold.prefill(&[], &[0; 8], 3).map_err(|e| format!("{e:#}"))?;
+            let snap = cold.export_prefix().ok_or("post-prefill export failed")?;
+            let cold_stats = run_out(out, &mut cold).map_err(|e| format!("{e:#}"))?;
+
+            // paged warm session forked from the paged snapshot, preempted
+            // before every step
+            let mut warm = make();
+            warm.set_kv_pool(pool.clone());
+            let mut out = warm.prefill_from(&snap).map_err(|e| format!("{e:#}"))?;
+            let warm_stats = loop {
+                match out {
+                    StepOutcome::Finished(st) => break st,
+                    StepOutcome::Emitted(_) => {
+                        warm.kv_swap_out();
+                        if !warm.kv_swapped() {
+                            return Err("paged warm session must actually swap".into());
+                        }
+                        warm.kv_swap_in();
+                        if warm.kv_swapped() {
+                            return Err("swap_in must restore residency".into());
+                        }
+                        out = warm.step().map_err(|e| format!("{e:#}"))?;
+                    }
+                }
+            };
+
+            if plain_stats.tokens != cold_stats.tokens {
+                return Err(format!(
+                    "mode {mode}: paged tokens {:?} != unpaged {:?}",
+                    cold_stats.tokens, plain_stats.tokens
+                ));
+            }
+            if !plain_stats.same_generation(&cold_stats) {
+                return Err(format!("mode {mode}: paged cold stats diverge"));
+            }
+            if plain_stats.tokens != warm_stats.tokens
+                || !plain_stats.same_generation(&warm_stats)
+            {
+                return Err(format!(
+                    "mode {mode}: preempted warm generation diverges: {:?} vs {:?}",
+                    warm_stats.tokens, plain_stats.tokens
+                ));
             }
             Ok(())
         });

@@ -68,7 +68,7 @@ fn one_hot(tok: i32) -> Vec<f32> {
 }
 
 fn dummy_state() -> SeqState {
-    SeqState { kv: xla::Literal::scalar(0.0f32), pos: 0, script: None }
+    SeqState::new(xla::Literal::scalar(0.0f32), 0, None)
 }
 
 /// A target that greedily emits `script` (cyclic past the end, so budget
@@ -274,6 +274,20 @@ pub fn run_batched_vs_sequential(
     drafter_variant: &str,
     lanes: &[OracleLane],
 ) -> std::result::Result<(), String> {
+    run_batched_vs_sequential_pooled(set, target_name, drafter_variant, lanes, None)
+}
+
+/// `run_batched_vs_sequential` with every session's KV paged through
+/// `pool` (when given): the paged-pool determinism oracle.  Passing the
+/// same lanes with and without a pool pins the headline paging invariant
+/// -- the decode path cannot observe whether paging is on.
+pub fn run_batched_vs_sequential_pooled(
+    set: &Arc<ModelSet>,
+    target_name: &str,
+    drafter_variant: &str,
+    lanes: &[OracleLane],
+    pool: Option<&Arc<crate::kv::KvPool>>,
+) -> std::result::Result<(), String> {
     struct Run {
         chunks: Vec<Vec<i32>>,
         stats: GenStats,
@@ -283,7 +297,7 @@ pub fn run_batched_vs_sequential(
     let drafter = set.drafter_for(target_name, drafter_variant).map_err(err)?;
     let params = SpecParams::from_manifest(&set.manifest);
     let make = |lane: &OracleLane| {
-        DecodeSession::new(
+        let mut sess = DecodeSession::new(
             target.clone(),
             lane.mode.map(|_| drafter.clone()),
             params.clone(),
@@ -295,7 +309,11 @@ pub fn run_batched_vs_sequential(
                 None
             },
             false,
-        )
+        );
+        if let Some(p) = pool {
+            sess.set_kv_pool(p.clone());
+        }
+        sess
     };
     let prefill =
         |sess: &mut DecodeSession, lane: &OracleLane| -> std::result::Result<StepOutcome, String> {

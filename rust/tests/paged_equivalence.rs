@@ -1,0 +1,186 @@
+//! Paged-KV equivalence tests: the headline invariant of the block pool
+//! (`massv::kv`, `docs/paged_kv.md`) is that paging is *invisible* in the
+//! output.  Pinned here at two levels:
+//!
+//!   * the session-level batched-vs-sequential oracle with every lane's KV
+//!     paged through one shared pool (chain/tree/adaptive x cold/warm x
+//!     batched/sequential), and
+//!   * the full engine A/B: identical request sets served with
+//!     `paged_kv` on and off must produce identical responses, including
+//!     tree mode -- and again with a starved pool that forces constant
+//!     preemption (swap-out/swap-in cycles on queued sessions).
+//!
+//! Scripted backend throughout (`manifest.backend == "scripted"`); no PJRT.
+
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request, Response};
+use massv::kv::{KvPool, KvPoolConfig};
+use massv::models::scripted::{demo_image, write_test_artifacts};
+use massv::models::ModelSet;
+use massv::spec::testing::{run_batched_vs_sequential_pooled, OracleLane};
+use massv::spec::{GenConfig, SpecMode, TreeConfig};
+
+/// The batched-vs-sequential determinism oracle with every session's KV
+/// paged through one shared pool with deliberately tiny blocks (lots of
+/// sharing, lots of copy-on-write traffic).
+#[test]
+fn prop_pooled_oracle_is_bit_identical() {
+    let dir = write_test_artifacts("paged_oracle", 48, false);
+    let set = ModelSet::load(&dir).unwrap();
+
+    massv::util::prop::propcheck("batched == sequential (paged pool)", 16, |rng| {
+        let pool = KvPool::with_metrics(
+            KvPoolConfig { block_words: 4, budget_bytes: 1 << 20 },
+            None,
+        );
+        let n_lanes = 1 + rng.range(6);
+        let lanes: Vec<OracleLane> = (0..n_lanes)
+            .map(|_| {
+                let mode = match rng.range(4) {
+                    0 => None, // target-only (plain-decode lane)
+                    1 => Some(SpecMode::Tree),
+                    _ => Some(SpecMode::Chain),
+                };
+                OracleLane {
+                    adaptive: mode.is_some() && rng.range(3) == 0,
+                    mode,
+                    cfg: GenConfig {
+                        temperature: if rng.range(2) == 0 { 0.0 } else { 1.0 },
+                        seed: rng.next_u64(),
+                        max_new: 8 + rng.range(32),
+                        tree: Some(TreeConfig {
+                            branch: vec![2, 2, 1, 1, 1],
+                            max_nodes: 16,
+                        }),
+                        ..GenConfig::default()
+                    },
+                    image_phase: rng.range(4),
+                    prompt: (0..(2 + rng.range(5)))
+                        .map(|_| 5 + rng.range(90) as i32)
+                        .collect(),
+                    warm: rng.range(3) == 0,
+                }
+            })
+            .collect();
+        run_batched_vs_sequential_pooled(&set, "qwensim-L", "massv", &lanes, Some(&pool))
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn mixed_requests(engine: &Engine, n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let mut req = Request::simple(
+                engine.next_id(),
+                &format!("w{} w{}", 5 + i % 4, 9 + i % 3),
+                demo_image(i % 3),
+            );
+            req.mode = match i % 3 {
+                0 => DecodeMode::TargetOnly,
+                1 => DecodeMode::Speculative {
+                    variant: "massv".into(),
+                    text_only_draft: false,
+                    adaptive: false,
+                },
+                _ => DecodeMode::Tree {
+                    variant: "massv".into(),
+                    text_only_draft: false,
+                    adaptive: false,
+                },
+            };
+            req.gen.max_new = 40;
+            req.gen.temperature = if i % 2 == 0 { 0.0 } else { 1.0 };
+            req.gen.seed = 2000 + i as u64;
+            req
+        })
+        .collect()
+}
+
+fn run_engine(
+    dir: &str,
+    cfg: EngineConfig,
+    n: usize,
+) -> (Vec<Response>, std::collections::HashMap<String, f64>) {
+    let engine = Engine::start(dir, cfg).unwrap();
+    let rxs: Vec<_> = mixed_requests(&engine, n)
+        .into_iter()
+        .map(|req| engine.submit(req))
+        .collect();
+    let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let metrics = engine.scrape();
+    engine.shutdown();
+    (responses, metrics)
+}
+
+fn assert_identical(a: &[Response], b: &[Response], label: &str) {
+    for (x, y) in a.iter().zip(b) {
+        assert!(x.error.is_none() && y.error.is_none(), "{label}: {:?}/{:?}", x.error, y.error);
+        assert_eq!(x.tokens, y.tokens, "{label}: tokens diverge");
+        assert_eq!(x.verify_calls, y.verify_calls, "{label}");
+        assert_eq!(x.accepted_draft, y.accepted_draft, "{label}");
+        assert_eq!(x.finish_reason, y.finish_reason, "{label}");
+        assert_eq!(x.finished_by_eos, y.finished_by_eos, "{label}");
+        assert_eq!(x.tree_nodes_drafted, y.tree_nodes_drafted, "{label}");
+    }
+}
+
+/// Engine A/B: `paged_kv` on vs off over a chain/tree/target-only request
+/// mix must be response-identical, while the paged engine demonstrably
+/// runs on the pool (fork counter, residency gauges).
+#[test]
+fn engine_paged_matches_unpaged_including_tree() {
+    let dir = write_test_artifacts("paged_engine_eq", 2048, false);
+    let base = || EngineConfig {
+        workers: 2,
+        queue_capacity: 128,
+        max_batch: 4,
+        ..EngineConfig::default()
+    };
+    let (unpaged, m_off) = run_engine(&dir, EngineConfig { paged_kv: false, ..base() }, 12);
+    let (paged, m_on) = run_engine(&dir, EngineConfig { paged_kv: true, ..base() }, 12);
+
+    assert_identical(&unpaged, &paged, "paged vs unpaged");
+    assert_eq!(m_off["kv_forks"], 0.0, "pool off must never touch the pool");
+    assert_eq!(m_off["kv_pool_blocks"], 0.0);
+    assert!(
+        m_on["kv_forks"] > 0.0,
+        "prefix exports/hits must fork paged KV as refcount bumps: {m_on:?}"
+    );
+    assert!(
+        m_on["kv_pool_blocks"] > 0.0,
+        "cached prefix snapshots keep pool blocks resident after shutdown scrape"
+    );
+    assert_eq!(m_on["kv_swap_outs"], 0.0, "a roomy pool must never preempt");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Preemption equivalence: a pool starved to zero bytes keeps every
+/// backlogged session swapped out (each pop swaps it back in), yet the
+/// decoded output is identical to a roomy pool's.
+#[test]
+fn preempted_engine_output_is_identical_to_unpressured() {
+    let dir = write_test_artifacts("paged_engine_preempt", 2048, false);
+    let base = || EngineConfig {
+        workers: 2,
+        queue_capacity: 128,
+        max_batch: 4,
+        paged_kv: true,
+        kv_block_words: 8,
+        ..EngineConfig::default()
+    };
+    let (roomy, m_roomy) = run_engine(&dir, base(), 10);
+    let (starved, m_starved) =
+        run_engine(&dir, EngineConfig { kv_pool_bytes: 0, ..base() }, 10);
+
+    assert_identical(&roomy, &starved, "starved vs roomy pool");
+    assert_eq!(m_roomy["kv_swap_outs"], 0.0);
+    assert!(
+        m_starved["kv_preemptions"] > 0.0,
+        "a zero-byte budget must force preemption passes: {m_starved:?}"
+    );
+    assert!(m_starved["kv_swap_outs"] > 0.0);
+    assert!(
+        m_starved["kv_swap_ins"] > 0.0,
+        "every preempted session that stepped again must have swapped back in"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
