@@ -1,0 +1,103 @@
+//! Per-replica health snapshots: the cheap load signal the router spills
+//! and load-balances on.  A snapshot is three atomic reads per replica
+//! (scheduler depth, inflight gauge, KV pool residency) -- no locks on the
+//! request path beyond the scheduler's own.
+
+/// Point-in-time load/health of one engine replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaHealth {
+    pub replica: usize,
+    /// Drain mode: the replica finishes in-flight work but admits nothing
+    /// new (rolling-restart support).
+    pub draining: bool,
+    /// Scheduler depth: queued admissions plus runnable session steps.
+    pub queue_depth: usize,
+    /// Admitted, unfinished sessions (the engine's `inflight` gauge).
+    pub active_sessions: i64,
+    /// Bytes resident in the replica's paged KV pool.
+    pub kv_pool_bytes: i64,
+    /// The replica's KV pool byte budget (0 when paging is off).
+    pub kv_pool_budget: usize,
+}
+
+impl ReplicaHealth {
+    /// Scalar in-system pressure used for least-loaded spill decisions.
+    /// Queue depth and active sessions dominate (each unit is one request
+    /// somewhere in the system); the KV pool residency fraction is a
+    /// strictly-sub-unit tiebreak between equally-queued replicas, so
+    /// memory pressure steers ties without overriding queueing.
+    pub fn load(&self) -> f64 {
+        let q = self.queue_depth as f64 + self.active_sessions.max(0) as f64;
+        let kv = if self.kv_pool_budget > 0 {
+            (self.kv_pool_bytes.max(0) as f64 / self.kv_pool_budget as f64).min(0.99)
+        } else {
+            0.0
+        };
+        q + kv
+    }
+
+    /// Saturation test for the affinity router: spill away from this
+    /// replica once its queue depth reaches `spill_depth`.
+    pub fn saturated(&self, spill_depth: usize) -> bool {
+        self.queue_depth >= spill_depth.max(1)
+    }
+}
+
+/// Index of the least-loaded replica (ties break on the lower index, so
+/// the choice is deterministic).  `admitting_only` skips draining
+/// replicas; with it set and every replica draining, returns `None`.
+pub fn least_loaded(health: &[ReplicaHealth], admitting_only: bool) -> Option<usize> {
+    health
+        .iter()
+        .filter(|h| !admitting_only || !h.draining)
+        .min_by(|a, b| a.load().partial_cmp(&b.load()).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|h| h.replica)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health(replica: usize, queue: usize, active: i64, kv: i64) -> ReplicaHealth {
+        ReplicaHealth {
+            replica,
+            draining: false,
+            queue_depth: queue,
+            active_sessions: active,
+            kv_pool_bytes: kv,
+            kv_pool_budget: 1000,
+        }
+    }
+
+    #[test]
+    fn load_orders_by_queue_then_kv_pressure() {
+        assert!(health(0, 3, 0, 0).load() > health(1, 1, 1, 0).load());
+        // same in-system count: KV residency breaks the tie ...
+        assert!(health(0, 2, 0, 900).load() > health(1, 2, 0, 100).load());
+        // ... but never outweighs a whole queued request
+        assert!(health(0, 2, 0, 999).load() < health(1, 3, 0, 0).load());
+    }
+
+    #[test]
+    fn saturation_threshold() {
+        assert!(!health(0, 7, 0, 0).saturated(8));
+        assert!(health(0, 8, 0, 0).saturated(8));
+        // spill_depth 0 is clamped to 1: an idle replica never saturates
+        assert!(!health(0, 0, 0, 0).saturated(0));
+        assert!(health(0, 1, 0, 0).saturated(0));
+    }
+
+    #[test]
+    fn least_loaded_respects_drain_and_breaks_ties_low() {
+        let mut hs = vec![health(0, 2, 0, 0), health(1, 0, 0, 0), health(2, 0, 0, 0)];
+        // tie between 1 and 2 -> lower index wins (deterministic)
+        assert_eq!(least_loaded(&hs, true), Some(1));
+        hs[1].draining = true;
+        assert_eq!(least_loaded(&hs, true), Some(2));
+        hs[2].draining = true;
+        hs[0].draining = true;
+        assert_eq!(least_loaded(&hs, true), None);
+        // ignoring drain still finds the overall minimum
+        assert_eq!(least_loaded(&hs, false), Some(1));
+    }
+}

@@ -1,0 +1,595 @@
+//! Cache-aware multi-replica scale-out (`docs/cluster.md`).
+//!
+//! A `ClusterEngine` runs N independent `coordinator::Engine` replicas --
+//! each with its own scheduler, worker pool, prefix cache, and paged KV
+//! pool -- behind a router.  The default `RoutingPolicy::Affinity` steers
+//! each request to the replica already holding its vision encoding and
+//! prefix KV snapshots: the (image content address, prompt prefix) key is
+//! rendezvous-hashed over the replica set (`placement`), so a hot image's
+//! requests all land where its caches are warm, and draining a replica
+//! only remaps the keys it owned.  When the affinity target is saturated
+//! the request spills to the least-loaded admitting replica (`health`).
+//!
+//! Replicas share one request-id space (cancel-by-id needs no routing
+//! state) and the scripted backend decodes each request independently, so
+//! responses are bit-identical regardless of which replica serves them --
+//! `rust/tests/cluster_integration.rs` pins replicas=1 vs replicas=4
+//! equality, streaming and cancel included.  The cluster implements
+//! `EngineFront`, so `server::Server` serves it over the unchanged wire
+//! protocol; the `--replicas` knob changes topology, never the protocol.
+
+pub mod health;
+pub mod placement;
+
+pub use health::{least_loaded, ReplicaHealth};
+pub use placement::{
+    affinity_key, place_affinity, preference_order, rendezvous_score, Placement,
+};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use anyhow::Result;
+
+use crate::cache;
+use crate::coordinator::engine::{Engine, EngineConfig, Update};
+use crate::coordinator::front::EngineFront;
+use crate::coordinator::request::{Request, Response};
+use crate::manifest::Manifest;
+use crate::metrics::Counter;
+use crate::util::rng::Rng;
+
+/// How the front end picks a replica for each request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Prefix-affinity placement with least-loaded spill (default): warm
+    /// caches win as long as the target replica keeps up.
+    Affinity,
+    /// Cache-blind round-robin (A/B baseline for the cluster bench).
+    RoundRobin,
+    /// Cache-blind seeded-uniform choice (A/B baseline).
+    Random,
+}
+
+#[derive(Clone)]
+pub struct ClusterConfig {
+    /// Engine replica count (clamped to >= 1).
+    pub replicas: usize,
+    pub routing: RoutingPolicy,
+    /// Prompt bytes folded into the affinity key.  0 (default) keys on the
+    /// image alone, maximizing vision-encode reuse across prompts; raise
+    /// it to shard one very hot image over several replicas at the cost of
+    /// per-prompt cache locality.
+    pub affinity_prompt_bytes: usize,
+    /// Queue depth at which the affinity target is considered saturated
+    /// and requests spill to the least-loaded admitting replica.
+    pub spill_depth: usize,
+    /// Seed for the `Random` routing policy (unused by the others).
+    pub seed: u64,
+    /// Per-replica engine configuration (each replica gets a clone).
+    pub engine: EngineConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            routing: RoutingPolicy::Affinity,
+            affinity_prompt_bytes: 0,
+            spill_depth: 32,
+            seed: 0,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+struct Replica {
+    engine: Engine,
+    /// Drain mode: excluded from placement; in-flight work finishes.
+    draining: AtomicBool,
+    /// Requests this replica has been routed (admission outcome aside).
+    routed: Counter,
+}
+
+/// N engine replicas behind a prefix-affinity router (see module docs).
+pub struct ClusterEngine {
+    replicas: Vec<Replica>,
+    routing: RoutingPolicy,
+    affinity_prompt_bytes: usize,
+    spill_depth: usize,
+    /// `ClusterConfig::engine.kv_pool_bytes`, kept for health snapshots.
+    kv_pool_budget: usize,
+    /// One id space across all replicas: cancel-by-id stays unambiguous
+    /// and needs no routing-table lookup.
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    rng: Mutex<Rng>,
+    routed_affinity: Counter,
+    spills: Counter,
+    routed_blind: Counter,
+}
+
+impl ClusterEngine {
+    /// Start `cfg.replicas` engines over one artifacts directory.  Each
+    /// replica loads its own `ModelSet` (own compiled executables, own
+    /// caches) so replicas share nothing but the id space.
+    pub fn start(artifacts_dir: &str, cfg: ClusterConfig) -> Result<ClusterEngine> {
+        let n = cfg.replicas.max(1);
+        let mut replicas = Vec::with_capacity(n);
+        for _ in 0..n {
+            replicas.push(Replica {
+                engine: Engine::start(artifacts_dir, cfg.engine.clone())?,
+                draining: AtomicBool::new(false),
+                routed: Counter::default(),
+            });
+        }
+        Ok(ClusterEngine {
+            replicas,
+            routing: cfg.routing,
+            affinity_prompt_bytes: cfg.affinity_prompt_bytes,
+            spill_depth: cfg.spill_depth,
+            kv_pool_budget: if cfg.engine.paged_kv { cfg.engine.kv_pool_bytes } else { 0 },
+            next_id: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            rng: Mutex::new(Rng::seeded(cfg.seed)),
+            routed_affinity: Counter::default(),
+            spills: Counter::default(),
+            routed_blind: Counter::default(),
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Direct access to one replica's engine (tests, benches, drain ops).
+    pub fn replica(&self, idx: usize) -> &Engine {
+        &self.replicas[idx].engine
+    }
+
+    /// Put a replica in drain mode: the router stops placing new requests
+    /// on it while its in-flight sessions run to completion (rolling
+    /// restart).  Returns false for an out-of-range index.
+    pub fn drain(&self, idx: usize) -> bool {
+        match self.replicas.get(idx) {
+            Some(r) => {
+                r.draining.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Readmit a drained replica.  Rendezvous placement is topology-stable,
+    /// so its old affinity keys come straight back to its warm caches.
+    pub fn undrain(&self, idx: usize) -> bool {
+        match self.replicas.get(idx) {
+            Some(r) => {
+                r.draining.store(false, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn is_draining(&self, idx: usize) -> bool {
+        self.replicas
+            .get(idx)
+            .map(|r| r.draining.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+
+    /// Cheap per-replica load snapshot: three atomic reads per replica, no
+    /// queue locks beyond the scheduler's own length read.
+    pub fn health(&self) -> Vec<ReplicaHealth> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaHealth {
+                replica: i,
+                draining: r.draining.load(Ordering::Relaxed),
+                queue_depth: r.engine.queue_len(),
+                active_sessions: r.engine.metrics.inflight.get(),
+                kv_pool_bytes: r.engine.metrics.kv_pool_bytes.get(),
+                kv_pool_budget: self.kv_pool_budget,
+            })
+            .collect()
+    }
+
+    /// Pick the serving replica for a request (the placement decision
+    /// alone; submission happens in `run`/`submit_streaming`).  Draining
+    /// replicas are skipped under every policy; a fully draining cluster
+    /// falls back to the least-loaded replica so nothing is stranded.
+    pub fn route(&self, req: &Request) -> usize {
+        let n = self.replicas.len();
+        if n == 1 {
+            return 0;
+        }
+        let health = self.health();
+        match self.routing {
+            RoutingPolicy::Affinity => {
+                // same content-addressing rule as engine admission: inline
+                // pixels hash to their id; id-only requests reuse it
+                let image_id = if req.image.is_empty() {
+                    req.image_id.unwrap_or(0)
+                } else {
+                    cache::image_hash(&req.image)
+                };
+                let key = affinity_key(image_id, &req.prompt, self.affinity_prompt_bytes);
+                match place_affinity(key, &health, self.spill_depth) {
+                    Placement::Affinity(i) => {
+                        self.routed_affinity.inc();
+                        i
+                    }
+                    Placement::Spill(i) => {
+                        self.spills.inc();
+                        i
+                    }
+                }
+            }
+            RoutingPolicy::RoundRobin => {
+                self.routed_blind.inc();
+                for _ in 0..n {
+                    let i = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                    if !health[i].draining {
+                        return i;
+                    }
+                }
+                least_loaded(&health, false).unwrap_or(0)
+            }
+            RoutingPolicy::Random => {
+                self.routed_blind.inc();
+                let mut rng = self.rng.lock().unwrap();
+                for _ in 0..4 * n {
+                    let i = rng.range(n);
+                    if !health[i].draining {
+                        return i;
+                    }
+                }
+                least_loaded(&health, false).unwrap_or(0)
+            }
+        }
+    }
+
+    fn place(&self, req: &Request) -> &Replica {
+        let r = &self.replicas[self.route(req)];
+        r.routed.inc();
+        r
+    }
+
+    /// Route + submit; the final response arrives on the returned channel.
+    /// Per-replica backpressure applies: a full target queue yields the
+    /// engine's immediate rejected response.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        self.place(&req).engine.submit(req)
+    }
+
+    /// Route + submit for streaming delivery.
+    pub fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
+        self.place(&req).engine.submit_streaming(req)
+    }
+
+    /// Route + submit + wait.
+    pub fn run(&self, req: Request) -> Response {
+        self.place(&req).engine.run(req)
+    }
+
+    /// Cancel anywhere in the cluster.  Ids are unique across replicas, so
+    /// broadcasting is exact: at most one replica knows the id.
+    pub fn cancel(&self, id: u64) -> bool {
+        self.replicas.iter().any(|r| r.engine.cancel(id))
+    }
+
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Total scheduler depth across replicas.
+    pub fn queue_len(&self) -> usize {
+        self.replicas.iter().map(|r| r.engine.queue_len()).sum()
+    }
+
+    /// Cluster metrics: the flat per-engine scrape rolled up across
+    /// replicas under the same key names (so existing dashboards read a
+    /// cluster exactly like a single engine), plus `cluster_*` routing
+    /// counters and the full per-replica maps under `replica{i}_`
+    /// prefixes.  Counters and additive gauges are summed; derived ratios
+    /// (hit rate, overall MAL) are recomputed from the summed numerators
+    /// and denominators; percentile/mean keys take the max over replicas
+    /// -- an upper bound on the true cluster percentile, which cannot be
+    /// recomputed from per-replica summaries.
+    pub fn scrape(&self) -> HashMap<String, f64> {
+        // keys aggregated by summation: counters and additive gauges.
+        // throughput_tps sums too: replicas start together, so equal
+        // uptimes make the sum the aggregate rate.
+        const SUMMED: &[&str] = &[
+            "requests_received",
+            "requests_completed",
+            "requests_rejected",
+            "requests_failed",
+            "requests_cancelled",
+            "requests_deadline_exceeded",
+            "tokens_generated",
+            "draft_tokens_accepted",
+            "verify_calls",
+            "draft_calls",
+            "queue_depth",
+            "inflight",
+            "active_sessions",
+            "throughput_tps",
+            "prefix_cache_hits",
+            "prefix_cache_misses",
+            "prefix_cache_evictions",
+            "vision_encode_hits",
+            "vision_encode_fills",
+            "prefix_cache_bytes",
+            "prefix_cache_entries",
+            "batch_ticks",
+            "batched_lane_steps",
+            "kv_pool_bytes",
+            "kv_pool_blocks",
+            "kv_forks",
+            "kv_cow_copies",
+            "kv_swap_outs",
+            "kv_swap_ins",
+            "kv_preemptions",
+            "tree_requests",
+            "tree_nodes_drafted",
+            "tree_iterations",
+        ];
+        // keys aggregated by max: per-replica percentiles/means cannot be
+        // merged exactly, so report the worst replica (upper bound).
+        const MAXED: &[&str] = &[
+            "queue_ms_p50",
+            "queue_ms_p99",
+            "steps_per_request_mean",
+            "tpot_ms_p50",
+            "tpot_ms_p99",
+            "latency_ms_p50",
+            "latency_ms_p95",
+            "latency_ms_p99",
+            "latency_ms_mean",
+            "prefill_ms_mean",
+            "prefill_encode_ms_mean",
+            "prefill_text_ms_mean",
+            "batch_max_lanes",
+            "batch_occupancy_mean",
+            "batch_occupancy_max",
+            "tree_path_depth_mean",
+            "branch_utilization",
+            "uptime_secs",
+        ];
+        let scrapes: Vec<HashMap<String, f64>> =
+            self.replicas.iter().map(|r| r.engine.scrape()).collect();
+        let mut out = HashMap::new();
+        let get = |s: &HashMap<String, f64>, k: &str| s.get(k).copied().unwrap_or(0.0);
+        for &k in SUMMED {
+            out.insert(k.to_string(), scrapes.iter().map(|s| get(s, k)).sum());
+        }
+        for &k in MAXED {
+            let v = scrapes.iter().map(|s| get(s, k)).fold(0.0, f64::max);
+            out.insert(k.to_string(), v);
+        }
+        // derived ratios recomputed from the summed parts (a mean of
+        // per-replica ratios would weight an idle replica like a busy one)
+        let hits = out["prefix_cache_hits"];
+        let lookups = hits + out["prefix_cache_misses"];
+        out.insert(
+            "prefix_cache_hit_rate".into(),
+            if lookups > 0.0 { hits / lookups } else { 0.0 },
+        );
+        let verify = out["verify_calls"];
+        out.insert(
+            "overall_mal".into(),
+            if verify > 0.0 { (out["draft_tokens_accepted"] + verify) / verify } else { 0.0 },
+        );
+        // routing-layer counters (cluster-only keys)
+        out.insert("cluster_replicas".into(), self.replicas.len() as f64);
+        let draining = self
+            .replicas
+            .iter()
+            .filter(|r| r.draining.load(Ordering::Relaxed))
+            .count();
+        out.insert("cluster_draining".into(), draining as f64);
+        out.insert("cluster_spills".into(), self.spills.get() as f64);
+        out.insert("cluster_routed_affinity".into(), self.routed_affinity.get() as f64);
+        out.insert("cluster_routed_blind".into(), self.routed_blind.get() as f64);
+        // full per-replica maps for drill-down
+        for (i, (r, s)) in self.replicas.iter().zip(&scrapes).enumerate() {
+            for (k, v) in s {
+                out.insert(format!("replica{i}_{k}"), *v);
+            }
+            out.insert(
+                format!("replica{i}_draining"),
+                r.draining.load(Ordering::Relaxed) as u8 as f64,
+            );
+            out.insert(format!("replica{i}_routed"), r.routed.get() as f64);
+        }
+        out
+    }
+
+    /// Per-executable stats merged across replicas: calls sum, means are
+    /// call-weighted.
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        let mut merged: HashMap<String, (u64, f64)> = HashMap::new();
+        for r in &self.replicas {
+            for (name, calls, mean_us) in r.engine.models.exec_stats() {
+                let e = merged.entry(name).or_insert((0, 0.0));
+                let total = e.0 + calls;
+                if total > 0 {
+                    e.1 = (e.1 * e.0 as f64 + mean_us * calls as f64) / total as f64;
+                }
+                e.0 = total;
+            }
+        }
+        let mut out: Vec<(String, u64, f64)> =
+            merged.into_iter().map(|(n, (c, m))| (n, c, m)).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Graceful shutdown: every replica drains its queue and joins its
+    /// workers.
+    pub fn shutdown(self) {
+        for r in self.replicas {
+            r.engine.shutdown();
+        }
+    }
+}
+
+impl EngineFront for ClusterEngine {
+    fn next_id(&self) -> u64 {
+        ClusterEngine::next_id(self)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.replicas[0].engine.models.manifest
+    }
+
+    fn run(&self, req: Request) -> Response {
+        ClusterEngine::run(self, req)
+    }
+
+    fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
+        ClusterEngine::submit_streaming(self, req)
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        ClusterEngine::cancel(self, id)
+    }
+
+    fn scrape(&self) -> HashMap<String, f64> {
+        ClusterEngine::scrape(self)
+    }
+
+    fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        ClusterEngine::exec_stats(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::scripted;
+
+    fn cluster(tag: &str, replicas: usize, routing: RoutingPolicy) -> (ClusterEngine, String) {
+        let dir = scripted::write_test_artifacts(tag, 64, false);
+        let ce = ClusterEngine::start(
+            &dir,
+            ClusterConfig {
+                replicas,
+                routing,
+                engine: EngineConfig { workers: 1, ..EngineConfig::default() },
+                ..ClusterConfig::default()
+            },
+        )
+        .unwrap();
+        (ce, dir)
+    }
+
+    fn req_with_image(id: u64, phase: usize) -> Request {
+        Request::simple(id, "w5 w6", scripted::demo_image(phase))
+    }
+
+    #[test]
+    fn affinity_routing_is_sticky_per_image() {
+        let (ce, dir) = cluster("cluster_sticky", 4, RoutingPolicy::Affinity);
+        // same image -> same replica, every time, regardless of prompt
+        let home = ce.route(&req_with_image(1, 0));
+        for i in 0..8 {
+            let mut r = req_with_image(10 + i, 0);
+            r.prompt = format!("w{} w{}", i, i + 1);
+            assert_eq!(ce.route(&r), home);
+        }
+        // distinct images spread: 16 images must not all share one replica
+        let homes: std::collections::HashSet<usize> =
+            (0..16).map(|p| ce.route(&req_with_image(100 + p as u64, p))).collect();
+        assert!(homes.len() > 1, "16 images all routed to replica {home}");
+        // an id-only follow-up routes with its pixel-carrying original
+        let original = req_with_image(200, 3);
+        let mut follow_up = Request::simple(201, "w7", vec![]);
+        follow_up.image_id = Some(cache::image_hash(&original.image));
+        assert_eq!(ce.route(&original), ce.route(&follow_up));
+        ce.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn drain_excludes_replica_and_undrain_restores_home() {
+        let (ce, dir) = cluster("cluster_drain_route", 3, RoutingPolicy::Affinity);
+        let r = req_with_image(1, 0);
+        let home = ce.route(&r);
+        assert!(ce.drain(home));
+        assert!(ce.is_draining(home));
+        for _ in 0..10 {
+            assert_ne!(ce.route(&r), home, "draining replica must not be routed");
+        }
+        assert!(ce.undrain(home));
+        assert_eq!(ce.route(&r), home, "rendezvous brings the key back home");
+        // out-of-range drain is refused, not a panic
+        assert!(!ce.drain(99));
+        assert!(!ce.undrain(99));
+        assert!(!ce.is_draining(99));
+        ce.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_draining() {
+        let (ce, dir) = cluster("cluster_rr", 3, RoutingPolicy::RoundRobin);
+        let r = req_with_image(1, 0);
+        let first: Vec<usize> = (0..6).map(|_| ce.route(&r)).collect();
+        assert_eq!(first, vec![0, 1, 2, 0, 1, 2]);
+        ce.drain(1);
+        for _ in 0..6 {
+            assert_ne!(ce.route(&r), 1);
+        }
+        ce.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scrape_rolls_up_and_exposes_per_replica_keys() {
+        let (ce, dir) = cluster("cluster_scrape", 2, RoutingPolicy::Affinity);
+        // run a few requests through the cluster so counters move
+        for i in 0..4 {
+            let resp = ce.run(req_with_image(ce.next_id(), i % 2));
+            assert!(resp.error.is_none(), "unexpected failure: {:?}", resp.error);
+        }
+        let s = ce.scrape();
+        assert_eq!(s["cluster_replicas"], 2.0);
+        assert_eq!(s["cluster_draining"], 0.0);
+        assert_eq!(s["requests_received"], 4.0);
+        assert_eq!(s["requests_completed"], 4.0);
+        // rollup equals the sum of the per-replica keys it came from
+        let per: f64 = (0..2).map(|i| s[&format!("replica{i}_tokens_generated")]).sum();
+        assert_eq!(s["tokens_generated"], per);
+        assert!(s["tokens_generated"] > 0.0);
+        // recomputed ratio matches the summed parts
+        let lookups = s["prefix_cache_hits"] + s["prefix_cache_misses"];
+        assert!(lookups > 0.0);
+        assert!((s["prefix_cache_hit_rate"] - s["prefix_cache_hits"] / lookups).abs() < 1e-12);
+        // routing counters account for every placement
+        assert_eq!(
+            s["cluster_routed_affinity"] + s["cluster_spills"] + s["cluster_routed_blind"],
+            4.0
+        );
+        assert!(s.contains_key("replica0_draining"));
+        assert!(s.contains_key("replica1_routed"));
+        ce.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ids_are_unique_across_the_cluster_and_cancel_broadcasts() {
+        let (ce, dir) = cluster("cluster_ids", 2, RoutingPolicy::RoundRobin);
+        let a = ce.next_id();
+        let b = ce.next_id();
+        assert_ne!(a, b);
+        // cancel of an unknown id is false everywhere
+        assert!(!ce.cancel(10_000));
+        ce.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,180 @@
+//! Prefix-affinity placement: deterministic request -> replica mapping.
+//!
+//! The affinity key hashes the image content address (and optionally the
+//! first bytes of the prompt); rendezvous (highest-random-weight) hashing
+//! turns the key into a stable replica preference order.  Rendezvous keeps
+//! placement stable under topology change: draining one replica only
+//! remaps the keys whose first choice went away, instead of reshuffling
+//! every key the way `key % n` would.
+
+use super::health::{least_loaded, ReplicaHealth};
+
+/// splitmix64 finalizer: cheap full-avalanche mixing.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Affinity key for a request.  The image content address dominates --
+/// that is what the vision-encode cache keys on, so all requests over one
+/// image land where its encoding is warm regardless of prompt.  A nonzero
+/// `prompt_bytes` additionally hashes the prompt's first bytes (byte
+/// prefix, so no UTF-8 boundary concerns), sharding one very hot image
+/// over several replicas while keeping per-conversation affinity.
+pub fn affinity_key(image_id: u64, prompt: &str, prompt_bytes: usize) -> u64 {
+    let mut h = mix64(image_id ^ 0x9E37_79B9_7F4A_7C15);
+    if prompt_bytes > 0 {
+        for &b in prompt.as_bytes().iter().take(prompt_bytes) {
+            h = mix64(h ^ b as u64);
+        }
+    }
+    h
+}
+
+/// Rendezvous score of `key` on `replica`; placement prefers replicas in
+/// descending score order.
+pub fn rendezvous_score(key: u64, replica: usize) -> u64 {
+    mix64(key ^ mix64(replica as u64 ^ 0xA076_1D64_78BD_642F))
+}
+
+/// Replica indices in affinity-preference order (best first).
+pub fn preference_order(key: u64, replicas: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..replicas).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(rendezvous_score(key, i)));
+    order
+}
+
+/// Where an affinity-routed request landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// The rendezvous-preferred replica (warm caches for this key).
+    Affinity(usize),
+    /// The affinity target was saturated or draining: least-loaded spill.
+    Spill(usize),
+}
+
+impl Placement {
+    pub fn replica(self) -> usize {
+        match self {
+            Placement::Affinity(i) | Placement::Spill(i) => i,
+        }
+    }
+}
+
+/// Affinity placement over a health snapshot: steer to the highest-ranked
+/// replica still admitting; when it is saturated (queue depth at or past
+/// `spill_depth`) spill to the least-loaded admitting replica.  A fully
+/// draining cluster falls back to the least-loaded replica overall, so a
+/// rolling restart can never strand a request.
+pub fn place_affinity(key: u64, health: &[ReplicaHealth], spill_depth: usize) -> Placement {
+    let order = preference_order(key, health.len());
+    if let Some(t) = order.into_iter().find(|&i| !health[i].draining) {
+        if !health[t].saturated(spill_depth) {
+            return Placement::Affinity(t);
+        }
+    }
+    let spill = least_loaded(health, true)
+        .or_else(|| least_loaded(health, false))
+        .unwrap_or(0);
+    Placement::Spill(spill)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(replica: usize) -> ReplicaHealth {
+        ReplicaHealth {
+            replica,
+            draining: false,
+            queue_depth: 0,
+            active_sessions: 0,
+            kv_pool_bytes: 0,
+            kv_pool_budget: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn affinity_key_is_deterministic_and_image_dominated() {
+        let a = affinity_key(42, "w5 w6", 0);
+        assert_eq!(a, affinity_key(42, "w5 w6", 0));
+        // prompt_bytes = 0: the prompt never enters the key
+        assert_eq!(a, affinity_key(42, "completely different prompt", 0));
+        assert_ne!(a, affinity_key(43, "w5 w6", 0));
+        // a nonzero prefix shards by prompt
+        assert_ne!(affinity_key(42, "aaaa", 8), affinity_key(42, "bbbb", 8));
+        // ... but only the prefix: bytes past the cut are ignored
+        assert_eq!(affinity_key(42, "aaaa-x", 4), affinity_key(42, "aaaa-y", 4));
+    }
+
+    #[test]
+    fn preference_order_is_a_permutation_and_spreads_keys() {
+        let mut first_choice = [0usize; 4];
+        for key in 0..256u64 {
+            let order = preference_order(affinity_key(key, "", 0), 4);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3]);
+            first_choice[order[0]] += 1;
+        }
+        // roughly balanced: no replica owns fewer than 1/8 or more than
+        // 1/2 of 256 keys under a decent hash
+        for &c in &first_choice {
+            assert!((32..=128).contains(&c), "skewed first choices: {first_choice:?}");
+        }
+    }
+
+    #[test]
+    fn rendezvous_is_stable_under_replica_removal() {
+        // removing the last replica must only remap keys whose first
+        // choice WAS that replica -- everyone else keeps their placement
+        for key in 0..512u64 {
+            let k = affinity_key(key, "", 0);
+            let with4 = preference_order(k, 4)[0];
+            let with3 = preference_order(k, 3)[0];
+            if with4 != 3 {
+                assert_eq!(with4, with3, "key {key} moved although replica 3 was not its target");
+            }
+        }
+    }
+
+    #[test]
+    fn place_affinity_steers_spills_and_respects_drain() {
+        let key = affinity_key(7, "", 0);
+        let mut health: Vec<ReplicaHealth> = (0..4).map(idle).collect();
+        let target = preference_order(key, 4)[0];
+        assert_eq!(place_affinity(key, &health, 8), Placement::Affinity(target));
+
+        // saturated target spills to the least-loaded admitting replica
+        health[target].queue_depth = 8;
+        for (i, h) in health.iter_mut().enumerate() {
+            if i != target {
+                h.queue_depth = 2 + i; // distinct loads; min is deterministic
+            }
+        }
+        let spilled = place_affinity(key, &health, 8);
+        assert!(matches!(spilled, Placement::Spill(_)));
+        assert_ne!(spilled.replica(), target);
+
+        // draining target: next-ranked admitting replica takes over even
+        // when idle
+        let mut health: Vec<ReplicaHealth> = (0..4).map(idle).collect();
+        health[target].draining = true;
+        let fallback = place_affinity(key, &health, 8);
+        assert!(matches!(fallback, Placement::Affinity(_)));
+        assert_ne!(fallback.replica(), target);
+        assert_eq!(fallback.replica(), preference_order(key, 4)[1]);
+
+        // fully draining cluster still places (rolling restart must not
+        // strand requests)
+        for h in &mut health {
+            h.draining = true;
+        }
+        health[2].queue_depth = 0;
+        health[0].queue_depth = 5;
+        health[1].queue_depth = 5;
+        health[3].queue_depth = 5;
+        assert_eq!(place_affinity(key, &health, 8), Placement::Spill(2));
+    }
+}

@@ -99,6 +99,7 @@ pub enum SchedPolicy {
     RunToCompletion,
 }
 
+#[derive(Clone)]
 pub struct EngineConfig {
     pub default_target: String,
     pub workers: usize,

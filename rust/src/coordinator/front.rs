@@ -1,0 +1,71 @@
+//! `EngineFront`: the server-facing engine surface.
+//!
+//! The TCP front-end and the wire protocol only need a narrow slice of the
+//! engine -- request-id allocation, the artifact manifest for request
+//! validation, submit/cancel, and the metrics scrape.  Both the
+//! single-replica `Engine` and the multi-replica `cluster::ClusterEngine`
+//! implement this trait, so `server::Server` serves either transparently:
+//! the `replicas` knob changes topology, never the wire protocol.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use crate::coordinator::engine::{Engine, Update};
+use crate::coordinator::request::{Request, Response};
+use crate::manifest::Manifest;
+
+pub trait EngineFront: Send + Sync + 'static {
+    /// Allocate a request id unique across the whole deployment (all
+    /// replicas share one id space, so cancel-by-id is unambiguous).
+    fn next_id(&self) -> u64;
+
+    /// The manifest requests are validated against (image shape, models).
+    fn manifest(&self) -> &Manifest;
+
+    /// Submit and wait for the final response.
+    fn run(&self, req: Request) -> Response;
+
+    /// Submit for streaming delivery: one `Update::Chunk` per decode step,
+    /// then `Update::Done` with the summary response.
+    fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update>;
+
+    /// Cancel a queued or in-flight request anywhere in the deployment.
+    /// Returns true if the id was still live.
+    fn cancel(&self, id: u64) -> bool;
+
+    /// Flat metrics snapshot (the wire `metrics` op).
+    fn scrape(&self) -> HashMap<String, f64>;
+
+    /// Per-executable call statistics: (entry point, calls, mean micros).
+    fn exec_stats(&self) -> Vec<(String, u64, f64)>;
+}
+
+impl EngineFront for Engine {
+    fn next_id(&self) -> u64 {
+        Engine::next_id(self)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.models.manifest
+    }
+
+    fn run(&self, req: Request) -> Response {
+        Engine::run(self, req)
+    }
+
+    fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
+        Engine::submit_streaming(self, req)
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        Engine::cancel(self, id)
+    }
+
+    fn scrape(&self) -> HashMap<String, f64> {
+        Engine::scrape(self)
+    }
+
+    fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        self.models.exec_stats()
+    }
+}

@@ -9,11 +9,13 @@
 //! executables, with streaming delivery, cancellation, and deadlines.
 
 pub mod engine;
+pub mod front;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 
 pub use engine::{Engine, EngineConfig, SchedPolicy, Update};
+pub use front::EngineFront;
 pub use request::{DecodeMode, Priority, Request, Response};
 pub use router::{Route, Router};
 pub use scheduler::{Scheduler, Submit};

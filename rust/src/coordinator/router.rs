@@ -174,4 +174,83 @@ mod tests {
         let router = Router::new("qwensim-L");
         assert!(router.route(&req(DecodeMode::TargetOnly, "nope"), &m).is_err());
     }
+
+    /// TOY with the drafter list emptied: every drafting mode must fall
+    /// back to target-only (availability over speculation), never error.
+    fn no_drafters_manifest() -> Manifest {
+        let stripped = TOY.replace(
+            r#""drafters": [
+        {"name": "qwensim-S", "kind": "draft", "family": "qwensim",
+         "paper_analog": "x", "d_model": 48, "n_layers": 2, "n_heads": 4,
+         "d_head": 12, "vocab": 120, "window": null,
+         "kv_shape": [2,2,4,128,12], "entries": {},
+         "variant": "massv", "aligned_target": "qwensim-L", "multimodal": true}
+      ]"#,
+            r#""drafters": []"#,
+        );
+        assert!(stripped.contains(r#""drafters": []"#), "strip must apply");
+        Manifest::from_json(&stripped).unwrap()
+    }
+
+    #[test]
+    fn missing_drafter_falls_back_for_chain_and_tree() {
+        let m = no_drafters_manifest();
+        let router = Router::new("qwensim-L");
+        let chain = router
+            .route(
+                &req(
+                    DecodeMode::Speculative { variant: "massv".into(), text_only_draft: false, adaptive: false },
+                    "",
+                ),
+                &m,
+            )
+            .unwrap();
+        assert_eq!(chain.drafter, None, "chain mode must degrade, not fail");
+        let tree = router
+            .route(
+                &req(
+                    DecodeMode::Tree { variant: "massv".into(), text_only_draft: false, adaptive: false },
+                    "",
+                ),
+                &m,
+            )
+            .unwrap();
+        assert_eq!(tree.drafter, None, "tree mode must degrade, not fail");
+    }
+
+    #[test]
+    fn fallback_clears_text_only_draft() {
+        // text_only_draft modifies *drafting*; with no drafter resolved the
+        // flag must not leak into the route (a stale true would change the
+        // prefix-cache key and session construction for a plain decode)
+        let m = no_drafters_manifest();
+        let router = Router::new("qwensim-L");
+        let r = router
+            .route(
+                &req(
+                    DecodeMode::Speculative { variant: "massv".into(), text_only_draft: true, adaptive: false },
+                    "",
+                ),
+                &m,
+            )
+            .unwrap();
+        assert_eq!(r.drafter, None);
+        assert!(!r.text_only_draft, "fallback must reset text_only_draft");
+    }
+
+    #[test]
+    fn unknown_target_errors_before_drafter_fallback() {
+        // target validation must win over the drafter fallback: a typo'd
+        // target under a drafting mode is a clean error, not a silent
+        // target-only decode on some other model
+        let m = Manifest::from_json(TOY).unwrap();
+        let router = Router::new("qwensim-L");
+        for mode in [
+            DecodeMode::Speculative { variant: "massv".into(), text_only_draft: false, adaptive: false },
+            DecodeMode::Tree { variant: "massv".into(), text_only_draft: false, adaptive: false },
+        ] {
+            let err = router.route(&req(mode, "nope"), &m).unwrap_err();
+            assert!(err.contains("nope"), "error must name the bad target: {err}");
+        }
+    }
 }

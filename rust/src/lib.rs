@@ -15,8 +15,9 @@
 //!   execution with a bit-identity guarantee, streaming, cancellation,
 //!   and deadlines -- see `docs/serving.md`), multimodal prefix cache
 //!   (content-addressed vision-encode reuse + KV snapshot forking,
-//!   `cache`, see `docs/prefix_cache.md`), TCP server, workload +
-//!   evaluation harness.  Python never runs here.
+//!   `cache`, see `docs/prefix_cache.md`), multi-replica scale-out with
+//!   prefix-affinity routing (`cluster`, see `docs/cluster.md`), TCP
+//!   server, workload + evaluation harness.  Python never runs here.
 //!
 //! Decoding modes (`coordinator::DecodeMode`): `Speculative` (the paper's
 //! chain algorithm), `Tree` (token-tree speculation with lossless
@@ -40,6 +41,7 @@
 //! ```
 
 pub mod cache;
+pub mod cluster;
 pub mod coordinator;
 pub mod eval;
 pub mod kv;

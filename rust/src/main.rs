@@ -11,6 +11,7 @@
 use std::sync::Arc;
 
 use anyhow::Result;
+use massv::cluster::{ClusterConfig, ClusterEngine, RoutingPolicy};
 use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
 use massv::eval::{eval_cell, tables};
 use massv::models::ModelSet;
@@ -25,6 +26,7 @@ massv — multimodal speculative decoding for VLMs (MASSV reproduction)
 
 USAGE:
   massv serve    [--addr 127.0.0.1:7700] [--target qwensim-L] [--workers N]
+                 [--replicas N] [--routing affinity|roundrobin|random]
   massv generate --prompt \"describe the image briefly .\" [--task coco]
                  [--mode massv|massv_wo_sdvit|baseline|tree|target_only]
                  [--variant V] [--adaptive] [--temperature T] [--item N]
@@ -69,9 +71,33 @@ fn engine(artifacts: &str, args: &Args) -> Result<Engine> {
 
 fn serve(artifacts: &str, args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7700");
-    let eng = Arc::new(engine(artifacts, args)?);
-    println!("massv serving on {addr} (target {})", args.get_or("target", "qwensim-L"));
-    Server::new(eng).serve(addr, |a| println!("bound {a}"))
+    let replicas = args.get_usize("replicas", 1);
+    let routing = match args.get_or("routing", "affinity") {
+        "roundrobin" => RoutingPolicy::RoundRobin,
+        "random" => RoutingPolicy::Random,
+        _ => RoutingPolicy::Affinity,
+    };
+    // the server always fronts a ClusterEngine; replicas=1 is a single
+    // engine behind a router that always picks it (docs/cluster.md)
+    let cluster = Arc::new(ClusterEngine::start(
+        artifacts,
+        ClusterConfig {
+            replicas,
+            routing,
+            engine: EngineConfig {
+                default_target: args.get_or("target", "qwensim-L").to_string(),
+                workers: args.get_usize("workers", 4),
+                queue_capacity: args.get_usize("queue", 256),
+                ..EngineConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
+    )?);
+    println!(
+        "massv serving on {addr} (target {}, {replicas} replica(s), {routing:?} routing)",
+        args.get_or("target", "qwensim-L")
+    );
+    Server::new(cluster).serve(addr, |a| println!("bound {a}"))
 }
 
 fn load_item(artifacts: &str, task: &str, idx: usize) -> Result<workload::EvalItem> {

@@ -5,6 +5,12 @@
 //! the request rates this testbed sustains, and it keeps the request path
 //! free of any Python.
 //!
+//! The server is generic over `coordinator::EngineFront`: the default is a
+//! single `Engine`; `cluster::ClusterEngine` drops in for multi-replica
+//! scale-out with prefix-affinity routing (`docs/cluster.md`).  The wire
+//! protocol is identical either way -- topology is a deployment knob, not
+//! a protocol change.
+//!
 //! Protocol (one JSON object per line, both directions):
 //!   request:  {"op":"generate", "prompt": str,
 //!              "image"?: [f32; manifest image_shape product],
@@ -34,28 +40,41 @@ pub mod protocol;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{Engine, Update};
+use crate::coordinator::{Engine, EngineFront, Update};
 use crate::util::json::Json;
 
 pub use protocol::{parse_request, render_chunk, render_metrics, render_response};
 
-pub struct Server {
-    engine: Arc<Engine>,
+pub struct Server<F: EngineFront = Engine> {
+    engine: Arc<F>,
     stop: Arc<AtomicBool>,
+    /// Live (unreaped) connection threads; see `conn_count_handle`.
+    conns: Arc<AtomicUsize>,
 }
 
-impl Server {
-    pub fn new(engine: Arc<Engine>) -> Server {
-        Server { stop: Arc::new(AtomicBool::new(false)), engine }
+impl<F: EngineFront> Server<F> {
+    pub fn new(engine: Arc<F>) -> Server<F> {
+        Server {
+            stop: Arc::new(AtomicBool::new(false)),
+            conns: Arc::new(AtomicUsize::new(0)),
+            engine,
+        }
     }
 
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         self.stop.clone()
+    }
+
+    /// Observes the accept loop's count of tracked connection threads
+    /// (live handlers plus finished-but-unreaped ones).  Tests use it to
+    /// pin that finished handlers are actually reaped.
+    pub fn conn_count_handle(&self) -> Arc<AtomicUsize> {
+        self.conns.clone()
     }
 
     /// Serve until the stop flag is raised.  Returns the bound address via
@@ -64,18 +83,31 @@ impl Server {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?);
-        let mut handles = Vec::new();
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         while !self.stop.load(Ordering::Relaxed) {
+            // reap finished connection threads each tick; without this the
+            // handle vec grows for the server's whole lifetime (one entry
+            // per connection ever accepted)
+            let mut i = 0;
+            while i < handles.len() {
+                if handles[i].is_finished() {
+                    let _ = handles.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+            self.conns.store(handles.len(), Ordering::Relaxed);
             match listener.accept() {
                 Ok((stream, peer)) => {
                     log::info!("connection from {peer}");
                     let engine = self.engine.clone();
                     let stop = self.stop.clone();
                     handles.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, &engine, &stop) {
+                        if let Err(e) = handle_conn(stream, engine.as_ref(), &stop) {
                             log::debug!("connection {peer} closed: {e:#}");
                         }
                     }));
+                    self.conns.store(handles.len(), Ordering::Relaxed);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(5));
@@ -86,11 +118,12 @@ impl Server {
         for h in handles {
             let _ = h.join();
         }
+        self.conns.store(0, Ordering::Relaxed);
         Ok(())
     }
 }
 
-fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<()> {
+fn handle_conn<F: EngineFront>(stream: TcpStream, engine: &F, stop: &AtomicBool) -> Result<()> {
     stream.set_nodelay(true)?;
     // bounded reads so the handler notices the stop flag even while a
     // client holds the connection open without sending anything
@@ -102,14 +135,18 @@ fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        line.clear();
+        // NOTE: no clear here.  A timed-out read_line has already consumed
+        // any partial line from the socket into `line`; clearing at the
+        // top of the loop would silently discard those bytes and corrupt
+        // the request a slow client is still writing.  Clear only after a
+        // complete line has been handled.
         match reader.read_line(&mut line) {
             Ok(0) => break, // EOF: client closed
             Ok(_) => {
-                if line.trim().is_empty() {
-                    continue;
+                if !line.trim().is_empty() {
+                    handle_request(&line, engine, &mut writer)?;
                 }
-                handle_request(&line, engine, &mut writer)?;
+                line.clear();
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -125,7 +162,7 @@ fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<
 
 /// Handle one request line, writing one frame (or, for streaming
 /// generates, a chunk-frame sequence followed by the summary frame).
-fn handle_request(line: &str, engine: &Engine, writer: &mut TcpStream) -> Result<()> {
+fn handle_request<F: EngineFront>(line: &str, engine: &F, writer: &mut TcpStream) -> Result<()> {
     let reply = match parse_request(line, engine) {
         Ok(protocol::Op::Ping) => Json::obj(vec![("ok", Json::Bool(true))]),
         Ok(protocol::Op::Metrics) => render_metrics(engine),

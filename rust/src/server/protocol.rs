@@ -17,7 +17,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::cache::parse_image_id;
-use crate::coordinator::{DecodeMode, Engine, Priority, Request, Response};
+use crate::coordinator::{DecodeMode, EngineFront, Priority, Request, Response};
 use crate::spec::GenConfig;
 use crate::util::json::{parse, Json};
 
@@ -28,7 +28,7 @@ pub enum Op {
     Cancel(u64),
 }
 
-pub fn parse_request(line: &str, engine: &Engine) -> Result<Op> {
+pub fn parse_request<F: EngineFront>(line: &str, engine: &F) -> Result<Op> {
     let v = parse(line)?;
     match v.req("op")?.as_str()? {
         "ping" => Ok(Op::Ping),
@@ -45,7 +45,7 @@ pub fn parse_request(line: &str, engine: &Engine) -> Result<Op> {
     }
 }
 
-fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
+fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
     let prompt = v.req("prompt")?.as_str()?.to_string();
     let image = match v.get("image") {
         Some(img) => img.to_f32_vec()?,
@@ -59,7 +59,7 @@ fn parse_generate(v: &Json, engine: &Engine) -> Result<Request> {
         return Err(anyhow!("generate needs \"image\" pixels or an \"image_id\""));
     }
     // expected dims come from the artifact manifest, not a hard-coded shape
-    let m = &engine.models.manifest;
+    let m = engine.manifest();
     if !image.is_empty() && image.len() != m.image_elems() {
         return Err(anyhow!(
             "image must have {} floats (shape {:?}), got {}",
@@ -165,14 +165,14 @@ pub fn render_response(r: &Response) -> Json {
     Json::obj(fields)
 }
 
-pub fn render_metrics(engine: &Engine) -> Json {
+pub fn render_metrics<F: EngineFront>(engine: &F) -> Json {
     let mut fields: Vec<(String, Json)> = engine
         .scrape()
         .into_iter()
         .map(|(k, v)| (k, Json::num(v)))
         .collect();
     fields.sort_by(|a, b| a.0.cmp(&b.0));
-    let execs = engine.models.exec_stats();
+    let execs = engine.exec_stats();
     let exec_json = Json::Arr(
         execs
             .into_iter()

@@ -138,6 +138,56 @@ pub fn repeated_image_schedule(
         .collect()
 }
 
+/// Knobs for the hot-spot (skewed-popularity) image arrival generator.
+#[derive(Debug, Clone)]
+pub struct HotSpotKnobs {
+    /// distinct images in circulation
+    pub image_pool: usize,
+    /// Zipf skew exponent: image k is drawn with weight 1/(k+1)^s.
+    /// `s = 0` is uniform; `s ~ 1.1` makes image 0 a clear hot spot.
+    pub zipf_s: f64,
+    /// probability an arrival keeps the previous arrival's image
+    /// (multi-turn continuation), before the Zipf draw applies
+    pub reuse_prob: f64,
+}
+
+/// Poisson arrivals whose images follow a Zipf-like popularity law with
+/// multi-turn continuation: a few hot images dominate the stream while a
+/// long tail stays cold.  This is the regime prefix-affinity routing
+/// (`crate::cluster`) targets -- hot images concentrate on their home
+/// replicas instead of warming every replica's cache -- and is shared by
+/// `benches/micro_cluster.rs` and the scenario harness.
+pub fn hotspot_image_schedule(
+    n: usize,
+    rate: f64,
+    item_pool: usize,
+    knobs: &HotSpotKnobs,
+    seed: u64,
+) -> Vec<MmArrival> {
+    assert!(item_pool > 0 && knobs.image_pool > 0, "pools must be non-empty");
+    // inverse-CDF sampling over the (unnormalized) Zipf weights
+    let mut cdf = Vec::with_capacity(knobs.image_pool);
+    let mut acc = 0.0;
+    for k in 0..knobs.image_pool {
+        acc += 1.0 / ((k + 1) as f64).powf(knobs.zipf_s);
+        cdf.push(acc);
+    }
+    let total = acc;
+    let mut rng = Rng::seeded(seed);
+    let mut t = 0.0;
+    let mut image = 0usize;
+    (0..n)
+        .map(|i| {
+            t += rng.exponential(rate);
+            if i == 0 || rng.f64() >= knobs.reuse_prob {
+                let u = rng.f64() * total;
+                image = cdf.partition_point(|&c| c <= u).min(knobs.image_pool - 1);
+            }
+            MmArrival { at: t, item: rng.range(item_pool), image }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +231,52 @@ mod tests {
         // determinism: same seed, same schedule
         let a = repeated_image_schedule(64, 50.0, 4, &knobs(0.5), 9);
         let b = repeated_image_schedule(64, 50.0, 4, &knobs(0.5), 9);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.image == y.image && x.item == y.item));
+    }
+
+    #[test]
+    fn hotspot_schedule_skews_toward_low_indices() {
+        let knobs = HotSpotKnobs { image_pool: 16, zipf_s: 1.2, reuse_prob: 0.0 };
+        let s = hotspot_image_schedule(8000, 100.0, 4, &knobs, 7);
+        assert_eq!(s.len(), 8000);
+        for w in s.windows(2) {
+            assert!(w[0].at <= w[1].at, "arrivals must be time-ordered");
+        }
+        assert!(s.iter().all(|a| a.item < 4 && a.image < 16));
+        let mut counts = [0usize; 16];
+        for a in &s {
+            counts[a.image] += 1;
+        }
+        // image 0's analytic share under s=1.2 over 16 images is ~0.365;
+        // the tail image's is ~0.013
+        let head = counts[0] as f64 / s.len() as f64;
+        let tail = counts[15] as f64 / s.len() as f64;
+        assert!(head > 0.25 && head < 0.5, "hot-spot share {head:.3}");
+        assert!(tail < 0.05, "tail share {tail:.3}");
+        assert!(head > 4.0 * tail, "popularity must be skewed");
+    }
+
+    #[test]
+    fn hotspot_schedule_zero_skew_is_uniform_and_reuse_pins() {
+        let uniform = HotSpotKnobs { image_pool: 8, zipf_s: 0.0, reuse_prob: 0.0 };
+        let s = hotspot_image_schedule(8000, 100.0, 4, &uniform, 21);
+        let mut counts = [0usize; 8];
+        for a in &s {
+            counts[a.image] += 1;
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / s.len() as f64;
+            assert!((frac - 0.125).abs() < 0.02, "image {k} share {frac:.3} not ~1/8");
+        }
+        // reuse_prob = 1.0 pins the whole stream to the first draw
+        let pinned = HotSpotKnobs { image_pool: 8, zipf_s: 1.1, reuse_prob: 1.0 };
+        let p = hotspot_image_schedule(200, 100.0, 4, &pinned, 3);
+        let first = p[0].image;
+        assert!(p.iter().all(|a| a.image == first));
+        // determinism: same seed, same schedule
+        let knobs = HotSpotKnobs { image_pool: 8, zipf_s: 1.1, reuse_prob: 0.3 };
+        let a = hotspot_image_schedule(64, 100.0, 4, &knobs, 9);
+        let b = hotspot_image_schedule(64, 100.0, 4, &knobs, 9);
         assert!(a.iter().zip(&b).all(|(x, y)| x.image == y.image && x.item == y.item));
     }
 

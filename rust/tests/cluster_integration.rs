@@ -1,0 +1,347 @@
+//! Multi-replica cluster tests over the scripted backend: routing
+//! determinism (replicas=1 vs replicas=4 must be bit-exact, streaming and
+//! cancel included), drain semantics, wire-protocol transparency through
+//! `Server<ClusterEngine>`, and the affinity-vs-blind cache hit-rate gap.
+
+use std::sync::Arc;
+
+use massv::cluster::{ClusterConfig, ClusterEngine, RoutingPolicy};
+use massv::coordinator::{DecodeMode, EngineConfig, Request, Update};
+use massv::util::json::Json;
+
+fn scripted_artifacts(tag: &str, gen_max: usize) -> String {
+    massv::models::scripted::write_test_artifacts(tag, gen_max, false)
+}
+
+fn image(phase: usize) -> Vec<f32> {
+    massv::models::scripted::demo_image(phase)
+}
+
+fn cluster(dir: &str, replicas: usize, routing: RoutingPolicy) -> ClusterEngine {
+    ClusterEngine::start(
+        dir,
+        ClusterConfig {
+            replicas,
+            routing,
+            // one worker per replica: replica count, not pool size, is the
+            // variable under test
+            engine: EngineConfig { workers: 1, queue_capacity: 256, ..EngineConfig::default() },
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// A deterministic mixed request matrix: modes x temperatures x seeds x
+/// images x prompts.  `id` comes from the serving cluster.
+fn matrix_request(ce: &ClusterEngine, i: usize) -> Request {
+    let prompts = ["w5 w6 w7", "w8 w9", "w10 w11 w12 w13", "w14"];
+    let mut r = Request::simple(ce.next_id(), prompts[i % prompts.len()], image(i % 8));
+    r.mode = match i % 3 {
+        0 => DecodeMode::Speculative {
+            variant: "massv".into(),
+            text_only_draft: false,
+            adaptive: false,
+        },
+        1 => DecodeMode::Tree { variant: "massv".into(), text_only_draft: false, adaptive: false },
+        _ => DecodeMode::TargetOnly,
+    };
+    r.gen.temperature = if i % 2 == 0 { 0.0 } else { 1.0 };
+    r.gen.seed = i as u64;
+    r.gen.max_new = 24;
+    r
+}
+
+/// (tokens, finish_reason, streamed-chunk concatenation; empty for one-shot)
+type Outcome = (Vec<i32>, String, Vec<i32>);
+
+/// Run the full matrix through a cluster: even indices one-shot, odd
+/// indices streaming.
+fn run_matrix(ce: &ClusterEngine, n: usize) -> Vec<Outcome> {
+    (0..n)
+        .map(|i| {
+            let req = matrix_request(ce, i);
+            if i % 2 == 0 {
+                let resp = ce.run(req);
+                assert!(resp.error.is_none(), "request {i} failed: {:?}", resp.error);
+                (resp.tokens, resp.finish_reason, Vec::new())
+            } else {
+                let rx = ce.submit_streaming(req);
+                let mut streamed = Vec::new();
+                loop {
+                    match rx.recv().expect("stream ended without Done") {
+                        Update::Chunk(toks) => streamed.extend(toks),
+                        Update::Done(resp) => {
+                            assert!(
+                                resp.error.is_none(),
+                                "streaming request {i} failed: {:?}",
+                                resp.error
+                            );
+                            break (resp.tokens, resp.finish_reason, streamed);
+                        }
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+/// THE cluster determinism property: the same seeded request set produces
+/// bit-exact tokens whether it is served by one replica or spread over
+/// four -- each request is an independent seeded decode, so placement must
+/// never leak into output.  Streaming chunk concatenation must equal the
+/// summary tokens on both topologies.
+#[test]
+fn replica_count_never_changes_tokens() {
+    let dir = scripted_artifacts("cluster_det", 64);
+    let one = cluster(&dir, 1, RoutingPolicy::Affinity);
+    let four = cluster(&dir, 4, RoutingPolicy::Affinity);
+
+    let a = run_matrix(&one, 24);
+    let b = run_matrix(&four, 24);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.0, y.0, "request {i}: tokens diverge between 1 and 4 replicas");
+        assert_eq!(x.1, y.1, "request {i}: finish_reason diverges");
+        if !x.2.is_empty() || !y.2.is_empty() {
+            assert_eq!(x.2, x.0, "request {i}: 1-replica chunks must concat to tokens");
+            assert_eq!(y.2, y.0, "request {i}: 4-replica chunks must concat to tokens");
+        }
+    }
+    // the 4-replica cluster actually spread the work
+    let s = four.scrape();
+    let serving = (0..4)
+        .filter(|i| s[&format!("replica{i}_requests_received")] > 0.0)
+        .count();
+    assert!(serving > 1, "4-replica cluster served everything on one replica");
+    one.shutdown();
+    four.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cancel on a cluster: the id broadcast finds the serving replica, the
+/// partial output is a prefix of the bit-exact reference decode (which is
+/// itself identical across topologies), and the stream stays consistent.
+#[test]
+fn cancel_routes_by_id_and_stays_a_prefix_of_the_reference() {
+    let dir = scripted_artifacts("cluster_cancel", 16384);
+    let one = cluster(&dir, 1, RoutingPolicy::Affinity);
+    let four = cluster(&dir, 4, RoutingPolicy::Affinity);
+
+    let long = |ce: &ClusterEngine| {
+        let mut r = Request::simple(ce.next_id(), "w5 w6", image(1));
+        r.mode = DecodeMode::TargetOnly;
+        r.gen.max_new = 16000;
+        r.gen.seed = 7;
+        r
+    };
+    // the reference decode is bit-exact across topologies
+    let ref1 = one.run(long(&one));
+    let ref4 = four.run(long(&four));
+    assert!(ref1.error.is_none() && ref4.error.is_none());
+    assert_eq!(ref1.tokens, ref4.tokens, "reference must not depend on topology");
+
+    // cancel mid-decode on the 4-replica cluster
+    let req = long(&four);
+    let id = req.id;
+    let rx = four.submit_streaming(req);
+    let mut streamed = match rx.recv().unwrap() {
+        Update::Chunk(toks) => toks,
+        Update::Done(r) => panic!("finished before cancel: {r:?}"),
+    };
+    assert!(four.cancel(id), "broadcast cancel must find the serving replica");
+    let resp = loop {
+        match rx.recv().unwrap() {
+            Update::Chunk(toks) => streamed.extend(toks),
+            Update::Done(resp) => break resp,
+        }
+    };
+    assert_eq!(resp.finish_reason, "cancelled");
+    assert!(resp.error.is_none(), "cancel is not an error: {:?}", resp.error);
+    assert_eq!(streamed, resp.tokens, "chunks must concat to the partial output");
+    assert!(!resp.tokens.is_empty() && resp.tokens.len() < 16000);
+    // wall-clock decides *where* the cut lands; determinism guarantees the
+    // partial output is a prefix of the reference decode
+    assert_eq!(
+        resp.tokens[..],
+        ref4.tokens[..resp.tokens.len()],
+        "cancelled output must be a prefix of the uncancelled decode"
+    );
+    assert!(!four.cancel(id), "finished id is no longer cancellable");
+    one.shutdown();
+    four.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Drain semantics: a draining replica finishes its in-flight stream
+/// losslessly, admits nothing new while draining, and gets its affinity
+/// keys back after undrain.
+#[test]
+fn draining_replica_finishes_inflight_and_admits_nothing() {
+    let dir = scripted_artifacts("cluster_drain", 16384);
+    let ce = cluster(&dir, 3, RoutingPolicy::Affinity);
+
+    let mut long = Request::simple(ce.next_id(), "w5 w6 w7", image(2));
+    long.mode = DecodeMode::TargetOnly;
+    long.gen.max_new = 4000;
+    let probe = long.clone();
+    let target = ce.route(&probe);
+
+    let rx = ce.submit_streaming(long);
+    let mut streamed = match rx.recv().unwrap() {
+        Update::Chunk(toks) => toks,
+        Update::Done(r) => panic!("finished before drain: {r:?}"),
+    };
+    assert!(ce.drain(target));
+    let received_before = ce.replica(target).metrics.requests_received.get();
+
+    // placement skips the draining replica under every probe
+    for _ in 0..20 {
+        assert_ne!(ce.route(&probe), target, "draining replica must not be routed");
+    }
+    // new work is admitted elsewhere and completes
+    for i in 0..8 {
+        let mut r = Request::simple(ce.next_id(), "w8 w9", image(3 + i));
+        r.mode = DecodeMode::TargetOnly;
+        r.gen.max_new = 4;
+        let resp = ce.run(r);
+        assert!(resp.error.is_none(), "request during drain failed: {:?}", resp.error);
+    }
+    assert_eq!(
+        ce.replica(target).metrics.requests_received.get(),
+        received_before,
+        "a draining replica must admit nothing new"
+    );
+
+    // the in-flight stream on the draining replica still finishes losslessly
+    let resp = loop {
+        match rx.recv().unwrap() {
+            Update::Chunk(toks) => streamed.extend(toks),
+            Update::Done(resp) => break resp,
+        }
+    };
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.finish_reason, "length");
+    assert_eq!(resp.tokens.len(), 4000, "drain must not cut in-flight work short");
+    assert_eq!(streamed, resp.tokens);
+
+    let s = ce.scrape();
+    assert_eq!(s["cluster_draining"], 1.0);
+    assert_eq!(s[&format!("replica{target}_draining")], 1.0);
+
+    // undrain: rendezvous is topology-stable, the key comes home
+    assert!(ce.undrain(target));
+    assert_eq!(ce.route(&probe), target, "undrained replica must regain its keys");
+    assert_eq!(ce.scrape()["cluster_draining"], 0.0);
+    ce.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Wire transparency: `Server<ClusterEngine>` speaks the identical
+/// protocol -- generate, repeat-hit, streaming, cancel, metrics -- with
+/// the cluster rollup visible under the `metrics` op.
+#[test]
+fn server_over_cluster_is_wire_transparent() {
+    let dir = scripted_artifacts("cluster_server", 64);
+    let ce = Arc::new(cluster(&dir, 2, RoutingPolicy::Affinity));
+    let server = massv::server::Server::new(ce.clone());
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut client = massv::server::Client::connect(&addr.to_string()).unwrap();
+
+    let gen_req = |stream: bool| {
+        Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("w5 w6 w7")),
+            ("image", Json::arr_f32(&image(0))),
+            ("seed", Json::num(0.0)),
+            ("max_new", Json::num(16.0)),
+            ("stream", Json::Bool(stream)),
+        ])
+    };
+
+    let r1 = client.call(&gen_req(false)).unwrap();
+    assert!(r1.get("error").is_none(), "{r1:?}");
+    // affinity sends the identical request back to the same replica: warm
+    let r2 = client.call(&gen_req(false)).unwrap();
+    assert!(r2.get("cache_hit").unwrap().as_bool().unwrap(), "repeat must hit its home cache");
+    assert_eq!(
+        r2.get("tokens").unwrap().to_i32_vec().unwrap(),
+        r1.get("tokens").unwrap().to_i32_vec().unwrap()
+    );
+
+    // streaming through the cluster front
+    let (chunks, summary) = client.call_streaming(&gen_req(true)).unwrap();
+    assert!(summary.get("error").is_none(), "{summary:?}");
+    let concat: Vec<i32> = chunks.into_iter().flatten().collect();
+    assert_eq!(concat, summary.get("tokens").unwrap().to_i32_vec().unwrap());
+    assert_eq!(concat, r1.get("tokens").unwrap().to_i32_vec().unwrap());
+
+    // cancel of an unknown id is a clean ok: false anywhere in the cluster
+    let cancel = client
+        .call(&Json::obj(vec![("op", Json::str("cancel")), ("id", Json::num(99999.0))]))
+        .unwrap();
+    assert!(!cancel.get("ok").unwrap().as_bool().unwrap());
+
+    // the metrics op exposes the rollup, the cluster keys, and drill-down
+    let m = client.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get("cluster_replicas").unwrap().as_f64().unwrap(), 2.0);
+    assert!(m.get("cluster_routed_affinity").unwrap().as_f64().unwrap() >= 3.0);
+    assert!(m.get("replica0_requests_received").is_some());
+    assert!(m.get("replica1_prefix_cache_hit_rate").is_some());
+    assert!(m.get("requests_completed").unwrap().as_f64().unwrap() >= 3.0);
+    assert!(m.get("executables").is_some());
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    let ce = Arc::try_unwrap(ce).unwrap_or_else(|_| panic!("cluster still shared"));
+    ce.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// THE routing property, in its deterministic form: over a repeated
+/// (image, prompt) working set on 4 replicas, affinity routing misses each
+/// prefix exactly once cluster-wide, while round-robin re-misses it on
+/// every replica it lands on.  48 sequential requests over 6 keys:
+/// affinity = 6 misses (hit rate 42/48 = 0.875); round-robin period-12
+/// pattern touches each key on exactly 2 replicas = 12 misses (36/48 =
+/// 0.75).
+#[test]
+fn affinity_routing_beats_blind_routing_on_cache_hit_rate() {
+    let dir = scripted_artifacts("cluster_hitrate", 64);
+    let run_workload = |routing: RoutingPolicy| {
+        let ce = cluster(&dir, 4, routing);
+        for i in 0..48 {
+            let mut r = Request::simple(
+                ce.next_id(),
+                ["w5 w6", "w7 w8 w9"][i % 2],
+                image(i % 3),
+            );
+            r.mode = DecodeMode::TargetOnly;
+            r.gen.max_new = 4;
+            let resp = ce.run(r);
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        let s = ce.scrape();
+        let (hits, misses) = (s["prefix_cache_hits"], s["prefix_cache_misses"]);
+        ce.shutdown();
+        assert_eq!(hits + misses, 48.0, "every request runs exactly one prefix lookup");
+        hits / (hits + misses)
+    };
+
+    let affinity = run_workload(RoutingPolicy::Affinity);
+    let blind = run_workload(RoutingPolicy::RoundRobin);
+    assert!(
+        (affinity - 42.0 / 48.0).abs() < 1e-9,
+        "affinity: each of 6 keys misses once cluster-wide, got {affinity}"
+    );
+    assert!(
+        (blind - 36.0 / 48.0).abs() < 1e-9,
+        "round-robin: each key misses on its 2 home replicas, got {blind}"
+    );
+    assert!(affinity > blind, "affinity {affinity} must beat blind {blind}");
+    std::fs::remove_dir_all(&dir).ok();
+}

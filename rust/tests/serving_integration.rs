@@ -665,3 +665,104 @@ fn server_streaming_and_cancel_round_trip() {
     h.join().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Regression: a request dribbled in over multiple writes with a pause
+/// longer than the server's 100 ms read timeout must still parse.  The old
+/// handler cleared its line buffer at the top of every loop iteration, so
+/// a timeout tick discarded whatever partial line `read_line` had already
+/// consumed from the socket -- slow clients got "parse error" or silence.
+#[test]
+fn slow_client_dribbled_request_survives_read_timeout() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let dir = scripted_artifacts("dribble", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let server = massv::server::Server::new(engine);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let req = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5 w6 w7")),
+        ("image", Json::arr_f32(&image(0))),
+        ("seed", Json::num(0.0)),
+        ("max_new", Json::num(8.0)),
+    ])
+    .to_string();
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    // first half, then a pause spanning several server read-timeout ticks,
+    // then the rest of the line
+    let (head, tail) = req.split_at(req.len() / 2);
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(350));
+    stream.write_all(tail.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = massv::util::json::parse(&line).unwrap();
+    assert!(resp.get("error").is_none(), "dribbled request failed: {resp:?}");
+    assert_eq!(resp.get("tokens").unwrap().to_i32_vec().unwrap().len(), 8);
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression: the accept loop must reap finished connection threads as it
+/// runs, not hold every JoinHandle until shutdown (one leaked handle per
+/// connection ever accepted, unbounded on a long-lived server).
+#[test]
+fn accept_loop_reaps_finished_connection_threads() {
+    let dir = scripted_artifacts("reap", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let server = massv::server::Server::new(engine);
+    let stop = server.stop_handle();
+    let conns = server.conn_count_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    // open a burst of connections, use them, close them all
+    let mut clients: Vec<_> = (0..5)
+        .map(|_| massv::server::Client::connect(&addr.to_string()).unwrap())
+        .collect();
+    for c in clients.iter_mut() {
+        assert!(c.ping().unwrap());
+    }
+    assert!(conns.load(std::sync::atomic::Ordering::Relaxed) >= 5);
+    drop(clients);
+
+    // the handlers notice EOF within one 100 ms read-timeout tick; give
+    // the accept loop time to observe the finished threads and reap
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        if conns.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "finished connection threads were never reaped: {} still tracked",
+            conns.load(std::sync::atomic::Ordering::Relaxed)
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // the server still accepts new connections after reaping
+    let mut again = massv::server::Client::connect(&addr.to_string()).unwrap();
+    assert!(again.ping().unwrap());
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
