@@ -1,0 +1,265 @@
+//! Vision-aware drafting microbenchmark (docs/drafting.md): drafter-side
+//! vision token compression and acceptance-driven speculation calibration.
+//!
+//! Three parts, all on the scripted backend (self-contained artifact dir
+//! under tmp; no PJRT artifacts needed):
+//!
+//! 1. **Drafter prefill cost vs ratio** -- times `DraftModel::
+//!    prefill_encoded` directly at ratios 1x/4x/16x.  The scripted
+//!    drafter's prefill walks `pooled_vision_digest` over
+//!    `ceil(n_visual / ratio)` pooled tokens (the deterministic stand-in
+//!    for running the vision prefix through the drafter layers), so the
+//!    cost drops ~linearly with the ratio.  HARD GATE: median prefill at
+//!    ratio 4x and 16x must beat full resolution.
+//! 2. **MAL and losslessness vs ratio** -- engine-level chain decoding at
+//!    each ratio: token streams must be bit-identical to full resolution
+//!    (greedy acceptance emits the target argmax sequence no matter what
+//!    the drafter proposed); MAL declines mildly (the scripted agreement
+//!    period goes 7 -> 6 -> 5), the ViSpec/SpecVLM shape.
+//! 3. **Calibration A/B** -- one mixed-class workload
+//!    (`workload::repeated_image_schedule` class tags) run through a plain
+//!    engine and a calibrated one.  Per class, two tree-mode probe
+//!    requests land while the class is still inside the calibrator's
+//!    warmup (so they are never steered), then a chain-mode body; once
+//!    warmed, classes whose accepted-length EWMA saturates steer their
+//!    chain admissions to tree drafting.  HARD GATE: pooled MAL over the
+//!    chain body with calibration on must be >= off.  This is guaranteed, not
+//!    aspirational: steering only ever upgrades a chain request to a tree
+//!    whose primary root-to-leaf path IS the chain draft (depth ==
+//!    gamma), so per iteration the accepted path is at least the chain
+//!    accepted prefix, total tokens are unchanged (lossless), and verify
+//!    calls can only shrink.  How much MAL improves (and how many classes
+//!    steer) is workload-dependent and reported as advisory.
+//!
+//! Besides the human-readable report, the run writes machine-readable
+//! `target/paper/BENCH_drafting.json` -- CI smoke-runs this bench and
+//! archives the JSON.  A checked-in reference lives at
+//! `benches/baselines/BENCH_drafting.json`.
+//!
+//!     cargo bench --bench micro_drafting [-- --quick]
+
+mod harness;
+
+use harness::{measure, summarize, BenchReport};
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request, Response};
+use massv::models::ModelSet;
+use massv::util::json::Json;
+use massv::workload::{repeated_image_schedule, RepeatKnobs};
+
+/// Small scripted streams: part 1 isolates the pooled-vision digest (the
+/// drafter-prefill cost channel), so the common stream-build cost should
+/// stay negligible next to it.
+const GEN_MAX: usize = 64;
+const RATIOS: [u32; 3] = [1, 4, 16];
+const PROMPTS: [&str; 4] = ["w5 w6 w7", "w8 w9", "w10 w11 w12 w13", "w14 w15"];
+
+fn image(phase: usize) -> Vec<f32> {
+    massv::models::scripted::demo_image(phase)
+}
+
+fn chain_req(engine: &Engine, prompt: &str, phase: usize, task: &str) -> Request {
+    let mut req = Request::simple(engine.next_id(), prompt, image(phase));
+    req.task = task.into();
+    req.gen.temperature = 0.0;
+    req.gen.max_new = 40;
+    req
+}
+
+fn median(us: &[f64]) -> f64 {
+    let mut v = us.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+/// Pooled MAL over a request set: total emitted tokens per target verify
+/// call (the paper's speedup quantity, aggregated the way eval does it).
+fn pooled_mal(responses: &[Response]) -> f64 {
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let verifies: usize = responses.iter().map(|r| r.verify_calls).sum();
+    tokens as f64 / verifies.max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MASSV_BENCH_QUICK").ok().as_deref() == Some("1");
+
+    let mut report = BenchReport::new("micro_drafting");
+    let dir = massv::models::scripted::write_test_artifacts("micro_drafting", GEN_MAX, false);
+
+    // ------------------------------------------------ 1. prefill vs ratio
+    let models = ModelSet::load(&dir)?;
+    let target = models.target("qwensim-L")?;
+    let drafter = models.drafter_for("qwensim-L", "massv")?;
+    let n_visual = models.manifest.n_visual;
+    let enc = target.encode_image(&image(0))?;
+    let prompt_ids = [5i32, 6, 7, 8];
+    let n_timed = if quick { 60 } else { 300 };
+
+    report.line(format!(
+        "drafter prefill vs vision ratio ({n_visual} vision tokens, scripted digest channel)"
+    ));
+    let mut prefill_us = [0.0f64; RATIOS.len()];
+    for (i, &ratio) in RATIOS.iter().enumerate() {
+        let us = measure(10, n_timed, || {
+            let _ = drafter
+                .prefill_encoded(Some(&enc), &prompt_ids, prompt_ids.len(), false, ratio)
+                .unwrap();
+        });
+        prefill_us[i] = median(&us);
+        report.line(summarize(&format!("  drafter prefill ratio {ratio:>2}x"), &us));
+    }
+    let speedup_4x = prefill_us[0] / prefill_us[1].max(1e-9);
+    let speedup_16x = prefill_us[0] / prefill_us[2].max(1e-9);
+    let prefill_ok = prefill_us[1] < prefill_us[0] && prefill_us[2] < prefill_us[0];
+    report.line(format!(
+        "  compressed prefill speedup: {speedup_4x:.2}x at 4x, {speedup_16x:.2}x at 16x -> {}",
+        if prefill_ok { "PASS" } else { "FAIL" }
+    ));
+
+    // ---------------------------------------- 2. MAL + losslessness vs ratio
+    let n_mal = if quick { 4 } else { 8 };
+    let engine = Engine::start(&dir, EngineConfig { workers: 1, ..EngineConfig::default() })?;
+    let mut mal_at = [0.0f64; RATIOS.len()];
+    let mut reference: Vec<Vec<i32>> = Vec::new();
+    for (ri, &ratio) in RATIOS.iter().enumerate() {
+        let responses: Vec<Response> = (0..n_mal)
+            .map(|i| {
+                let mut req = chain_req(&engine, PROMPTS[i % PROMPTS.len()], i, "adhoc");
+                req.draft_vision_ratio = Some(ratio);
+                engine.run(req)
+            })
+            .collect();
+        for r in &responses {
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        if ri == 0 {
+            reference = responses.iter().map(|r| r.tokens.clone()).collect();
+        } else {
+            for (r, want) in responses.iter().zip(&reference) {
+                assert_eq!(
+                    &r.tokens, want,
+                    "greedy tokens must be bit-identical across drafter vision ratios"
+                );
+            }
+        }
+        mal_at[ri] = pooled_mal(&responses);
+        report.line(format!("  ratio {ratio:>2}x: MAL {:.3} (tokens identical)", mal_at[ri]));
+    }
+    engine.shutdown();
+
+    // ------------------------------------------------- 3. calibration A/B
+    let n_body = if quick { 18 } else { 48 };
+    let knobs = RepeatKnobs { image_pool: 4, reuse_prob: 0.5 };
+    let schedule = repeated_image_schedule(n_body, 1e6, PROMPTS.len(), &knobs, 11);
+    let mut classes: Vec<&'static str> = Vec::new();
+    for a in &schedule {
+        if !classes.contains(&a.class) {
+            classes.push(a.class);
+        }
+    }
+    report.line(format!(
+        "calibration A/B: {} tree probes + {n_body} chain requests over classes {classes:?}",
+        2 * classes.len()
+    ));
+
+    let run_workload = |cfg: EngineConfig| -> anyhow::Result<(Vec<Response>, Engine)> {
+        let engine = Engine::start(&dir, cfg)?;
+        let mut out = Vec::new();
+        // two tree probes per class: both land inside the calibrator's
+        // warmup window (min_obs), so neither engine ever steers them --
+        // they warm the per-class acceptance state, nothing else
+        for class in &classes {
+            for probe in 0..2 {
+                let mut req = chain_req(&engine, PROMPTS[probe], probe, class);
+                req.mode = DecodeMode::Tree {
+                    variant: "massv".into(),
+                    text_only_draft: false,
+                    adaptive: false,
+                };
+                out.push(engine.run(req));
+            }
+        }
+        // chain-mode body: the calibrated engine may steer warmed classes
+        // back up to tree drafting
+        for a in &schedule {
+            out.push(engine.run(chain_req(&engine, PROMPTS[a.item], a.image, a.class)));
+        }
+        for r in &out {
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        Ok((out, engine))
+    };
+
+    let (off, plain) = run_workload(EngineConfig { workers: 1, ..EngineConfig::default() })?;
+    plain.shutdown();
+    let (on, calibrated) = run_workload(EngineConfig {
+        workers: 1,
+        calibration: true,
+        ..EngineConfig::default()
+    })?;
+    let scrape = calibrated.scrape();
+    calibrated.shutdown();
+
+    for (a, b) in off.iter().zip(&on) {
+        assert_eq!(a.tokens, b.tokens, "calibration must not change greedy tokens");
+    }
+    // gate on the chain-mode body only: every body request in the
+    // calibrated engine is either untouched (identical deterministic
+    // decode) or upgraded chain -> tree (same tokens, verify calls can
+    // only shrink), so this inequality holds unconditionally.  Probes are
+    // excluded -- their job is warming the calibrator, and once a class
+    // warms mid-probe their shape is calibrator-state-dependent.
+    let probe_count = 2 * classes.len();
+    let mal_off = pooled_mal(&off[probe_count..]);
+    let mal_on = pooled_mal(&on[probe_count..]);
+    let steered = classes
+        .iter()
+        .filter(|c| scrape.get(&format!("calib_tree{{class=\"{c}\"}}")).copied() == Some(1.0))
+        .count();
+    let mal_ok = mal_on + 1e-9 >= mal_off;
+    report.line(format!(
+        "  MAL calibration off {mal_off:.3} | on {mal_on:.3} ({:+.1}%) | \
+         {steered}/{} classes steered to tree -> {}",
+        100.0 * (mal_on / mal_off.max(1e-9) - 1.0),
+        classes.len(),
+        if mal_ok { "PASS" } else { "FAIL" }
+    ));
+
+    std::fs::remove_dir_all(&dir).ok();
+
+    // machine-readable record for CI / the perf trajectory
+    let json = Json::obj(vec![
+        ("bench", Json::str("micro_drafting")),
+        ("gen_max", Json::num(GEN_MAX as f64)),
+        ("n_visual", Json::num(n_visual as f64)),
+        ("prefill_us_ratio1", Json::num(prefill_us[0])),
+        ("prefill_us_ratio4", Json::num(prefill_us[1])),
+        ("prefill_us_ratio16", Json::num(prefill_us[2])),
+        ("prefill_speedup_4x", Json::num(speedup_4x)),
+        ("prefill_speedup_16x", Json::num(speedup_16x)),
+        ("mal_ratio1", Json::num(mal_at[0])),
+        ("mal_ratio4", Json::num(mal_at[1])),
+        ("mal_ratio16", Json::num(mal_at[2])),
+        ("calib_requests", Json::num((n_body + 2 * classes.len()) as f64)),
+        ("mal_calib_off", Json::num(mal_off)),
+        ("mal_calib_on", Json::num(mal_on)),
+        ("mal_gain", Json::num(mal_on / mal_off.max(1e-9))),
+        ("classes_steered", Json::num(steered as f64)),
+    ]);
+    std::fs::create_dir_all("target/paper").ok();
+    std::fs::write("target/paper/BENCH_drafting.json", format!("{}\n", json.to_string()))?;
+    report.line("[json saved to target/paper/BENCH_drafting.json]");
+    report.finish();
+
+    assert!(
+        prefill_ok,
+        "compressed drafter prefill must beat full resolution: \
+         {:.1} us at 1x vs {:.1} us at 4x / {:.1} us at 16x",
+        prefill_us[0], prefill_us[1], prefill_us[2]
+    );
+    assert!(
+        mal_ok,
+        "calibration-on pooled MAL {mal_on:.3} regressed below calibration-off {mal_off:.3}"
+    );
+    Ok(())
+}

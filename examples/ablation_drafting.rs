@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
                 let cfg =
                     GenConfig { temperature: temp, top_p: 1.0, max_new: 48, seed: i as u64, tree: None };
                 let s = dec.generate(&it.image, &it.prompt_ids, it.prompt_len, &cfg)?;
-                emitted += s.per_iter_emitted.iter().sum::<usize>();
+                emitted += s.emitted_sum;
                 iters += s.verify_calls;
                 fallbacks += usize::from(s.fallback_at.is_some());
             }

@@ -45,20 +45,18 @@ fn main() -> anyhow::Result<()> {
                     .collect::<Vec<_>>()
             )
         );
-        // per-iteration acceptance trace: how much speculation survived
-        let trace: Vec<String> = stats
-            .per_iter_emitted
-            .iter()
-            .map(|&e| format!("{}", e.saturating_sub(1))) // drafts accepted that iter
-            .collect();
+        // acceptance summary: how much speculation survived (GenStats folds
+        // per-iteration counts into streaming summaries)
         println!(
-            "speculation trace (accepted drafts per verify, gamma={}): [{}]",
+            "speculation (gamma={}): {} accepted over {} verifies, best iter emitted {}",
             models.manifest.gamma,
-            trace.join(" ")
+            stats.accepted_draft,
+            stats.verify_calls,
+            stats.emitted_max
         );
         println!("tau = {:.2} over {} verifies\n", stats.mal(), stats.verify_calls);
         total_iters += stats.verify_calls;
-        total_emitted += stats.per_iter_emitted.iter().sum::<usize>();
+        total_emitted += stats.emitted_sum;
     }
     println!(
         "pooled tau over {n} questions: {:.2}",

@@ -109,6 +109,49 @@ def generate_batch(
     return out
 
 
+def load_acceptance_telemetry(path: str) -> list[dict]:
+    """Load the serving engine's acceptance-telemetry JSONL export
+    (``EngineConfig::calib_jsonl`` in rust/src/coordinator/engine.rs; one
+    object per speculative iteration).
+
+    Each record carries ``class`` (workload class tag), ``mode``
+    ("chain" | "tree"), ``drafted``/``accepted`` token counts, and
+    ``image_reuse`` (whether the request's prefill was served warm).  The
+    self-distillation pipeline uses these to weight D' toward the
+    workload classes where drafter agreement is weakest -- the serving
+    feedback loop described in docs/drafting.md.  Malformed lines are
+    skipped (the engine may still be appending when the file is read).
+    """
+    import json
+
+    records: list[dict] = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if not {"class", "mode", "drafted", "accepted"} <= rec.keys():
+                continue
+            records.append(rec)
+    return records
+
+
+def acceptance_by_class(records: list[dict]) -> dict[str, float]:
+    """Pooled per-token acceptance rate per workload class -- the
+    quantity that decides which classes need more distillation data."""
+    drafted: dict[str, int] = {}
+    accepted: dict[str, int] = {}
+    for r in records:
+        c = r["class"]
+        drafted[c] = drafted.get(c, 0) + int(r["drafted"])
+        accepted[c] = accepted.get(c, 0) + int(r["accepted"])
+    return {c: accepted[c] / drafted[c] for c in drafted if drafted[c] > 0}
+
+
 def distill_dataset(
     target_params: dict,
     target_cfg: ModelConfig,

@@ -84,10 +84,15 @@ pub fn parse_image_id(s: &str) -> Result<u64> {
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PrefixKey {
     pub target: String,
-    /// `(drafter name, variant, text_only)` for speculative sessions;
-    /// `None` for target-only requests (their prefix carries no drafter
-    /// KV, so it must not be shared with speculative ones).
-    pub drafter: Option<(String, String, bool)>,
+    /// `(drafter name, variant, text_only, draft_vision_ratio)` for
+    /// speculative sessions; `None` for target-only requests (their prefix
+    /// carries no drafter KV, so it must not be shared with speculative
+    /// ones).  The vision ratio is part of the key because the drafter KV
+    /// inside a snapshot was built over the pooled vision sequence -- a
+    /// warm start at a different ratio would silently resume from the
+    /// wrong drafter state (outputs would stay lossless, but acceptance
+    /// telemetry and MAL would be misattributed across ratios).
+    pub drafter: Option<(String, String, bool, u32)>,
     /// content address of the image (`image_hash`)
     pub image: u64,
     /// the true (unpadded) prompt ids
@@ -494,9 +499,13 @@ mod tests {
     }
 
     fn key(image: u64, prompt: i32) -> PrefixKey {
+        key_at_ratio(image, prompt, 1)
+    }
+
+    fn key_at_ratio(image: u64, prompt: i32, ratio: u32) -> PrefixKey {
         PrefixKey {
             target: "t".into(),
-            drafter: Some(("d".into(), "massv".into(), false)),
+            drafter: Some(("d".into(), "massv".into(), false, ratio)),
             image,
             prompt: vec![prompt],
         }
@@ -534,6 +543,27 @@ mod tests {
         let m = cache.metrics.clone();
         assert_eq!(m.prefix_cache_hits.get(), 1);
         assert_eq!(m.prefix_cache_misses.get(), 2);
+    }
+
+    /// A snapshot's drafter KV was built at one vision compression ratio;
+    /// a warm request at another ratio must miss (and fill its own entry)
+    /// rather than fork drafter state from the wrong pooled sequence.
+    #[test]
+    fn prefix_keys_separate_drafter_vision_ratios() {
+        let cache = PrefixCache::new(1 << 20, metrics());
+        let k1 = key_at_ratio(3, 7, 1);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k1) else { panic!() };
+        fill.fill(snapshot(4));
+        assert!(matches!(PrefixCache::prefix(&cache, &k1), PrefixLookup::Hit(_)));
+        // same target/drafter/image/prompt, compressed drafter view -> miss
+        let k4 = key_at_ratio(3, 7, 4);
+        let PrefixLookup::Fill(fill) = PrefixCache::prefix(&cache, &k4) else {
+            panic!("ratio must be part of the prefix key");
+        };
+        fill.fill(snapshot(4));
+        // both ratios now coexist as independent warm entries
+        assert!(matches!(PrefixCache::prefix(&cache, &k1), PrefixLookup::Hit(_)));
+        assert!(matches!(PrefixCache::prefix(&cache, &k4), PrefixLookup::Hit(_)));
     }
 
     #[test]

@@ -84,7 +84,8 @@ use crate::kv::{KvPool, KvPoolConfig};
 use crate::metrics::Metrics;
 use crate::models::{DraftModel, ModelSet, SeqState, TargetModel, VisionEncoding};
 use crate::spec::{
-    AdaptiveConfig, DecodeSession, GenStats, LaneKind, SpecMode, SpecParams, StepOutcome,
+    AdaptiveConfig, Calibrator, CalibratorConfig, DecodeSession, GenStats, LaneKind, SpecMode,
+    SpecParams, StepOutcome,
 };
 use crate::tokenizer::Tokenizer;
 
@@ -131,6 +132,24 @@ pub struct EngineConfig {
     /// Words (4 bytes each) per KV block.  Smaller blocks share more
     /// aggressively on fork; larger blocks keep tables shorter.
     pub kv_block_words: usize,
+    /// Drafter-side vision token compression ratio applied to admissions
+    /// that don't carry their own `Request::draft_vision_ratio` override.
+    /// `0` defers to the manifest's `draft_vision_ratio` (itself 1 for
+    /// older manifests).  The target always prefills at full resolution,
+    /// so this knob is output-lossless (see `docs/drafting.md`).
+    pub draft_vision_ratio: u32,
+    /// Enable the cross-request acceptance calibrator
+    /// (`spec::calibrate`): per-iteration accept/reject telemetry flows
+    /// into per-class EWMAs, and warmed classes steer chain<->tree
+    /// drafting at admission.  OFF by default: calibration carries state
+    /// across requests, so a calibrated engine's drafting shape depends on
+    /// traffic history -- the batched-vs-unbatched response-identity
+    /// guarantee (`tests/batch_equivalence.rs`) only holds with it off.
+    pub calibration: bool,
+    /// Stream every acceptance observation to this JSONL file (one object
+    /// per iteration -- the `python/compile/selfdistill.py` training-data
+    /// export).  Only read when `calibration` is on.
+    pub calib_jsonl: Option<std::path::PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -145,6 +164,9 @@ impl Default for EngineConfig {
             paged_kv: true,
             kv_pool_bytes: 64 << 20,
             kv_block_words: crate::kv::DEFAULT_BLOCK_WORDS,
+            draft_vision_ratio: 0,
+            calibration: false,
+            calib_jsonl: None,
         }
     }
 }
@@ -257,6 +279,11 @@ pub struct Engine {
     pub cache: Arc<PrefixCache>,
     /// The shared paged KV block pool (`None` when `paged_kv` is off).
     pub kv_pool: Option<Arc<KvPool>>,
+    /// The cross-request acceptance calibrator (`None` when
+    /// `EngineConfig::calibration` is off).  Workers feed it per-iteration
+    /// accept/reject observations; admissions consult it for per-class
+    /// chain<->tree steering; `scrape` exports its per-class state.
+    pub calibrator: Option<Arc<Calibrator>>,
     sched: Arc<Scheduler<Work>>,
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
     workers: Vec<JoinHandle<()>>,
@@ -274,6 +301,18 @@ impl Engine {
         let cancels = Arc::new(Mutex::new(HashMap::new()));
 
         metrics.batch_max_lanes.set(cfg.max_batch.max(1) as i64);
+        let calibrator = if cfg.calibration {
+            let cal = Arc::new(Calibrator::new(
+                CalibratorConfig::default(),
+                models.manifest.gamma,
+            ));
+            if let Some(path) = &cfg.calib_jsonl {
+                cal.log_jsonl_to(path)?;
+            }
+            Some(cal)
+        } else {
+            None
+        };
         let kv_pool = cfg.paged_kv.then(|| {
             KvPool::with_metrics(
                 KvPoolConfig {
@@ -291,12 +330,14 @@ impl Engine {
                 metrics: metrics.clone(),
                 cache: cache.clone(),
                 kv_pool: kv_pool.clone(),
+                calibrator: calibrator.clone(),
                 sched: sched.clone(),
                 router: router.clone(),
                 cancels: cancels.clone(),
                 policy: cfg.policy,
                 max_batch: cfg.max_batch.max(1),
                 workers: cfg.workers.max(1),
+                draft_vision_ratio: cfg.draft_vision_ratio,
             };
             workers.push(
                 std::thread::Builder::new()
@@ -310,6 +351,7 @@ impl Engine {
             metrics,
             cache,
             kv_pool,
+            calibrator,
             sched,
             cancels,
             workers,
@@ -409,7 +451,25 @@ impl Engine {
     /// is authoritative).
     pub fn scrape(&self) -> HashMap<String, f64> {
         self.metrics.queue_depth.set(self.sched.len() as i64);
-        self.metrics.render()
+        let mut out = self.metrics.render();
+        // merge per-class calibrator state so operators see the live
+        // acceptance EWMAs and recommendations the serving loop acts on
+        if let Some(cal) = &self.calibrator {
+            for s in cal.snapshot() {
+                out.insert(format!("calib_alpha{{class=\"{}\"}}", s.class), s.alpha);
+                out.insert(
+                    format!("calib_accepted_len{{class=\"{}\"}}", s.class),
+                    s.accepted_len_ema,
+                );
+                out.insert(format!("calib_obs{{class=\"{}\"}}", s.class), s.obs as f64);
+                out.insert(format!("calib_gamma{{class=\"{}\"}}", s.class), s.gamma as f64);
+                out.insert(
+                    format!("calib_tree{{class=\"{}\"}}", s.class),
+                    if s.tree { 1.0 } else { 0.0 },
+                );
+            }
+        }
+        out
     }
 
     /// Graceful shutdown: drain the queue (in-flight sessions finish; their
@@ -418,6 +478,9 @@ impl Engine {
         self.sched.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Some(cal) = &self.calibrator {
+            cal.flush_jsonl();
         }
     }
 }
@@ -452,6 +515,8 @@ struct Worker {
     cache: Arc<PrefixCache>,
     /// Shared paged KV pool; `None` runs sessions on owned literals.
     kv_pool: Option<Arc<KvPool>>,
+    /// Shared acceptance calibrator; `None` when calibration is off.
+    calibrator: Option<Arc<Calibrator>>,
     sched: Arc<Scheduler<Work>>,
     router: Arc<Router>,
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
@@ -460,6 +525,8 @@ struct Worker {
     max_batch: usize,
     /// Pool size, for the fair-share gang bound (see `Worker::run`).
     workers: usize,
+    /// Engine-level drafter vision compression default (0 = manifest).
+    draft_vision_ratio: u32,
 }
 
 /// Everything `make_session` resolves for one admission.
@@ -472,8 +539,9 @@ struct SessionParts {
     drafter: Option<DraftModel>,
     prompt_ids: Vec<i32>,
     len: usize,
-    /// drafter identity for the prefix-cache key (None = target-only)
-    drafter_key: Option<(String, String, bool)>,
+    /// drafter identity + vision compression ratio for the prefix-cache
+    /// key (None = target-only)
+    drafter_key: Option<(String, String, bool, u32)>,
 }
 
 impl Worker {
@@ -614,6 +682,13 @@ impl Worker {
                 self.flush_and_finalize(active, stats, None);
             }
             Ok(StepOutcome::Emitted(tokens)) => {
+                // decode iterations start after this point: route their
+                // accept/reject telemetry to the calibrator, keyed by the
+                // request's workload class
+                if let Some(cal) = &self.calibrator {
+                    let reuse = session.stats().prefill_cache_hit;
+                    session.set_telemetry(cal.clone(), &job.req.task, reuse);
+                }
                 let model_key = model_key(&target, &drafter);
                 let target_key: Arc<str> = target.name().into();
                 let mut active = Box::new(Active {
@@ -916,7 +991,7 @@ impl Worker {
             self.tokenizer.encode_prompt(&req.prompt, self.models.manifest.p_max)?;
         let params = SpecParams::from_manifest(&self.models.manifest);
 
-        let (drafter, start, adaptive) = match (&req.mode, &route.drafter) {
+        let (drafter, mut start, adaptive) = match (&req.mode, &route.drafter) {
             (DecodeMode::TargetOnly, _) | (_, None) => (None, None, None),
             (DecodeMode::Speculative { adaptive, .. }, Some((dname, variant))) => (
                 Some(self.models.drafter(dname, variant)?),
@@ -929,13 +1004,34 @@ impl Worker {
                 if *adaptive { Some(AdaptiveConfig::default()) } else { None },
             ),
         };
+        // a warmed calibrator class overrides the request's starting
+        // drafting mode (chain<->tree steering; lossless -- acceptance
+        // depends only on target logits).  Target-only requests are never
+        // upgraded: they asked for no drafter at all.
+        if let (Some(cal), Some(_)) = (&self.calibrator, &start) {
+            if let Some(mode) = cal.mode_for(&req.task) {
+                start = Some(mode);
+            }
+        }
+        // drafter vision compression: request override, then engine
+        // config, then manifest default; clamp to >= 1
+        let vision_ratio = req
+            .draft_vision_ratio
+            .filter(|r| *r > 0)
+            .unwrap_or(if self.draft_vision_ratio > 0 {
+                self.draft_vision_ratio
+            } else {
+                self.models.manifest.draft_vision_ratio
+            })
+            .max(1);
         // the prefix-cache key must pin everything that shapes the
         // post-prefill state: the drafter identity (incl. text-only
-        // drafting) but NOT sampling config or the adaptive flag, which
-        // only act after prefill
+        // drafting, and the vision ratio its prefill KV was built over)
+        // but NOT sampling config or the adaptive flag, which only act
+        // after prefill
         let drafter_key = match (&drafter, &route.drafter) {
             (Some(_), Some((dname, variant))) => {
-                Some((dname.clone(), variant.clone(), route.text_only_draft))
+                Some((dname.clone(), variant.clone(), route.text_only_draft, vision_ratio))
             }
             _ => None,
         };
@@ -948,6 +1044,7 @@ impl Worker {
             adaptive,
             route.text_only_draft,
         );
+        session.set_draft_vision_ratio(vision_ratio);
         if let Some(pool) = &self.kv_pool {
             session.set_kv_pool(pool.clone());
         }
@@ -1064,12 +1161,11 @@ impl Worker {
         if stats.verify_calls > 0 && stats.draft_calls > 0 {
             m.per_request_mal.record(stats.mal());
         }
-        if !stats.per_iter_path_depth.is_empty() {
+        if stats.tree_iters > 0 {
             m.tree_requests.inc();
             m.tree_nodes_drafted.add(stats.tree_nodes_drafted as u64);
-            m.tree_iterations.add(stats.per_iter_path_depth.len() as u64);
-            m.tree_path_accepted
-                .add(stats.per_iter_path_depth.iter().sum::<usize>() as u64);
+            m.tree_iterations.add(stats.tree_iters as u64);
+            m.tree_path_accepted.add(stats.path_depth_sum as u64);
         }
     }
 
@@ -1221,10 +1317,12 @@ mod tests {
             models,
             sched: Arc::new(Scheduler::new(16)),
             router: Arc::new(Router::new("qwensim-L".to_string())),
+            calibrator: None,
             cancels: Arc::new(Mutex::new(HashMap::new())),
             policy: SchedPolicy::Continuous,
             max_batch: 8,
             workers: 1,
+            draft_vision_ratio: 0,
         }
     }
 
@@ -1253,7 +1351,9 @@ mod tests {
             verify_calls: 3,
             draft_calls: 3,
             accepted_draft: 1,
-            per_iter_emitted: vec![2, 1, 1],
+            iters: 3,
+            emitted_sum: 4,
+            emitted_max: 2,
             prefill_micros: 900,
             decode_micros: 3000,
             ..GenStats::default()

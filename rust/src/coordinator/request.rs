@@ -67,6 +67,11 @@ pub struct Request {
     pub target: String,
     pub mode: DecodeMode,
     pub gen: GenConfig,
+    /// Drafter-side vision token compression ratio override.  Precedence:
+    /// this field (Some) > `EngineConfig::draft_vision_ratio` (non-zero) >
+    /// manifest default.  Values are clamped to >= 1; the target always
+    /// runs at full resolution, so the knob is output-lossless.
+    pub draft_vision_ratio: Option<u32>,
     pub priority: Priority,
     /// Per-request deadline in milliseconds, measured from submission.
     /// Checked between decode steps: an expired session is dropped cleanly
@@ -90,6 +95,7 @@ impl Request {
                 adaptive: false,
             },
             gen: GenConfig::default(),
+            draft_vision_ratio: None,
             priority: Priority::Interactive,
             deadline_ms: None,
         }

@@ -88,7 +88,7 @@ pub fn run_baseline(
 
 /// Pooled mean accepted length over a batch of runs (paper metric).
 pub fn pooled_mal(stats: &[GenStats]) -> f64 {
-    let emitted: usize = stats.iter().flat_map(|s| &s.per_iter_emitted).sum();
+    let emitted: usize = stats.iter().map(|s| s.emitted_sum).sum();
     let verifies: usize = stats.iter().map(|s| s.verify_calls).sum();
     if verifies == 0 {
         0.0
@@ -230,7 +230,9 @@ mod tests {
     fn gen_stats(per_iter: Vec<usize>) -> GenStats {
         GenStats {
             verify_calls: per_iter.len(),
-            per_iter_emitted: per_iter,
+            iters: per_iter.len(),
+            emitted_sum: per_iter.iter().sum(),
+            emitted_max: per_iter.iter().copied().max().unwrap_or(0),
             ..Default::default()
         }
     }

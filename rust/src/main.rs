@@ -30,6 +30,7 @@ USAGE:
   massv generate --prompt \"describe the image briefly .\" [--task coco]
                  [--mode massv|massv_wo_sdvit|baseline|tree|target_only]
                  [--variant V] [--adaptive] [--temperature T] [--item N]
+                 [--draft-vision-ratio R]
   massv eval     [--target qwensim-L] [--variant massv] [--task coco]
                  [--temperature 0] [--n 20]
   massv models
@@ -142,6 +143,10 @@ fn generate(artifacts: &str, args: &Args) -> Result<()> {
             max_new: args.get_usize("max-new", 48),
             seed: args.get_usize("seed", 0) as u64,
             tree: None,
+        },
+        draft_vision_ratio: match args.get_usize("draft-vision-ratio", 0) {
+            0 => None,
+            r => Some(r as u32),
         },
         priority: massv::coordinator::Priority::Interactive,
         deadline_ms: None,

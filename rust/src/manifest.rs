@@ -26,6 +26,12 @@ pub struct Manifest {
     /// [h, w, c]); absent in older manifests, defaulting to the original
     /// hard-coded 16x16x3.
     pub image_shape: Vec<usize>,
+    /// Default drafter-side vision token compression ratio (1 = the
+    /// drafter consumes the full vision sequence, 4/16 = pooled views;
+    /// see `docs/drafting.md`).  The target always runs at full
+    /// resolution, so this knob changes drafter cost/agreement only --
+    /// never emitted tokens.  Absent in older manifests, defaulting to 1.
+    pub draft_vision_ratio: u32,
     pub pad_id: i32,
     pub bos_id: i32,
     pub eos_id: i32,
@@ -124,6 +130,10 @@ impl Manifest {
                     .collect::<Result<_>>()?,
                 None => vec![16, 16, 3],
             },
+            draft_vision_ratio: match v.get("draft_vision_ratio") {
+                Some(r) => (r.as_usize()? as u32).max(1),
+                None => 1,
+            },
             pad_id: v.req("pad_id")?.as_i64()? as i32,
             bos_id: v.req("bos_id")?.as_i64()? as i32,
             eos_id: v.req("eos_id")?.as_i64()? as i32,
@@ -219,6 +229,17 @@ mod tests {
         let m = Manifest::from_json(&custom).unwrap();
         assert_eq!(m.image_shape, vec![8, 8, 3]);
         assert_eq!(m.image_elems(), 192);
+    }
+
+    #[test]
+    fn draft_vision_ratio_defaults_and_parses() {
+        let m = Manifest::from_json(TOY).unwrap();
+        assert_eq!(m.draft_vision_ratio, 1, "older manifests default to full resolution");
+        let custom = TOY.replacen("\"schema\": 1,", "\"schema\": 1, \"draft_vision_ratio\": 4,", 1);
+        assert_eq!(Manifest::from_json(&custom).unwrap().draft_vision_ratio, 4);
+        // a zero ratio would divide by zero downstream; clamp to 1
+        let zero = TOY.replacen("\"schema\": 1,", "\"schema\": 1, \"draft_vision_ratio\": 0,", 1);
+        assert_eq!(Manifest::from_json(&zero).unwrap().draft_vision_ratio, 1);
     }
 
     #[test]

@@ -172,6 +172,33 @@ impl VisionEncoding {
             VisionEncoding::Raw(px) => px.len() * 4,
         }
     }
+
+    /// Drafter-side compressed view of a raw encoding: blockwise mean
+    /// pooling at `ratio`, each block's mean replicated back over the
+    /// block so the buffer keeps the fixed shape the PJRT prefill
+    /// executables expect (compression reduces information, not dims).
+    /// Ratio 1 shares the original pixels (no copy).  `None` for
+    /// scripted encodings (their compression lives in
+    /// `scripted::pooled_vision_digest`).
+    pub fn pooled_pixels(&self, ratio: u32) -> Option<Arc<Vec<f32>>> {
+        match self {
+            VisionEncoding::Raw(px) => {
+                let r = ratio.max(1) as usize;
+                if r == 1 {
+                    return Some(px.clone());
+                }
+                let mut out = Vec::with_capacity(px.len());
+                for chunk in px.chunks(r) {
+                    let mean = chunk.iter().sum::<f32>() / chunk.len() as f32;
+                    for _ in 0..chunk.len() {
+                        out.push(mean);
+                    }
+                }
+                Some(Arc::new(out))
+            }
+            VisionEncoding::Scripted { .. } => None,
+        }
+    }
 }
 
 /// Heap bytes behind one opaque KV literal (cache size accounting).
@@ -598,13 +625,19 @@ impl DraftModel {
     /// the target's `encode_image`, reused here).  Multimodal drafters
     /// consume the encoding unless `text_only` (Table-3 mode: visual
     /// tokens discarded); the baseline drafter has no multimodal entry
-    /// point at all.
+    /// point at all.  `vision_ratio` is the drafter-side vision token
+    /// compression knob (1 = full resolution, bit-identical to the
+    /// pre-compression path): the scripted backend walks a pooled vision
+    /// sequence of `n_visual / ratio` tokens, the PJRT path feeds
+    /// blockwise mean-pooled pixels through the fixed-shape prefill.  The
+    /// target never sees the ratio, so outputs stay lossless.
     pub fn prefill_encoded(
         &self,
         enc: Option<&VisionEncoding>,
         prompt: &[i32],
         len: usize,
         text_only: bool,
+        vision_ratio: u32,
     ) -> Result<SeqState> {
         let m = &self.set.manifest;
         if self.is_scripted() {
@@ -616,17 +649,18 @@ impl DraftModel {
                 prompt,
                 len,
                 text_only,
+                vision_ratio,
             );
         }
         let prompt_lit = prompt_literal(prompt, m.p_max)?;
         if self.entry.multimodal && !text_only {
             let enc = enc.ok_or_else(|| anyhow!("multimodal drafter needs an image"))?;
-            let image = enc.pixels().ok_or_else(|| {
+            let image = enc.pooled_pixels(vision_ratio).ok_or_else(|| {
                 anyhow!("drafter {}: PJRT prefill needs a raw vision encoding", self.entry.name)
             })?;
             let exec = self.set.exec(&self.entry, "prefill_mm")?;
             let out = exec.call(&[
-                lit_f32(image, &m.image_shape)?,
+                lit_f32(&image, &m.image_shape)?,
                 prompt_lit,
                 scalar_i32(len as i32),
             ])?;
@@ -642,7 +676,8 @@ impl DraftModel {
         }
     }
 
-    /// Fused drafter prefill over raw pixels (cold-path convenience).
+    /// Fused drafter prefill over raw pixels (cold-path convenience;
+    /// always full vision resolution).
     pub fn prefill(
         &self,
         image: Option<&[f32]>,
@@ -661,7 +696,7 @@ impl DraftModel {
             }
             None => None,
         };
-        self.prefill_encoded(enc.as_ref(), prompt, len, text_only)
+        self.prefill_encoded(enc.as_ref(), prompt, len, text_only, 1)
     }
 
     /// Warm-start from a cached post-prefill prefix (see
@@ -955,6 +990,20 @@ mod tests {
         let mut r = prefill(3);
         assert_eq!(out[1].data, target.verify(&mut r, &wb).unwrap().data);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pooled_pixels_blockwise_mean_keeps_shape() {
+        let img: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let raw = VisionEncoding::Raw(Arc::new(img.clone()));
+        let p1 = raw.pooled_pixels(1).unwrap();
+        assert_eq!(*p1, img, "ratio 1 is the identity (shared, not copied)");
+        let p4 = raw.pooled_pixels(4).unwrap();
+        assert_eq!(p4.len(), img.len(), "compression must preserve the fixed shape");
+        assert_eq!(&p4[..4], &[1.5; 4], "block mean replicated over the block");
+        assert_eq!(&p4[4..], &[5.5; 4]);
+        let s = VisionEncoding::Scripted { image_seed: 1 };
+        assert!(s.pooled_pixels(4).is_none(), "scripted encodings pool via the digest");
     }
 
     #[test]

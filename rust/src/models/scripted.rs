@@ -91,6 +91,37 @@ pub fn stream_seed(image: &[f32], prompt: &[i32], len: usize) -> u64 {
     stream_seed_from(image_seed(image), prompt, len)
 }
 
+/// Mixing rounds per pooled vision token in `pooled_vision_digest`: sized
+/// so a full-resolution walk (`n_visual` tokens) costs a measurable
+/// fraction of a millisecond -- the scripted stand-in for the drafter's
+/// per-vision-token prefill FLOPs that compression removes.
+pub const POOLED_TOKEN_MIX_ROUNDS: usize = 8192;
+
+/// The drafter's compressed vision prefill, scripted: a deterministic
+/// splitmix-style walk over `ceil(n_visual / ratio)` pooled tokens.  Cost
+/// scales with the pooled sequence length (each pooled token pays
+/// `POOLED_TOKEN_MIX_ROUNDS` mixes), which is exactly the quantity
+/// drafter-side vision token compression buys back; the returned digest is
+/// a pure function of (image_seed, n_visual, ratio), so the compressed
+/// drafter encoding is content-addressable and property-testable.
+pub fn pooled_vision_digest(image_seed: u64, n_visual: usize, ratio: u32) -> u64 {
+    let ratio = ratio.max(1) as usize;
+    let tokens = n_visual.div_ceil(ratio).max(1);
+    let mut acc = image_seed ^ (ratio as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    for t in 0..tokens {
+        let mut x = acc ^ (t as u64).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        for _ in 0..POOLED_TOKEN_MIX_ROUNDS {
+            x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            x ^= z ^ (z >> 31);
+        }
+        acc = acc.rotate_left(7) ^ x;
+    }
+    acc
+}
+
 /// The target's token stream for one request: `gen_max - 2` content tokens
 /// from the non-special vocabulary range, then EOS.
 pub fn target_stream(m: &Manifest, image: &[f32], prompt: &[i32], len: usize) -> Vec<i32> {
@@ -117,16 +148,27 @@ fn content_floor(m: &Manifest) -> usize {
 }
 
 /// Replace every `period`-th token (at `phase`) with a deterministic
-/// *different* content token.
-fn corrupt(stream: &[i32], period: usize, phase: usize, lo: usize, vocab: usize) -> Vec<i32> {
+/// *different* content token.  `salt = 0` reproduces the unsalted
+/// corruption exactly; a nonzero salt (the pooled vision digest under
+/// compression) shifts which wrong token is proposed without changing
+/// which positions are corrupted.
+fn corrupt(
+    stream: &[i32],
+    period: usize,
+    phase: usize,
+    lo: usize,
+    vocab: usize,
+    salt: u64,
+) -> Vec<i32> {
     let span = (vocab - lo).max(2) as i32;
+    let salt_off = (salt % span as u64) as i32;
     stream
         .iter()
         .enumerate()
         .map(|(i, &t)| {
             if i % period == phase % period {
                 let base = (t - lo as i32).rem_euclid(span);
-                let delta = 1 + (i % 5) as i32 % (span - 1);
+                let delta = 1 + ((i % 5) as i32 + salt_off) % (span - 1);
                 lo as i32 + (base + delta).rem_euclid(span)
             } else {
                 t
@@ -138,8 +180,11 @@ fn corrupt(stream: &[i32], period: usize, phase: usize, lo: usize, vocab: usize)
 /// Agreement period per drafter variant: corrupt every `period`-th stream
 /// position.  Larger = better aligned (the MASSV ordering: full pipeline >
 /// w/o SDViT > text-only baseline), halved when the visual context is
-/// discarded (`aligned == false`, the Table-3 regime).
-fn agreement_period(variant: &str, aligned: bool) -> usize {
+/// discarded (`aligned == false`, the Table-3 regime).  Vision token
+/// compression (`ratio > 1`) shaves the aligned period mildly --
+/// `log2(ratio)/2` positions, so massv goes 7 -> 6 -> 5 at 1x/4x/16x --
+/// the ViSpec/SpecVLM "negligible acceptance loss" shape.
+fn agreement_period(variant: &str, aligned: bool, ratio: u32) -> usize {
     let p = match variant {
         "massv" => 7,
         "massv_wo_sdvit" => 4,
@@ -147,7 +192,7 @@ fn agreement_period(variant: &str, aligned: bool) -> usize {
         _ => 2,
     };
     if aligned {
-        p
+        p.saturating_sub(ratio.max(1).ilog2() as usize / 2).max(2)
     } else {
         (p / 2).max(2)
     }
@@ -157,17 +202,22 @@ fn agreement_period(variant: &str, aligned: bool) -> usize {
 /// stream on one phase, the alternative branch line on a disjoint phase --
 /// so tree drafting always carries a branch that tracks the target through
 /// a primary divergence (what raises tree MAL above chain MAL).
+/// `ratio`/`salt` carry the vision-compression state: ratio widens the
+/// corruption cadence per `agreement_period`, salt (the pooled digest, 0
+/// at full resolution) seasons the wrong-token choice.
 pub fn drafter_scripts(
     m: &Manifest,
     stream: &[i32],
     variant: &str,
     aligned: bool,
+    ratio: u32,
+    salt: u64,
 ) -> ScriptSet {
     let lo = content_floor(m);
-    let period = agreement_period(variant, aligned);
+    let period = agreement_period(variant, aligned, ratio);
     ScriptSet {
-        primary: corrupt(stream, period, 1, lo, m.vocab_size),
-        alts: vec![corrupt(stream, period, 1 + period / 2, lo, m.vocab_size)],
+        primary: corrupt(stream, period, 1, lo, m.vocab_size, salt),
+        alts: vec![corrupt(stream, period, 1 + period / 2, lo, m.vocab_size, salt)],
     }
 }
 
@@ -245,6 +295,7 @@ pub fn prefill_drafter(
     prompt: &[i32],
     len: usize,
     text_only: bool,
+    vision_ratio: u32,
 ) -> Result<SeqState> {
     prefill_drafter_seeded(
         m,
@@ -254,12 +305,18 @@ pub fn prefill_drafter(
         prompt,
         len,
         text_only,
+        vision_ratio,
     )
 }
 
 /// `prefill_drafter` from a cached image seed.  The drafter always needs
 /// the seed to reconstruct the target's stream (agreement is positional);
 /// whether it "sees" the image only modulates the corruption period.
+/// `vision_ratio` is the drafter-side compression knob: the vision walk
+/// (`pooled_vision_digest`) runs over `n_visual / ratio` pooled tokens, so
+/// ratio >= 4 is measurably cheaper; at ratio 1 the digest is computed but
+/// discarded (black-boxed against elimination) and the drafter scripts are
+/// bit-identical to the uncompressed path.
 #[allow(clippy::too_many_arguments)]
 pub fn prefill_drafter_seeded(
     m: &Manifest,
@@ -269,13 +326,24 @@ pub fn prefill_drafter_seeded(
     prompt: &[i32],
     len: usize,
     text_only: bool,
+    vision_ratio: u32,
 ) -> Result<SeqState> {
     // the drafter only "sees" the image when it is multimodal and not in
     // Table-3 text-only mode; alignment degrades otherwise
+    let ratio = vision_ratio.max(1);
     let aligned = multimodal && !text_only && image_seed_in.is_some();
     let iseed = image_seed_in.unwrap_or_else(|| image_seed(&[]));
+    // only an aligned drafter runs a vision prefill at all (text-only and
+    // non-multimodal drafters never walk the image tokens)
+    let digest = if aligned { pooled_vision_digest(iseed, m.n_visual, ratio) } else { 0 };
+    let salt = if ratio > 1 {
+        digest
+    } else {
+        std::hint::black_box(digest);
+        0
+    };
     let stream = target_stream_seeded(m, stream_seed_from(iseed, prompt, len));
-    Ok(state(drafter_scripts(m, &stream, variant, aligned)))
+    Ok(state(drafter_scripts(m, &stream, variant, aligned, ratio, salt)))
 }
 
 pub fn draft_drafter(
@@ -445,7 +513,7 @@ mod tests {
         let img = vec![0.1f32; 768];
         let stream = target_stream(&m, &img, &[1, 7, 3], 3);
         let agree = |variant: &str| -> usize {
-            let s = drafter_scripts(&m, &stream, variant, true);
+            let s = drafter_scripts(&m, &stream, variant, true, 1, 0);
             s.primary.iter().zip(&stream).filter(|(a, b)| a == b).count()
         };
         let massv = agree("massv");
@@ -453,7 +521,7 @@ mod tests {
         let base = agree("baseline");
         assert!(massv > wo && wo > base, "{massv} > {wo} > {base} expected");
         // corrupted positions really differ
-        let s = drafter_scripts(&m, &stream, "massv", true);
+        let s = drafter_scripts(&m, &stream, "massv", true, 1, 0);
         let diffs = s.primary.iter().zip(&stream).filter(|(a, b)| a != b).count();
         assert!(diffs > 0);
         // primary and alt corrupt disjoint phases
@@ -471,7 +539,7 @@ mod tests {
         let img = vec![0.3f32; 768];
         let stream = target_stream(&m, &img, &[1, 9, 3], 3);
         let agree = |aligned: bool| -> usize {
-            drafter_scripts(&m, &stream, "massv", aligned)
+            drafter_scripts(&m, &stream, "massv", aligned, 1, 0)
                 .primary
                 .iter()
                 .zip(&stream)
@@ -479,6 +547,45 @@ mod tests {
                 .count()
         };
         assert!(agree(true) > agree(false));
+    }
+
+    #[test]
+    fn pooled_digest_is_deterministic_and_ratio_sensitive() {
+        let d1 = pooled_vision_digest(0xdead_beef, 16, 1);
+        assert_eq!(d1, pooled_vision_digest(0xdead_beef, 16, 1), "pure function");
+        let d4 = pooled_vision_digest(0xdead_beef, 16, 4);
+        let d16 = pooled_vision_digest(0xdead_beef, 16, 16);
+        assert_ne!(d1, d4, "ratio enters the digest");
+        assert_ne!(d4, d16);
+        assert_ne!(d1, pooled_vision_digest(0xcafe, 16, 1), "seed enters the digest");
+        // ratio 0 is clamped to full resolution
+        assert_eq!(pooled_vision_digest(7, 16, 0), pooled_vision_digest(7, 16, 1));
+    }
+
+    #[test]
+    fn compressed_drafter_prefill_is_exact_at_ratio_one_and_degrades_mildly() {
+        let m = toy_manifest();
+        let img: Vec<f32> = (0..768).map(|i| (i % 13) as f32 * 0.05).collect();
+        let prompt = vec![1, 5, 6, 3];
+        let seed = Some(image_seed(&img));
+        let full = prefill_drafter_seeded(&m, "massv", true, seed, &prompt, 4, false, 1).unwrap();
+        let full2 = prefill_drafter_seeded(&m, "massv", true, seed, &prompt, 4, false, 1).unwrap();
+        let s_full = full.script.as_ref().unwrap();
+        // ratio 1 must be bit-identical to itself across calls (and is the
+        // same script the pre-compression code produced: salt 0, period 7)
+        assert_eq!(s_full.primary, full2.script.as_ref().unwrap().primary);
+        let stream = target_stream_seeded(&m, stream_seed_from(image_seed(&img), &prompt, 4));
+        let expect = drafter_scripts(&m, &stream, "massv", true, 1, 0);
+        assert_eq!(s_full.primary, expect.primary, "ratio 1 == uncompressed scripts");
+        // compression reduces agreement mildly, never below the floor
+        let agree = |ratio: u32| -> usize {
+            let st =
+                prefill_drafter_seeded(&m, "massv", true, seed, &prompt, 4, false, ratio).unwrap();
+            st.script.as_ref().unwrap().primary.iter().zip(&stream).filter(|(a, b)| a == b).count()
+        };
+        let (a1, a4, a16) = (agree(1), agree(4), agree(16));
+        assert!(a1 >= a4 && a4 >= a16, "agreement must degrade monotonically: {a1} {a4} {a16}");
+        assert!(a16 * 2 > a1, "16x compression must still agree on most positions");
     }
 
     #[test]

@@ -113,6 +113,13 @@ fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
         _ => Priority::Interactive,
     };
     let deadline_ms = v.get("deadline_ms").and_then(|d| d.as_usize().ok()).map(|d| d as u64);
+    // optional per-request drafter vision compression override; 0 falls
+    // back to the engine/manifest default (same as absent)
+    let draft_vision_ratio = v
+        .get("draft_vision_ratio")
+        .and_then(|r| r.as_usize().ok())
+        .map(|r| r as u32)
+        .filter(|r| *r > 0);
     Ok(Request {
         id: engine.next_id(),
         task: v
@@ -130,6 +137,7 @@ fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
             .to_string(),
         mode,
         gen,
+        draft_vision_ratio,
         priority,
         deadline_ms,
     })

@@ -1,0 +1,485 @@
+//! Online speculation calibration (the serving-time half of MASSV's
+//! self-data distillation loop).
+//!
+//! `spec::adaptive` reacts *within* one request: per-request EMAs decide
+//! fallback and chain<->tree switches, then the state dies with the
+//! session.  This module learns *across* requests: every speculative
+//! iteration reports an `IterObs` (how many tokens were drafted, how many
+//! the target accepted, which workload class the request belongs to,
+//! whether its image was a cache reuse), and the `Calibrator` maintains a
+//! per-class EWMA estimate of the per-token acceptance probability
+//! alpha.  From alpha it derives the two serving-time recommendations the
+//! engine asks for when admitting the next request of that class:
+//!
+//!   * `gamma_for(class)`: the draft length maximizing expected emitted
+//!     tokens per unit cost.  With per-token acceptance alpha, a chain
+//!     window of gamma drafts emits E(gamma) = (1 - alpha^(gamma+1)) /
+//!     (1 - alpha) tokens in expectation (accepted prefix + the
+//!     correction/bonus token); one iteration costs `1 + gamma * c`
+//!     verifies where `c` is the per-token draft/verify cost ratio.  The
+//!     calibrator picks argmax over [gamma_min, gamma_max] of
+//!     E(gamma) / (1 + gamma * c) -- the standard speculative-decoding
+//!     throughput model.
+//!   * `mode_for(class)`: chain vs tree drafting, from an EWMA of the
+//!     accepted length per iteration with hysteresis (upgrade to tree when
+//!     the chain window saturates, downgrade when acceptance collapses) --
+//!     the cross-request analogue of the adaptive controller's in-request
+//!     switch.
+//!
+//! Both recommendations stay at their engine defaults until a class has
+//! `min_obs` observations, so cold classes behave exactly like an
+//! uncalibrated engine.  Recommendations only change *drafting* shape --
+//! acceptance still only depends on target logits, so calibration can
+//! never alter the emitted stream of any single request, only how cheaply
+//! it is produced.
+//!
+//! The same observations can be streamed to a JSONL file
+//! (`log_jsonl_to`), one record per iteration -- the training-data export
+//! `python/compile/selfdistill.py` consumes to build self-distillation
+//! fine-tuning sets from live traffic.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::spec::adaptive::SpecMode;
+
+/// One speculative iteration's acceptance outcome, as reported by
+/// `DecodeSession` (`set_telemetry`).
+#[derive(Debug, Clone)]
+pub struct IterObs {
+    /// Workload class of the owning request (`Request::task`).
+    pub class: Arc<str>,
+    /// Drafting shape the iteration ran under.
+    pub mode: SpecMode,
+    /// Tokens drafted this iteration (chain: the gamma window; tree: the
+    /// configured depth).
+    pub drafted: usize,
+    /// Tokens the target accepted (chain: accepted prefix; tree: accepted
+    /// root-to-leaf path length).
+    pub accepted: usize,
+    /// Whether the owning request's image was served from the prefix
+    /// cache (reused images correlate with higher drafter agreement).
+    pub image_reuse: bool,
+}
+
+fn mode_name(mode: SpecMode) -> &'static str {
+    match mode {
+        SpecMode::Chain => "chain",
+        SpecMode::Tree => "tree",
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibratorConfig {
+    /// EWMA smoothing for the per-token acceptance estimate (weight of
+    /// one new Bernoulli outcome).
+    pub ema_alpha: f64,
+    /// Per-token draft cost relative to one target verify (the `c` in the
+    /// throughput model).
+    pub draft_cost: f64,
+    /// Observations a class needs before recommendations deviate from the
+    /// engine defaults.
+    pub min_obs: usize,
+    /// Recommended gamma is clamped to [gamma_min, gamma_max].
+    pub gamma_min: usize,
+    pub gamma_max: usize,
+    /// Upgrade a class to tree drafting when its accepted-length EWMA
+    /// reaches this ...
+    pub tree_tau: f64,
+    /// ... and back to chain when it falls below this (< tree_tau, so the
+    /// recommendation cannot flap on boundary noise).
+    pub chain_tau: f64,
+}
+
+impl Default for CalibratorConfig {
+    fn default() -> Self {
+        CalibratorConfig {
+            ema_alpha: 0.05,
+            draft_cost: 0.15,
+            min_obs: 16,
+            gamma_min: 1,
+            gamma_max: 8,
+            tree_tau: 3.5,
+            chain_tau: 2.0,
+        }
+    }
+}
+
+/// Per-class running state.
+#[derive(Debug, Clone)]
+struct ClassStats {
+    /// EWMA per-token acceptance probability.
+    alpha: f64,
+    /// EWMA accepted length per iteration.
+    acc_len: f64,
+    /// Iterations observed.
+    obs: usize,
+    /// Iterations observed with a cache-reused image.
+    reuse_obs: usize,
+    /// Current chain/tree recommendation (hysteresis state).
+    tree: bool,
+}
+
+impl ClassStats {
+    fn new() -> Self {
+        ClassStats { alpha: 0.5, acc_len: 0.0, obs: 0, reuse_obs: 0, tree: false }
+    }
+}
+
+/// Read-only view of one class's calibration state (metrics export).
+#[derive(Debug, Clone)]
+pub struct ClassSnapshot {
+    pub class: String,
+    pub alpha: f64,
+    pub accepted_len_ema: f64,
+    pub obs: usize,
+    pub reuse_obs: usize,
+    pub gamma: usize,
+    pub tree: bool,
+    /// Whether the class has enough observations to steer admissions.
+    pub warmed: bool,
+}
+
+/// Cross-request acceptance-driven speculation calibrator (shared by all
+/// engine workers via `Arc`).
+pub struct Calibrator {
+    cfg: CalibratorConfig,
+    /// Gamma recommended while a class is still warming up.
+    default_gamma: usize,
+    classes: Mutex<HashMap<Arc<str>, ClassStats>>,
+    jsonl: Mutex<Option<BufWriter<File>>>,
+}
+
+impl Calibrator {
+    pub fn new(cfg: CalibratorConfig, default_gamma: usize) -> Self {
+        Calibrator {
+            cfg,
+            default_gamma,
+            classes: Mutex::new(HashMap::new()),
+            jsonl: Mutex::new(None),
+        }
+    }
+
+    /// Also append every observation to `path` as one JSON object per
+    /// line (the selfdistill.py training-data export).
+    pub fn log_jsonl_to(&self, path: &Path) -> Result<()> {
+        let f = File::create(path)?;
+        *self.jsonl.lock().unwrap() = Some(BufWriter::new(f));
+        Ok(())
+    }
+
+    /// Flush the JSONL buffer (tests / graceful shutdown; dropping the
+    /// calibrator also flushes).
+    pub fn flush_jsonl(&self) {
+        if let Some(w) = self.jsonl.lock().unwrap().as_mut() {
+            let _ = w.flush();
+        }
+    }
+
+    /// Fold one iteration's outcome into its class EWMA state.
+    pub fn observe(&self, obs: &IterObs) {
+        if obs.drafted == 0 {
+            return;
+        }
+        {
+            let mut classes = self.classes.lock().unwrap();
+            let st = classes.entry(obs.class.clone()).or_insert_with(ClassStats::new);
+            let w = self.cfg.ema_alpha;
+            // the iteration is `accepted` per-token successes, plus one
+            // rejection when the window was cut short -- full-window
+            // acceptances carry no rejection evidence
+            let accepted = obs.accepted.min(obs.drafted);
+            for _ in 0..accepted {
+                st.alpha = w + (1.0 - w) * st.alpha;
+            }
+            if accepted < obs.drafted {
+                st.alpha = (1.0 - w) * st.alpha;
+            }
+            st.acc_len = if st.obs == 0 {
+                accepted as f64
+            } else {
+                w * accepted as f64 + (1.0 - w) * st.acc_len
+            };
+            st.obs += 1;
+            if obs.image_reuse {
+                st.reuse_obs += 1;
+            }
+            if st.obs >= self.cfg.min_obs {
+                // hysteresis: saturating acceptance upgrades to tree,
+                // collapsed acceptance downgrades to chain
+                if !st.tree && st.acc_len >= self.cfg.tree_tau {
+                    st.tree = true;
+                } else if st.tree && st.acc_len < self.cfg.chain_tau {
+                    st.tree = false;
+                }
+            }
+        }
+        let mut jsonl = self.jsonl.lock().unwrap();
+        if let Some(w) = jsonl.as_mut() {
+            // classes come from Request::task (protocol-validated short
+            // strings); escape the two JSON-significant characters anyway
+            let class = obs.class.replace('\\', "\\\\").replace('"', "\\\"");
+            let _ = writeln!(
+                w,
+                "{{\"class\":\"{}\",\"mode\":\"{}\",\"drafted\":{},\"accepted\":{},\"image_reuse\":{}}}",
+                class,
+                mode_name(obs.mode),
+                obs.drafted,
+                obs.accepted,
+                obs.image_reuse
+            );
+        }
+    }
+
+    /// Expected emitted tokens per iteration for draft length `gamma`
+    /// under per-token acceptance `alpha`.
+    fn expected_emitted(alpha: f64, gamma: usize) -> f64 {
+        if (1.0 - alpha).abs() < 1e-9 {
+            return gamma as f64 + 1.0;
+        }
+        (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
+    }
+
+    /// Throughput-optimal gamma for acceptance `alpha` under this config's
+    /// cost model (deterministic argmax over the clamped range).
+    fn best_gamma(&self, alpha: f64) -> usize {
+        let mut best = self.cfg.gamma_min;
+        let mut best_score = f64::MIN;
+        for g in self.cfg.gamma_min..=self.cfg.gamma_max {
+            let score =
+                Self::expected_emitted(alpha, g) / (1.0 + g as f64 * self.cfg.draft_cost);
+            if score > best_score {
+                best_score = score;
+                best = g;
+            }
+        }
+        best
+    }
+
+    /// Recommended draft length for `class` (the engine default until the
+    /// class warms up).
+    pub fn gamma_for(&self, class: &str) -> usize {
+        let classes = self.classes.lock().unwrap();
+        match classes.get(class) {
+            Some(st) if st.obs >= self.cfg.min_obs => self.best_gamma(st.alpha),
+            _ => self.default_gamma,
+        }
+    }
+
+    /// Recommended drafting shape for `class`; `None` while the class is
+    /// still warming up (the engine keeps the request's own mode).
+    pub fn mode_for(&self, class: &str) -> Option<SpecMode> {
+        let classes = self.classes.lock().unwrap();
+        match classes.get(class) {
+            Some(st) if st.obs >= self.cfg.min_obs => {
+                Some(if st.tree { SpecMode::Tree } else { SpecMode::Chain })
+            }
+            _ => None,
+        }
+    }
+
+    /// Per-class state for the metrics scrape, sorted by class name for a
+    /// deterministic render.
+    pub fn snapshot(&self) -> Vec<ClassSnapshot> {
+        let classes = self.classes.lock().unwrap();
+        let mut out: Vec<ClassSnapshot> = classes
+            .iter()
+            .map(|(class, st)| ClassSnapshot {
+                class: class.to_string(),
+                alpha: st.alpha,
+                accepted_len_ema: st.acc_len,
+                obs: st.obs,
+                reuse_obs: st.reuse_obs,
+                gamma: if st.obs >= self.cfg.min_obs {
+                    self.best_gamma(st.alpha)
+                } else {
+                    self.default_gamma
+                },
+                tree: st.tree,
+                warmed: st.obs >= self.cfg.min_obs,
+            })
+            .collect();
+        out.sort_by(|a, b| a.class.cmp(&b.class));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(class: &str, drafted: usize, accepted: usize) -> IterObs {
+        IterObs {
+            class: Arc::from(class),
+            mode: SpecMode::Chain,
+            drafted,
+            accepted,
+            image_reuse: false,
+        }
+    }
+
+    fn cal() -> Calibrator {
+        Calibrator::new(CalibratorConfig::default(), 5)
+    }
+
+    #[test]
+    fn warmup_keeps_engine_defaults() {
+        let c = cal();
+        assert_eq!(c.gamma_for("chat"), 5);
+        assert_eq!(c.mode_for("chat"), None);
+        for _ in 0..CalibratorConfig::default().min_obs - 1 {
+            c.observe(&obs("chat", 5, 5));
+        }
+        assert_eq!(c.gamma_for("chat"), 5, "one short of min_obs stays default");
+        assert_eq!(c.mode_for("chat"), None);
+        c.observe(&obs("chat", 5, 5));
+        assert_ne!(c.mode_for("chat"), None, "min_obs-th observation warms the class");
+    }
+
+    #[test]
+    fn gamma_converges_to_known_optimum_on_synthetic_traces() {
+        // perfect acceptance -> alpha -> 1 -> E/(1+gc) is increasing in g
+        // for small c, so the optimum is gamma_max
+        let c = cal();
+        for _ in 0..400 {
+            c.observe(&obs("caption", 8, 8));
+        }
+        assert_eq!(c.gamma_for("caption"), CalibratorConfig::default().gamma_max);
+
+        // zero acceptance -> alpha -> 0 -> every drafted token is wasted
+        // cost, so the optimum is gamma_min
+        let c = cal();
+        for _ in 0..400 {
+            c.observe(&obs("doc", 8, 0));
+        }
+        assert_eq!(c.gamma_for("doc"), CalibratorConfig::default().gamma_min);
+
+        // the analytic optimum for a converged mid alpha must match a
+        // brute-force argmax of the same objective
+        let c = Calibrator::new(
+            CalibratorConfig { ema_alpha: 0.02, ..CalibratorConfig::default() },
+            5,
+        );
+        // alternating 3-of-5 acceptance: alpha settles near its fixed
+        // point; whatever it is, gamma_for must equal the model's argmax
+        for _ in 0..600 {
+            c.observe(&obs("mix", 5, 3));
+        }
+        let snap = &c.snapshot()[0];
+        assert!(snap.warmed);
+        assert!(snap.alpha > 0.4 && snap.alpha < 0.95, "alpha {}", snap.alpha);
+        let cfg = CalibratorConfig { ema_alpha: 0.02, ..CalibratorConfig::default() };
+        let brute = (cfg.gamma_min..=cfg.gamma_max)
+            .max_by(|&a, &b| {
+                let s = |g: usize| {
+                    Calibrator::expected_emitted(snap.alpha, g)
+                        / (1.0 + g as f64 * cfg.draft_cost)
+                };
+                s(a).partial_cmp(&s(b)).unwrap()
+            })
+            .unwrap();
+        assert_eq!(c.gamma_for("mix"), brute);
+        // monotonicity: a better-aligned class never gets a shorter window
+        assert!(c.gamma_for("mix") <= CalibratorConfig::default().gamma_max);
+    }
+
+    #[test]
+    fn classes_stay_independent_under_mixing() {
+        // interleave a high-acceptance and a zero-acceptance class: each
+        // must converge to its own optimum with no cross-contamination,
+        // and stay there as mixing continues
+        let c = cal();
+        for _ in 0..300 {
+            c.observe(&obs("chat", 6, 6));
+            c.observe(&obs("doc", 6, 0));
+        }
+        let chat_gamma = c.gamma_for("chat");
+        let doc_gamma = c.gamma_for("doc");
+        assert_eq!(chat_gamma, CalibratorConfig::default().gamma_max);
+        assert_eq!(doc_gamma, CalibratorConfig::default().gamma_min);
+        // stability: more mixed traffic must not move either class
+        for _ in 0..300 {
+            c.observe(&obs("chat", 6, 6));
+            c.observe(&obs("doc", 6, 0));
+        }
+        assert_eq!(c.gamma_for("chat"), chat_gamma);
+        assert_eq!(c.gamma_for("doc"), doc_gamma);
+        assert_eq!(c.mode_for("chat"), Some(SpecMode::Tree));
+        assert_eq!(c.mode_for("doc"), Some(SpecMode::Chain));
+    }
+
+    #[test]
+    fn mode_hysteresis_does_not_flap() {
+        let c = cal();
+        // saturate -> tree
+        for _ in 0..100 {
+            c.observe(&obs("chat", 5, 5));
+        }
+        assert_eq!(c.mode_for("chat"), Some(SpecMode::Tree));
+        // hover between chain_tau and tree_tau: the recommendation must
+        // hold (no downgrade above chain_tau)
+        for _ in 0..200 {
+            c.observe(&obs("chat", 5, 3));
+        }
+        assert_eq!(c.mode_for("chat"), Some(SpecMode::Tree));
+        // collapse -> chain
+        for _ in 0..200 {
+            c.observe(&obs("chat", 5, 0));
+        }
+        assert_eq!(c.mode_for("chat"), Some(SpecMode::Chain));
+    }
+
+    #[test]
+    fn jsonl_export_writes_one_record_per_observation() {
+        let dir = std::env::temp_dir().join(format!("massv_calib_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("telemetry.jsonl");
+        let c = cal();
+        c.log_jsonl_to(&path).unwrap();
+        c.observe(&obs("chat", 5, 3));
+        c.observe(&IterObs {
+            class: Arc::from("caption"),
+            mode: SpecMode::Tree,
+            drafted: 5,
+            accepted: 5,
+            image_reuse: true,
+        });
+        c.flush_jsonl();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"class\":\"chat\""));
+        assert!(lines[0].contains("\"mode\":\"chain\""));
+        assert!(lines[0].contains("\"drafted\":5"));
+        assert!(lines[0].contains("\"accepted\":3"));
+        assert!(lines[0].contains("\"image_reuse\":false"));
+        assert!(lines[1].contains("\"mode\":\"tree\""));
+        assert!(lines[1].contains("\"image_reuse\":true"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_tracks_reuse_and_sorts_classes() {
+        let c = cal();
+        c.observe(&IterObs {
+            class: Arc::from("b"),
+            mode: SpecMode::Chain,
+            drafted: 5,
+            accepted: 2,
+            image_reuse: true,
+        });
+        c.observe(&obs("a", 5, 2));
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].class, "a");
+        assert_eq!(snap[1].class, "b");
+        assert_eq!(snap[1].reuse_obs, 1);
+        assert_eq!(snap[0].reuse_obs, 0);
+        assert!(!snap[0].warmed);
+    }
+}

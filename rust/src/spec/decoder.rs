@@ -218,17 +218,24 @@ pub trait DraftBackend {
 
     /// Prefill from a shared vision encoding (the target's stage-1 output
     /// is reused by the drafter so one cached encode serves both models).
+    ///
+    /// `vision_ratio` compresses the vision token sequence *for the drafter
+    /// only* (1 = full resolution; 4/16 = pooled).  The target always sees
+    /// full resolution, so acceptance -- and therefore the emitted token
+    /// stream -- is unchanged; only the drafter's prefill cost and its
+    /// agreement rate move.  The default pools raw pixels blockwise.
     fn prefill_encoded(
         &self,
         enc: Option<&VisionEncoding>,
         prompt: &[i32],
         len: usize,
         text_only: bool,
+        vision_ratio: u32,
     ) -> Result<SeqState> {
         match enc {
             None => self.prefill(None, prompt, len, text_only),
-            Some(e) => match e.pixels() {
-                Some(px) => self.prefill(Some(px), prompt, len, text_only),
+            Some(e) => match e.pooled_pixels(vision_ratio) {
+                Some(px) => self.prefill(Some(px.as_slice()), prompt, len, text_only),
                 None => Err(anyhow!(
                     "this draft backend cannot prefill from a non-raw vision encoding"
                 )),
@@ -323,8 +330,9 @@ impl<D: DraftBackend + ?Sized> DraftBackend for &D {
         prompt: &[i32],
         len: usize,
         text_only: bool,
+        vision_ratio: u32,
     ) -> Result<SeqState> {
-        (**self).prefill_encoded(enc, prompt, len, text_only)
+        (**self).prefill_encoded(enc, prompt, len, text_only, vision_ratio)
     }
 
     fn draft(
@@ -435,8 +443,9 @@ impl DraftBackend for DraftModel {
         prompt: &[i32],
         len: usize,
         text_only: bool,
+        vision_ratio: u32,
     ) -> Result<SeqState> {
-        DraftModel::prefill_encoded(self, enc, prompt, len, text_only)
+        DraftModel::prefill_encoded(self, enc, prompt, len, text_only, vision_ratio)
     }
 
     fn draft(
@@ -522,6 +531,11 @@ impl Default for GenConfig {
 }
 
 /// Per-request generation record (everything the eval harness needs).
+///
+/// Per-iteration quantities are folded into streaming summaries
+/// (sum/count/max) instead of per-iteration Vecs, so a long-running
+/// session's record stays O(1) regardless of how many speculative
+/// iterations it executes.
 #[derive(Debug, Clone, Default)]
 pub struct GenStats {
     pub tokens: Vec<i32>,
@@ -530,17 +544,29 @@ pub struct GenStats {
     pub draft_calls: usize,
     /// draft tokens accepted, summed over iterations
     pub accepted_draft: usize,
-    /// tokens emitted per iteration (accepted + the target-sampled one)
-    pub per_iter_emitted: Vec<usize>,
+    /// number of iterations that emitted tokens (speculative windows or
+    /// target-only decode steps)
+    pub iters: usize,
+    /// tokens emitted summed over iterations (accepted + the
+    /// target-sampled one per iteration)
+    pub emitted_sum: usize,
+    /// most tokens emitted by any single iteration
+    pub emitted_max: usize,
     pub prefill_micros: u64,
+    /// drafter share of `prefill_micros` (the drafter's own prefill
+    /// forward pass; shrinks with `draft_vision_ratio` compression)
+    pub draft_prefill_micros: u64,
     pub decode_micros: u64,
     pub finished_by_eos: bool,
     /// iteration index at which an adaptive controller abandoned
     /// speculation (None = stayed speculative throughout)
     pub fallback_at: Option<usize>,
-    /// accepted root-to-leaf path length per tree-mode iteration (empty
-    /// for chain/target-only decoding)
-    pub per_iter_path_depth: Vec<usize>,
+    /// number of tree-mode iterations (0 for chain/target-only decoding)
+    pub tree_iters: usize,
+    /// accepted root-to-leaf path length summed over tree iterations
+    pub path_depth_sum: usize,
+    /// deepest accepted root-to-leaf path of any tree iteration
+    pub path_depth_max: usize,
     /// total candidate nodes drafted across tree-mode iterations
     pub tree_nodes_drafted: usize,
     /// true when prefill was served from the prefix cache (forked KV
@@ -552,14 +578,27 @@ pub struct GenStats {
 }
 
 impl GenStats {
+    /// Record one iteration's emitted-token count.
+    pub(crate) fn record_emitted(&mut self, emitted: usize) {
+        self.iters += 1;
+        self.emitted_sum += emitted;
+        self.emitted_max = self.emitted_max.max(emitted);
+    }
+
+    /// Record one tree iteration's accepted root-to-leaf path length.
+    pub(crate) fn record_path_depth(&mut self, depth: usize) {
+        self.tree_iters += 1;
+        self.path_depth_sum += depth;
+        self.path_depth_max = self.path_depth_max.max(depth);
+    }
+
     /// Mean accepted length tau: tokens emitted per target forward pass
     /// (accepted drafts + the correction/bonus token), the paper's metric.
     pub fn mal(&self) -> f64 {
         if self.verify_calls == 0 {
             return 0.0;
         }
-        let emitted: usize = self.per_iter_emitted.iter().sum();
-        emitted as f64 / self.verify_calls as f64
+        self.emitted_sum as f64 / self.verify_calls as f64
     }
 
     pub fn total_micros(&self) -> u64 {
@@ -568,11 +607,10 @@ impl GenStats {
 
     /// Mean accepted root-to-leaf path length over tree iterations.
     pub fn mean_path_depth(&self) -> f64 {
-        if self.per_iter_path_depth.is_empty() {
+        if self.tree_iters == 0 {
             return 0.0;
         }
-        let total: usize = self.per_iter_path_depth.iter().sum();
-        total as f64 / self.per_iter_path_depth.len() as f64
+        self.path_depth_sum as f64 / self.tree_iters as f64
     }
 
     /// Equality modulo wall-clock timing (`*_micros`) and cache provenance
@@ -584,10 +622,14 @@ impl GenStats {
             && self.verify_calls == other.verify_calls
             && self.draft_calls == other.draft_calls
             && self.accepted_draft == other.accepted_draft
-            && self.per_iter_emitted == other.per_iter_emitted
+            && self.iters == other.iters
+            && self.emitted_sum == other.emitted_sum
+            && self.emitted_max == other.emitted_max
             && self.finished_by_eos == other.finished_by_eos
             && self.fallback_at == other.fallback_at
-            && self.per_iter_path_depth == other.per_iter_path_depth
+            && self.tree_iters == other.tree_iters
+            && self.path_depth_sum == other.path_depth_sum
+            && self.path_depth_max == other.path_depth_max
             && self.tree_nodes_drafted == other.tree_nodes_drafted
     }
 
@@ -597,8 +639,7 @@ impl GenStats {
         if self.tree_nodes_drafted == 0 {
             return 0.0;
         }
-        let accepted: usize = self.per_iter_path_depth.iter().sum();
-        accepted as f64 / self.tree_nodes_drafted as f64
+        self.path_depth_sum as f64 / self.tree_nodes_drafted as f64
     }
 }
 
@@ -750,7 +791,9 @@ mod tests {
         assert!(stats.finished_by_eos);
         // 13 tokens: 1 free from prefill, then windows of up to 6
         assert_eq!(stats.verify_calls, 2);
-        assert_eq!(stats.per_iter_emitted, vec![6, 6]);
+        assert_eq!(stats.iters, 2);
+        assert_eq!(stats.emitted_sum, 12);
+        assert_eq!(stats.emitted_max, 6);
         assert!((stats.mal() - 6.0).abs() < 1e-9);
     }
 
@@ -767,7 +810,8 @@ mod tests {
         assert_eq!(stats.tokens, script, "losslessness must hold even for garbage drafts");
         assert_eq!(stats.accepted_draft, 0);
         // every iteration emits exactly the correction token
-        assert!(stats.per_iter_emitted.iter().all(|&e| e == 1));
+        assert_eq!(stats.emitted_max, 1);
+        assert_eq!(stats.emitted_sum, stats.iters);
         assert!((stats.mal() - 1.0).abs() < 1e-9);
     }
 
@@ -784,8 +828,15 @@ mod tests {
         );
         let stats = dec.generate(&[], &[0; 8], 3, &greedy()).unwrap();
         assert_eq!(stats.tokens, script);
-        // iter 1: drafts for idx 1..=5 = [6,7->99 mismatch...] accepted 1
-        assert_eq!(stats.per_iter_emitted[0], 2); // 1 draft + correction
+        // isolate the first window with a tight budget: drafts for idx
+        // 1..=5 = [6,7->99 mismatch...], so it emits 1 draft + correction
+        let mut cfg = greedy();
+        cfg.max_new = 3; // prefill token + first window's 2
+        let first = dec.generate(&[], &[0; 8], 3, &cfg).unwrap();
+        assert_eq!(first.tokens, script[..3].to_vec());
+        assert_eq!(first.iters, 1);
+        assert_eq!(first.emitted_sum, 2);
+        assert_eq!(first.accepted_draft, 1);
     }
 
     #[test]
@@ -910,7 +961,9 @@ mod tests {
         let stats = dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
         assert_eq!(stats.tokens, script[..19].to_vec());
         // every iteration accepts the full 5-deep path + bonus
-        assert!(stats.per_iter_path_depth.iter().all(|&d| d == 5), "{:?}", stats.per_iter_path_depth);
+        // (max == 5 and sum == 5 * count pins all depths at exactly 5)
+        assert_eq!(stats.path_depth_max, 5);
+        assert_eq!(stats.path_depth_sum, 5 * stats.tree_iters);
         assert!((stats.mal() - 6.0).abs() < 1e-9);
         assert!(stats.tree_nodes_drafted > 5 * stats.verify_calls, "trees must branch");
         assert!(stats.branch_utilization() < 1.0);
@@ -928,8 +981,10 @@ mod tests {
         cfg.tree = Some(wide(5));
         let stats = dec.generate_tree(&[], &[0; 8], 3, &cfg).unwrap();
         assert_eq!(stats.tokens, script, "losslessness with hopeless branches");
-        assert!(stats.per_iter_path_depth.iter().all(|&d| d == 0));
-        assert!(stats.per_iter_emitted.iter().all(|&e| e == 1));
+        assert_eq!(stats.path_depth_max, 0);
+        assert!(stats.tree_iters > 0);
+        assert_eq!(stats.emitted_max, 1);
+        assert_eq!(stats.emitted_sum, stats.iters);
         assert!((stats.mal() - 1.0).abs() < 1e-9);
     }
 
@@ -1027,7 +1082,9 @@ mod tests {
         .generate_tree(&[], &[0; 8], 3, &cfg)
         .unwrap();
         assert_eq!(chain.tokens, tree.tokens);
-        assert_eq!(chain.per_iter_emitted, tree.per_iter_emitted);
+        assert_eq!(chain.iters, tree.iters);
+        assert_eq!(chain.emitted_sum, tree.emitted_sum);
+        assert_eq!(chain.emitted_max, tree.emitted_max);
         assert_eq!(chain.verify_calls, tree.verify_calls);
     }
 
@@ -1192,7 +1249,7 @@ mod tests {
         // legitimately drops the iteration's target token)
         cfg.max_new = 24;
         let stats = dec.generate(&[], &[0; 8], 3, &cfg).unwrap();
-        let emitted: usize = stats.per_iter_emitted.iter().sum();
+        let emitted = stats.emitted_sum;
         // +1 for the prefill free token
         assert_eq!(emitted + 1, stats.tokens.len());
         assert_eq!(

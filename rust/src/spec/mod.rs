@@ -4,6 +4,7 @@
 
 pub mod acceptance;
 pub mod adaptive;
+pub mod calibrate;
 pub mod decoder;
 pub mod sampler;
 pub mod session;
@@ -15,6 +16,7 @@ pub use acceptance::{
     Scratch, TreeDecision,
 };
 pub use adaptive::{AdaptiveConfig, AdaptiveDecoder, SpecMode};
+pub use calibrate::{Calibrator, CalibratorConfig, ClassSnapshot, IterObs};
 pub use decoder::{
     generate_baseline, DraftBackend, GenConfig, GenStats, SpecDecoder, SpecParams, TargetBackend,
 };

@@ -56,6 +56,7 @@ use crate::models::{DraftModel, DraftOutput, PrefixSnapshot, SeqState, TargetMod
 use crate::runtime::Tensor;
 use crate::spec::acceptance::{accept_stochastic, accept_tree_stochastic, Scratch};
 use crate::spec::adaptive::{AdaptiveConfig, SpecMode};
+use crate::spec::calibrate::{Calibrator, IterObs};
 use crate::spec::decoder::{
     sample_token, DraftBackend, GenConfig, GenStats, SpecParams, TargetBackend,
 };
@@ -142,6 +143,13 @@ struct AdaptiveState {
     tree_banned: bool,
 }
 
+/// Where a session reports its per-iteration acceptance observations.
+struct Telemetry {
+    cal: Arc<Calibrator>,
+    class: Arc<str>,
+    image_reuse: bool,
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
     Created,
@@ -178,10 +186,18 @@ pub struct DecodeSession<T: TargetBackend = TargetModel, D: DraftBackend = Draft
     /// sessions, or an adaptive session after fallback).
     mode: Option<SpecMode>,
     adaptive: Option<AdaptiveState>,
-    /// Adaptive sessions record plain post-fallback decodes in
-    /// `per_iter_emitted` (they are SD-loop iterations); pure target-only
-    /// sessions do not (back-compat with `generate_baseline` accounting).
+    /// Adaptive sessions record plain post-fallback decodes in the
+    /// emitted-iteration summary (they are SD-loop iterations); pure
+    /// target-only sessions do not (back-compat with `generate_baseline`
+    /// accounting).
     count_plain_iters: bool,
+    /// Drafter-side vision compression ratio (1 = full resolution).  Only
+    /// the drafter's prefill sees the pooled sequence; the target always
+    /// prefills at full resolution, so the emitted stream is unchanged.
+    draft_vision_ratio: u32,
+    /// Per-iteration acceptance telemetry destination (the engine's online
+    /// calibrator), tagged with this request's workload class.
+    telemetry: Option<Telemetry>,
     phase: Phase,
     /// Half-step state between `propose()` and `absorb_*` (always `None`
     /// when the session sits in a scheduler queue).
@@ -236,9 +252,37 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
                 tree_banned: false,
             }),
             count_plain_iters,
+            draft_vision_ratio: 1,
+            telemetry: None,
             phase: Phase::Created,
             pending: Pending::None,
             kv_pool: None,
+        }
+    }
+
+    /// Compress the drafter's vision prefill by `ratio` (call before
+    /// prefill; 1 = full resolution, clamped up from 0).  Lossless: only
+    /// the drafter's agreement rate and prefill cost move.
+    pub fn set_draft_vision_ratio(&mut self, ratio: u32) {
+        self.draft_vision_ratio = ratio.max(1);
+    }
+
+    /// Route per-iteration accept/reject observations to `cal`, tagged
+    /// with this request's workload `class` and whether its image was
+    /// served from cache (call before stepping).
+    pub fn set_telemetry(&mut self, cal: Arc<Calibrator>, class: &str, image_reuse: bool) {
+        self.telemetry = Some(Telemetry { cal, class: Arc::from(class), image_reuse });
+    }
+
+    fn observe_accept(&self, mode: SpecMode, drafted: usize, accepted: usize) {
+        if let Some(t) = &self.telemetry {
+            t.cal.observe(&IterObs {
+                class: t.class.clone(),
+                mode,
+                drafted,
+                accepted,
+                image_reuse: t.image_reuse,
+            });
         }
     }
 
@@ -347,8 +391,15 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
         self.tstate = Some(tstate);
         if self.mode.is_some() {
             let drafter = self.drafter.as_ref().expect("speculative session without drafter");
-            self.dstate =
-                Some(drafter.prefill_encoded(Some(enc), prompt, len, self.text_only_draft)?);
+            let td = Instant::now();
+            self.dstate = Some(drafter.prefill_encoded(
+                Some(enc),
+                prompt,
+                len,
+                self.text_only_draft,
+                self.draft_vision_ratio,
+            )?);
+            self.stats.draft_prefill_micros = td.elapsed().as_micros() as u64;
         }
         self.paginate_states();
         self.stats.encode_micros = encode_micros;
@@ -719,7 +770,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
         let tok = sample_token(logits, &self.cfg, &mut self.probs, &mut self.rng);
         self.stats.tokens.push(tok);
         if self.count_plain_iters {
-            self.stats.per_iter_emitted.push(1);
+            self.stats.record_emitted(1);
         }
         if tok == eos {
             self.stats.finished_by_eos = true;
@@ -746,6 +797,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             &mut self.rng,
             &mut self.scratch,
         );
+        self.observe_accept(SpecMode::Chain, out.tokens.len(), dec.accepted);
         let mut emitted_tokens: Vec<i32> = Vec::new();
         let mut emitted = 0usize;
         for &tok in &out.tokens[..dec.accepted] {
@@ -755,12 +807,12 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             if tok == eos {
                 self.stats.finished_by_eos = true;
                 self.stats.accepted_draft += emitted;
-                self.stats.per_iter_emitted.push(emitted);
+                self.stats.record_emitted(emitted);
                 return Ok(IterResult::Done);
             }
             if self.stats.tokens.len() >= self.max_new {
                 self.stats.accepted_draft += emitted;
-                self.stats.per_iter_emitted.push(emitted);
+                self.stats.record_emitted(emitted);
                 return Ok(IterResult::Done);
             }
         }
@@ -781,6 +833,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             &mut self.rng,
             &mut self.scratch,
         );
+        self.observe_accept(SpecMode::Tree, self.tree_cfg.depth(), dec.path.len());
         let mut emitted_tokens: Vec<i32> = Vec::new();
         let mut emitted = 0usize;
         for &node in &dec.path {
@@ -791,19 +844,19 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
             if tok == eos {
                 self.stats.finished_by_eos = true;
                 self.stats.accepted_draft += emitted;
-                self.stats.per_iter_emitted.push(emitted);
-                self.stats.per_iter_path_depth.push(emitted);
+                self.stats.record_emitted(emitted);
+                self.stats.record_path_depth(emitted);
                 return Ok(IterResult::Done);
             }
             if self.stats.tokens.len() >= self.max_new {
                 self.stats.accepted_draft += emitted;
-                self.stats.per_iter_emitted.push(emitted);
-                self.stats.per_iter_path_depth.push(emitted);
+                self.stats.record_emitted(emitted);
+                self.stats.record_path_depth(emitted);
                 return Ok(IterResult::Done);
             }
         }
         self.stats.accepted_draft += emitted;
-        self.stats.per_iter_path_depth.push(dec.path.len());
+        self.stats.record_path_depth(dec.path.len());
         if let Some(ad) = self.adaptive.as_mut() {
             ad.tree_iters += 1;
             let util = if tree.is_empty() {
@@ -835,7 +888,7 @@ impl<T: TargetBackend, D: DraftBackend> DecodeSession<T, D> {
         let emitted = emitted_tokens.len() + 1;
         self.stats.tokens.push(next_token);
         emitted_tokens.push(next_token);
-        self.stats.per_iter_emitted.push(emitted);
+        self.stats.record_emitted(emitted);
         if next_token == eos {
             self.stats.finished_by_eos = true;
             return Ok(IterResult::Done);
@@ -1160,7 +1213,7 @@ mod tests {
         streamed.extend_from_slice(&stats.tokens[streamed.len()..]);
         assert_eq!(streamed, oneshot.tokens);
         assert_eq!(stats.tokens, oneshot.tokens);
-        assert_eq!(stats.per_iter_emitted, oneshot.per_iter_emitted);
+        assert!(stats.same_generation(&oneshot));
         assert!(sess.finished());
         assert!(sess.step().is_err(), "stepping a finished session errors");
     }
@@ -1195,7 +1248,7 @@ mod tests {
         );
         let stats = sess.run_to_completion(&[], &[0; 8], 3).unwrap();
         assert_eq!(stats.tokens, oneshot.tokens);
-        assert_eq!(stats.per_iter_path_depth, oneshot.per_iter_path_depth);
+        assert!(stats.same_generation(&oneshot));
         assert_eq!(stats.tree_nodes_drafted, oneshot.tree_nodes_drafted);
     }
 

@@ -65,6 +65,24 @@ pub fn load_all_tasks(
         .collect()
 }
 
+/// Workload classes the schedule generators tag arrivals with, mirroring
+/// the serving-mix taxonomy (`Request::task` buckets): interactive
+/// multi-turn chat, bulk captioning, and document/OCR-style long reads.
+/// The acceptance calibrator (`spec::calibrate`) keys its per-class EWMAs
+/// on these strings.
+pub const CLASSES: [&str; 3] = ["chat", "caption", "doc"];
+
+/// Deterministic per-arrival class stream.  Classes draw from an rng
+/// derived from (but distinct from) the schedule seed, so tagging never
+/// perturbs the at/item/image sequences existing benches and tests pin.
+fn class_rng(seed: u64) -> Rng {
+    Rng::seeded(seed ^ 0x9E37_79B9_7F4A_7C15)
+}
+
+fn draw_class(rng: &mut Rng) -> &'static str {
+    CLASSES[rng.range(CLASSES.len())]
+}
+
 /// Open-loop arrival schedule: Poisson process at `rate` req/s over `n`
 /// requests drawn round-robin-with-jitter from the eval items.
 #[derive(Debug, Clone)]
@@ -73,15 +91,18 @@ pub struct Arrival {
     pub at: f64,
     /// index into the item pool
     pub item: usize,
+    /// workload class tag (see `CLASSES`)
+    pub class: &'static str,
 }
 
 pub fn poisson_schedule(n: usize, rate: f64, pool: usize, seed: u64) -> Vec<Arrival> {
     let mut rng = Rng::seeded(seed);
+    let mut crng = class_rng(seed);
     let mut t = 0.0;
     (0..n)
         .map(|_| {
             t += rng.exponential(rate);
-            Arrival { at: t, item: rng.range(pool) }
+            Arrival { at: t, item: rng.range(pool), class: draw_class(&mut crng) }
         })
         .collect()
 }
@@ -108,6 +129,10 @@ pub struct MmArrival {
     pub item: usize,
     /// index into the image pool
     pub image: usize,
+    /// workload class tag (see `CLASSES`).  Multi-turn continuations
+    /// (image reuse) keep the previous arrival's class: a chat turn on
+    /// the same image is still the same conversation.
+    pub class: &'static str,
 }
 
 /// Poisson arrivals over a prompt pool with correlated image reuse: with
@@ -125,15 +150,18 @@ pub fn repeated_image_schedule(
 ) -> Vec<MmArrival> {
     assert!(item_pool > 0 && knobs.image_pool > 0, "pools must be non-empty");
     let mut rng = Rng::seeded(seed);
+    let mut crng = class_rng(seed);
     let mut t = 0.0;
     let mut image = 0usize;
+    let mut class = CLASSES[0];
     (0..n)
         .map(|i| {
             t += rng.exponential(rate);
             if i == 0 || rng.f64() >= knobs.reuse_prob {
                 image = rng.range(knobs.image_pool);
+                class = draw_class(&mut crng);
             }
-            MmArrival { at: t, item: rng.range(item_pool), image }
+            MmArrival { at: t, item: rng.range(item_pool), image, class }
         })
         .collect()
 }
@@ -174,16 +202,19 @@ pub fn hotspot_image_schedule(
     }
     let total = acc;
     let mut rng = Rng::seeded(seed);
+    let mut crng = class_rng(seed);
     let mut t = 0.0;
     let mut image = 0usize;
+    let mut class = CLASSES[0];
     (0..n)
         .map(|i| {
             t += rng.exponential(rate);
             if i == 0 || rng.f64() >= knobs.reuse_prob {
                 let u = rng.f64() * total;
                 image = cdf.partition_point(|&c| c <= u).min(knobs.image_pool - 1);
+                class = draw_class(&mut crng);
             }
-            MmArrival { at: t, item: rng.range(item_pool), image }
+            MmArrival { at: t, item: rng.range(item_pool), image, class }
         })
         .collect()
 }
@@ -278,6 +309,34 @@ mod tests {
         let a = hotspot_image_schedule(64, 100.0, 4, &knobs, 9);
         let b = hotspot_image_schedule(64, 100.0, 4, &knobs, 9);
         assert!(a.iter().zip(&b).all(|(x, y)| x.image == y.image && x.item == y.item));
+    }
+
+    #[test]
+    fn schedules_tag_workload_classes() {
+        // every arrival carries a known class, all classes appear, and the
+        // tagging is deterministic per seed
+        let s = poisson_schedule(600, 20.0, 4, 42);
+        assert!(s.iter().all(|a| CLASSES.contains(&a.class)));
+        for c in CLASSES {
+            assert!(s.iter().any(|a| a.class == c), "class {c} never drawn");
+        }
+        let s2 = poisson_schedule(600, 20.0, 4, 42);
+        assert!(s.iter().zip(&s2).all(|(a, b)| a.class == b.class));
+
+        // multi-turn continuations keep the previous class: under full
+        // reuse the whole stream is one conversation, one class
+        let knobs = RepeatKnobs { image_pool: 8, reuse_prob: 1.0 };
+        let pinned = repeated_image_schedule(100, 50.0, 4, &knobs, 3);
+        assert!(pinned.iter().all(|a| a.class == pinned[0].class));
+        // and with no reuse, classes mix
+        let knobs = RepeatKnobs { image_pool: 8, reuse_prob: 0.0 };
+        let mixed = repeated_image_schedule(600, 50.0, 4, &knobs, 5);
+        for c in CLASSES {
+            assert!(mixed.iter().any(|a| a.class == c), "class {c} never drawn");
+        }
+        let hot = HotSpotKnobs { image_pool: 8, zipf_s: 1.1, reuse_prob: 0.3 };
+        let h = hotspot_image_schedule(600, 100.0, 4, &hot, 9);
+        assert!(h.iter().all(|a| CLASSES.contains(&a.class)));
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Drafter-side vision compression equivalence tests (docs/drafting.md):
+//! pooling the DRAFTER's vision sequence changes drafter cost and
+//! acceptance rates, never emitted greedy tokens -- the target always
+//! verifies at full resolution, and greedy acceptance emits exactly the
+//! target's argmax sequence no matter what the drafter proposed.  Also
+//! covers the acceptance calibrator's serving-level guarantees: greedy
+//! outputs are bit-identical with calibration on or off, and the
+//! telemetry JSONL export is well-formed.
+
+use std::sync::Arc;
+
+use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
+
+fn scripted_artifacts(tag: &str, gen_max: usize) -> String {
+    massv::models::scripted::write_test_artifacts(tag, gen_max, false)
+}
+
+fn image(phase: usize) -> Vec<f32> {
+    massv::models::scripted::demo_image(phase)
+}
+
+fn request(engine: &Engine, mode: DecodeMode, prompt: &str, img_phase: usize) -> Request {
+    let mut req = Request::simple(engine.next_id(), prompt, image(img_phase));
+    req.mode = mode;
+    req
+}
+
+fn spec_mode(adaptive: bool) -> DecodeMode {
+    DecodeMode::Speculative { variant: "massv".into(), text_only_draft: false, adaptive }
+}
+
+fn tree_mode(adaptive: bool) -> DecodeMode {
+    DecodeMode::Tree { variant: "massv".into(), text_only_draft: false, adaptive }
+}
+
+/// THE compression property: greedy outputs are bit-identical across
+/// drafter vision ratios 1/4/16, for chain, tree, and adaptive sessions,
+/// cold and warm.  Acceptance accounting (verify_calls, accepted_draft)
+/// may differ -- a compressed drafter agrees less -- but the token stream
+/// may not.
+#[test]
+fn prop_compressed_drafter_preserves_greedy_tokens() {
+    let dir = scripted_artifacts("drafting_ratio_prop", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let prompts = ["w5 w6 w7", "w8 w9", "w10 w11 w12 w13", "w14"];
+
+    let eng = engine.clone();
+    massv::util::prop::propcheck("greedy tokens invariant under vision ratio", 18, move |rng| {
+        let prompt = prompts[rng.range(prompts.len())];
+        let phase = rng.range(5);
+        let mode = match rng.range(3) {
+            0 => spec_mode(rng.range(2) == 0),
+            1 => tree_mode(rng.range(2) == 0),
+            _ => spec_mode(false),
+        };
+        let seed = rng.next_u64();
+        let make = |ratio: Option<u32>| {
+            let mut r = request(&eng, mode.clone(), prompt, phase);
+            r.gen.temperature = 0.0;
+            r.gen.seed = seed;
+            r.draft_vision_ratio = ratio;
+            r
+        };
+
+        let full = eng.run(make(None));
+        if full.error.is_some() {
+            return Err(format!("full-res run failed: {:?}", full.error));
+        }
+        for ratio in [4u32, 16] {
+            // cold at this ratio (first touch fills a ratio-specific
+            // prefix line), then warm
+            for pass in ["cold", "warm"] {
+                let r = eng.run(make(Some(ratio)));
+                if r.error.is_some() {
+                    return Err(format!("ratio {ratio} {pass} run failed: {:?}", r.error));
+                }
+                if r.tokens != full.tokens {
+                    return Err(format!(
+                        "ratio {ratio} {pass} tokens {:?} != full-res tokens {:?}",
+                        r.tokens, full.tokens
+                    ));
+                }
+                if r.finish_reason != full.finish_reason
+                    || r.finished_by_eos != full.finished_by_eos
+                {
+                    return Err(format!(
+                        "ratio {ratio} {pass} finish ({}, {}) != full-res ({}, {})",
+                        r.finish_reason, r.finished_by_eos, full.finish_reason,
+                        full.finished_by_eos
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+
+    let engine = Arc::try_unwrap(engine).unwrap_or_else(|_| panic!("engine still shared"));
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Prefix-cache separation across ratios: a warm start at one ratio must
+/// not resume from another ratio's drafter KV.  Same image + prompt at
+/// ratio 1 then ratio 4: the second is a cache MISS (ratio is part of the
+/// key), and each ratio is warm on its own resubmission.
+#[test]
+fn prefix_cache_keys_separate_vision_ratios() {
+    let dir = scripted_artifacts("drafting_ratio_cache", 48);
+    let engine = Engine::start(&dir, EngineConfig::default()).unwrap();
+    let make = |ratio: u32| {
+        let mut r = request(&engine, spec_mode(false), "w5 w6 w7", 0);
+        r.gen.temperature = 0.0;
+        r.draft_vision_ratio = Some(ratio);
+        r
+    };
+
+    let a = engine.run(make(1));
+    assert!(a.error.is_none(), "{:?}", a.error);
+    assert!(!a.cache_hit, "first touch is cold");
+
+    let b = engine.run(make(4));
+    assert!(b.error.is_none(), "{:?}", b.error);
+    assert!(!b.cache_hit, "a different ratio must not hit ratio 1's prefix");
+    assert_eq!(b.tokens, a.tokens, "compression is output-lossless");
+
+    let a2 = engine.run(make(1));
+    let b2 = engine.run(make(4));
+    assert!(a2.cache_hit && b2.cache_hit, "both ratios must be warm now");
+    assert_eq!(a2.tokens, a.tokens);
+    assert_eq!(b2.tokens, a.tokens);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The engine-level default (`EngineConfig::draft_vision_ratio`) applies
+/// to requests without their own override, produces the same tokens as
+/// full resolution, and per-request overrides still win.
+#[test]
+fn engine_config_ratio_default_is_lossless() {
+    let dir = scripted_artifacts("drafting_engine_cfg", 48);
+    let full = Engine::start(&dir, EngineConfig::default()).unwrap();
+    let pooled = Engine::start(
+        &dir,
+        EngineConfig { draft_vision_ratio: 4, ..EngineConfig::default() },
+    )
+    .unwrap();
+
+    for (i, prompt) in ["w5 w6 w7", "w8 w9", "w10 w11"].iter().enumerate() {
+        let a = full.run(request(&full, spec_mode(false), prompt, i));
+        let b = pooled.run(request(&pooled, spec_mode(false), prompt, i));
+        assert!(a.error.is_none() && b.error.is_none());
+        assert_eq!(b.tokens, a.tokens, "engine-level ratio must be lossless on {prompt:?}");
+
+        // per-request override beats the engine default and stays lossless
+        let mut over = request(&pooled, spec_mode(false), prompt, i);
+        over.draft_vision_ratio = Some(16);
+        let c = pooled.run(over);
+        assert!(c.error.is_none(), "{:?}", c.error);
+        assert_eq!(c.tokens, a.tokens);
+    }
+    full.shutdown();
+    pooled.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Calibration is output-lossless at T=0 (chain<->tree steering never
+/// changes greedy tokens), warms per-class state visible in `scrape`, and
+/// streams well-formed JSONL telemetry for the self-distillation exporter.
+#[test]
+fn calibration_is_lossless_and_exports_telemetry() {
+    let dir = scripted_artifacts("drafting_calib", 48);
+    let jsonl = std::path::PathBuf::from(format!("{dir}/acceptance.jsonl"));
+    let plain = Engine::start(&dir, EngineConfig::default()).unwrap();
+    let calibrated = Engine::start(
+        &dir,
+        EngineConfig {
+            calibration: true,
+            calib_jsonl: Some(jsonl.clone()),
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(calibrated.calibrator.is_some());
+
+    let classes = ["chat", "caption", "doc"];
+    let prompts = ["w5 w6 w7", "w8 w9", "w10 w11 w12 w13"];
+    // enough traffic per class to pass the calibrator's warmup; greedy
+    // outputs must match the uncalibrated engine request for request
+    for round in 0..6 {
+        for (ci, class) in classes.iter().enumerate() {
+            let prompt = prompts[(round + ci) % prompts.len()];
+            let phase = (round + ci) % 4;
+            let make = |eng: &Engine| {
+                let mut r = request(eng, spec_mode(false), prompt, phase);
+                r.task = class.to_string();
+                r.gen.temperature = 0.0;
+                r
+            };
+            let a = plain.run(make(&plain));
+            let b = calibrated.run(make(&calibrated));
+            assert!(a.error.is_none() && b.error.is_none());
+            assert_eq!(
+                b.tokens, a.tokens,
+                "calibration must not change greedy tokens (class {class}, round {round})"
+            );
+        }
+    }
+
+    // per-class state is exported through scrape
+    let m = calibrated.scrape();
+    for class in classes {
+        let obs = m
+            .get(&format!("calib_obs{{class=\"{class}\"}}"))
+            .unwrap_or_else(|| panic!("scrape must export calib_obs for {class}: {m:?}"));
+        assert!(*obs > 0.0, "class {class} saw no observations");
+        assert!(m.contains_key(&format!("calib_alpha{{class=\"{class}\"}}")));
+        assert!(m.contains_key(&format!("calib_gamma{{class=\"{class}\"}}")));
+        assert!(m.contains_key(&format!("calib_tree{{class=\"{class}\"}}")));
+    }
+
+    plain.shutdown();
+    calibrated.shutdown();
+
+    // the JSONL telemetry is one well-formed object per observation
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(!lines.is_empty(), "telemetry file must not be empty");
+    for line in &lines {
+        let v = massv::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e:#}"));
+        let class = v.req("class").unwrap().as_str().unwrap().to_string();
+        assert!(classes.contains(&class.as_str()), "unknown class {class:?}");
+        let mode = v.req("mode").unwrap().as_str().unwrap().to_string();
+        assert!(mode == "chain" || mode == "tree", "unknown mode {mode:?}");
+        let drafted = v.req("drafted").unwrap().as_usize().unwrap();
+        let accepted = v.req("accepted").unwrap().as_usize().unwrap();
+        assert!(drafted >= 1, "observations only cover drafting iterations");
+        assert!(accepted <= drafted, "accepted {accepted} > drafted {drafted}");
+        v.req("image_reuse").unwrap().as_bool().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
