@@ -33,9 +33,10 @@ use std::sync::{mpsc, Mutex};
 use anyhow::Result;
 
 use crate::cache;
-use crate::coordinator::engine::{Engine, EngineConfig, Update};
+use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::front::EngineFront;
 use crate::coordinator::request::{Request, Response};
+use crate::coordinator::stream::UpdateReceiver;
 use crate::manifest::Manifest;
 use crate::metrics::Counter;
 use crate::util::rng::Rng;
@@ -266,7 +267,7 @@ impl ClusterEngine {
     }
 
     /// Route + submit for streaming delivery.
-    pub fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
+    pub fn submit_streaming(&self, req: Request) -> UpdateReceiver {
         self.place(&req).engine.submit_streaming(req)
     }
 
@@ -371,6 +372,16 @@ impl ClusterEngine {
             let v = scrapes.iter().map(|s| get(s, k)).fold(0.0, f64::max);
             out.insert(k.to_string(), v);
         }
+        // per-tenant labeled keys (`tenant_received{tenant="x"}` ...) are
+        // dynamic -- one set per tenant name -- so they are summed by
+        // prefix scan instead of being listed in SUMMED
+        for s in &scrapes {
+            for (k, v) in s {
+                if k.starts_with("tenant_") {
+                    *out.entry(k.clone()).or_insert(0.0) += v;
+                }
+            }
+        }
         // derived ratios recomputed from the summed parts (a mean of
         // per-replica ratios would weight an idle replica like a busy one)
         let hits = out["prefix_cache_hits"];
@@ -451,7 +462,7 @@ impl EngineFront for ClusterEngine {
         ClusterEngine::run(self, req)
     }
 
-    fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
+    fn submit_streaming(&self, req: Request) -> UpdateReceiver {
         ClusterEngine::submit_streaming(self, req)
     }
 

@@ -80,6 +80,7 @@ use crate::cache::{self, PrefixCache, PrefixKey, PrefixLookup};
 use crate::coordinator::request::{DecodeMode, Request, Response};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{Scheduler, Submit};
+use crate::coordinator::stream::{update_channel, UpdateReceiver, UpdateSender};
 use crate::kv::{KvPool, KvPoolConfig};
 use crate::metrics::Metrics;
 use crate::models::{DraftModel, ModelSet, SeqState, TargetModel, VisionEncoding};
@@ -150,6 +151,16 @@ pub struct EngineConfig {
     /// per iteration -- the `python/compile/selfdistill.py` training-data
     /// export).  Only read when `calibration` is on.
     pub calib_jsonl: Option<std::path::PathBuf>,
+    /// Maximum chunk frames buffered per streaming request (clamped to
+    /// >= 1).  A consumer that stalls past this bound gets later chunks
+    /// coalesced into the newest queued frame (`coordinator::stream`):
+    /// the delivered token sequence is unchanged, memory stays bounded.
+    pub stream_chunk_cap: usize,
+    /// Fair-share weights for the weighted-fair scheduler, applied at
+    /// startup (`Scheduler::set_weight`).  Tenants not listed here get
+    /// weight 1.  A request's tenant comes from `Request::tenant`
+    /// (HTTP `x-tenant` header / wire `tenant` field).
+    pub tenant_weights: Vec<(String, u32)>,
 }
 
 impl Default for EngineConfig {
@@ -167,6 +178,8 @@ impl Default for EngineConfig {
             draft_vision_ratio: 0,
             calibration: false,
             calib_jsonl: None,
+            stream_chunk_cap: 64,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -187,7 +200,8 @@ enum Reply {
     /// Final `Response` only (`Engine::submit` / `Engine::run`).
     Oneshot(mpsc::Sender<Response>),
     /// Per-step chunks then the final response (`Engine::submit_streaming`).
-    Stream(mpsc::Sender<Update>),
+    /// The sender is the bounded coalescing channel (`coordinator::stream`).
+    Stream(UpdateSender),
 }
 
 struct Job {
@@ -288,6 +302,7 @@ pub struct Engine {
     cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    stream_chunk_cap: usize,
 }
 
 impl Engine {
@@ -301,6 +316,9 @@ impl Engine {
         let cancels = Arc::new(Mutex::new(HashMap::new()));
 
         metrics.batch_max_lanes.set(cfg.max_batch.max(1) as i64);
+        for (tenant, weight) in &cfg.tenant_weights {
+            sched.set_weight(tenant, *weight);
+        }
         let calibrator = if cfg.calibration {
             let cal = Arc::new(Calibrator::new(
                 CalibratorConfig::default(),
@@ -356,6 +374,7 @@ impl Engine {
             cancels,
             workers,
             next_id: AtomicU64::new(1),
+            stream_chunk_cap: cfg.stream_chunk_cap,
         })
     }
 
@@ -373,9 +392,11 @@ impl Engine {
 
     /// Submit a request for streaming delivery: one `Update::Chunk` per
     /// decode step, then `Update::Done` with the summary response.  If the
-    /// receiver is dropped mid-stream the session is cancelled.
-    pub fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
-        let (tx, rx) = mpsc::channel();
+    /// receiver is dropped mid-stream the session is cancelled.  The
+    /// channel is bounded (`EngineConfig::stream_chunk_cap`): a consumer
+    /// that stalls gets later chunks coalesced, never an unbounded queue.
+    pub fn submit_streaming(&self, req: Request) -> UpdateReceiver {
+        let (tx, rx) = update_channel(self.stream_chunk_cap);
         self.enqueue(req, Reply::Stream(tx));
         rx
     }
@@ -384,6 +405,8 @@ impl Engine {
         self.metrics.requests_received.inc();
         let id = req.id;
         let priority = req.priority;
+        let tenant = req.tenant.clone();
+        self.metrics.tenant(&tenant).received.inc();
         let cancel = Arc::new(AtomicBool::new(false));
         // content-address the image up front so every terminal response --
         // including rejections -- can report the reusable image_id
@@ -396,13 +419,14 @@ impl Engine {
         self.cancels.lock().unwrap().insert(id, cancel.clone());
         let t0 = Instant::now();
         let job = Job { req, enqueued: t0, reply: reply.clone(), cancel, image_id };
-        match self.sched.submit(Work::Admit(job), priority) {
+        match self.sched.submit_for(&tenant, Work::Admit(job), priority) {
             Submit::Accepted => {
                 self.metrics.queue_depth.set(self.sched.len() as i64);
             }
             Submit::Rejected => {
                 self.cancels.lock().unwrap().remove(&id);
                 self.metrics.requests_rejected.inc();
+                self.metrics.tenant(&tenant).rejected.inc();
                 // rejections are terminal outcomes too: record their (tiny)
                 // queue time and latency instead of dropping them from the
                 // histograms
@@ -743,10 +767,13 @@ impl Worker {
         self.conclude(active, outcome)
     }
 
-    /// Put a still-running session back in the queue for its next turn.
+    /// Put a still-running session back in the queue for its next turn
+    /// (under its tenant, so fair-share applies per step, not just at
+    /// admission).
     fn requeue_step(&self, active: Box<Active>) {
         let prio = active.job.req.priority;
-        self.sched.requeue(Work::Step(active), prio);
+        let tenant = active.job.req.tenant.clone();
+        self.sched.requeue_for(&tenant, Work::Step(active), prio);
     }
 
     /// `conclude` plus the requeue of a still-running lane (the shared
@@ -1185,6 +1212,9 @@ impl Worker {
         self.metrics.inflight.add(-1);
         self.cancels.lock().unwrap().remove(&job.req.id);
         self.metrics.requests_failed.inc();
+        let tc = self.metrics.tenant(&job.req.tenant);
+        tc.failed.inc();
+        tc.tokens.add(stats.tokens.len() as u64);
         let latency_ms = started.elapsed().as_secs_f64() * 1000.0;
         self.metrics.queue_ms.record(queue_ms);
         self.metrics.latency_ms.record(latency_ms);
@@ -1239,11 +1269,22 @@ impl Worker {
             None if stats.finished_by_eos => "eos".to_string(),
             None => "length".to_string(),
         };
+        let tc = m.tenant(&job.req.tenant);
         match finish_reason.as_str() {
-            "cancelled" => m.requests_cancelled.inc(),
-            "deadline" => m.requests_deadline_exceeded.inc(),
-            _ => m.requests_completed.inc(),
+            "cancelled" => {
+                m.requests_cancelled.inc();
+                tc.cancelled.inc();
+            }
+            "deadline" => {
+                m.requests_deadline_exceeded.inc();
+                tc.deadline.inc();
+            }
+            _ => {
+                m.requests_completed.inc();
+                tc.completed.inc();
+            }
         }
+        tc.tokens.add(stats.tokens.len() as u64);
         self.record_terminal_stats(&stats);
         if steps > 0 {
             // requests dropped before admission never ran prefill; a 0.0

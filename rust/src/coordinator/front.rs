@@ -8,10 +8,10 @@
 //! the `replicas` knob changes topology, never the wire protocol.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 
-use crate::coordinator::engine::{Engine, Update};
+use crate::coordinator::engine::Engine;
 use crate::coordinator::request::{Request, Response};
+use crate::coordinator::stream::UpdateReceiver;
 use crate::manifest::Manifest;
 
 pub trait EngineFront: Send + Sync + 'static {
@@ -26,8 +26,10 @@ pub trait EngineFront: Send + Sync + 'static {
     fn run(&self, req: Request) -> Response;
 
     /// Submit for streaming delivery: one `Update::Chunk` per decode step,
-    /// then `Update::Done` with the summary response.
-    fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update>;
+    /// then `Update::Done` with the summary response.  The channel is
+    /// bounded (see `coordinator::stream`): a slow consumer gets coalesced
+    /// chunks, never a reordered or truncated token sequence.
+    fn submit_streaming(&self, req: Request) -> UpdateReceiver;
 
     /// Cancel a queued or in-flight request anywhere in the deployment.
     /// Returns true if the id was still live.
@@ -53,7 +55,7 @@ impl EngineFront for Engine {
         Engine::run(self, req)
     }
 
-    fn submit_streaming(&self, req: Request) -> mpsc::Receiver<Update> {
+    fn submit_streaming(&self, req: Request) -> UpdateReceiver {
         Engine::submit_streaming(self, req)
     }
 

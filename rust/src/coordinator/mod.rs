@@ -13,9 +13,11 @@ pub mod front;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+pub mod stream;
 
 pub use engine::{Engine, EngineConfig, SchedPolicy, Update};
 pub use front::EngineFront;
 pub use request::{DecodeMode, Priority, Request, Response};
 pub use router::{Route, Router};
-pub use scheduler::{Scheduler, Submit};
+pub use scheduler::{Scheduler, Submit, DEFAULT_TENANT};
+pub use stream::{update_channel, UpdateReceiver, UpdateSender};

@@ -78,6 +78,11 @@ pub struct Request {
     /// and the client gets the partial output with `finish_reason =
     /// "deadline"`.  `None` = no deadline.
     pub deadline_ms: Option<u64>,
+    /// Tenant the request is billed to: the weighted-fair scheduler queues
+    /// per tenant, and per-tenant counters surface as `tenant_*` scrape
+    /// keys.  Comes from the HTTP `x-tenant` header or the wire `tenant`
+    /// field; defaults to `scheduler::DEFAULT_TENANT`.
+    pub tenant: String,
 }
 
 impl Request {
@@ -98,6 +103,7 @@ impl Request {
             draft_vision_ratio: None,
             priority: Priority::Interactive,
             deadline_ms: None,
+            tenant: crate::coordinator::scheduler::DEFAULT_TENANT.into(),
         }
     }
 }

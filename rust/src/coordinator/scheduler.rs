@@ -1,10 +1,20 @@
-//! Two-class admission-controlled scheduler.
+//! Weighted-fair, two-class, admission-controlled scheduler.
 //!
-//! Interactive requests are served ahead of batch requests, but batch never
-//! starves: after `AGING_LIMIT` consecutive interactive dispatches with
-//! batch work waiting, one batch job is forced through.  Admission is
-//! bounded (`capacity`); when the queue is full the submitter gets an
-//! immediate `Rejected` -- backpressure instead of unbounded memory.
+//! Work is queued per **tenant**, and tenants are served credit-based
+//! round-robin: each refill round grants every tenant `weight` credits
+//! (default 1, `set_weight`), and a dispatch consumes one credit, so over
+//! any window tenants with queued work split dispatches in proportion to
+//! their weights -- a flooding tenant cannot starve a light one.  Within
+//! a tenant the original two-class policy is unchanged: interactive
+//! requests are served ahead of batch requests, but batch never starves
+//! -- after `AGING_LIMIT` consecutive interactive dispatches with batch
+//! work waiting, one batch job is forced through.  The single-tenant case
+//! (every caller using `submit`/`requeue`, which route to the default
+//! tenant) degenerates to exactly the old two-class behavior.
+//!
+//! Admission is bounded (`capacity`, across all tenants); when the queue
+//! is full the submitter gets an immediate `Rejected` -- backpressure
+//! instead of unbounded memory.
 //!
 //! Under continuous batching the queue holds *steps*, not requests: a
 //! worker pops one item, runs one decode iteration, and `requeue`s the
@@ -21,33 +31,135 @@
 //! aging limit.
 //!
 //! `pop_batch` extends the single pop for cross-request batching: the
-//! first item is chosen exactly as `pop` would (aging policy included),
+//! first item is chosen exactly as `pop` would (weighted-fair + aging),
 //! then up to `max - 1` queued items with the same caller-supplied key are
 //! ganged into the same dispatch -- the engine keys steps by lane
 //! compatibility (`coordinator::engine`) and leaves admissions keyless so
-//! they always dispatch alone.  A gang counts as one dispatch for aging.
+//! they always dispatch alone.  A gang counts as one dispatch for aging
+//! and consumes one credit: lanes riding along are free work on a pass
+//! that runs anyway, whichever tenant they belong to.
 //!
 //! Invariants (property-tested below):
-//!   * FIFO within a class
-//!   * no starvation of either class
+//!   * FIFO within a (tenant, class)
+//!   * no starvation of either class or any tenant
 //!   * admissions are rejected whenever depth >= capacity; only requeues
 //!     may push depth past it
 //!   * every submitted job is either dispatched exactly once or rejected
 //!     (gangs included: `pop_batch` never duplicates or drops an item)
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
 use crate::coordinator::request::Priority;
 
 const AGING_LIMIT: usize = 4;
 
+/// Tenant name used by the tenant-less `submit`/`requeue` wrappers and as
+/// the wire-level default when a request names no tenant.
+pub const DEFAULT_TENANT: &str = "default";
+
 #[derive(Debug)]
-struct State<T> {
+struct TenantQ<T> {
+    name: String,
+    weight: u32,
+    credit: u32,
     interactive: VecDeque<T>,
     batch: VecDeque<T>,
     consecutive_interactive: usize,
+}
+
+impl<T> TenantQ<T> {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+
+    /// The original two-class aging pick, scoped to this tenant.
+    fn pick(&mut self) -> Option<T> {
+        let force_batch = self.consecutive_interactive >= AGING_LIMIT && !self.batch.is_empty();
+        if !force_batch {
+            if let Some(it) = self.interactive.pop_front() {
+                self.consecutive_interactive += 1;
+                return Some(it);
+            }
+        }
+        if let Some(it) = self.batch.pop_front() {
+            self.consecutive_interactive = 0;
+            return Some(it);
+        }
+        // batch empty: retry interactive (force_batch may have skipped it)
+        if let Some(it) = self.interactive.pop_front() {
+            self.consecutive_interactive += 1;
+            return Some(it);
+        }
+        None
+    }
+}
+
+#[derive(Debug)]
+struct State<T> {
+    tenants: Vec<TenantQ<T>>,
+    cursor: usize,
+    weights: HashMap<String, u32>,
     closed: bool,
+}
+
+impl<T> State<T> {
+    fn total(&self) -> usize {
+        self.tenants.iter().map(|t| t.len()).sum()
+    }
+
+    fn tenant_mut(&mut self, name: &str) -> &mut TenantQ<T> {
+        if let Some(i) = self.tenants.iter().position(|t| t.name == name) {
+            return &mut self.tenants[i];
+        }
+        let weight = self.weights.get(name).copied().unwrap_or(1);
+        self.tenants.push(TenantQ {
+            name: name.to_string(),
+            weight,
+            credit: 0,
+            interactive: VecDeque::new(),
+            batch: VecDeque::new(),
+            consecutive_interactive: 0,
+        });
+        self.tenants.last_mut().unwrap()
+    }
+
+    /// Weighted-fair pick: serve the first tenant at/after the cursor
+    /// that has both queued work and credit; when every tenant with work
+    /// is out of credit, refill all credits from the weights and retry.
+    /// Emptied tenant queues are pruned (their configured weight persists
+    /// in the weights map).
+    fn pick(&mut self) -> Option<T> {
+        if self.total() == 0 {
+            return None;
+        }
+        loop {
+            let n = self.tenants.len();
+            let found = (0..n)
+                .map(|off| (self.cursor + off) % n)
+                .find(|&i| self.tenants[i].len() > 0 && self.tenants[i].credit > 0);
+            match found {
+                Some(i) => {
+                    self.cursor = i;
+                    let t = &mut self.tenants[i];
+                    t.credit -= 1;
+                    let item = t.pick();
+                    if self.tenants[i].len() == 0 {
+                        self.tenants.remove(i);
+                        if self.cursor >= self.tenants.len() {
+                            self.cursor = 0;
+                        }
+                    }
+                    return item;
+                }
+                None => {
+                    for t in &mut self.tenants {
+                        t.credit = t.weight.max(1);
+                    }
+                }
+            }
+        }
+    }
 }
 
 pub struct Scheduler<T> {
@@ -66,9 +178,9 @@ impl<T> Scheduler<T> {
     pub fn new(capacity: usize) -> Self {
         Scheduler {
             state: Mutex::new(State {
-                interactive: VecDeque::new(),
-                batch: VecDeque::new(),
-                consecutive_interactive: 0,
+                tenants: Vec::new(),
+                cursor: 0,
+                weights: HashMap::new(),
                 closed: false,
             }),
             cv: Condvar::new(),
@@ -77,23 +189,40 @@ impl<T> Scheduler<T> {
     }
 
     pub fn len(&self) -> usize {
-        let s = self.state.lock().unwrap();
-        s.interactive.len() + s.batch.len()
+        self.state.lock().unwrap().total()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Non-blocking submit with admission control.
-    pub fn submit(&self, item: T, class: Priority) -> Submit {
+    /// Set a tenant's fair-share weight (credits granted per refill
+    /// round).  Applies to queued work immediately and persists across
+    /// the tenant's queue emptying.  Weight 0 is clamped to 1 at refill.
+    pub fn set_weight(&self, tenant: &str, weight: u32) {
         let mut s = self.state.lock().unwrap();
-        if s.closed || s.interactive.len() + s.batch.len() >= self.capacity {
+        s.weights.insert(tenant.to_string(), weight);
+        if let Some(t) = s.tenants.iter_mut().find(|t| t.name == tenant) {
+            t.weight = weight;
+        }
+    }
+
+    /// Non-blocking submit with admission control (default tenant).
+    pub fn submit(&self, item: T, class: Priority) -> Submit {
+        self.submit_for(DEFAULT_TENANT, item, class)
+    }
+
+    /// Non-blocking submit with admission control, under a tenant queue.
+    /// Capacity is a global bound across tenants.
+    pub fn submit_for(&self, tenant: &str, item: T, class: Priority) -> Submit {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.total() >= self.capacity {
             return Submit::Rejected;
         }
+        let t = s.tenant_mut(tenant);
         match class {
-            Priority::Interactive => s.interactive.push_back(item),
-            Priority::Batch => s.batch.push_back(item),
+            Priority::Interactive => t.interactive.push_back(item),
+            Priority::Batch => t.batch.push_back(item),
         }
         drop(s);
         self.cv.notify_one();
@@ -101,15 +230,22 @@ impl<T> Scheduler<T> {
     }
 
     /// Requeue an in-flight item (one that was popped and needs another
-    /// turn).  Never rejects: the item was already admitted, and requeueing
-    /// must succeed after `close` so the drain path can finish running
-    /// sessions.  (In-flight items still count toward the depth `submit`
-    /// checks -- see the module docs on capacity semantics.)
+    /// turn) on the default tenant.  See `requeue_for`.
     pub fn requeue(&self, item: T, class: Priority) {
+        self.requeue_for(DEFAULT_TENANT, item, class)
+    }
+
+    /// Requeue an in-flight item under its tenant.  Never rejects: the
+    /// item was already admitted, and requeueing must succeed after
+    /// `close` so the drain path can finish running sessions.  (In-flight
+    /// items still count toward the depth `submit` checks -- see the
+    /// module docs on capacity semantics.)
+    pub fn requeue_for(&self, tenant: &str, item: T, class: Priority) {
         let mut s = self.state.lock().unwrap();
+        let t = s.tenant_mut(tenant);
         match class {
-            Priority::Interactive => s.interactive.push_back(item),
-            Priority::Batch => s.batch.push_back(item),
+            Priority::Interactive => t.interactive.push_back(item),
+            Priority::Batch => t.batch.push_back(item),
         }
         drop(s);
         self.cv.notify_one();
@@ -119,7 +255,7 @@ impl<T> Scheduler<T> {
     pub fn pop(&self) -> Option<T> {
         let mut s = self.state.lock().unwrap();
         loop {
-            if let Some(item) = Self::pick(&mut s) {
+            if let Some(item) = s.pick() {
                 return Some(item);
             }
             if s.closed {
@@ -130,14 +266,15 @@ impl<T> Scheduler<T> {
     }
 
     /// Blocking batched pop: dispatch the first item exactly as `pop`
-    /// would (the two-class aging policy decides it), then gang up to
+    /// would (weighted-fair + two-class aging decide it), then gang up to
     /// `max - 1` more items whose `key` equals the first's -- scanning
-    /// interactive then batch, front-to-back, so FIFO order is preserved
-    /// among the ganged items and untouched for everything skipped.
-    /// Items whose key is `None` are never ganged and never stolen (the
-    /// engine's admissions).  The whole gang counts as ONE dispatch for
-    /// the aging rule -- lanes riding along are free work on a pass that
-    /// runs anyway.  Returns None once closed AND drained.
+    /// each tenant's interactive then batch queue, front-to-back, so FIFO
+    /// order is preserved among the ganged items and untouched for
+    /// everything skipped.  Items whose key is `None` are never ganged
+    /// and never stolen (the engine's admissions).  The whole gang counts
+    /// as ONE dispatch for the aging rule and the tenant credits -- lanes
+    /// riding along are free work on a pass that runs anyway.  Returns
+    /// None once closed AND drained.
     pub fn pop_batch<K: PartialEq>(
         &self,
         max: usize,
@@ -145,23 +282,28 @@ impl<T> Scheduler<T> {
     ) -> Option<Vec<T>> {
         let mut s = self.state.lock().unwrap();
         loop {
-            if let Some(first) = Self::pick(&mut s) {
+            if let Some(first) = s.pick() {
                 let k = key(&first);
                 let mut gang = Vec::with_capacity(max.max(1));
                 gang.push(first);
                 if let Some(k) = k {
-                    let State { interactive, batch, .. } = &mut *s;
-                    for q in [interactive, batch] {
-                        let mut i = 0;
-                        while i < q.len() && gang.len() < max {
-                            if key(&q[i]).is_some_and(|ki| ki == k) {
-                                if let Some(item) = q.remove(i) {
-                                    gang.push(item);
+                    for t in &mut s.tenants {
+                        for q in [&mut t.interactive, &mut t.batch] {
+                            let mut i = 0;
+                            while i < q.len() && gang.len() < max {
+                                if key(&q[i]).is_some_and(|ki| ki == k) {
+                                    if let Some(item) = q.remove(i) {
+                                        gang.push(item);
+                                    }
+                                } else {
+                                    i += 1;
                                 }
-                            } else {
-                                i += 1;
                             }
                         }
+                    }
+                    s.tenants.retain(|t| t.len() > 0);
+                    if s.cursor >= s.tenants.len() {
+                        s.cursor = 0;
                     }
                 }
                 return Some(gang);
@@ -175,43 +317,30 @@ impl<T> Scheduler<T> {
 
     /// Non-blocking pop (for tests and the drain path).
     pub fn try_pop(&self) -> Option<T> {
-        Self::pick(&mut self.state.lock().unwrap())
+        self.state.lock().unwrap().pick()
     }
 
-    /// Visit every queued item in *reverse* dispatch priority -- the back
-    /// of the batch queue first, then the back of the interactive queue --
-    /// under the queue lock, without dequeuing anything.  `f` returns
+    /// Visit every queued item in *reverse* dispatch priority -- batch
+    /// queues back-to-front first, then interactive queues back-to-front
+    /// -- under the queue lock, without dequeuing anything.  `f` returns
     /// `false` to stop early.  This is the engine's preemption-victim
     /// order: the item the scheduler would dispatch LAST is the first one
     /// asked to give up its KV blocks under pool pressure.
     pub fn visit_backlog_mut(&self, mut f: impl FnMut(&mut T) -> bool) {
         let mut s = self.state.lock().unwrap();
-        let State { interactive, batch, .. } = &mut *s;
-        for item in batch.iter_mut().rev().chain(interactive.iter_mut().rev()) {
+        let batches = s.tenants.iter_mut().rev().flat_map(|t| t.batch.iter_mut().rev());
+        for item in batches {
             if !f(item) {
                 return;
             }
         }
-    }
-
-    fn pick(s: &mut State<T>) -> Option<T> {
-        let force_batch = s.consecutive_interactive >= AGING_LIMIT && !s.batch.is_empty();
-        if !force_batch {
-            if let Some(it) = s.interactive.pop_front() {
-                s.consecutive_interactive += 1;
-                return Some(it);
+        let interactives =
+            s.tenants.iter_mut().rev().flat_map(|t| t.interactive.iter_mut().rev());
+        for item in interactives {
+            if !f(item) {
+                return;
             }
         }
-        if let Some(it) = s.batch.pop_front() {
-            s.consecutive_interactive = 0;
-            return Some(it);
-        }
-        // batch empty: retry interactive (force_batch may have skipped it)
-        if let Some(it) = s.interactive.pop_front() {
-            s.consecutive_interactive += 1;
-            return Some(it);
-        }
-        None
     }
 
     /// Close the queue; waiting poppers drain the backlog then get None.
@@ -410,6 +539,66 @@ mod tests {
     }
 
     #[test]
+    fn weighted_tenants_split_dispatches_by_weight() {
+        let s = Scheduler::new(64);
+        s.set_weight("gold", 3);
+        s.set_weight("free", 1);
+        for i in 0..12 {
+            s.submit_for("gold", i, Priority::Interactive);
+            s.submit_for("free", 100 + i, Priority::Interactive);
+        }
+        // over any full refill rounds, dispatches split 3:1
+        let first8: Vec<i64> = (0..8).map(|_| s.try_pop().unwrap()).collect();
+        let gold = first8.iter().filter(|&&x| x < 100).count();
+        assert_eq!(gold, 6, "weight-3 tenant gets 3 of every 4 dispatches: {first8:?}");
+        // FIFO preserved within each tenant
+        let golds: Vec<i64> = first8.iter().copied().filter(|&x| x < 100).collect();
+        assert_eq!(golds, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn flooding_tenant_cannot_starve_light_tenant() {
+        let s = Scheduler::new(4096);
+        let mut flood_id = 0i64;
+        for _ in 0..64 {
+            s.submit_for("flood", flood_id, Priority::Interactive);
+            flood_id += 1;
+        }
+        // a light tenant arriving behind a deep flood backlog is served
+        // within one refill round, not after the flood drains
+        s.submit_for("user", 1_000_000, Priority::Interactive);
+        let mut pops_until_user = 0;
+        loop {
+            let x = s.try_pop().unwrap();
+            if x == 1_000_000 {
+                break;
+            }
+            pops_until_user += 1;
+            // keep the flood queue topped up while waiting
+            s.submit_for("flood", flood_id, Priority::Interactive);
+            flood_id += 1;
+        }
+        assert!(
+            pops_until_user <= 2,
+            "light tenant waited {pops_until_user} dispatches behind the flood"
+        );
+    }
+
+    #[test]
+    fn tenant_weight_survives_queue_drain() {
+        let s = Scheduler::new(64);
+        s.set_weight("gold", 3);
+        s.submit_for("gold", 1, Priority::Interactive);
+        assert_eq!(s.try_pop(), Some(1)); // queue empties, tenant pruned
+        for i in 0..6 {
+            s.submit_for("gold", 10 + i, Priority::Interactive);
+            s.submit_for("free", 100 + i, Priority::Interactive);
+        }
+        let first4: Vec<i64> = (0..4).map(|_| s.try_pop().unwrap()).collect();
+        assert_eq!(first4.iter().filter(|&&x| x < 100).count(), 3);
+    }
+
+    #[test]
     fn prop_pop_batch_dispatches_exactly_once() {
         propcheck("pop_batch exactly-once dispatch", 40, |rng: &mut Rng| {
             let cap = 4 + rng.range(40);
@@ -431,7 +620,8 @@ mod tests {
                     } else {
                         Priority::Batch
                     };
-                    if s.submit(v, class) == Submit::Accepted {
+                    let tenant = ["default", "a", "b"][rng.range(3)];
+                    if s.submit_for(tenant, v, class) == Submit::Accepted {
                         submitted.push(v);
                     }
                 } else if !s.is_empty() {
@@ -480,9 +670,10 @@ mod tests {
                     } else {
                         Priority::Batch
                     };
+                    let tenant = ["default", "t1", "t2"][rng.range(3)];
                     let id = next_id;
                     next_id += 1;
-                    match s.submit(id, class) {
+                    match s.submit_for(tenant, id, class) {
                         Submit::Accepted => submitted.push(id),
                         Submit::Rejected => rejected += 1,
                     }

@@ -1,0 +1,268 @@
+//! Bounded streaming update channel with chunk coalescing.
+//!
+//! `Engine::submit_streaming` used to hand back an unbounded
+//! `mpsc::Receiver<Update>`: a stalled consumer accumulated one
+//! `Update::Chunk` per decode step for the whole generation, so a single
+//! slow client could hold O(max_new) frames alive.  This channel bounds
+//! the buffer instead -- once `cap` chunk frames are queued, a new chunk
+//! is *coalesced* into the newest queued frame rather than appended as a
+//! frame of its own.  Chunks only ever concatenate, so the delivered
+//! token sequence is bit-identical; only the framing granularity degrades
+//! under consumer backpressure.  The sender never blocks (workers must
+//! not stall on a slow client), and sending into a dropped receiver
+//! returns an error so the engine's auto-cancel-on-disconnect path keeps
+//! working.
+//!
+//! The receiver API mirrors `std::sync::mpsc` (`recv`, `recv_timeout`,
+//! same error types) so call sites migrate without behavioral changes.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{RecvError, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::engine::Update;
+use crate::coordinator::request::Response;
+
+/// The receiver was dropped; the payload is returned to the caller.
+#[derive(Debug)]
+pub struct StreamClosed(pub Update);
+
+struct StreamState {
+    chunks: VecDeque<Vec<i32>>,
+    done: Option<Response>,
+    rx_alive: bool,
+    senders: usize,
+    /// High-water mark of queued chunk frames (bounded-memory assertions).
+    peak_chunks: usize,
+    /// Chunk sends folded into an already-queued frame.
+    coalesced: u64,
+}
+
+struct Shared {
+    state: Mutex<StreamState>,
+    cv: Condvar,
+    cap: usize,
+}
+
+/// Create a bounded update channel holding at most `cap` chunk frames
+/// (clamped to >= 1) plus the terminal `Done` response.
+pub fn update_channel(cap: usize) -> (UpdateSender, UpdateReceiver) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(StreamState {
+            chunks: VecDeque::new(),
+            done: None,
+            rx_alive: true,
+            senders: 1,
+            peak_chunks: 0,
+            coalesced: 0,
+        }),
+        cv: Condvar::new(),
+        cap: cap.max(1),
+    });
+    (UpdateSender { shared: shared.clone() }, UpdateReceiver { shared })
+}
+
+pub struct UpdateSender {
+    shared: Arc<Shared>,
+}
+
+impl UpdateSender {
+    /// Non-blocking send.  A chunk that arrives while the buffer is full
+    /// is appended onto the newest queued chunk (coalescing); `Done`
+    /// always fits.  Errors iff the receiver is gone -- the engine uses
+    /// that to auto-cancel sessions whose client disconnected.
+    pub fn send(&self, update: Update) -> Result<(), StreamClosed> {
+        let mut s = self.shared.state.lock().unwrap();
+        if !s.rx_alive {
+            return Err(StreamClosed(update));
+        }
+        match update {
+            Update::Chunk(tokens) => {
+                if s.chunks.len() >= self.shared.cap {
+                    s.coalesced += 1;
+                    // safe: cap >= 1 and len >= cap implies non-empty
+                    s.chunks.back_mut().unwrap().extend(tokens);
+                } else {
+                    s.chunks.push_back(tokens);
+                    s.peak_chunks = s.peak_chunks.max(s.chunks.len());
+                }
+            }
+            Update::Done(resp) => s.done = Some(resp),
+        }
+        drop(s);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl Clone for UpdateSender {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        UpdateSender { shared: self.shared.clone() }
+    }
+}
+
+impl Drop for UpdateSender {
+    fn drop(&mut self) {
+        let mut s = self.shared.state.lock().unwrap();
+        s.senders -= 1;
+        if s.senders == 0 {
+            drop(s);
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+pub struct UpdateReceiver {
+    shared: Arc<Shared>,
+}
+
+impl UpdateReceiver {
+    /// Blocking receive: chunks in order, then the final `Done`, then
+    /// `Err(RecvError)` once every sender is gone and the buffer drained.
+    pub fn recv(&self) -> Result<Update, RecvError> {
+        let mut s = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(u) = Self::take(&mut s) {
+                return Ok(u);
+            }
+            if s.senders == 0 {
+                return Err(RecvError);
+            }
+            s = self.shared.cv.wait(s).unwrap();
+        }
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Update, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(u) = Self::take(&mut s) {
+                return Ok(u);
+            }
+            if s.senders == 0 {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self.shared.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    fn take(s: &mut StreamState) -> Option<Update> {
+        if let Some(c) = s.chunks.pop_front() {
+            return Some(Update::Chunk(c));
+        }
+        s.done.take().map(Update::Done)
+    }
+
+    /// High-water mark of buffered chunk frames (test observability for
+    /// the bounded-memory guarantee).
+    pub fn peak_buffered(&self) -> usize {
+        self.shared.state.lock().unwrap().peak_chunks
+    }
+
+    /// Number of chunk sends that were folded into an existing frame.
+    pub fn coalesced(&self) -> u64 {
+        self.shared.state.lock().unwrap().coalesced
+    }
+}
+
+impl Drop for UpdateReceiver {
+    fn drop(&mut self) {
+        let mut s = self.shared.state.lock().unwrap();
+        s.rx_alive = false;
+        // free buffered work eagerly; senders see Err on their next send
+        s.chunks.clear();
+        s.done = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64) -> Response {
+        Response::failure(id, "x".into())
+    }
+
+    #[test]
+    fn delivers_chunks_then_done_then_disconnect() {
+        let (tx, rx) = update_channel(8);
+        tx.send(Update::Chunk(vec![1, 2])).unwrap();
+        tx.send(Update::Chunk(vec![3])).unwrap();
+        tx.send(Update::Done(resp(7))).unwrap();
+        drop(tx);
+        assert!(matches!(rx.recv(), Ok(Update::Chunk(c)) if c == vec![1, 2]));
+        assert!(matches!(rx.recv(), Ok(Update::Chunk(c)) if c == vec![3]));
+        assert!(matches!(rx.recv(), Ok(Update::Done(r)) if r.id == 7));
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn full_buffer_coalesces_without_reordering() {
+        let (tx, rx) = update_channel(2);
+        for t in 0..6 {
+            tx.send(Update::Chunk(vec![t])).unwrap();
+        }
+        tx.send(Update::Done(resp(1))).unwrap();
+        // exactly cap frames queued; later sends folded into the newest
+        assert_eq!(rx.peak_buffered(), 2);
+        assert_eq!(rx.coalesced(), 4);
+        let mut tokens = Vec::new();
+        let mut frames = 0;
+        loop {
+            match rx.recv().unwrap() {
+                Update::Chunk(c) => {
+                    tokens.extend(c);
+                    frames += 1;
+                }
+                Update::Done(_) => break,
+            }
+        }
+        assert_eq!(tokens, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(frames, 2);
+    }
+
+    #[test]
+    fn send_after_receiver_drop_errors() {
+        let (tx, rx) = update_channel(4);
+        tx.send(Update::Chunk(vec![1])).unwrap();
+        drop(rx);
+        assert!(tx.send(Update::Chunk(vec![2])).is_err());
+        assert!(tx.send(Update::Done(resp(1))).is_err());
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = update_channel(4);
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Timeout)
+        ));
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(Update::Chunk(vec![9])).unwrap();
+        });
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)),
+            Ok(Update::Chunk(c)) if c == vec![9]
+        ));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn cloned_senders_keep_channel_open_until_all_drop() {
+        let (tx, rx) = update_channel(4);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(Update::Chunk(vec![5])).unwrap();
+        drop(tx2);
+        assert!(matches!(rx.recv(), Ok(Update::Chunk(c)) if c == vec![5]));
+        assert!(rx.recv().is_err());
+    }
+}

@@ -15,6 +15,7 @@ use massv::cluster::{ClusterConfig, ClusterEngine, RoutingPolicy};
 use massv::coordinator::{DecodeMode, Engine, EngineConfig, Request};
 use massv::eval::{eval_cell, tables};
 use massv::models::ModelSet;
+use massv::server::http::{GatewayConfig, HttpServer, Quota};
 use massv::server::Server;
 use massv::spec::GenConfig;
 use massv::tokenizer::Tokenizer;
@@ -27,6 +28,8 @@ massv — multimodal speculative decoding for VLMs (MASSV reproduction)
 USAGE:
   massv serve    [--addr 127.0.0.1:7700] [--target qwensim-L] [--workers N]
                  [--replicas N] [--routing affinity|roundrobin|random]
+                 [--http-addr 127.0.0.1:7780] [--rps N] [--burst N]
+                 [--max-concurrent N] [--tenant-weights NAME=W,NAME=W...]
   massv generate --prompt \"describe the image briefly .\" [--task coco]
                  [--mode massv|massv_wo_sdvit|baseline|tree|target_only]
                  [--variant V] [--adaptive] [--temperature T] [--item N]
@@ -70,6 +73,16 @@ fn engine(artifacts: &str, args: &Args) -> Result<Engine> {
     )
 }
 
+/// Parse `--tenant-weights gold=3,free=1` into scheduler weights.
+fn parse_tenant_weights(spec: &str) -> Vec<(String, u32)> {
+    spec.split(',')
+        .filter_map(|pair| {
+            let (name, w) = pair.split_once('=')?;
+            Some((name.trim().to_string(), w.trim().parse::<u32>().ok()?))
+        })
+        .collect()
+}
+
 fn serve(artifacts: &str, args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7700");
     let replicas = args.get_usize("replicas", 1);
@@ -78,6 +91,7 @@ fn serve(artifacts: &str, args: &Args) -> Result<()> {
         "random" => RoutingPolicy::Random,
         _ => RoutingPolicy::Affinity,
     };
+    let tenant_weights = parse_tenant_weights(args.get_or("tenant-weights", ""));
     // the server always fronts a ClusterEngine; replicas=1 is a single
     // engine behind a router that always picks it (docs/cluster.md)
     let cluster = Arc::new(ClusterEngine::start(
@@ -89,11 +103,30 @@ fn serve(artifacts: &str, args: &Args) -> Result<()> {
                 default_target: args.get_or("target", "qwensim-L").to_string(),
                 workers: args.get_usize("workers", 4),
                 queue_capacity: args.get_usize("queue", 256),
+                tenant_weights,
                 ..EngineConfig::default()
             },
             ..ClusterConfig::default()
         },
     )?);
+    // optional HTTP/SSE gateway alongside the TCP front end, sharing the
+    // same cluster (docs/gateway.md)
+    if let Some(http_addr) = args.get("http-addr").map(String::from) {
+        let quota = Quota {
+            rps: args.get_f64("rps", 0.0),
+            burst: args.get_f64("burst", 0.0),
+            max_concurrent: args.get_usize("max-concurrent", 0),
+        };
+        let http = HttpServer::new(
+            cluster.clone(),
+            GatewayConfig { default_quota: quota, tenant_quotas: Vec::new() },
+        );
+        std::thread::spawn(move || {
+            if let Err(e) = http.serve(&http_addr, |a| println!("http bound {a}")) {
+                eprintln!("http gateway failed: {e:#}");
+            }
+        });
+    }
     println!(
         "massv serving on {addr} (target {}, {replicas} replica(s), {routing:?} routing)",
         args.get_or("target", "qwensim-L")
@@ -150,6 +183,7 @@ fn generate(artifacts: &str, args: &Args) -> Result<()> {
         },
         priority: massv::coordinator::Priority::Interactive,
         deadline_ms: None,
+        tenant: massv::coordinator::DEFAULT_TENANT.into(),
     };
     let resp = eng.run(req);
     println!("prompt:    {}", item.prompt);

@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 #[derive(Default)]
@@ -91,6 +91,22 @@ impl Histogram {
     pub fn snapshot(&self) -> Vec<f64> {
         self.samples.lock().unwrap().clone()
     }
+}
+
+/// Per-tenant terminal counters, surfaced as labeled scrape keys
+/// (`tenant_received{tenant="x"}` etc.).  One instance per tenant name,
+/// created lazily on first submit and never dropped -- tenant cardinality
+/// is operator-bounded (quota config), not client-bounded.
+#[derive(Default)]
+pub struct TenantCounters {
+    pub received: Counter,
+    pub completed: Counter,
+    pub rejected: Counter,
+    pub cancelled: Counter,
+    pub deadline: Counter,
+    pub failed: Counter,
+    /// output tokens attributed to this tenant (terminal accounting)
+    pub tokens: Counter,
 }
 
 /// The registry the engine and server expose.
@@ -183,6 +199,11 @@ pub struct Metrics {
     pub steps_per_request: Histogram,
     /// time-per-output-token: decode wall time over non-prefill tokens
     pub tpot_ms: Histogram,
+    /// lazily-created per-tenant counter blocks, keyed by tenant name
+    /// (gateway-level `http_*` counters live in `server::http`, which owns
+    /// the shedding decisions; tenant accounting lives here because the
+    /// engine owns terminal outcomes)
+    tenants: Mutex<HashMap<String, Arc<TenantCounters>>>,
     start: Mutex<Option<Instant>>,
 }
 
@@ -207,6 +228,14 @@ impl Metrics {
             return 0.0;
         }
         self.tokens_generated.get() as f64 / up
+    }
+
+    /// Counter block for `tenant`, created on first use.  Returns a clone
+    /// of the `Arc` so the hot path increments without holding the map
+    /// lock.
+    pub fn tenant(&self, tenant: &str) -> Arc<TenantCounters> {
+        let mut map = self.tenants.lock().unwrap();
+        map.entry(tenant.to_string()).or_default().clone()
     }
 
     /// Aggregate mean accepted length across completed requests.
@@ -282,6 +311,16 @@ impl Metrics {
         out.insert("tree_iterations".into(), self.tree_iterations.get() as f64);
         out.insert("tree_path_depth_mean".into(), self.tree_path_depth_mean());
         out.insert("branch_utilization".into(), self.branch_utilization());
+        for (name, tc) in self.tenants.lock().unwrap().iter() {
+            let key = |stat: &str| format!("tenant_{stat}{{tenant=\"{name}\"}}");
+            out.insert(key("received"), tc.received.get() as f64);
+            out.insert(key("completed"), tc.completed.get() as f64);
+            out.insert(key("rejected"), tc.rejected.get() as f64);
+            out.insert(key("cancelled"), tc.cancelled.get() as f64);
+            out.insert(key("deadline"), tc.deadline.get() as f64);
+            out.insert(key("failed"), tc.failed.get() as f64);
+            out.insert(key("tokens"), tc.tokens.get() as f64);
+        }
         out
     }
 
@@ -430,6 +469,19 @@ mod tests {
         assert!(r.contains_key("kv_swap_outs"));
         assert!(r.contains_key("kv_swap_ins"));
         assert!(r.contains_key("kv_preemptions"));
+    }
+
+    #[test]
+    fn tenant_counters_render_labeled_keys() {
+        let m = Metrics::new();
+        m.tenant("gold").received.inc();
+        m.tenant("gold").tokens.add(5);
+        m.tenant("free").rejected.inc();
+        let r = m.render();
+        assert_eq!(r["tenant_received{tenant=\"gold\"}"], 1.0);
+        assert_eq!(r["tenant_tokens{tenant=\"gold\"}"], 5.0);
+        assert_eq!(r["tenant_rejected{tenant=\"free\"}"], 1.0);
+        assert_eq!(r["tenant_completed{tenant=\"gold\"}"], 0.0);
     }
 
     #[test]

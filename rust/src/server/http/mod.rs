@@ -1,0 +1,633 @@
+//! HTTP/1.1 + SSE gateway: the engine's second front door.
+//!
+//! Same thread-per-connection `std::net` substrate as the TCP server
+//! (`tokio` is not in the offline vendored set), same `EngineFront`
+//! abstraction underneath -- a single `Engine` or a multi-replica
+//! `cluster::ClusterEngine` serves identically.  The gateway adds what a
+//! shared deployment needs at the edge: OpenAI-style JSON endpoints, SSE
+//! streaming that reuses the TCP protocol's chunk frames (so chunk
+//! concatenation is bit-identical to the TCP `tokens` array), and
+//! per-tenant admission control (token buckets + concurrency quotas) that
+//! sheds with `429`/`503` + `Retry-After` instead of queue-timeout
+//! failures.  Full endpoint reference: `docs/gateway.md`.
+//!
+//! Endpoints (one request per connection, `Connection: close`):
+//!   GET  /healthz          -> {"ok":true}
+//!   GET  /metrics          -> engine scrape + gateway `http_*` counters
+//!   POST /v1/cancel/{id}   -> {"id":n,"ok":bool}
+//!   POST /v1/generate      -> generate body (same fields as the TCP
+//!                             protocol); "stream":true switches the
+//!                             response to `text/event-stream` with one
+//!                             `data: {"id":n,"chunk":[...]}` frame per
+//!                             decode step, a `data: {summary}` frame, and
+//!                             a terminal `data: [DONE]` sentinel.
+//!
+//! The tenant is the `x-tenant` header when present, else the body's
+//! `tenant` field, else "default".  Validation is shared with the TCP
+//! protocol (`protocol::parse_generate`), so both fronts reject the same
+//! inputs -- the HTTP gateway maps those errors to `400` with the same
+//! field-naming message.
+
+pub mod admission;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Engine, EngineFront, Update};
+use crate::metrics::Counter;
+use crate::server::protocol::{
+    parse_generate, render_chunk, render_metrics, render_response,
+};
+use crate::util::json::{parse, Json};
+
+pub use admission::{Admit, AdmissionControl, Permit, Quota};
+
+/// Gateway knobs: the default quota applies to any tenant without an
+/// explicit override.  `Quota::default()` (all zeros) admits everything.
+#[derive(Clone, Default)]
+pub struct GatewayConfig {
+    pub default_quota: Quota,
+    pub tenant_quotas: Vec<(String, Quota)>,
+}
+
+/// Gateway-local counters, merged into the `/metrics` response.  They live
+/// here rather than in the engine's registry because shedding happens
+/// before the engine ever sees the request.
+#[derive(Default)]
+pub struct HttpCounters {
+    /// requests that reached routing (every parsed HTTP request)
+    pub requests: Counter,
+    /// requests shed with 429 (tenant over rate quota)
+    pub shed_429: Counter,
+    /// requests shed with 503 (tenant over concurrency quota or engine
+    /// admission rejected)
+    pub shed_503: Counter,
+}
+
+pub struct HttpServer<F: EngineFront = Engine> {
+    engine: Arc<F>,
+    admission: Arc<AdmissionControl>,
+    counters: Arc<HttpCounters>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<AtomicUsize>,
+}
+
+impl<F: EngineFront> HttpServer<F> {
+    pub fn new(engine: Arc<F>, cfg: GatewayConfig) -> HttpServer<F> {
+        let admission = AdmissionControl::new(cfg.default_quota);
+        for (tenant, quota) in &cfg.tenant_quotas {
+            admission.set_quota(tenant, *quota);
+        }
+        HttpServer {
+            engine,
+            admission: Arc::new(admission),
+            counters: Arc::new(HttpCounters::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+            conns: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    pub fn conn_count_handle(&self) -> Arc<AtomicUsize> {
+        self.conns.clone()
+    }
+
+    /// Shed/request counters (observability + bench assertions).
+    pub fn counters(&self) -> Arc<HttpCounters> {
+        self.counters.clone()
+    }
+
+    /// The admission table (runtime quota changes).
+    pub fn admission(&self) -> Arc<AdmissionControl> {
+        self.admission.clone()
+    }
+
+    /// Serve until the stop flag is raised.  Same accept-loop shape as the
+    /// TCP `Server`: non-blocking accept with a 5ms idle tick, per-tick
+    /// reaping of finished connection threads.
+    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?);
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            let mut i = 0;
+            while i < handles.len() {
+                if handles[i].is_finished() {
+                    let _ = handles.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+            self.conns.store(handles.len(), Ordering::Relaxed);
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log::info!("http connection from {peer}");
+                    let engine = self.engine.clone();
+                    let admission = self.admission.clone();
+                    let counters = self.counters.clone();
+                    let stop = self.stop.clone();
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) =
+                            handle_conn(stream, engine.as_ref(), &admission, &counters, &stop)
+                        {
+                            log::debug!("http connection {peer} closed: {e:#}");
+                        }
+                    }));
+                    self.conns.store(handles.len(), Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        self.conns.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ wire level
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    /// header names lowercased
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl HttpRequest {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// `read_line` that treats read-timeout ticks as "check the stop flag and
+/// keep going" (the socket has a 100ms read timeout so handlers notice
+/// shutdown).  Returns Ok(0) on EOF.
+fn read_line_tolerant(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    stop: &AtomicBool,
+) -> Result<usize> {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Err(anyhow!("server stopping"));
+        }
+        match reader.read_line(line) {
+            Ok(n) => return Ok(n),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // partial line already buffered in `line`
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn read_exact_tolerant(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Err(anyhow!("server stopping"));
+        }
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Err(anyhow!("connection closed mid-body")),
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Parse one HTTP/1.1 request.  Returns None on a clean EOF before the
+/// request line (client connected and left).
+fn read_http_request(
+    reader: &mut BufReader<TcpStream>,
+    stop: &AtomicBool,
+) -> Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    if read_line_tolerant(reader, &mut line, stop)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.trim_end().splitn(3, ' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(anyhow!("malformed request line {line:?}"));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        if read_line_tolerant(reader, &mut h, stop)? == 0 {
+            return Err(anyhow!("connection closed mid-headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    // 16 MiB cap: an image payload is ~100s of KiB; anything larger is a
+    // hostile or broken client, not a request worth buffering
+    if content_length > 16 << 20 {
+        return Err(anyhow!("content-length {content_length} exceeds the 16 MiB cap"));
+    }
+    let mut body = vec![0u8; content_length];
+    read_exact_tolerant(reader, &mut body, stop)?;
+    Ok(Some(HttpRequest {
+        method,
+        path,
+        headers,
+        body: String::from_utf8(body).map_err(|_| anyhow!("body is not valid utf-8"))?,
+    }))
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn write_json_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    body: &Json,
+) -> Result<()> {
+    let payload = body.to_string();
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status_reason(status),
+        payload.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(payload.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+fn write_sse_header<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+fn write_sse_frame<W: Write>(w: &mut W, data: &str) -> Result<()> {
+    w.write_all(b"data: ")?;
+    w.write_all(data.as_bytes())?;
+    w.write_all(b"\n\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+fn err_body(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+// ------------------------------------------------------------- handlers
+
+fn handle_conn<F: EngineFront>(
+    stream: TcpStream,
+    engine: &F,
+    admission: &AdmissionControl,
+    counters: &HttpCounters,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    // bounded writes: a client that stops reading an SSE stream becomes a
+    // write error, which the streaming path converts into a cancel
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // one request per connection (Connection: close): streaming responses
+    // own the socket until done, and per-request connections keep the
+    // handler state machine trivial
+    let req = match read_http_request(&mut reader, stop)? {
+        Some(r) => r,
+        None => return Ok(()),
+    };
+    counters.requests.inc();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            write_json_response(&mut writer, 200, &[], &Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        ("GET", "/metrics") => {
+            let mut obj = match render_metrics(engine) {
+                Json::Obj(fields) => fields,
+                other => vec![("metrics".to_string(), other)],
+            };
+            obj.push(("http_requests".into(), Json::num(counters.requests.get() as f64)));
+            obj.push(("http_shed_429".into(), Json::num(counters.shed_429.get() as f64)));
+            obj.push(("http_shed_503".into(), Json::num(counters.shed_503.get() as f64)));
+            write_json_response(&mut writer, 200, &[], &Json::Obj(obj))
+        }
+        ("POST", path) if path.starts_with("/v1/cancel/") => {
+            match path["/v1/cancel/".len()..].parse::<u64>() {
+                Ok(id) => write_json_response(
+                    &mut writer,
+                    200,
+                    &[],
+                    &Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("ok", Json::Bool(engine.cancel(id))),
+                    ]),
+                ),
+                Err(_) => write_json_response(
+                    &mut writer,
+                    400,
+                    &[],
+                    &err_body("cancel path must end in a numeric request id"),
+                ),
+            }
+        }
+        ("POST", "/v1/generate") => handle_generate(&req, engine, admission, counters, &mut writer),
+        (_, "/healthz" | "/metrics" | "/v1/generate") => write_json_response(
+            &mut writer,
+            405,
+            &[],
+            &err_body("method not allowed for this path"),
+        ),
+        _ => write_json_response(&mut writer, 404, &[], &err_body("no such endpoint")),
+    }
+}
+
+fn handle_generate<F: EngineFront, W: Write>(
+    http: &HttpRequest,
+    engine: &F,
+    admission: &AdmissionControl,
+    counters: &HttpCounters,
+    writer: &mut W,
+) -> Result<()> {
+    let body = match parse(&http.body) {
+        Ok(v) => v,
+        Err(e) => {
+            return write_json_response(&mut *writer, 400, &[], &err_body(&format!("{e}")))
+        }
+    };
+    let stream = match body.get("stream") {
+        None => false,
+        Some(s) => match s.as_bool() {
+            Ok(b) => b,
+            Err(_) => {
+                return write_json_response(
+                    writer,
+                    400,
+                    &[],
+                    &err_body("field \"stream\" must be a boolean"),
+                )
+            }
+        },
+    };
+    // shared validation with the TCP protocol: both fronts reject the same
+    // inputs with the same field-naming messages
+    let mut req = match parse_generate(&body, engine) {
+        Ok(r) => r,
+        Err(e) => return write_json_response(writer, 400, &[], &err_body(&format!("{e:#}"))),
+    };
+    // the x-tenant header outranks the body field (the header is what a
+    // proxy stamps after authentication)
+    if let Some(h) = http.header("x-tenant") {
+        if h.is_empty() {
+            return write_json_response(
+                writer,
+                400,
+                &[],
+                &err_body("header \"x-tenant\" must be non-empty"),
+            );
+        }
+        req.tenant = h.to_string();
+    }
+    // admission: shed before the engine sees the request.  The permit is
+    // held until this handler returns, covering the whole generation.
+    let _permit = match admission.admit(&req.tenant) {
+        Admit::Ok(p) => p,
+        Admit::RetryAfter(secs) => {
+            counters.shed_429.inc();
+            return write_json_response(
+                writer,
+                429,
+                &[("Retry-After", secs.to_string())],
+                &Json::obj(vec![
+                    ("error", Json::str("tenant over rate quota")),
+                    ("retry_after", Json::num(secs as f64)),
+                ]),
+            );
+        }
+        Admit::Busy => {
+            counters.shed_503.inc();
+            return write_json_response(
+                writer,
+                503,
+                &[("Retry-After", "1".to_string())],
+                &Json::obj(vec![
+                    ("error", Json::str("tenant over concurrency quota")),
+                    ("retry_after", Json::num(1.0)),
+                ]),
+            );
+        }
+    };
+    if !stream {
+        let resp = engine.run(req);
+        if resp.finish_reason == "rejected" {
+            counters.shed_503.inc();
+            return write_json_response(
+                writer,
+                503,
+                &[("Retry-After", "1".to_string())],
+                &render_response(&resp),
+            );
+        }
+        return write_json_response(writer, 200, &[], &render_response(&resp));
+    }
+    // streaming: hold the status line until the first update so an
+    // engine-side rejection can still become a clean 503
+    let id = req.id;
+    let rx = engine.submit_streaming(req);
+    let first = rx.recv();
+    if let Ok(Update::Done(resp)) = &first {
+        if resp.finish_reason == "rejected" {
+            counters.shed_503.inc();
+            return write_json_response(
+                writer,
+                503,
+                &[("Retry-After", "1".to_string())],
+                &render_response(resp),
+            );
+        }
+    }
+    write_sse_header(writer)?;
+    let mut update = match first {
+        Ok(u) => Some(u),
+        Err(_) => None,
+    };
+    loop {
+        match update.take() {
+            Some(Update::Chunk(tokens)) => {
+                if let Err(e) = write_sse_frame(writer, &render_chunk(id, &tokens).to_string()) {
+                    // client gone mid-stream: same fix as the TCP path --
+                    // cancel so the engine stops decoding for a dead
+                    // connection, drain so terminal accounting settles
+                    engine.cancel(id);
+                    while rx.recv().is_ok() {}
+                    return Err(e);
+                }
+            }
+            Some(Update::Done(resp)) => {
+                write_sse_frame(writer, &render_response(&resp).to_string())?;
+                write_sse_frame(writer, "[DONE]")?;
+                return Ok(());
+            }
+            None => {
+                // engine shut down before Done: close the stream cleanly
+                write_sse_frame(writer, &err_body("engine shut down").to_string())?;
+                write_sse_frame(writer, "[DONE]")?;
+                return Ok(());
+            }
+        }
+        update = rx.recv().ok();
+    }
+}
+
+// --------------------------------------------------------------- client
+
+/// Minimal blocking HTTP client for tests and benches: one fresh
+/// connection per request, reads to EOF (the server closes).
+pub struct HttpClient {
+    addr: String,
+}
+
+impl HttpClient {
+    pub fn new(addr: impl Into<String>) -> HttpClient {
+        HttpClient { addr: addr.into() }
+    }
+
+    /// Send one request; returns (status, headers lowercased, body).
+    pub fn request(
+        &self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&Json>,
+    ) -> Result<(u16, Vec<(String, String)>, String)> {
+        let mut stream = TcpStream::connect(&self.addr)?;
+        stream.set_nodelay(true)?;
+        let payload = body.map(|b| b.to_string()).unwrap_or_default();
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {}\r\n", self.addr);
+        for (k, v) in headers {
+            req.push_str(&format!("{k}: {v}\r\n"));
+        }
+        req.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", payload.len()));
+        stream.write_all(req.as_bytes())?;
+        stream.write_all(payload.as_bytes())?;
+        stream.flush()?;
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw)?;
+        let raw = String::from_utf8(raw).map_err(|_| anyhow!("non-utf8 response"))?;
+        let (head, body) = raw
+            .split_once("\r\n\r\n")
+            .ok_or_else(|| anyhow!("malformed response: no header terminator"))?;
+        let mut lines = head.lines();
+        let status_line = lines.next().ok_or_else(|| anyhow!("empty response"))?;
+        let status = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
+        let headers = lines
+            .filter_map(|l| l.split_once(':'))
+            .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+            .collect();
+        Ok((status, headers, body.to_string()))
+    }
+
+    pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+        headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Non-streaming generate; returns (status, parsed JSON body).
+    pub fn generate(&self, body: &Json, tenant: Option<&str>) -> Result<(u16, Json)> {
+        let hdrs: Vec<(&str, &str)> = tenant.map(|t| ("x-tenant", t)).into_iter().collect();
+        let (status, _, text) = self.request("POST", "/v1/generate", &hdrs, Some(body))?;
+        Ok((status, parse(&text)?))
+    }
+
+    /// Streaming generate: parses the SSE frame sequence.  Returns
+    /// (status, chunk frames, summary frame).  On a non-200 status the
+    /// chunks are empty and the summary is the error body.
+    pub fn generate_streaming(
+        &self,
+        body: &Json,
+        tenant: Option<&str>,
+    ) -> Result<(u16, Vec<Vec<i32>>, Json)> {
+        let hdrs: Vec<(&str, &str)> = tenant.map(|t| ("x-tenant", t)).into_iter().collect();
+        let (status, _, text) = self.request("POST", "/v1/generate", &hdrs, Some(body))?;
+        if status != 200 {
+            return Ok((status, Vec::new(), parse(&text)?));
+        }
+        let mut chunks = Vec::new();
+        let mut summary = None;
+        let mut saw_done = false;
+        for frame in text.split("\n\n") {
+            let Some(data) = frame.trim().strip_prefix("data: ") else { continue };
+            if data == "[DONE]" {
+                saw_done = true;
+                break;
+            }
+            let v = parse(data)?;
+            match v.get("chunk") {
+                Some(c) => chunks.push(c.to_i32_vec()?),
+                None => summary = Some(v),
+            }
+        }
+        if !saw_done {
+            return Err(anyhow!("SSE stream missing the [DONE] sentinel"));
+        }
+        let summary = summary.ok_or_else(|| anyhow!("SSE stream missing the summary frame"))?;
+        Ok((status, chunks, summary))
+    }
+}

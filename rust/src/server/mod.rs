@@ -23,7 +23,9 @@
 //!              "max_new"?: int, "seed"?: int,
 //!              "priority"?: "interactive"|"batch",
 //!              "text_only_draft"?: bool, "adaptive"?: bool,
-//!              "stream"?: bool, "deadline_ms"?: int}
+//!              "stream"?: bool, "deadline_ms"?: int,
+//!              "tenant"?: str (weighted-fair scheduling + quota key;
+//!              default "default")}
 //!   request:  {"op":"metrics"}  |  {"op":"ping"}  |  {"op":"cancel","id":n}
 //!   response: {"id":n, "text":str, "tokens":[...], "mal":f, "steps":n,
 //!              "image_id": hex str, "cache_hit": bool, "prefill_ms": f,
@@ -34,8 +36,15 @@
 //! one {"id":n, "chunk":[tokens...]} line per decode step, then the final
 //! summary object (no "chunk" field); chunk concatenation == "tokens".
 //! Streaming holds its connection until done; issue cancels for a
-//! streaming request from a second connection.
+//! streaming request from a second connection.  Malformed fields are
+//! rejected with an {"error": "field ..."} frame naming the bad field
+//! (protocol.rs validates instead of coercing), a client that disconnects
+//! mid-stream gets its session cancelled promptly, and the per-session
+//! update channel is bounded (coordinator::stream) so a slow reader costs
+//! bounded memory.  The HTTP/SSE front end over the same engine lives in
+//! `server::http` (`docs/gateway.md`).
 
+pub mod http;
 pub mod protocol;
 
 use std::io::{BufRead, BufReader, Write};
@@ -48,7 +57,9 @@ use anyhow::Result;
 use crate::coordinator::{Engine, EngineFront, Update};
 use crate::util::json::Json;
 
-pub use protocol::{parse_request, render_chunk, render_metrics, render_response};
+pub use protocol::{
+    parse_generate, parse_request, render_chunk, render_metrics, render_response,
+};
 
 pub struct Server<F: EngineFront = Engine> {
     engine: Arc<F>,
@@ -128,6 +139,10 @@ fn handle_conn<F: EngineFront>(stream: TcpStream, engine: &F, stop: &AtomicBool)
     // bounded reads so the handler notices the stop flag even while a
     // client holds the connection open without sending anything
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    // bounded writes so a client that stops reading mid-stream (full
+    // socket buffer) turns into a write error -- which the streaming path
+    // converts into a cancel -- instead of wedging the handler thread
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -162,7 +177,13 @@ fn handle_conn<F: EngineFront>(stream: TcpStream, engine: &F, stop: &AtomicBool)
 
 /// Handle one request line, writing one frame (or, for streaming
 /// generates, a chunk-frame sequence followed by the summary frame).
-fn handle_request<F: EngineFront>(line: &str, engine: &F, writer: &mut TcpStream) -> Result<()> {
+/// Generic over the writer so tests can inject failing sinks and the HTTP
+/// gateway's tests can reuse the reference frame sequence.
+pub fn handle_request<F: EngineFront, W: Write>(
+    line: &str,
+    engine: &F,
+    writer: &mut W,
+) -> Result<()> {
     let reply = match parse_request(line, engine) {
         Ok(protocol::Op::Ping) => Json::obj(vec![("ok", Json::Bool(true))]),
         Ok(protocol::Op::Metrics) => render_metrics(engine),
@@ -177,7 +198,18 @@ fn handle_request<F: EngineFront>(line: &str, engine: &F, writer: &mut TcpStream
             loop {
                 match rx.recv() {
                     Ok(Update::Chunk(tokens)) => {
-                        write_frame(writer, &render_chunk(id, &tokens))?;
+                        if let Err(e) = write_frame(writer, &render_chunk(id, &tokens)) {
+                            // the client went away mid-stream: cancel the
+                            // session so the engine stops decoding for a
+                            // dead connection, and drain the channel so
+                            // the terminal accounting (cancelled counter,
+                            // inflight gauge) has settled before this
+                            // handler unwinds.  Without the cancel the
+                            // session kept decoding to max_new/deadline.
+                            engine.cancel(id);
+                            while rx.recv().is_ok() {}
+                            return Err(e);
+                        }
                     }
                     Ok(Update::Done(resp)) => break render_response(&resp),
                     Err(_) => {
@@ -191,7 +223,7 @@ fn handle_request<F: EngineFront>(line: &str, engine: &F, writer: &mut TcpStream
     write_frame(writer, &reply)
 }
 
-fn write_frame(writer: &mut TcpStream, frame: &Json) -> Result<()> {
+fn write_frame<W: Write>(writer: &mut W, frame: &Json) -> Result<()> {
     writer.write_all(frame.to_string().as_bytes())?;
     writer.write_all(b"\n")?;
     writer.flush()?;

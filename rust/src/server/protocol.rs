@@ -17,7 +17,9 @@
 use anyhow::{anyhow, Result};
 
 use crate::cache::parse_image_id;
-use crate::coordinator::{DecodeMode, EngineFront, Priority, Request, Response};
+use crate::coordinator::{
+    DecodeMode, EngineFront, Priority, Request, Response, DEFAULT_TENANT,
+};
 use crate::spec::GenConfig;
 use crate::util::json::{parse, Json};
 
@@ -28,31 +30,87 @@ pub enum Op {
     Cancel(u64),
 }
 
+// ---------------------------------------------------------- validation
+//
+// Typed optional-field accessors.  A present-but-malformed field is a hard
+// error naming the field, never a silent default: the pre-fix behavior
+// mapped e.g. a non-numeric "temperature" to 0.0 via `unwrap_or`, so a
+// client typo ("temperature": "0.7") silently changed sampling.  Both the
+// TCP and HTTP front ends parse through these, so they reject identically.
+
+fn opt_f64(v: &Json, name: &str) -> Result<Option<f64>> {
+    match v.get(name) {
+        None => Ok(None),
+        Some(x) => Ok(Some(
+            x.as_f64().map_err(|_| anyhow!("field {name:?} must be a number"))?,
+        )),
+    }
+}
+
+fn opt_uint(v: &Json, name: &str) -> Result<Option<u64>> {
+    match opt_f64(v, name)? {
+        None => Ok(None),
+        Some(f) => {
+            if !f.is_finite() || f < 0.0 || f.fract() != 0.0 || f > 9e15 {
+                return Err(anyhow!("field {name:?} must be a non-negative integer, got {f}"));
+            }
+            Ok(Some(f as u64))
+        }
+    }
+}
+
+fn opt_bool(v: &Json, name: &str) -> Result<Option<bool>> {
+    match v.get(name) {
+        None => Ok(None),
+        Some(x) => Ok(Some(
+            x.as_bool().map_err(|_| anyhow!("field {name:?} must be a boolean"))?,
+        )),
+    }
+}
+
+fn opt_str<'a>(v: &'a Json, name: &str) -> Result<Option<&'a str>> {
+    match v.get(name) {
+        None => Ok(None),
+        Some(x) => Ok(Some(
+            x.as_str().map_err(|_| anyhow!("field {name:?} must be a string"))?,
+        )),
+    }
+}
+
 pub fn parse_request<F: EngineFront>(line: &str, engine: &F) -> Result<Op> {
     let v = parse(line)?;
     match v.req("op")?.as_str()? {
         "ping" => Ok(Op::Ping),
         "metrics" => Ok(Op::Metrics),
         "generate" => {
-            let stream = v
-                .get("stream")
-                .map(|b| b.as_bool().unwrap_or(false))
-                .unwrap_or(false);
+            let stream = opt_bool(&v, "stream")?.unwrap_or(false);
             Ok(Op::Generate { req: parse_generate(&v, engine)?, stream })
         }
-        "cancel" => Ok(Op::Cancel(v.req("id")?.as_usize()? as u64)),
+        "cancel" => {
+            let id = opt_uint(&v, "id")?.ok_or_else(|| anyhow!("cancel needs an \"id\""))?;
+            Ok(Op::Cancel(id))
+        }
         op => Err(anyhow!("unknown op {op:?}")),
     }
 }
 
-fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
-    let prompt = v.req("prompt")?.as_str()?.to_string();
+/// Parse + validate a generate body into a `Request` (id allocated from
+/// the engine).  Shared by the TCP protocol and the HTTP gateway, so both
+/// front ends accept and reject exactly the same inputs.
+pub fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
+    let prompt = v
+        .req("prompt")?
+        .as_str()
+        .map_err(|_| anyhow!("field \"prompt\" must be a string"))?
+        .to_string();
     let image = match v.get("image") {
-        Some(img) => img.to_f32_vec()?,
+        Some(img) => img
+            .to_f32_vec()
+            .map_err(|_| anyhow!("field \"image\" must be an array of numbers"))?,
         None => Vec::new(),
     };
-    let image_id = match v.get("image_id") {
-        Some(id) => Some(parse_image_id(id.as_str()?)?),
+    let image_id = match opt_str(v, "image_id")? {
+        Some(id) => Some(parse_image_id(id)?),
         None => None,
     };
     if image.is_empty() && image_id.is_none() {
@@ -68,15 +126,9 @@ fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
             image.len()
         ));
     }
-    let text_only_draft = v
-        .get("text_only_draft")
-        .map(|b| b.as_bool().unwrap_or(false))
-        .unwrap_or(false);
-    let adaptive = v
-        .get("adaptive")
-        .map(|b| b.as_bool().unwrap_or(false))
-        .unwrap_or(false);
-    let mode = match v.get("mode").and_then(|m| m.as_str().ok()).unwrap_or("massv") {
+    let text_only_draft = opt_bool(v, "text_only_draft")?.unwrap_or(false);
+    let adaptive = opt_bool(v, "adaptive")?.unwrap_or(false);
+    let mode = match opt_str(v, "mode")?.unwrap_or("massv") {
         "target_only" => DecodeMode::TargetOnly,
         // token-tree speculation; drafter variant comes from the separate
         // "variant" field (default "massv").  Validate it here so a typo is
@@ -84,8 +136,7 @@ fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
         // router's missing-drafter fallback is for absent artifacts, not
         // malformed requests.
         "tree" => {
-            let variant =
-                v.get("variant").and_then(|x| x.as_str().ok()).unwrap_or("massv");
+            let variant = opt_str(v, "variant")?.unwrap_or("massv");
             if !matches!(variant, "massv" | "massv_wo_sdvit" | "baseline") {
                 return Err(anyhow!("unknown drafter variant {variant:?}"));
             }
@@ -98,48 +149,57 @@ fn parse_generate<F: EngineFront>(v: &Json, engine: &F) -> Result<Request> {
         },
         m => return Err(anyhow!("unknown mode {m:?}")),
     };
+    let temperature = opt_f64(v, "temperature")?.unwrap_or(0.0);
+    if !temperature.is_finite() || temperature < 0.0 {
+        return Err(anyhow!("field \"temperature\" must be a number >= 0, got {temperature}"));
+    }
+    let top_p = opt_f64(v, "top_p")?.unwrap_or(1.0);
+    if !top_p.is_finite() || top_p <= 0.0 || top_p > 1.0 {
+        return Err(anyhow!("field \"top_p\" must satisfy 0 < top_p <= 1, got {top_p}"));
+    }
+    let max_new = opt_uint(v, "max_new")?.unwrap_or(48);
+    if max_new == 0 {
+        return Err(anyhow!("field \"max_new\" must be an integer >= 1"));
+    }
     let gen = GenConfig {
-        temperature: v.get("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32,
-        top_p: v.get("top_p").map(|t| t.as_f64().unwrap_or(1.0)).unwrap_or(1.0) as f32,
-        max_new: v
-            .get("max_new")
-            .map(|t| t.as_usize().unwrap_or(48))
-            .unwrap_or(48),
-        seed: v.get("seed").map(|t| t.as_i64().unwrap_or(0)).unwrap_or(0) as u64,
+        temperature: temperature as f32,
+        top_p: top_p as f32,
+        max_new: max_new as usize,
+        seed: opt_uint(v, "seed")?.unwrap_or(0),
         tree: None, // engine default tree shape (SpecParams::tree)
     };
-    let priority = match v.get("priority").and_then(|p| p.as_str().ok()) {
+    let priority = match opt_str(v, "priority")? {
+        None | Some("interactive") => Priority::Interactive,
         Some("batch") => Priority::Batch,
-        _ => Priority::Interactive,
+        Some(p) => {
+            return Err(anyhow!(
+                "field \"priority\" must be \"interactive\" or \"batch\", got {p:?}"
+            ))
+        }
     };
-    let deadline_ms = v.get("deadline_ms").and_then(|d| d.as_usize().ok()).map(|d| d as u64);
+    let deadline_ms = opt_uint(v, "deadline_ms")?;
     // optional per-request drafter vision compression override; 0 falls
     // back to the engine/manifest default (same as absent)
-    let draft_vision_ratio = v
-        .get("draft_vision_ratio")
-        .and_then(|r| r.as_usize().ok())
-        .map(|r| r as u32)
-        .filter(|r| *r > 0);
+    let draft_vision_ratio =
+        opt_uint(v, "draft_vision_ratio")?.map(|r| r as u32).filter(|r| *r > 0);
+    let tenant = match opt_str(v, "tenant")? {
+        None => DEFAULT_TENANT.to_string(),
+        Some("") => return Err(anyhow!("field \"tenant\" must be a non-empty string")),
+        Some(t) => t.to_string(),
+    };
     Ok(Request {
         id: engine.next_id(),
-        task: v
-            .get("task")
-            .and_then(|t| t.as_str().ok())
-            .unwrap_or("adhoc")
-            .to_string(),
+        task: opt_str(v, "task")?.unwrap_or("adhoc").to_string(),
         prompt,
         image,
         image_id,
-        target: v
-            .get("target")
-            .and_then(|t| t.as_str().ok())
-            .unwrap_or("")
-            .to_string(),
+        target: opt_str(v, "target")?.unwrap_or("").to_string(),
         mode,
         gen,
         draft_vision_ratio,
         priority,
         deadline_ms,
+        tenant,
     })
 }
 
@@ -261,6 +321,30 @@ mod tests {
             adaptive: false,
         };
         assert_eq!(m.wire_name(), "tree");
+    }
+
+    #[test]
+    fn typed_field_accessors_reject_wrong_types_and_name_the_field() {
+        let v = parse(r#"{"s":"x","f":1.5,"i":3,"b":true,"neg":-1}"#).unwrap();
+        // well-typed values pass through
+        assert_eq!(opt_str(&v, "s").unwrap(), Some("x"));
+        assert_eq!(opt_f64(&v, "f").unwrap(), Some(1.5));
+        assert_eq!(opt_uint(&v, "i").unwrap(), Some(3));
+        assert_eq!(opt_bool(&v, "b").unwrap(), Some(true));
+        // absent fields are None, not errors
+        assert_eq!(opt_str(&v, "missing").unwrap(), None);
+        assert_eq!(opt_uint(&v, "missing").unwrap(), None);
+        // wrong types are errors naming the offending field
+        for (err, field) in [
+            (opt_f64(&v, "s").unwrap_err(), "s"),
+            (opt_uint(&v, "f").unwrap_err(), "f"), // fractional: not an integer
+            (opt_uint(&v, "neg").unwrap_err(), "neg"),
+            (opt_bool(&v, "i").unwrap_err(), "i"),
+            (opt_str(&v, "b").unwrap_err(), "b"),
+        ] {
+            let msg = format!("{err:#}");
+            assert!(msg.contains(&format!("{field:?}")), "{msg} should name {field:?}");
+        }
     }
 
     #[test]

@@ -140,7 +140,7 @@ fn engine_batched_matches_unbatched_and_reports_occupancy() {
 
 enum PendingReply {
     Oneshot(Receiver<Response>),
-    Stream(Receiver<Update>),
+    Stream(massv::coordinator::UpdateReceiver),
 }
 
 /// Scheduler soak over the batched engine: randomized admit / cancel /

@@ -1,0 +1,440 @@
+//! HTTP/SSE gateway integration tests: wire equivalence against the TCP
+//! front end (both fronts over the SAME engine must produce bit-identical
+//! token streams), per-tenant admission control (429/503 + Retry-After),
+//! endpoint routing, per-tenant metrics rollup, and shared validation --
+//! over both `Engine` and `ClusterEngine` fronts, scripted backend only.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use massv::cluster::{ClusterConfig, ClusterEngine, RoutingPolicy};
+use massv::coordinator::{Engine, EngineConfig, EngineFront};
+use massv::server::http::{GatewayConfig, HttpClient, HttpServer, Quota};
+use massv::server::{Client, Server};
+use massv::util::json::Json;
+
+fn scripted_artifacts(tag: &str, gen_max: usize) -> String {
+    massv::models::scripted::write_test_artifacts(tag, gen_max, false)
+}
+
+fn image(phase: usize) -> Vec<f32> {
+    massv::models::scripted::demo_image(phase)
+}
+
+/// Both front ends -- the TCP server and the HTTP gateway -- bound to
+/// ephemeral ports over one shared engine.
+struct Fronts {
+    tcp: String,
+    http: String,
+    stops: Vec<Arc<AtomicBool>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn start_fronts<F: EngineFront>(engine: Arc<F>, gateway: GatewayConfig) -> Fronts {
+    let tcp_server = Server::new(engine.clone());
+    let http_server = HttpServer::new(engine, gateway);
+    let stops = vec![tcp_server.stop_handle(), http_server.stop_handle()];
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t1 = std::thread::spawn(move || {
+        tcp_server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let tcp = rx.recv().unwrap().to_string();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t2 = std::thread::spawn(move || {
+        http_server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let http = rx.recv().unwrap().to_string();
+    Fronts { tcp, http, stops, handles: vec![t1, t2] }
+}
+
+impl Fronts {
+    fn stop(self) {
+        for s in &self.stops {
+            s.store(true, Ordering::Relaxed);
+        }
+        for h in self.handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// THE wire-equivalence property: for every decode mode, the HTTP JSON
+/// response and the SSE chunk concatenation must be bit-identical to the
+/// TCP front end's `tokens` -- streaming and non-streaming, same engine.
+fn assert_wire_equivalence<F: EngineFront>(engine: Arc<F>) {
+    let fronts = start_fronts(engine, GatewayConfig::default());
+    let mut tcp = Client::connect(&fronts.tcp).unwrap();
+    let http = HttpClient::new(fronts.http.clone());
+
+    for mode in ["massv", "tree", "target_only"] {
+        let body = |stream: bool| {
+            Json::obj(vec![
+                // "op" is the TCP envelope; the HTTP gateway routes by path
+                // and ignores it
+                ("op", Json::str("generate")),
+                ("prompt", Json::str("w5 w6 w7")),
+                ("image", Json::arr_f32(&image(0))),
+                ("mode", Json::str(mode)),
+                ("seed", Json::num(0.0)),
+                ("stream", Json::Bool(stream)),
+            ])
+        };
+        // non-streaming: identical tokens through both fronts
+        let tcp_resp = tcp.call(&body(false)).unwrap();
+        assert!(tcp_resp.get("error").is_none(), "{tcp_resp:?}");
+        let tcp_tokens = tcp_resp.get("tokens").unwrap().to_i32_vec().unwrap();
+        let (status, http_resp) = http.generate(&body(false), None).unwrap();
+        assert_eq!(status, 200, "{http_resp:?}");
+        assert_eq!(
+            http_resp.get("tokens").unwrap().to_i32_vec().unwrap(),
+            tcp_tokens,
+            "{mode}: HTTP tokens must equal TCP tokens"
+        );
+        assert_eq!(
+            http_resp.get("finish_reason").unwrap().as_str().unwrap(),
+            tcp_resp.get("finish_reason").unwrap().as_str().unwrap()
+        );
+
+        // streaming: SSE chunks reuse the TCP chunk frames, so the
+        // concatenation is bit-identical to the TCP token list
+        let (status, chunks, summary) = http.generate_streaming(&body(true), None).unwrap();
+        assert_eq!(status, 200, "{summary:?}");
+        assert!(summary.get("error").is_none(), "{summary:?}");
+        assert!(chunks.len() > 1, "{mode}: expected multiple SSE frames");
+        let concat: Vec<i32> = chunks.into_iter().flatten().collect();
+        assert_eq!(
+            concat,
+            summary.get("tokens").unwrap().to_i32_vec().unwrap(),
+            "{mode}: SSE chunks must concatenate to the summary tokens"
+        );
+        assert_eq!(concat, tcp_tokens, "{mode}: SSE stream must be wire-equivalent to TCP");
+
+        // the TCP streaming path agrees with both
+        let (tcp_chunks, tcp_summary) = tcp.call_streaming(&body(true)).unwrap();
+        assert!(tcp_summary.get("error").is_none(), "{tcp_summary:?}");
+        let tcp_concat: Vec<i32> = tcp_chunks.into_iter().flatten().collect();
+        assert_eq!(tcp_concat, concat, "{mode}: TCP and SSE streams must agree");
+    }
+    fronts.stop();
+}
+
+#[test]
+fn http_and_tcp_fronts_are_wire_equivalent_over_engine() {
+    let dir = scripted_artifacts("gw_engine", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    assert_wire_equivalence(engine);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn http_and_tcp_fronts_are_wire_equivalent_over_cluster() {
+    let dir = scripted_artifacts("gw_cluster", 48);
+    let cluster = Arc::new(
+        ClusterEngine::start(
+            &dir,
+            ClusterConfig {
+                replicas: 2,
+                routing: RoutingPolicy::Affinity,
+                engine: EngineConfig { workers: 1, ..EngineConfig::default() },
+                ..ClusterConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+    assert_wire_equivalence(cluster);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Per-tenant rate quota: an over-quota tenant is shed with 429 and a
+/// usable Retry-After while an idle tenant on the default (unlimited)
+/// quota completes normally.
+#[test]
+fn over_quota_tenant_sheds_429_while_idle_tenant_completes() {
+    let dir = scripted_artifacts("gw_quota", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let fronts = start_fronts(
+        engine,
+        GatewayConfig {
+            default_quota: Quota::default(),
+            tenant_quotas: vec![(
+                "flood".to_string(),
+                Quota { rps: 0.001, burst: 1.0, max_concurrent: 0 },
+            )],
+        },
+    );
+    let http = HttpClient::new(fronts.http.clone());
+    let body = Json::obj(vec![
+        ("prompt", Json::str("w5 w6")),
+        ("image", Json::arr_f32(&image(0))),
+    ]);
+    // burst of 1: the first flood request is admitted...
+    let (status, resp) = http.generate(&body, Some("flood")).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    // ...the second is shed with 429 + Retry-After before the engine sees it
+    let (status, headers, text) = http
+        .request("POST", "/v1/generate", &[("x-tenant", "flood")], Some(&body))
+        .unwrap();
+    assert_eq!(status, 429, "{text}");
+    let retry: u64 = HttpClient::header(&headers, "retry-after")
+        .expect("429 must carry Retry-After")
+        .parse()
+        .unwrap();
+    assert!(retry >= 1, "retry-after {retry}");
+    let parsed = massv::util::json::parse(&text).unwrap();
+    assert!(parsed.get("error").unwrap().as_str().unwrap().contains("rate quota"));
+    assert!(parsed.get("retry_after").unwrap().as_f64().unwrap() >= 1.0);
+    // a streaming request from the shed tenant is rejected the same way
+    let (status, chunks, summary) = http
+        .generate_streaming(
+            &Json::obj(vec![
+                ("prompt", Json::str("w5 w6")),
+                ("image", Json::arr_f32(&image(0))),
+                ("stream", Json::Bool(true)),
+            ]),
+            Some("flood"),
+        )
+        .unwrap();
+    assert_eq!(status, 429);
+    assert!(chunks.is_empty());
+    assert!(summary.get("error").is_some());
+    // an idle tenant is unaffected by the flooding tenant's shedding
+    let (status, resp) = http.generate(&body, Some("idle")).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    fronts.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Per-tenant concurrency quota: while one long streaming request holds
+/// the tenant's only slot, a second request is shed 503 busy; releasing
+/// the slot readmits the tenant.
+#[test]
+fn over_concurrency_tenant_sheds_503_busy() {
+    use std::io::{BufRead, BufReader, Read, Write};
+
+    let dir = scripted_artifacts("gw_busy", 16384);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let fronts = start_fronts(
+        engine,
+        GatewayConfig {
+            default_quota: Quota::default(),
+            tenant_quotas: vec![(
+                "serial".to_string(),
+                Quota { rps: 0.0, burst: 0.0, max_concurrent: 1 },
+            )],
+        },
+    );
+    // a long streaming request takes the tenant's only in-flight slot
+    let body = Json::obj(vec![
+        ("prompt", Json::str("w5 w6")),
+        ("image", Json::arr_f32(&image(0))),
+        ("max_new", Json::num(16000.0)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string();
+    let stream = std::net::TcpStream::connect(&fronts.http).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let req = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: x\r\nx-tenant: serial\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    writer.write_all(req.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 200"), "{line:?}");
+
+    // while it streams, a second request for the tenant is shed busy
+    let http = HttpClient::new(fronts.http.clone());
+    let probe = Json::obj(vec![
+        ("prompt", Json::str("w7")),
+        ("image", Json::arr_f32(&image(1))),
+    ]);
+    let (status, headers, text) = http
+        .request("POST", "/v1/generate", &[("x-tenant", "serial")], Some(&probe))
+        .unwrap();
+    assert_eq!(status, 503, "{text}");
+    assert_eq!(HttpClient::header(&headers, "retry-after"), Some("1"));
+    // ...but a different tenant still gets through (per-tenant slots)
+    let (status, resp) = http.generate(&probe, Some("other")).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+
+    // drain the stream; the permit drops with the handler, readmitting
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("[DONE]"), "stream must finish cleanly");
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let (status, _) = http.generate(&probe, Some("serial")).unwrap();
+        if status == 200 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "slot never released after the stream finished"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    fronts.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Endpoint surface: healthz, metrics (engine scrape + `http_*` gateway
+/// counters + per-tenant labeled keys), cancel, and the 400/404/405 error
+/// paths.
+#[test]
+fn endpoints_health_metrics_cancel_and_errors() {
+    let dir = scripted_artifacts("gw_endpoints", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let fronts = start_fronts(engine, GatewayConfig::default());
+    let http = HttpClient::new(fronts.http.clone());
+
+    let (status, _, text) = http.request("GET", "/healthz", &[], None).unwrap();
+    assert_eq!(status, 200);
+    assert!(massv::util::json::parse(&text).unwrap().get("ok").unwrap().as_bool().unwrap());
+
+    // one generate under an explicit tenant header...
+    let body = Json::obj(vec![
+        ("prompt", Json::str("w5 w6")),
+        ("image", Json::arr_f32(&image(0))),
+    ]);
+    let (status, resp) = http.generate(&body, Some("gold")).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    let id = resp.get("id").unwrap().as_i64().unwrap();
+
+    // ...shows up in the scrape under both global and tenant-labeled keys
+    let (status, _, text) = http.request("GET", "/metrics", &[], None).unwrap();
+    assert_eq!(status, 200);
+    let m = massv::util::json::parse(&text).unwrap();
+    assert_eq!(m.get("requests_completed").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(
+        m.get("tenant_completed{tenant=\"gold\"}").unwrap().as_f64().unwrap(),
+        1.0,
+        "x-tenant header must route per-tenant accounting"
+    );
+    assert!(m.get("http_requests").unwrap().as_f64().unwrap() >= 2.0);
+    assert_eq!(m.get("http_shed_429").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(m.get("http_shed_503").unwrap().as_f64().unwrap(), 0.0);
+
+    // cancel: a finished id reports ok:false; malformed ids are 400
+    let (status, _, text) =
+        http.request("POST", &format!("/v1/cancel/{id}"), &[], None).unwrap();
+    assert_eq!(status, 200);
+    assert!(!massv::util::json::parse(&text).unwrap().get("ok").unwrap().as_bool().unwrap());
+    let (status, _, _) = http.request("POST", "/v1/cancel/notanid", &[], None).unwrap();
+    assert_eq!(status, 400);
+
+    // routing errors: unknown path 404, wrong method on a known path 405,
+    // malformed JSON body 400, empty x-tenant 400
+    let (status, _, _) = http.request("GET", "/nope", &[], None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _, _) = http.request("GET", "/v1/generate", &[], None).unwrap();
+    assert_eq!(status, 405);
+    let (status, _, _) = http.request("POST", "/healthz", &[], None).unwrap();
+    assert_eq!(status, 405);
+    let mut stream = std::net::TcpStream::connect(&fronts.http).unwrap();
+    {
+        use std::io::{Read, Write};
+        let bad = "{not json";
+        let req = format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{bad}",
+            bad.len()
+        );
+        stream.write_all(req.as_bytes()).unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    }
+    let (status, _, text) = http
+        .request("POST", "/v1/generate", &[("x-tenant", "")], Some(&body))
+        .unwrap();
+    assert_eq!(status, 400, "{text}");
+    assert!(text.contains("x-tenant"));
+
+    fronts.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Shared validation: the same malformed body is rejected by BOTH front
+/// ends with the same field-naming message (`protocol::parse_generate` is
+/// the single validation path) -- the HTTP gateway maps it to 400.
+#[test]
+fn both_fronts_reject_malformed_fields_identically() {
+    let dir = scripted_artifacts("gw_validation", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let fronts = start_fronts(engine, GatewayConfig::default());
+    let mut tcp = Client::connect(&fronts.tcp).unwrap();
+    let http = HttpClient::new(fronts.http.clone());
+
+    let cases: Vec<(&str, Vec<(&str, Json)>)> = vec![
+        ("temperature", vec![("temperature", Json::str("hot"))]),
+        ("top_p", vec![("top_p", Json::num(2.0))]),
+        ("max_new", vec![("max_new", Json::num(0.0))]),
+        ("seed", vec![("seed", Json::num(-1.0))]),
+        ("stream", vec![("stream", Json::str("yes"))]),
+        ("priority", vec![("priority", Json::str("urgent"))]),
+        ("deadline_ms", vec![("deadline_ms", Json::num(0.5))]),
+        ("tenant", vec![("tenant", Json::str(""))]),
+        ("prompt", vec![("prompt", Json::num(5.0))]),
+    ];
+    for (field, poison) in cases {
+        let mut obj = vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("w5 w6")),
+            ("image", Json::arr_f32(&image(0))),
+        ];
+        for (k, v) in poison {
+            obj.retain(|(name, _)| *name != k);
+            obj.push((k, v));
+        }
+        let body = Json::obj(obj);
+        let tcp_resp = tcp.call(&body).unwrap();
+        let tcp_err = tcp_resp
+            .get("error")
+            .unwrap_or_else(|| panic!("TCP coerced bad {field:?}: {tcp_resp:?}"))
+            .as_str()
+            .unwrap()
+            .to_string();
+        let (status, http_resp) = http.generate(&body, None).unwrap();
+        assert_eq!(status, 400, "HTTP must reject bad {field:?}: {http_resp:?}");
+        let http_err = http_resp.get("error").unwrap().as_str().unwrap().to_string();
+        assert_eq!(
+            tcp_err, http_err,
+            "both fronts must produce the identical message for bad {field:?}"
+        );
+        assert!(
+            http_err.contains(&format!("{field:?}")),
+            "error for {field:?} must name the field: {http_err}"
+        );
+    }
+    fronts.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `tenant` body field is honored when no `x-tenant` header is sent,
+/// and the header outranks the body when both are present.
+#[test]
+fn tenant_header_outranks_body_field() {
+    let dir = scripted_artifacts("gw_tenant", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let fronts = start_fronts(engine.clone(), GatewayConfig::default());
+    let http = HttpClient::new(fronts.http.clone());
+
+    let body = Json::obj(vec![
+        ("prompt", Json::str("w5 w6")),
+        ("image", Json::arr_f32(&image(0))),
+        ("tenant", Json::str("bodyteam")),
+    ]);
+    // no header: the body field wins
+    let (status, resp) = http.generate(&body, None).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    // header present: it outranks the body field
+    let (status, resp) = http.generate(&body, Some("headerteam")).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+
+    let m = engine.scrape();
+    assert_eq!(m["tenant_completed{tenant=\"bodyteam\"}"], 1.0);
+    assert_eq!(m["tenant_completed{tenant=\"headerteam\"}"], 1.0);
+    fronts.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -41,7 +41,7 @@ fn one_worker(dir: &str, queue: usize) -> Engine {
 }
 
 /// Drain a streaming receiver: returns (concatenated chunks, final response).
-fn drain(rx: std::sync::mpsc::Receiver<Update>) -> (Vec<i32>, massv::coordinator::Response) {
+fn drain(rx: massv::coordinator::UpdateReceiver) -> (Vec<i32>, massv::coordinator::Response) {
     let mut streamed = Vec::new();
     loop {
         match rx.recv().expect("stream ended without a Done frame") {
@@ -711,6 +711,324 @@ fn slow_client_dribbled_request_survives_read_timeout() {
     let resp = massv::util::json::parse(&line).unwrap();
     assert!(resp.get("error").is_none(), "dribbled request failed: {resp:?}");
     assert_eq!(resp.get("tokens").unwrap().to_i32_vec().unwrap().len(), 8);
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression (session leak): a mid-stream write failure -- the client
+/// vanished -- must cancel the session and settle terminal accounting
+/// before `handle_request` unwinds.  The pre-fix handler just returned the
+/// write error, leaving the engine decoding to max_new for a dead
+/// connection; asserting counter state IMMEDIATELY after the call returns
+/// fails on that code (the session was still live) and passes on the fix
+/// (cancel + drain happen inside the handler).
+#[test]
+fn mid_stream_write_failure_cancels_session_before_handler_returns() {
+    use std::io::Write;
+
+    /// Accepts `ok_writes` write calls, then reports the peer gone.
+    struct FailAfter {
+        ok_writes: usize,
+        written: usize,
+    }
+    impl Write for FailAfter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.written >= self.ok_writes {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "client gone",
+                ));
+            }
+            self.written += 1;
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    let dir = scripted_artifacts("write_fail", 16384);
+    let engine = one_worker(&dir, 16);
+    let line = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5 w6")),
+        ("image", Json::arr_f32(&image(0))),
+        ("max_new", Json::num(16000.0)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string();
+    // let the first chunk frame through (frame bytes + newline = 2 write
+    // calls), then fail: the "client" disconnected mid-stream
+    let mut sink = FailAfter { ok_writes: 2, written: 0 };
+    let result = massv::server::handle_request(&line, &engine, &mut sink);
+    assert!(result.is_err(), "the write failure must surface to the connection loop");
+    // no polling, no sleeps: the handler drained the stream to its end, and
+    // the engine settles terminal accounting before closing the channel
+    assert_eq!(engine.metrics.requests_cancelled.get(), 1, "session must be cancelled");
+    assert_eq!(engine.metrics.inflight.get(), 0, "session must be freed");
+    assert_eq!(engine.metrics.requests_completed.get(), 0);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The same disconnect black-box over a real socket: a client that drops
+/// its connection mid-stream gets its session cancelled promptly (the dead
+/// peer turns into a write error, which the handler converts to a cancel)
+/// instead of decoding to max_new.
+#[test]
+fn tcp_disconnect_mid_stream_frees_session() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let dir = scripted_artifacts("tcp_disconnect", 16384);
+    let engine = Arc::new(one_worker(&dir, 16));
+    let server = massv::server::Server::new(engine.clone());
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let req = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5 w6")),
+        ("image", Json::arr_f32(&image(1))),
+        ("max_new", Json::num(16000.0)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string();
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writer.write_all(req.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    // wait for the first frame so the stream is known to be in flight,
+    // then vanish without reading the rest
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        massv::util::json::parse(&line).unwrap().get("chunk").is_some(),
+        "first frame must be a chunk: {line:?}"
+    );
+    drop(reader);
+    drop(writer);
+
+    // the handler notices the dead peer on its next frame write and
+    // cancels; give it a bounded window to settle
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        if engine.metrics.requests_cancelled.get() == 1 && engine.metrics.inflight.get() == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "disconnected client's session never cancelled: cancelled={} inflight={}",
+            engine.metrics.requests_cancelled.get(),
+            engine.metrics.inflight.get()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert_eq!(engine.metrics.requests_completed.get(), 0, "session must not run to max_new");
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression (unbounded buffering): the per-session update channel is
+/// bounded -- a consumer that stalls gets later chunks coalesced into the
+/// newest queued frame instead of queueing one frame per decode step --
+/// and coalescing never changes the delivered token sequence.
+#[test]
+fn slow_consumer_stream_is_bounded_and_lossless() {
+    let dir = scripted_artifacts("bounded_stream", 16384);
+    let engine = Engine::start(
+        &dir,
+        EngineConfig {
+            default_target: "qwensim-L".into(),
+            workers: 1,
+            queue_capacity: 16,
+            stream_chunk_cap: 4,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut reference = request(&engine, DecodeMode::TargetOnly, "w5 w6", 0);
+    reference.gen.max_new = 3000;
+    let reference = engine.run(reference);
+    assert!(reference.error.is_none(), "{:?}", reference.error);
+
+    let mut req = request(&engine, DecodeMode::TargetOnly, "w5 w6", 0);
+    req.gen.max_new = 3000;
+    let rx = engine.submit_streaming(req);
+    // consume far slower than the decode produces: the old unbounded
+    // channel would buffer thousands of frames here
+    let mut streamed = Vec::new();
+    let resp = loop {
+        match rx.recv().unwrap() {
+            Update::Chunk(toks) => {
+                streamed.extend(toks);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            Update::Done(resp) => break resp,
+        }
+    };
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.finish_reason, "length");
+    assert_eq!(streamed, resp.tokens, "chunks must concatenate to the output");
+    assert_eq!(resp.tokens, reference.tokens, "coalescing must not change tokens");
+    assert!(
+        rx.peak_buffered() <= 4,
+        "buffer must stay within stream_chunk_cap: peak {}",
+        rx.peak_buffered()
+    );
+    assert!(rx.coalesced() > 0, "a slow consumer must actually trigger coalescing");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Raising the stop flag while a stream is in flight neither hangs
+/// `serve()` nor loses the stream's final summary frame: the in-flight
+/// frame sequence runs to completion, then the handler notices the flag,
+/// exits, and the accept loop joins every connection thread.
+#[test]
+fn shutdown_mid_stream_delivers_summary_and_joins() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let dir = scripted_artifacts("shutdown_stream", 16384);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let server = massv::server::Server::new(engine);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let req = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("w5 w6 w7")),
+        ("image", Json::arr_f32(&image(0))),
+        ("max_new", Json::num(4000.0)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string();
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writer.write_all(req.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(massv::util::json::parse(&line).unwrap().get("chunk").is_some());
+
+    // stop the server while the stream is mid-flight
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+
+    // the client must still receive the rest of the stream, summary included
+    let summary = loop {
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "stream cut before the summary frame"
+        );
+        let frame = massv::util::json::parse(&line).unwrap();
+        if frame.get("chunk").is_none() {
+            break frame;
+        }
+    };
+    assert_eq!(summary.get("finish_reason").unwrap().as_str().unwrap(), "length");
+    assert_eq!(summary.get("tokens").unwrap().to_i32_vec().unwrap().len(), 4000);
+
+    // ...and serve() must join (a hang here fails the test by timeout)
+    h.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression (silent coercion): a present-but-malformed generate field is
+/// rejected with an error frame naming the field, never coerced to a
+/// default.  Table-driven over every validated field; the connection
+/// survives each rejection and a well-formed request still succeeds after.
+#[test]
+fn malformed_fields_are_rejected_with_named_errors() {
+    let dir = scripted_artifacts("bad_fields", 48);
+    let engine = Arc::new(Engine::start(&dir, EngineConfig::default()).unwrap());
+    let server = massv::server::Server::new(engine.clone());
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut client = massv::server::Client::connect(&addr.to_string()).unwrap();
+
+    // (field expected in the error message, poisoned request fields)
+    let cases: Vec<(&str, Vec<(&str, Json)>)> = vec![
+        ("temperature", vec![("temperature", Json::str("hot"))]),
+        ("temperature", vec![("temperature", Json::num(-0.5))]),
+        ("top_p", vec![("top_p", Json::num(0.0))]),
+        ("top_p", vec![("top_p", Json::num(1.5))]),
+        ("top_p", vec![("top_p", Json::str("p"))]),
+        ("max_new", vec![("max_new", Json::num(0.0))]),
+        ("max_new", vec![("max_new", Json::num(7.5))]),
+        ("max_new", vec![("max_new", Json::str("many"))]),
+        ("seed", vec![("seed", Json::num(-1.0))]),
+        ("seed", vec![("seed", Json::Bool(true))]),
+        ("stream", vec![("stream", Json::str("yes"))]),
+        ("priority", vec![("priority", Json::str("urgent"))]),
+        ("priority", vec![("priority", Json::num(1.0))]),
+        ("deadline_ms", vec![("deadline_ms", Json::num(-5.0))]),
+        ("deadline_ms", vec![("deadline_ms", Json::num(0.5))]),
+        ("draft_vision_ratio", vec![("draft_vision_ratio", Json::str("x"))]),
+        ("tenant", vec![("tenant", Json::str(""))]),
+        ("tenant", vec![("tenant", Json::num(3.0))]),
+        ("mode", vec![("mode", Json::num(1.0))]),
+        // variant is only consulted (and therefore validated) in tree mode
+        ("variant", vec![("mode", Json::str("tree")), ("variant", Json::Bool(false))]),
+        ("prompt", vec![("prompt", Json::num(5.0))]),
+        ("image", vec![("image", Json::str("pixels"))]),
+        ("image_id", vec![("image_id", Json::num(9.0))]),
+        ("text_only_draft", vec![("text_only_draft", Json::str("no"))]),
+        ("adaptive", vec![("adaptive", Json::num(1.0))]),
+    ];
+    for (field, poison) in cases {
+        let mut obj = vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("w5 w6")),
+            ("image", Json::arr_f32(&image(0))),
+        ];
+        for (k, v) in poison {
+            obj.retain(|(name, _)| *name != k);
+            obj.push((k, v));
+        }
+        let resp = client.call(&Json::obj(obj)).unwrap();
+        let err = resp
+            .get("error")
+            .unwrap_or_else(|| panic!("bad {field:?} was coerced, not rejected: {resp:?}"))
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert!(
+            err.contains(&format!("{field:?}")),
+            "error for {field:?} must name the field: {err}"
+        );
+    }
+    // nothing reached the engine, and the connection survived every reject
+    assert_eq!(engine.metrics.requests_received.get(), 0);
+    assert!(client.ping().unwrap());
+    let ok = client
+        .call(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("w5 w6")),
+            ("image", Json::arr_f32(&image(0))),
+        ]))
+        .unwrap();
+    assert!(ok.get("error").is_none(), "{ok:?}");
 
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     h.join().unwrap();
