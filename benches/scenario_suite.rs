@@ -1,0 +1,318 @@
+//! Scenario suite: every named workload scenario (`workload::scenario`)
+//! replayed through the real serving stack -- TCP and HTTP/SSE fronts,
+//! single-engine and 2-replica cluster topologies -- with per-scenario
+//! serving metrics measured as scrape *windows* (`metrics::scrape_delta`)
+//! so scenarios sharing one server don't bleed into each other's numbers.
+//!
+//! Uses the scripted backend (self-contained artifact dir under tmp), so
+//! it runs anywhere -- no PJRT artifacts needed.  Traces are greedy
+//! (temperature 0) and seeded, so the deterministic fields -- per-request
+//! token streams, token totals, cache hit/miss counts -- are identical
+//! across runs; latency fields (TTFT/TPOT percentiles, wall time) are
+//! wall-clock and advisory.  A determinism gate replays the chat trace on
+//! a second fresh engine and hard-asserts the deterministic fields match,
+//! in every mode.
+//!
+//! Cells (front x replicas, scenarios windowed on a shared server):
+//!   tcp  x1: chat_image_reuse, heavy_tail
+//!   tcp  x2: multi_image_chat
+//!   http x1: bursty_diurnal, mixed_tenants (bulk concurrency quota: real
+//!            503 sheds, retried -- token totals stay deterministic)
+//!   http x2: zipf_hotspot (prefix-affinity routing regime)
+//!
+//! Besides the human-readable report, the run writes machine-readable
+//! `target/paper/BENCH_scenarios.json` -- CI smoke-runs this bench and
+//! archives the JSON (`benches/baselines/BENCH_scenarios.json`).
+//!
+//!     cargo bench --bench scenario_suite [-- --quick]
+
+mod harness;
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use harness::BenchReport;
+use massv::cluster::{ClusterConfig, ClusterEngine};
+use massv::coordinator::EngineConfig;
+use massv::metrics::scrape_delta;
+use massv::server::http::{GatewayConfig, HttpServer, Quota};
+use massv::server::Server;
+use massv::util::json::Json;
+use massv::workload::scenario::replay::{percentile, replay, Front, ReplayOptions, ReplayReport};
+use massv::workload::scenario::{by_name, ScenarioKnobs};
+
+const GEN_MAX: usize = 4096;
+const SEED_BASE: u64 = 0x5CE0;
+
+struct Cell {
+    name: &'static str,
+    front: Front,
+    replicas: usize,
+    rep: ReplayReport,
+    delta: HashMap<String, f64>,
+}
+
+fn front_str(f: Front) -> &'static str {
+    match f {
+        Front::Tcp => "tcp",
+        Front::Http => "http",
+    }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        workers: 2,
+        // deep queue + generous cache + effectively-unbounded spill depth:
+        // no engine-side sheds and no evictions, so cache hit counts are
+        // pure trace arithmetic (deterministic) instead of timing artifacts
+        queue_capacity: 4096,
+        prefix_cache_bytes: 256 << 20,
+        tenant_weights: vec![
+            ("gold".to_string(), 4),
+            ("silver".to_string(), 2),
+            ("bulk".to_string(), 1),
+        ],
+        ..EngineConfig::default()
+    }
+}
+
+fn cluster_cfg(replicas: usize) -> ClusterConfig {
+    ClusterConfig {
+        replicas,
+        spill_depth: 1_000_000,
+        engine: engine_cfg(),
+        ..ClusterConfig::default()
+    }
+}
+
+fn knobs_for(sidx: usize, requests: usize, rate: f64, max_new: usize) -> ScenarioKnobs {
+    ScenarioKnobs {
+        requests,
+        rate,
+        image_pool: 8,
+        prompt_pool: 6,
+        max_new,
+        // disjoint image phases per scenario: traces sharing one server
+        // must not warm each other's caches
+        image_base: 1000 * (sidx + 1),
+    }
+}
+
+fn opts_for(front: Front) -> ReplayOptions {
+    ReplayOptions { front, streaming: true, time_scale: 1.0, retry_shed: true, shed_backoff_ms: 3 }
+}
+
+type Stopper = Box<dyn FnOnce() + Send>;
+
+fn start_tcp(ce: Arc<ClusterEngine>) -> (String, Stopper) {
+    let server = Server::new(ce);
+    let stop = server.stop_handle();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| addr_tx.send(a).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv().expect("tcp bind").to_string();
+    let stopper: Stopper = Box::new(move || {
+        stop.store(true, Ordering::Relaxed);
+        h.join().expect("tcp server thread");
+    });
+    (addr, stopper)
+}
+
+fn start_http(ce: Arc<ClusterEngine>, cfg: GatewayConfig) -> (String, Stopper) {
+    let server = HttpServer::new(ce, cfg);
+    let stop = server.stop_handle();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| addr_tx.send(a).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv().expect("http bind").to_string();
+    let stopper: Stopper = Box::new(move || {
+        stop.store(true, Ordering::Relaxed);
+        h.join().expect("http server thread");
+    });
+    (addr, stopper)
+}
+
+fn cell_line(c: &Cell) -> String {
+    let ttfts = c.rep.ttfts();
+    let tpots = c.rep.tpots();
+    format!(
+        "{:<17} {:>4} x{}: {:>3} req {:>5} tok | ttft p50 {:>7.2} p99 {:>7.2} ms | \
+         tpot p50 {:>5.2} ms | mal {:.2} | prefix hit {:.3} | encode hit {:.3} | \
+         sheds {} | occ {:.2} | {:.2}s",
+        c.name,
+        front_str(c.front),
+        c.replicas,
+        c.rep.outcomes.len(),
+        c.rep.total_tokens(),
+        percentile(&ttfts, 50.0),
+        percentile(&ttfts, 99.0),
+        percentile(&tpots, 50.0),
+        c.rep.mal_mean(),
+        c.delta["prefix_cache_hit_rate"],
+        c.delta["vision_encode_hit_rate"],
+        c.rep.sheds(),
+        c.delta["batch_occupancy_mean"],
+        c.rep.wall_s,
+    )
+}
+
+fn cell_json(c: &Cell) -> Json {
+    let ttfts = c.rep.ttfts();
+    let tpots = c.rep.tpots();
+    let d = |k: &str| c.delta.get(k).copied().unwrap_or(0.0);
+    Json::obj(vec![
+        ("front", Json::str(front_str(c.front))),
+        ("replicas", Json::num(c.replicas as f64)),
+        ("requests", Json::num(c.rep.outcomes.len() as f64)),
+        ("completed", Json::num(c.rep.completed() as f64)),
+        ("tokens", Json::num(c.rep.total_tokens() as f64)),
+        ("ttft_ms_p50", Json::num(percentile(&ttfts, 50.0))),
+        ("ttft_ms_p99", Json::num(percentile(&ttfts, 99.0))),
+        ("tpot_ms_p50", Json::num(percentile(&tpots, 50.0))),
+        ("tpot_ms_p99", Json::num(percentile(&tpots, 99.0))),
+        ("mal_mean", Json::num(c.rep.mal_mean())),
+        ("prefix_cache_hits", Json::num(d("prefix_cache_hits"))),
+        ("prefix_cache_hit_rate", Json::num(d("prefix_cache_hit_rate"))),
+        ("vision_encode_hits", Json::num(d("vision_encode_hits"))),
+        ("vision_encode_hit_rate", Json::num(d("vision_encode_hit_rate"))),
+        ("shed_retries", Json::num(c.rep.sheds() as f64)),
+        ("batch_occupancy_mean", Json::num(d("batch_occupancy_mean"))),
+        ("wall_s", Json::num(c.rep.wall_s)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MASSV_BENCH_QUICK").ok().as_deref() == Some("1");
+    let (requests, max_new, rate) = if quick { (48, 10, 64.0) } else { (160, 24, 48.0) };
+
+    let mut report = BenchReport::new("scenario_suite");
+    let dir = massv::models::scripted::write_test_artifacts("scenario_suite", GEN_MAX, false);
+    report.line(format!(
+        "scenario suite: {requests} requests/scenario, max_new {max_new}, rate {rate}/s, \
+         seed base {SEED_BASE:#x}; 2 workers/replica, paced replay (time_scale 1.0)"
+    ));
+
+    let groups: [(Front, usize, &[&str]); 4] = [
+        (Front::Tcp, 1, &["chat_image_reuse", "heavy_tail"]),
+        (Front::Tcp, 2, &["multi_image_chat"]),
+        (Front::Http, 1, &["bursty_diurnal", "mixed_tenants"]),
+        (Front::Http, 2, &["zipf_hotspot"]),
+    ];
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut sidx = 0usize;
+    for (front, replicas, names) in groups {
+        let ce =
+            Arc::new(ClusterEngine::start(&dir, cluster_cfg(replicas)).expect("cluster start"));
+        // the bulk tenant runs under a real concurrency quota: its burst
+        // phase sheds 503s at the gate, which the replay retries -- token
+        // totals stay deterministic while shed counting gets exercised
+        let gw = GatewayConfig {
+            default_quota: Quota::default(),
+            tenant_quotas: vec![(
+                "bulk".to_string(),
+                Quota { rps: 0.0, burst: 0.0, max_concurrent: 6 },
+            )],
+        };
+        let (addr, stop) = match front {
+            Front::Tcp => start_tcp(ce.clone()),
+            Front::Http => start_http(ce.clone(), gw),
+        };
+        for &name in names {
+            let knobs = knobs_for(sidx, requests, rate, max_new);
+            let trace = by_name(name, &knobs, SEED_BASE + sidx as u64).expect("known scenario");
+            let before = ce.scrape();
+            let rep = replay(&addr, &trace, &opts_for(front)).expect("replay");
+            let delta = scrape_delta(&before, &ce.scrape());
+            assert_eq!(rep.completed(), requests, "{name}: every request must complete");
+            assert_eq!(
+                delta["requests_received"] as usize,
+                requests,
+                "{name}: the engine window must see exactly the trace (gate sheds excluded)"
+            );
+            let cell = Cell { name, front, replicas, rep, delta };
+            report.line(cell_line(&cell));
+            cells.push(cell);
+            sidx += 1;
+        }
+        stop();
+        Arc::try_unwrap(ce).unwrap_or_else(|_| panic!("cluster still shared")).shutdown();
+    }
+
+    // Determinism gate: replay the chat trace on a second fresh 1-replica
+    // server; greedy traces + no-eviction caches make token streams and
+    // hit counts pure arithmetic, so they must match exactly.
+    let knobs = knobs_for(0, requests, rate, max_new);
+    let trace = by_name("chat_image_reuse", &knobs, SEED_BASE).expect("known scenario");
+    let ce = Arc::new(ClusterEngine::start(&dir, cluster_cfg(1)).expect("cluster start"));
+    let (addr, stop) = start_tcp(ce.clone());
+    let before = ce.scrape();
+    let rep2 = replay(&addr, &trace, &opts_for(Front::Tcp)).expect("determinism replay");
+    let delta2 = scrape_delta(&before, &ce.scrape());
+    stop();
+    Arc::try_unwrap(ce).unwrap_or_else(|_| panic!("cluster still shared")).shutdown();
+    let chat = &cells[0];
+    assert_eq!(
+        rep2.token_streams(),
+        chat.rep.token_streams(),
+        "determinism: same trace, same per-request token streams"
+    );
+    assert_eq!(rep2.cache_hits(), chat.rep.cache_hits(), "determinism: client-observed hits");
+    for k in
+        ["tokens_generated", "prefix_cache_hits", "prefix_cache_misses", "vision_encode_hits"]
+    {
+        assert_eq!(delta2[k], chat.delta[k], "determinism: scrape window {k}");
+    }
+    report.line(format!(
+        "determinism gate: chat_image_reuse re-run matches ({} tokens, {} cache hits) -> PASS",
+        rep2.total_tokens(),
+        rep2.cache_hits()
+    ));
+
+    // scenario-shape gates (deterministic cache arithmetic, all modes)
+    let by = |n: &str| cells.iter().find(|c| c.name == n).expect("cell");
+    let zipf = by("zipf_hotspot");
+    assert!(
+        by("chat_image_reuse").delta["vision_encode_hit_rate"] > 0.0,
+        "chat follow-up turns must reuse vision encodes"
+    );
+    assert!(
+        by("multi_image_chat").delta["vision_encode_hit_rate"] > 0.0,
+        "multi-image revisits must reuse vision encodes"
+    );
+    assert!(
+        zipf.delta["prefix_cache_hit_rate"] > 0.0,
+        "zipf hot-spot traffic must repeat (image, prompt) prefixes"
+    );
+    assert_eq!(zipf.delta["cluster_spills"], 0.0, "unbounded spill depth: no spills");
+    for c in &cells {
+        assert!(c.rep.mal_mean() >= 1.0, "{}: accepted length below 1", c.name);
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("scenario_suite")),
+        ("quick", Json::Bool(quick)),
+        ("gen_max", Json::num(GEN_MAX as f64)),
+        ("requests_per_scenario", Json::num(requests as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("rate", Json::num(rate)),
+        ("seed_base", Json::num(SEED_BASE as f64)),
+        ("scenarios", Json::obj(cells.iter().map(|c| (c.name, cell_json(c))).collect())),
+        (
+            "determinism",
+            Json::obj(vec![
+                ("token_streams_equal", Json::Bool(true)),
+                ("cache_windows_equal", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("target/paper").ok();
+    std::fs::write("target/paper/BENCH_scenarios.json", format!("{}\n", json.to_string()))?;
+    report.line("[json saved to target/paper/BENCH_scenarios.json]");
+    report.finish();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

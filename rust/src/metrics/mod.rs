@@ -363,9 +363,183 @@ impl Metrics {
     }
 }
 
+/// True when `key` names a monotonically increasing scrape counter --
+/// the keys `scrape_delta` differences.  A `replica<i>_` prefix and a
+/// `{tenant="..."}` label are stripped first so per-replica and
+/// per-tenant copies classify like their flat equivalents; everything
+/// else (gauges, percentiles, means, config constants) is point-in-time
+/// and keeps its end-of-window value.
+fn monotone_scrape_key(key: &str) -> bool {
+    let mut k = key;
+    if let Some(rest) = k.strip_prefix("replica") {
+        if let Some(us) = rest.find('_') {
+            if us > 0 && rest[..us].bytes().all(|b| b.is_ascii_digit()) {
+                k = &rest[us + 1..];
+            }
+        }
+    }
+    let k = k.split('{').next().unwrap_or(k);
+    matches!(
+        k,
+        "requests_received"
+            | "requests_completed"
+            | "requests_rejected"
+            | "requests_failed"
+            | "requests_cancelled"
+            | "requests_deadline_exceeded"
+            | "tokens_generated"
+            | "draft_tokens_accepted"
+            | "verify_calls"
+            | "draft_calls"
+            | "prefix_cache_hits"
+            | "prefix_cache_misses"
+            | "prefix_cache_evictions"
+            | "vision_encode_hits"
+            | "vision_encode_fills"
+            | "batch_ticks"
+            | "batched_lane_steps"
+            | "kv_forks"
+            | "kv_cow_copies"
+            | "kv_swap_outs"
+            | "kv_swap_ins"
+            | "kv_preemptions"
+            | "tree_requests"
+            | "tree_nodes_drafted"
+            | "tree_iterations"
+            | "cluster_spills"
+            | "cluster_routed_affinity"
+            | "cluster_routed_blind"
+            | "routed"
+            | "tenant_received"
+            | "tenant_completed"
+            | "tenant_rejected"
+            | "tenant_cancelled"
+            | "tenant_deadline"
+            | "tenant_failed"
+            | "tenant_tokens"
+            | "http_requests"
+            | "http_shed_429"
+            | "http_shed_503"
+    )
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Difference two scrape snapshots into a per-window view: monotone
+/// counters become `after - before` (so one long-lived engine can serve
+/// many measured runs, the scenario-suite pattern), gauges and latency
+/// percentiles keep their end-of-window value, and the derived ratios
+/// (`prefix_cache_hit_rate`, `batch_occupancy_mean`, `overall_mal`,
+/// including `replica<i>_` copies) are recomputed from the window's own
+/// deltas rather than inherited from lifetime totals.  Also derives
+/// `vision_encode_hit_rate` (hits / (hits + fills) over the window),
+/// which has no lifetime scrape equivalent.  Keys absent from `before`
+/// delta from zero.
+pub fn scrape_delta(
+    before: &HashMap<String, f64>,
+    after: &HashMap<String, f64>,
+) -> HashMap<String, f64> {
+    let mut out: HashMap<String, f64> = after
+        .iter()
+        .map(|(k, &v)| {
+            let v = if monotone_scrape_key(k) {
+                v - before.get(k).copied().unwrap_or(0.0)
+            } else {
+                v
+            };
+            (k.clone(), v)
+        })
+        .collect();
+    let get = |m: &HashMap<String, f64>, k: String| m.get(&k).copied().unwrap_or(0.0);
+    let derived: Vec<String> = out
+        .keys()
+        .filter(|k| {
+            k.ends_with("prefix_cache_hit_rate")
+                || k.ends_with("batch_occupancy_mean")
+                || k.ends_with("overall_mal")
+        })
+        .cloned()
+        .collect();
+    for key in derived {
+        let v = if let Some(p) = key.strip_suffix("prefix_cache_hit_rate") {
+            let h = get(&out, format!("{p}prefix_cache_hits"));
+            ratio(h, h + get(&out, format!("{p}prefix_cache_misses")))
+        } else if let Some(p) = key.strip_suffix("batch_occupancy_mean") {
+            ratio(get(&out, format!("{p}batched_lane_steps")), get(&out, format!("{p}batch_ticks")))
+        } else {
+            let p = key.strip_suffix("overall_mal").unwrap_or("");
+            let vc = get(&out, format!("{p}verify_calls"));
+            ratio(get(&out, format!("{p}draft_tokens_accepted")) + vc, vc)
+        };
+        out.insert(key, v);
+    }
+    if after.contains_key("vision_encode_hits") {
+        let h = get(&out, "vision_encode_hits".into());
+        let f = get(&out, "vision_encode_fills".into());
+        out.insert("vision_encode_hit_rate".into(), ratio(h, h + f));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scrape_delta_windows_counters_and_recomputes_ratios() {
+        let mut before = HashMap::new();
+        let mut after = HashMap::new();
+        for (k, b, a) in [
+            ("requests_completed", 10.0, 16.0),
+            ("prefix_cache_hits", 8.0, 11.0),
+            ("prefix_cache_misses", 2.0, 3.0),
+            ("prefix_cache_hit_rate", 0.8, 11.0 / 14.0),
+            ("inflight", 1.0, 2.0),
+            ("latency_ms_p50", 5.0, 7.0),
+            ("replica1_tokens_generated", 100.0, 140.0),
+            ("replica1_prefix_cache_hits", 5.0, 9.0),
+            ("replica1_prefix_cache_misses", 5.0, 7.0),
+            ("replica1_prefix_cache_hit_rate", 0.5, 9.0 / 16.0),
+            ("tenant_tokens{tenant=\"bulk\"}", 50.0, 80.0),
+            ("vision_encode_hits", 4.0, 6.0),
+            ("vision_encode_fills", 4.0, 5.0),
+            ("batch_ticks", 10.0, 10.0),
+            ("batched_lane_steps", 30.0, 30.0),
+            ("batch_occupancy_mean", 3.0, 3.0),
+            ("verify_calls", 10.0, 14.0),
+            ("draft_tokens_accepted", 20.0, 30.0),
+            ("overall_mal", 3.0, 44.0 / 14.0),
+        ] {
+            before.insert(k.to_string(), b);
+            after.insert(k.to_string(), a);
+        }
+        // a key absent before deltas from zero
+        after.insert("cluster_spills".into(), 3.0);
+        let d = scrape_delta(&before, &after);
+        assert_eq!(d["requests_completed"], 6.0);
+        assert_eq!(d["replica1_tokens_generated"], 40.0);
+        assert_eq!(d["tenant_tokens{tenant=\"bulk\"}"], 30.0);
+        assert_eq!(d["cluster_spills"], 3.0);
+        // gauges and percentiles keep their end-of-window value
+        assert_eq!(d["inflight"], 2.0);
+        assert_eq!(d["latency_ms_p50"], 7.0);
+        // ratios recomputed from the window's own deltas, flat and
+        // per-replica: 3/(3+1) and 4/(4+2)
+        assert!((d["prefix_cache_hit_rate"] - 0.75).abs() < 1e-12);
+        assert!((d["replica1_prefix_cache_hit_rate"] - 4.0 / 6.0).abs() < 1e-12);
+        // derived encode hit rate over the window: 2 hits, 1 fill
+        assert!((d["vision_encode_hit_rate"] - 2.0 / 3.0).abs() < 1e-12);
+        // zero-width windows give 0, not NaN
+        assert_eq!(d["batch_occupancy_mean"], 0.0);
+        // mal over the window: (10 + 4) / 4
+        assert!((d["overall_mal"] - 3.5).abs() < 1e-12);
+    }
 
     #[test]
     fn counters_and_gauges() {

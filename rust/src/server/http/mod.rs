@@ -630,4 +630,70 @@ impl HttpClient {
         let summary = summary.ok_or_else(|| anyhow!("SSE stream missing the summary frame"))?;
         Ok((status, chunks, summary))
     }
+
+    /// Streaming generate that reads the SSE frames incrementally and
+    /// stamps each chunk frame with the elapsed milliseconds since the
+    /// request was written (first stamp = client-observed TTFT), instead
+    /// of buffering the whole response to EOF like `generate_streaming`.
+    /// On a non-200 status the frames are empty and the summary is the
+    /// error body.
+    pub fn generate_streaming_timed(
+        &self,
+        body: &Json,
+        tenant: Option<&str>,
+    ) -> Result<(u16, Vec<(f64, Vec<i32>)>, Json)> {
+        let mut stream = TcpStream::connect(&self.addr)?;
+        stream.set_nodelay(true)?;
+        let payload = body.to_string();
+        let mut req = format!("POST /v1/generate HTTP/1.1\r\nHost: {}\r\n", self.addr);
+        if let Some(t) = tenant {
+            req.push_str(&format!("x-tenant: {t}\r\n"));
+        }
+        req.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", payload.len()));
+        let t0 = std::time::Instant::now();
+        stream.write_all(req.as_bytes())?;
+        stream.write_all(payload.as_bytes())?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let status = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| anyhow!("malformed status line {line:?}"))?;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                return Err(anyhow!("connection closed mid-headers"));
+            }
+            if h.trim_end().is_empty() {
+                break;
+            }
+        }
+        if status != 200 {
+            let mut rest = String::new();
+            reader.read_to_string(&mut rest)?;
+            return Ok((status, Vec::new(), parse(&rest)?));
+        }
+        let mut frames = Vec::new();
+        let mut summary = None;
+        loop {
+            let mut l = String::new();
+            if reader.read_line(&mut l)? == 0 {
+                return Err(anyhow!("SSE stream closed before [DONE]"));
+            }
+            let Some(data) = l.trim_end().strip_prefix("data: ") else { continue };
+            if data == "[DONE]" {
+                break;
+            }
+            let v = parse(data)?;
+            match v.get("chunk") {
+                Some(c) => frames.push((t0.elapsed().as_secs_f64() * 1e3, c.to_i32_vec()?)),
+                None => summary = Some(v),
+            }
+        }
+        let summary = summary.ok_or_else(|| anyhow!("SSE stream missing the summary frame"))?;
+        Ok((status, frames, summary))
+    }
 }

@@ -260,6 +260,16 @@ impl Client {
     /// Streaming call (`"stream": true` generates): collects the per-step
     /// chunk frames and returns them with the final summary frame.
     pub fn call_streaming(&mut self, req: &Json) -> Result<(Vec<Vec<i32>>, Json)> {
+        let (frames, summary) = self.call_streaming_timed(req)?;
+        Ok((frames.into_iter().map(|(_, c)| c).collect(), summary))
+    }
+
+    /// Like `call_streaming`, but stamps every chunk frame with the
+    /// elapsed milliseconds since the request was written.  The first
+    /// stamp is the client-observed TTFT; the scenario replay harness
+    /// (`workload::scenario::replay`) derives TPOT from the stamp span.
+    pub fn call_streaming_timed(&mut self, req: &Json) -> Result<(Vec<(f64, Vec<i32>)>, Json)> {
+        let t0 = std::time::Instant::now();
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
@@ -271,7 +281,7 @@ impl Client {
             }
             let frame = crate::util::json::parse(&line)?;
             match frame.get("chunk") {
-                Some(c) => chunks.push(c.to_i32_vec()?),
+                Some(c) => chunks.push((t0.elapsed().as_secs_f64() * 1e3, c.to_i32_vec()?)),
                 None => return Ok((chunks, frame)),
             }
         }

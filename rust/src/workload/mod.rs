@@ -8,6 +8,8 @@ use crate::tokenizer::Tokenizer;
 use crate::util::json::parse;
 use crate::util::rng::Rng;
 
+pub mod scenario;
+
 /// Paper tasks (Section 4.1): LLaVA-150k, LLaVA-Bench(wild), GQA, COCO
 /// analogs -- see DESIGN.md section 2 for the substitution argument.
 pub const TASKS: [&str; 4] = ["instruct", "wild", "gqa", "coco"];
@@ -75,12 +77,95 @@ pub const CLASSES: [&str; 3] = ["chat", "caption", "doc"];
 /// Deterministic per-arrival class stream.  Classes draw from an rng
 /// derived from (but distinct from) the schedule seed, so tagging never
 /// perturbs the at/item/image sequences existing benches and tests pin.
-fn class_rng(seed: u64) -> Rng {
+pub(crate) fn class_rng(seed: u64) -> Rng {
     Rng::seeded(seed ^ 0x9E37_79B9_7F4A_7C15)
 }
 
-fn draw_class(rng: &mut Rng) -> &'static str {
+pub(crate) fn draw_class(rng: &mut Rng) -> &'static str {
     CLASSES[rng.range(CLASSES.len())]
+}
+
+/// Inter-arrival gap shared by the open-loop generators.  A non-positive
+/// (or non-finite) `rate` is the documented closed-loop degenerate: every
+/// arrival lands at offset 0.0 instead of panicking (debug) or producing
+/// `+inf` offsets (release) inside `Rng::exponential`.  The degenerate
+/// branch still consumes exactly one draw so the item/image/class streams
+/// stay aligned with the paced schedule at the same seed -- `rate` is a
+/// knob that may move arrival *times* but never the arrival *contents*.
+fn arrival_gap(rng: &mut Rng, rate: f64) -> f64 {
+    if rate > 0.0 && rate.is_finite() {
+        rng.exponential(rate)
+    } else {
+        let _ = rng.next_u64();
+        0.0
+    }
+}
+
+/// Bounded (truncated) Pareto draw on `[lo, hi]` via inverse-CDF: the
+/// heavy-tailed length law the scenario suite uses for prompt/output
+/// sizes.  Smaller `alpha` means heavier tail (more mass near `hi`).
+/// Degenerates are defined, not panics: `lo == hi` is the constant
+/// distribution and `alpha <= 0` (or non-finite) falls back to uniform on
+/// `[lo, hi]`.  Always consumes exactly one draw, so sweeping `alpha`
+/// never perturbs other streams derived from the same rng.
+pub fn bounded_pareto(rng: &mut Rng, alpha: f64, lo: f64, hi: f64) -> f64 {
+    assert!(lo > 0.0 && hi >= lo, "bounded_pareto needs 0 < lo <= hi, got [{lo}, {hi}]");
+    let u = rng.f64();
+    if hi == lo {
+        return lo;
+    }
+    if alpha <= 0.0 || !alpha.is_finite() {
+        return lo + u * (hi - lo);
+    }
+    let ratio = (lo / hi).powf(alpha);
+    lo / (1.0 - u * (1.0 - ratio)).powf(1.0 / alpha)
+}
+
+/// Arrival offsets for an inhomogeneous Poisson process whose rate is the
+/// piecewise-constant cycle `segments` = `[(duration_s, rate), ...]`
+/// repeated forever: the bursty/diurnal arrival law of the scenario
+/// suite.  Sampling is exact (time-rescaling: one unit-rate exponential
+/// is consumed across segment capacities), not thinning, so every arrival
+/// costs exactly one draw regardless of the segment layout -- reshaping
+/// the rate profile never perturbs sibling rng streams.
+///
+/// Degenerates are defined, not hangs: segments with non-positive
+/// duration are skipped, zero-rate segments pass wall time without
+/// arrivals, and if no segment has positive duration *and* positive rate
+/// (including an empty slice) every arrival lands at offset 0.0.
+pub fn piecewise_poisson(n: usize, segments: &[(f64, f64)], rng: &mut Rng) -> Vec<f64> {
+    let usable = segments
+        .iter()
+        .any(|&(d, r)| d > 0.0 && r > 0.0 && r.is_finite());
+    let mut seg = 0usize;
+    let mut into = 0.0; // time already consumed within the current segment
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            let mut e = rng.exponential(1.0);
+            if !usable {
+                return 0.0;
+            }
+            loop {
+                let (dur, rate) = segments[seg % segments.len()];
+                if dur > 0.0 && rate > 0.0 && rate.is_finite() {
+                    let cap = (dur - into) * rate;
+                    if e < cap {
+                        let dt = e / rate;
+                        into += dt;
+                        t += dt;
+                        return t;
+                    }
+                    e -= cap;
+                    t += dur - into;
+                } else if dur > 0.0 {
+                    t += dur - into;
+                }
+                seg += 1;
+                into = 0.0;
+            }
+        })
+        .collect()
 }
 
 /// Open-loop arrival schedule: Poisson process at `rate` req/s over `n`
@@ -96,12 +181,13 @@ pub struct Arrival {
 }
 
 pub fn poisson_schedule(n: usize, rate: f64, pool: usize, seed: u64) -> Vec<Arrival> {
+    assert!(pool > 0, "pools must be non-empty");
     let mut rng = Rng::seeded(seed);
     let mut crng = class_rng(seed);
     let mut t = 0.0;
     (0..n)
         .map(|_| {
-            t += rng.exponential(rate);
+            t += arrival_gap(&mut rng, rate);
             Arrival { at: t, item: rng.range(pool), class: draw_class(&mut crng) }
         })
         .collect()
@@ -156,7 +242,7 @@ pub fn repeated_image_schedule(
     let mut class = CLASSES[0];
     (0..n)
         .map(|i| {
-            t += rng.exponential(rate);
+            t += arrival_gap(&mut rng, rate);
             if i == 0 || rng.f64() >= knobs.reuse_prob {
                 image = rng.range(knobs.image_pool);
                 class = draw_class(&mut crng);
@@ -208,7 +294,7 @@ pub fn hotspot_image_schedule(
     let mut class = CLASSES[0];
     (0..n)
         .map(|i| {
-            t += rng.exponential(rate);
+            t += arrival_gap(&mut rng, rate);
             if i == 0 || rng.f64() >= knobs.reuse_prob {
                 let u = rng.f64() * total;
                 image = cdf.partition_point(|&c| c <= u).min(knobs.image_pool - 1);
@@ -337,6 +423,146 @@ mod tests {
         let hot = HotSpotKnobs { image_pool: 8, zipf_s: 1.1, reuse_prob: 0.3 };
         let h = hotspot_image_schedule(600, 100.0, 4, &hot, 9);
         assert!(h.iter().all(|a| CLASSES.contains(&a.class)));
+    }
+
+    #[test]
+    fn rate_zero_is_defined_and_content_aligned() {
+        // rate <= 0 (and non-finite rates) degrade to "all arrivals at
+        // offset 0" instead of panicking, and the item/image/class streams
+        // are byte-identical to any paced schedule at the same seed: rate
+        // moves times, never contents.
+        for rate in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let s = poisson_schedule(64, rate, 4, 42);
+            assert_eq!(s.len(), 64);
+            assert!(s.iter().all(|a| a.at == 0.0), "rate {rate}: arrivals at t=0");
+        }
+        let paced = poisson_schedule(64, 25.0, 4, 42);
+        let parked = poisson_schedule(64, 0.0, 4, 42);
+        assert!(paced
+            .iter()
+            .zip(&parked)
+            .all(|(a, b)| a.item == b.item && a.class == b.class));
+        let knobs = RepeatKnobs { image_pool: 8, reuse_prob: 0.5 };
+        let paced = repeated_image_schedule(64, 25.0, 4, &knobs, 9);
+        let parked = repeated_image_schedule(64, 0.0, 4, &knobs, 9);
+        assert!(parked.iter().all(|a| a.at == 0.0));
+        assert!(paced
+            .iter()
+            .zip(&parked)
+            .all(|(a, b)| a.item == b.item && a.image == b.image && a.class == b.class));
+        let knobs = HotSpotKnobs { image_pool: 8, zipf_s: 1.1, reuse_prob: 0.3 };
+        let paced = hotspot_image_schedule(64, 25.0, 4, &knobs, 9);
+        let parked = hotspot_image_schedule(64, 0.0, 4, &knobs, 9);
+        assert!(parked.iter().all(|a| a.at == 0.0));
+        assert!(paced
+            .iter()
+            .zip(&parked)
+            .all(|(a, b)| a.item == b.item && a.image == b.image && a.class == b.class));
+    }
+
+    #[test]
+    fn empty_pool_panics_not_wraps() {
+        // pool = 0 must be a loud assert in all build profiles, not a
+        // silent release-mode index-0 fallback from Rng::range(0)
+        let r = std::panic::catch_unwind(|| poisson_schedule(4, 10.0, 0, 1));
+        assert!(r.is_err(), "poisson_schedule(pool=0) must panic");
+        let r = std::panic::catch_unwind(|| {
+            repeated_image_schedule(4, 10.0, 4, &RepeatKnobs { image_pool: 0, reuse_prob: 0.5 }, 1)
+        });
+        assert!(r.is_err(), "repeated_image_schedule(image_pool=0) must panic");
+        let r = std::panic::catch_unwind(|| {
+            hotspot_image_schedule(
+                4,
+                10.0,
+                0,
+                &HotSpotKnobs { image_pool: 8, zipf_s: 1.0, reuse_prob: 0.0 },
+                1,
+            )
+        });
+        assert!(r.is_err(), "hotspot_image_schedule(item_pool=0) must panic");
+    }
+
+    #[test]
+    fn piecewise_poisson_matches_segment_rates() {
+        // two-phase cycle: 1s at 20/s, 1s at 200/s -- arrivals must be
+        // sorted, land in both phases, and respect the per-phase rates
+        let mut rng = Rng::seeded(7);
+        let segs = [(1.0, 20.0), (1.0, 200.0)];
+        let at = piecewise_poisson(6000, &segs, &mut rng);
+        assert_eq!(at.len(), 6000);
+        for w in at.windows(2) {
+            assert!(w[0] <= w[1], "arrivals must be time-ordered");
+        }
+        let (mut low, mut high) = (0usize, 0usize);
+        for &t in &at {
+            if t.rem_euclid(2.0) < 1.0 {
+                low += 1;
+            } else {
+                high += 1;
+            }
+        }
+        let ratio = high as f64 / low.max(1) as f64;
+        assert!((6.0..16.0).contains(&ratio), "burst ratio {ratio:.2}, expected ~10");
+    }
+
+    #[test]
+    fn piecewise_poisson_degenerates_are_defined() {
+        // zero-rate segments pass wall time without arrivals
+        let mut rng = Rng::seeded(3);
+        let at = piecewise_poisson(2000, &[(1.0, 100.0), (1.0, 0.0)], &mut rng);
+        assert!(at.iter().all(|&t| t.rem_euclid(2.0) < 1.0), "no arrivals in the off phase");
+        // empty / all-zero / zero-duration segment lists collapse to t=0
+        // rather than spinning forever
+        for segs in [&[][..], &[(1.0, 0.0)][..], &[(0.0, 50.0)][..], &[(-1.0, 5.0), (2.0, 0.0)][..]]
+        {
+            let mut rng = Rng::seeded(3);
+            let at = piecewise_poisson(16, segs, &mut rng);
+            assert!(at.iter().all(|&t| t == 0.0), "{segs:?} must park at t=0");
+        }
+        // determinism: same seed, same offsets
+        let mut r1 = Rng::seeded(11);
+        let mut r2 = Rng::seeded(11);
+        let a = piecewise_poisson(256, &[(0.5, 30.0), (0.2, 300.0)], &mut r1);
+        let b = piecewise_poisson(256, &[(0.5, 30.0), (0.2, 300.0)], &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bounded_pareto_bounds_and_degenerates() {
+        let mut rng = Rng::seeded(5);
+        for alpha in [0.0, 0.5, 1.2, 3.0] {
+            for _ in 0..2000 {
+                let x = bounded_pareto(&mut rng, alpha, 2.0, 20.0);
+                assert!((2.0..=20.0).contains(&x), "alpha {alpha}: {x} out of [2, 20]");
+            }
+        }
+        // lo == hi is the constant distribution
+        for _ in 0..16 {
+            assert_eq!(bounded_pareto(&mut rng, 1.5, 4.0, 4.0), 4.0);
+        }
+        // alpha <= 0 falls back to uniform: mean ~ midpoint
+        let mean: f64 =
+            (0..4000).map(|_| bounded_pareto(&mut rng, 0.0, 2.0, 20.0)).sum::<f64>() / 4000.0;
+        assert!((mean - 11.0).abs() < 0.5, "uniform fallback mean {mean:.2}");
+        // heavier alpha concentrates mass near lo: median well below uniform's
+        let mut xs: Vec<f64> = (0..4001).map(|_| bounded_pareto(&mut rng, 2.0, 2.0, 20.0)).collect();
+        xs.sort_by(f64::total_cmp);
+        assert!(xs[2000] < 4.0, "alpha=2 median {:.2} should hug lo", xs[2000]);
+        // invalid bounds panic loudly
+        assert!(std::panic::catch_unwind(|| {
+            bounded_pareto(&mut Rng::seeded(1), 1.0, 0.0, 4.0)
+        })
+        .is_err());
+        assert!(std::panic::catch_unwind(|| {
+            bounded_pareto(&mut Rng::seeded(1), 1.0, 5.0, 4.0)
+        })
+        .is_err());
+        // alpha is a tail knob, not a stream knob: one draw regardless
+        let mut r1 = Rng::seeded(9);
+        let mut r2 = Rng::seeded(9);
+        bounded_pareto(&mut r1, 0.7, 2.0, 20.0);
+        bounded_pareto(&mut r2, 3.0, 2.0, 20.0);
+        assert_eq!(r1.next_u64(), r2.next_u64(), "alpha must not change draw count");
     }
 
     #[test]

@@ -1,0 +1,599 @@
+//! Named, seeded, deterministic serving scenarios.
+//!
+//! Each scenario composes the schedule primitives in `workload` (Poisson
+//! and piecewise-Poisson arrivals, bounded-Pareto lengths, Zipf image
+//! popularity, multi-turn continuation) into a replayable [`Trace`]: a
+//! time-sorted list of fully-specified requests.  The same `(knobs,
+//! seed)` pair always produces a byte-identical trace -- pinned by
+//! `Trace::digest` in `rust/tests/workload_properties.rs` -- so a trace
+//! is a reproducible experiment, not a one-shot load pattern.
+//!
+//! Determinism follows the derived-RNG-stream rule the flat generators
+//! established: each concern (arrival times, content, class tags,
+//! lengths) draws from its own rng derived from the scenario seed, and
+//! every draw consumes a fixed budget regardless of knob values.  Knobs
+//! therefore perturb only the streams they semantically own -- `rate`
+//! moves arrival times but never images or classes, `max_new` never
+//! moves arrivals, `prompt_pool` never moves images.
+//!
+//! The replay harness that drives a trace through the real server (TCP
+//! or HTTP front, any replica count) lives in [`replay`]; the standing
+//! bench over all scenarios is `benches/scenario_suite.rs`
+//! (`docs/scenarios.md`).
+
+pub mod replay;
+
+use super::{
+    arrival_gap, bounded_pareto, class_rng, draw_class, hotspot_image_schedule, piecewise_poisson,
+    HotSpotKnobs,
+};
+use crate::util::rng::Rng;
+
+/// One fully-specified request in a trace.  `image` is a `demo_image`
+/// phase (the scripted backend's synthetic image family); `by_reference`
+/// marks turns that should re-reference the image by its content address
+/// (`image_id`) once a prior response has reported it, exercising the
+/// pixel-free fast path -- the replay harness falls back to pixels until
+/// the address is known, which is output-identical because the cache is
+/// content-addressed either way.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// arrival offset from trace start, seconds
+    pub at: f64,
+    /// conversation this request belongs to (single-shot scenarios give
+    /// every request its own conversation)
+    pub conv: u64,
+    /// turn index within the conversation
+    pub turn: usize,
+    /// workload class tag (`workload::CLASSES`)
+    pub class: &'static str,
+    pub tenant: String,
+    /// "interactive" | "batch" (wire values of `Request::priority`)
+    pub priority: &'static str,
+    pub prompt: String,
+    /// image identity: a `models::scripted::demo_image` phase
+    pub image: usize,
+    pub by_reference: bool,
+    pub max_new: usize,
+    /// 0.0 everywhere: greedy decoding keeps replay token streams
+    /// bit-identical across fronts, replica counts, and repetitions
+    pub temperature: f32,
+    pub seed: u64,
+    /// None from every generator; the soak tests mutate this in place
+    pub deadline_ms: Option<u64>,
+}
+
+/// A named, replayable scenario trace: requests sorted by arrival offset.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub seed: u64,
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Offset of the last arrival, seconds (0.0 for an empty trace).
+    pub fn duration(&self) -> f64 {
+        self.requests.last().map(|r| r.at).unwrap_or(0.0)
+    }
+
+    /// FNV-1a digest over every field of every request (floats by bit
+    /// pattern).  Two traces with equal digests are byte-identical for
+    /// all practical purposes; the property tests pin same-seed equality
+    /// and cross-seed inequality through this.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(self.name.as_bytes());
+        h.u64(self.seed);
+        for r in &self.requests {
+            h.u64(r.at.to_bits());
+            h.u64(r.conv);
+            h.u64(r.turn as u64);
+            h.bytes(r.class.as_bytes());
+            h.bytes(r.tenant.as_bytes());
+            h.bytes(r.priority.as_bytes());
+            h.bytes(r.prompt.as_bytes());
+            h.u64(r.image as u64);
+            h.u64(r.by_reference as u64);
+            h.u64(r.max_new as u64);
+            h.u64(r.temperature.to_bits() as u64);
+            h.u64(r.seed);
+            h.u64(r.deadline_ms.map(|d| d + 1).unwrap_or(0));
+        }
+        h.0
+    }
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+        // length terminator so ("ab","c") != ("a","bc")
+        self.0 ^= b.len() as u64;
+        self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+/// Shared scenario knobs.  Every scenario interprets them the same way:
+/// `requests` is the exact emitted trace length, `rate` the target mean
+/// arrival rate (req/s; <= 0 parks all arrivals at t=0), `image_pool` /
+/// `prompt_pool` the distinct images / prompt stems in circulation,
+/// `max_new` the per-request decode budget (scenario-specific laws may
+/// scale it), and `image_base` offsets every image phase so traces
+/// sharing one server don't cross-warm each other's caches.
+#[derive(Debug, Clone)]
+pub struct ScenarioKnobs {
+    pub requests: usize,
+    pub rate: f64,
+    pub image_pool: usize,
+    pub prompt_pool: usize,
+    pub max_new: usize,
+    pub image_base: usize,
+}
+
+impl Default for ScenarioKnobs {
+    fn default() -> ScenarioKnobs {
+        ScenarioKnobs {
+            requests: 64,
+            rate: 32.0,
+            image_pool: 8,
+            prompt_pool: 6,
+            max_new: 16,
+            image_base: 0,
+        }
+    }
+}
+
+/// The scenario registry, in bench-report order.
+pub const NAMES: [&str; 6] = [
+    "chat_image_reuse",
+    "bursty_diurnal",
+    "heavy_tail",
+    "mixed_tenants",
+    "multi_image_chat",
+    "zipf_hotspot",
+];
+
+/// Build a named scenario; `None` for an unknown name.
+pub fn by_name(name: &str, knobs: &ScenarioKnobs, seed: u64) -> Option<Trace> {
+    Some(match name {
+        "chat_image_reuse" => chat_image_reuse(knobs, seed),
+        "bursty_diurnal" => bursty_diurnal(knobs, seed),
+        "heavy_tail" => heavy_tail(knobs, seed),
+        "mixed_tenants" => mixed_tenants(knobs, seed),
+        "multi_image_chat" => multi_image_chat(knobs, seed),
+        "zipf_hotspot" => zipf_hotspot(knobs, seed),
+        _ => return None,
+    })
+}
+
+/// Derived rng streams, one per concern (the PR 8 guarantee extended to
+/// scenarios): arrivals, content (images/prompts/per-request seeds),
+/// classes, lengths.
+fn rng_streams(seed: u64) -> (Rng, Rng, Rng, Rng) {
+    (
+        Rng::seeded(seed ^ 0xA5A5_5A5A_0F0F_F0F0),
+        Rng::seeded(seed ^ 0xC3C3_3C3C_69A9_9A96),
+        class_rng(seed),
+        Rng::seeded(seed ^ 0x1357_9BDF_2468_ACE0),
+    )
+}
+
+/// Deterministic prompt text over the scripted vocab (`w5`..`w104`):
+/// `idx` selects the stem, `salt` differentiates turns of one
+/// conversation, `words` sets the length.  Stays well under the scripted
+/// manifest's `p_max = 32` for `words <= 20`.
+fn prompt_for(idx: usize, salt: usize, words: usize) -> String {
+    let mut s = String::new();
+    for k in 0..words.max(1) {
+        if k > 0 {
+            s.push(' ');
+        }
+        let w = 5 + (idx * 17 + salt * 29 + k * 7) % 100;
+        s.push_str(&format!("w{w}"));
+    }
+    s
+}
+
+/// Sort by arrival (conversation/turn tie-break so equal-time arrivals
+/// have one canonical order) and cut to the exact request budget.
+fn finish(name: &str, seed: u64, knobs: &ScenarioKnobs, mut reqs: Vec<TraceRequest>) -> Trace {
+    reqs.sort_by(|a, b| {
+        a.at.total_cmp(&b.at).then(a.conv.cmp(&b.conv)).then(a.turn.cmp(&b.turn))
+    });
+    reqs.truncate(knobs.requests);
+    Trace { name: name.to_string(), seed, requests: reqs }
+}
+
+fn base_request(k: &ScenarioKnobs) -> TraceRequest {
+    TraceRequest {
+        at: 0.0,
+        conv: 0,
+        turn: 0,
+        class: super::CLASSES[0],
+        tenant: "default".to_string(),
+        priority: "interactive",
+        prompt: String::new(),
+        image: k.image_base,
+        by_reference: false,
+        max_new: k.max_new.max(1),
+        temperature: 0.0,
+        seed: 0,
+        deadline_ms: None,
+    }
+}
+
+/// Multi-turn chat with image reuse: conversations open as a Poisson
+/// stream, run 1-4 turns with exponential think gaps, and every
+/// follow-up turn re-references the opening turn's image (`image_id`
+/// path) with a fresh prompt -- the warm-prefill regime the prefix cache
+/// and vision-encode reuse target.
+pub fn chat_image_reuse(k: &ScenarioKnobs, seed: u64) -> Trace {
+    let (mut arr, mut content, mut class, _len) = rng_streams(seed);
+    let mut reqs = Vec::new();
+    let mut t = 0.0;
+    let mut conv = 0u64;
+    // mean 2.5 turns/conversation: open at rate/2.5 to land near `rate`
+    let conv_rate = k.rate / 2.5;
+    while reqs.len() < k.requests {
+        t += arrival_gap(&mut arr, conv_rate);
+        let turns = 1 + arr.range(4);
+        let image = k.image_base + content.range(k.image_pool.max(1));
+        let c = draw_class(&mut class);
+        let mut at = t;
+        for turn in 0..turns {
+            if turn > 0 {
+                at += arrival_gap(&mut arr, k.rate * 0.5);
+            }
+            let stem = content.range(k.prompt_pool.max(1));
+            reqs.push(TraceRequest {
+                at,
+                conv,
+                turn,
+                class: c,
+                prompt: prompt_for(stem, turn, 4),
+                image,
+                by_reference: turn > 0,
+                seed: content.next_u64(),
+                ..base_request(k)
+            });
+        }
+        conv += 1;
+    }
+    finish("chat_image_reuse", seed, k, reqs)
+}
+
+/// Bursty/diurnal arrivals: a piecewise-rate Poisson cycle with a quiet
+/// phase, a shoulder, a 4x burst spike, and a busy tail, scaled so the
+/// whole trace spans roughly `requests / rate` seconds.  Content is
+/// i.i.d. -- this scenario stresses admission and batching, not caching.
+pub fn bursty_diurnal(k: &ScenarioKnobs, seed: u64) -> Trace {
+    let (mut arr, mut content, mut class, _len) = rng_streams(seed);
+    let span = if k.rate > 0.0 && k.rate.is_finite() { k.requests as f64 / k.rate } else { 1.0 };
+    let segs = [
+        (0.30 * span, 0.4 * k.rate),
+        (0.25 * span, 1.0 * k.rate),
+        (0.10 * span, 4.0 * k.rate),
+        (0.35 * span, 1.1 * k.rate),
+    ];
+    let at = piecewise_poisson(k.requests, &segs, &mut arr);
+    let reqs = at
+        .into_iter()
+        .enumerate()
+        .map(|(i, at)| TraceRequest {
+            at,
+            conv: i as u64,
+            class: draw_class(&mut class),
+            prompt: prompt_for(content.range(k.prompt_pool.max(1)), 0, 4),
+            image: k.image_base + content.range(k.image_pool.max(1)),
+            seed: content.next_u64(),
+            ..base_request(k)
+        })
+        .collect();
+    finish("bursty_diurnal", seed, k, reqs)
+}
+
+/// Heavy-tailed prompt and output lengths: bounded-Pareto word counts
+/// (2-18 words) and decode budgets (2 up to 3x `max_new`, capped at 48
+/// to stay inside the scripted `t_max`), Poisson arrivals.  A few
+/// long-read requests dominate token volume while most stay short --
+/// the occupancy/fairness stress for iteration-level scheduling.
+pub fn heavy_tail(k: &ScenarioKnobs, seed: u64) -> Trace {
+    let (mut arr, mut content, mut class, mut len) = rng_streams(seed);
+    let hi = ((k.max_new.max(2) * 3).min(48).max(k.max_new.max(2))) as f64;
+    let mut t = 0.0;
+    let reqs = (0..k.requests)
+        .map(|i| {
+            t += arrival_gap(&mut arr, k.rate);
+            let words = bounded_pareto(&mut len, 1.3, 2.0, 18.0).round() as usize;
+            let out = bounded_pareto(&mut len, 1.1, 2.0, hi).round() as usize;
+            TraceRequest {
+                at: t,
+                conv: i as u64,
+                class: draw_class(&mut class),
+                prompt: prompt_for(content.range(k.prompt_pool.max(1)), 0, words),
+                image: k.image_base + content.range(k.image_pool.max(1)),
+                max_new: out.max(1),
+                seed: content.next_u64(),
+                ..base_request(k)
+            }
+        })
+        .collect();
+    finish("heavy_tail", seed, k, reqs)
+}
+
+/// Mixed tenants with unequal traffic shares: two interactive chat
+/// tenants ("gold", "silver") at a quarter of the load each, plus a
+/// "bulk" batch tenant contributing half the requests in a
+/// quiet/burst piecewise cycle at twice the decode budget.  Each lane
+/// gets its own derived arrival rng, so adding or re-rating one tenant
+/// never perturbs another lane's schedule.
+pub fn mixed_tenants(k: &ScenarioKnobs, seed: u64) -> Trace {
+    let (_, mut content, mut class, _len) = rng_streams(seed);
+    let lanes: [(&str, f64, &'static str, usize); 3] = [
+        ("gold", 0.25, "interactive", 1),
+        ("silver", 0.25, "interactive", 1),
+        ("bulk", 0.5, "batch", 2),
+    ];
+    let mut counts: Vec<usize> = lanes.iter().map(|l| (k.requests as f64 * l.1) as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    if let Some(last) = counts.last_mut() {
+        *last += k.requests - assigned.min(k.requests);
+    }
+    let mut reqs = Vec::new();
+    for (li, &(tenant, share, priority, mult)) in lanes.iter().enumerate() {
+        let mut arr = Rng::seeded(seed ^ 0xBEEF_0000_0000_0000 ^ ((li as u64 + 1) << 32));
+        let lane_rate = k.rate * share;
+        let n = counts[li];
+        let at: Vec<f64> = if priority == "batch" {
+            // bulk traffic arrives in bursts: 4-phase quiet/spike cycle
+            let span = if lane_rate > 0.0 && lane_rate.is_finite() {
+                n as f64 / lane_rate
+            } else {
+                1.0
+            };
+            let segs = [
+                (0.4 * span, 0.3 * lane_rate),
+                (0.15 * span, 4.0 * lane_rate),
+                (0.45 * span, 0.9 * lane_rate),
+            ];
+            piecewise_poisson(n, &segs, &mut arr)
+        } else {
+            let mut t = 0.0;
+            (0..n)
+                .map(|_| {
+                    t += arrival_gap(&mut arr, lane_rate);
+                    t
+                })
+                .collect()
+        };
+        for (i, at) in at.into_iter().enumerate() {
+            reqs.push(TraceRequest {
+                at,
+                conv: ((li as u64) << 32) | i as u64,
+                class: draw_class(&mut class),
+                tenant: tenant.to_string(),
+                priority,
+                prompt: prompt_for(content.range(k.prompt_pool.max(1)), li, 4),
+                image: k.image_base + content.range(k.image_pool.max(1)),
+                max_new: (k.max_new.max(1) * mult).min(48),
+                seed: content.next_u64(),
+                ..base_request(k)
+            });
+        }
+    }
+    finish("mixed_tenants", seed, k, reqs)
+}
+
+/// Multi-image conversations: each conversation draws a pool of 2-4
+/// images and cycles turns over them, revisiting each image at least
+/// once; first sightings ship pixels, revisits go by reference.  This is
+/// the interleaved-eviction stress for the vision-encode cache -- hits
+/// require the cache to hold several images per conversation at once.
+pub fn multi_image_chat(k: &ScenarioKnobs, seed: u64) -> Trace {
+    let (mut arr, mut content, mut class, _len) = rng_streams(seed);
+    let mut reqs = Vec::new();
+    let mut t = 0.0;
+    let mut conv = 0u64;
+    let conv_rate = k.rate / 5.0; // ~5 turns per conversation
+    while reqs.len() < k.requests {
+        t += arrival_gap(&mut arr, conv_rate);
+        let m = (2 + content.range(3)).min(k.image_pool.max(1));
+        let images: Vec<usize> =
+            (0..m).map(|_| k.image_base + content.range(k.image_pool.max(1))).collect();
+        let turns = m + arr.range(m + 1);
+        let c = draw_class(&mut class);
+        let mut at = t;
+        for turn in 0..turns {
+            if turn > 0 {
+                at += arrival_gap(&mut arr, k.rate * 0.5);
+            }
+            reqs.push(TraceRequest {
+                at,
+                conv,
+                turn,
+                class: c,
+                prompt: prompt_for(content.range(k.prompt_pool.max(1)), turn, 3),
+                image: images[turn % m],
+                by_reference: turn >= m,
+                seed: content.next_u64(),
+                ..base_request(k)
+            });
+        }
+        conv += 1;
+    }
+    finish("multi_image_chat", seed, k, reqs)
+}
+
+/// Zipf hot-spot images: wraps `hotspot_image_schedule` (zipf_s = 1.1,
+/// 30% multi-turn continuation) so a few hot images dominate -- the
+/// prefix-affinity routing regime.  All requests are marked
+/// `by_reference`: once a hot image's content address is known, the
+/// stream stops shipping pixels for it.
+pub fn zipf_hotspot(k: &ScenarioKnobs, seed: u64) -> Trace {
+    let hk = HotSpotKnobs { image_pool: k.image_pool.max(1), zipf_s: 1.1, reuse_prob: 0.3 };
+    let sched = hotspot_image_schedule(k.requests, k.rate, k.prompt_pool.max(1), &hk, seed);
+    let (_, mut content, _, _) = rng_streams(seed);
+    let reqs = sched
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| TraceRequest {
+            at: a.at,
+            conv: i as u64,
+            class: a.class,
+            prompt: prompt_for(a.item, 0, 4),
+            image: k.image_base + a.image,
+            by_reference: true,
+            seed: content.next_u64(),
+            ..base_request(k)
+        })
+        .collect();
+    finish("zipf_hotspot", seed, k, reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs() -> ScenarioKnobs {
+        ScenarioKnobs { requests: 96, ..ScenarioKnobs::default() }
+    }
+
+    #[test]
+    fn every_scenario_emits_exact_sorted_budget() {
+        for name in NAMES {
+            let t = by_name(name, &knobs(), 7).unwrap();
+            assert_eq!(t.name, name);
+            assert_eq!(t.requests.len(), 96, "{name}");
+            for w in t.requests.windows(2) {
+                assert!(w[0].at <= w[1].at, "{name}: arrivals must be time-ordered");
+            }
+            for r in &t.requests {
+                assert!(r.at >= 0.0, "{name}");
+                assert!(!r.prompt.is_empty() && r.max_new >= 1, "{name}");
+                assert!(super::super::CLASSES.contains(&r.class), "{name}");
+                assert!(!r.tenant.is_empty(), "{name}");
+                assert_eq!(r.temperature, 0.0, "{name}: traces must be greedy");
+                assert!(r.deadline_ms.is_none(), "{name}");
+            }
+        }
+        assert!(by_name("nope", &knobs(), 7).is_none());
+    }
+
+    #[test]
+    fn chat_reuse_rereferences_the_conversation_image() {
+        let t = chat_image_reuse(&knobs(), 3);
+        let mut follow_ups = 0;
+        for r in &t.requests {
+            if r.turn > 0 {
+                follow_ups += 1;
+                assert!(r.by_reference, "follow-up turns go by image_id");
+                let opener = t
+                    .requests
+                    .iter()
+                    .find(|o| o.conv == r.conv && o.turn == 0)
+                    .expect("opener in trace");
+                assert_eq!(opener.image, r.image, "turns share the conversation image");
+                assert_eq!(opener.class, r.class, "turns share the conversation class");
+                assert_ne!(opener.prompt, r.prompt, "turns ask new questions");
+            }
+        }
+        assert!(follow_ups > 10, "reuse regime needs follow-ups, got {follow_ups}");
+    }
+
+    #[test]
+    fn mixed_tenants_shares_and_priorities() {
+        let t = mixed_tenants(&ScenarioKnobs { requests: 200, ..knobs() }, 5);
+        let count = |tn: &str| t.requests.iter().filter(|r| r.tenant == tn).count();
+        let (g, s, b) = (count("gold"), count("silver"), count("bulk"));
+        assert_eq!(g + s + b, 200);
+        assert_eq!(g, 50);
+        assert_eq!(s, 50);
+        assert_eq!(b, 100, "bulk takes half the traffic plus rounding remainder");
+        for r in &t.requests {
+            let want = if r.tenant == "bulk" { "batch" } else { "interactive" };
+            assert_eq!(r.priority, want);
+        }
+    }
+
+    #[test]
+    fn multi_image_chat_revisits_by_reference() {
+        let t = multi_image_chat(&knobs(), 11);
+        let mut revisits = 0;
+        for r in &t.requests {
+            if r.by_reference {
+                revisits += 1;
+                // a revisit's image appeared earlier in the same conversation
+                assert!(
+                    t.requests
+                        .iter()
+                        .any(|o| o.conv == r.conv && o.turn < r.turn && o.image == r.image),
+                    "revisit must re-reference a previously shown image"
+                );
+            }
+        }
+        assert!(revisits > 5, "need revisits, got {revisits}");
+    }
+
+    #[test]
+    fn zipf_hotspot_is_skewed() {
+        let t = zipf_hotspot(&ScenarioKnobs { requests: 600, image_base: 40, ..knobs() }, 9);
+        let hot = t.requests.iter().filter(|r| r.image == 40).count();
+        assert!(
+            hot as f64 / 600.0 > 0.25,
+            "hot image share {:.3} should dominate",
+            hot as f64 / 600.0
+        );
+        assert!(t.requests.iter().all(|r| (40..48).contains(&r.image)), "image_base offsets");
+    }
+
+    #[test]
+    fn digest_separates_seeds_and_pins_same_seed() {
+        for name in NAMES {
+            let a = by_name(name, &knobs(), 7).unwrap();
+            let b = by_name(name, &knobs(), 7).unwrap();
+            let c = by_name(name, &knobs(), 8).unwrap();
+            assert_eq!(a.digest(), b.digest(), "{name}: same seed, same trace");
+            assert_ne!(a.digest(), c.digest(), "{name}: seed must matter");
+        }
+    }
+
+    #[test]
+    fn degenerate_knobs_are_defined() {
+        // rate 0 parks arrivals at t=0; pools of 1 and a zero budget work
+        for name in NAMES {
+            let t = by_name(
+                name,
+                &ScenarioKnobs {
+                    requests: 8,
+                    rate: 0.0,
+                    image_pool: 1,
+                    prompt_pool: 1,
+                    max_new: 1,
+                    image_base: 0,
+                },
+                3,
+            )
+            .unwrap();
+            assert_eq!(t.requests.len(), 8, "{name}");
+            assert!(t.requests.iter().all(|r| r.at == 0.0), "{name}: rate 0 parks at t=0");
+            let empty = by_name(
+                name,
+                &ScenarioKnobs { requests: 0, ..ScenarioKnobs::default() },
+                3,
+            )
+            .unwrap();
+            assert!(empty.requests.is_empty(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! Trace replay: drive a [`Trace`](super::Trace) through the real server.
+//!
+//! One thread per request sleeps to its (optionally time-scaled) arrival
+//! offset, opens its own connection, and runs the request against either
+//! front -- TCP newline-JSON (`server::Client`) or the HTTP/SSE gateway
+//! (`server::http::HttpClient`) -- streaming or not.  The harness is
+//! front-agnostic on purpose: the cross-front equivalence test
+//! (`rust/tests/scenario_replay.rs`) replays one trace all four ways and
+//! pins bit-identical token streams.
+//!
+//! `by_reference` turns resolve the image's content address from a map
+//! learned out of prior responses in the same replay; until the address
+//! is known they fall back to shipping pixels, which is output-identical
+//! because the cache is content-addressed either way.
+//!
+//! Shed handling: HTTP 429/503 and engine-side `finish_reason ==
+//! "rejected"` are retried with a short backoff when `retry_shed` is set
+//! (counted in `RequestOutcome::sheds`), so a replay's token totals stay
+//! deterministic even when admission control is active -- shedding moves
+//! *when* work runs, not *whether* it completes.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::{Trace, TraceRequest};
+use crate::models::scripted::demo_image;
+use crate::server::http::HttpClient;
+use crate::server::Client;
+use crate::util::json::Json;
+
+/// Which server front to replay against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Front {
+    /// newline-JSON TCP protocol (`server::Server`)
+    Tcp,
+    /// HTTP gateway, `POST /v1/generate` (`server::http::HttpServer`)
+    Http,
+}
+
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    pub front: Front,
+    /// stream per-step chunks (TCP chunk frames / SSE) instead of one
+    /// blocking response; TTFT/TPOT become client-observed stamps
+    pub streaming: bool,
+    /// multiplier on trace arrival offsets; 0.0 disables pacing entirely
+    /// (every request dispatches immediately -- a closed flood)
+    pub time_scale: f64,
+    /// retry 429/503/rejected with backoff instead of giving up
+    pub retry_shed: bool,
+    pub shed_backoff_ms: u64,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> ReplayOptions {
+        ReplayOptions {
+            front: Front::Tcp,
+            streaming: true,
+            time_scale: 1.0,
+            retry_shed: true,
+            shed_backoff_ms: 5,
+        }
+    }
+}
+
+/// Per-request replay result.  Latency fields are wall-clock and
+/// advisory; `tokens`, `finish_reason`, `mal`, and `cache_hit` are
+/// deterministic under greedy traces.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    /// index into `Trace::requests`
+    pub index: usize,
+    pub tokens: Vec<i32>,
+    /// streaming: first chunk stamp; non-streaming: engine queue+prefill
+    pub ttft_ms: f64,
+    /// streaming: stamp span over post-first tokens; non-streaming:
+    /// engine decode time over post-first tokens
+    pub tpot_ms: f64,
+    /// client-observed total for this request, retries included
+    pub total_ms: f64,
+    pub mal: f64,
+    pub cache_hit: bool,
+    pub finish_reason: String,
+    /// times this request was shed (429/503/rejected) before completing
+    pub sheds: u32,
+    pub tenant: String,
+    pub class: &'static str,
+}
+
+pub struct ReplayReport {
+    pub outcomes: Vec<RequestOutcome>,
+    pub wall_s: f64,
+}
+
+impl ReplayReport {
+    pub fn total_tokens(&self) -> usize {
+        self.outcomes.iter().map(|o| o.tokens.len()).sum()
+    }
+
+    /// Token streams in trace order (the cross-front equivalence object).
+    pub fn token_streams(&self) -> Vec<Vec<i32>> {
+        self.outcomes.iter().map(|o| o.tokens.clone()).collect()
+    }
+
+    /// Requests that ran to a normal terminal (eos or length).
+    pub fn completed(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| o.finish_reason == "eos" || o.finish_reason == "length")
+            .count()
+    }
+
+    pub fn sheds(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.sheds as u64).sum()
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.cache_hit).count()
+    }
+
+    pub fn mal_mean(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|o| o.mal).sum::<f64>() / self.outcomes.len() as f64
+    }
+
+    pub fn ttfts(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.outcomes.iter().map(|o| o.ttft_ms).collect();
+        v.sort_by(f64::total_cmp);
+        v
+    }
+
+    pub fn tpots(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.outcomes.iter().map(|o| o.tpot_ms).collect();
+        v.sort_by(f64::total_cmp);
+        v
+    }
+}
+
+/// Ceil-rank percentile over a pre-sorted slice (same convention as the
+/// metrics histogram); 0.0 on empty input.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+/// Replay `trace` against the server at `addr`.  Errors if any request
+/// fails validation, loses its connection, or (streaming) its chunk
+/// concatenation disagrees with the summary token array.
+pub fn replay(addr: &str, trace: &Trace, opts: &ReplayOptions) -> Result<ReplayReport> {
+    let ids: Arc<Mutex<HashMap<usize, String>>> = Arc::new(Mutex::new(HashMap::new()));
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(trace.requests.len());
+    for (idx, r) in trace.requests.iter().cloned().enumerate() {
+        let addr = addr.to_string();
+        let ids = ids.clone();
+        let opts = opts.clone();
+        handles.push(std::thread::spawn(move || -> Result<RequestOutcome> {
+            if opts.time_scale > 0.0 {
+                let due = r.at * opts.time_scale;
+                let elapsed = t0.elapsed().as_secs_f64();
+                if due > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+                }
+            }
+            run_one(&addr, idx, &r, &ids, &opts)
+        }));
+    }
+    let mut outcomes = Vec::with_capacity(handles.len());
+    for h in handles {
+        outcomes.push(h.join().map_err(|_| anyhow!("replay worker panicked"))??);
+    }
+    outcomes.sort_by_key(|o| o.index);
+    Ok(ReplayReport { outcomes, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Wire body for one trace request.  The `op` tag is what the TCP front
+/// routes on; the HTTP front ignores unknown fields, so one body serves
+/// both.  `image_id` (when known) replaces the pixel payload.
+fn body_for(r: &TraceRequest, image_id: Option<&str>, streaming: bool) -> Json {
+    let mut fields = vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str(r.prompt.clone())),
+        ("task", Json::str(r.class)),
+        ("max_new", Json::num(r.max_new as f64)),
+        ("temperature", Json::num(r.temperature as f64)),
+        ("seed", Json::num(r.seed as f64)),
+        ("priority", Json::str(r.priority)),
+        ("tenant", Json::str(r.tenant.clone())),
+    ];
+    match image_id {
+        Some(id) => fields.push(("image_id", Json::str(id))),
+        None => fields.push(("image", Json::arr_f32(&demo_image(r.image)))),
+    }
+    if streaming {
+        fields.push(("stream", Json::Bool(true)));
+    }
+    if let Some(d) = r.deadline_ms {
+        fields.push(("deadline_ms", Json::num(d as f64)));
+    }
+    Json::obj(fields)
+}
+
+fn run_one(
+    addr: &str,
+    idx: usize,
+    r: &TraceRequest,
+    ids: &Mutex<HashMap<usize, String>>,
+    opts: &ReplayOptions,
+) -> Result<RequestOutcome> {
+    let t_start = Instant::now();
+    let mut sheds = 0u32;
+    let mut tcp: Option<Client> = None;
+    loop {
+        let known = if r.by_reference { ids.lock().unwrap().get(&r.image).cloned() } else { None };
+        let body = body_for(r, known.as_deref(), opts.streaming);
+        let (frames, summary, status): (Vec<(f64, Vec<i32>)>, Json, u16) = match opts.front {
+            Front::Tcp => {
+                if tcp.is_none() {
+                    tcp = Some(Client::connect(addr)?);
+                }
+                let c = tcp.as_mut().unwrap();
+                if opts.streaming {
+                    let (f, s) = c.call_streaming_timed(&body)?;
+                    (f, s, 200)
+                } else {
+                    (Vec::new(), c.call(&body)?, 200)
+                }
+            }
+            Front::Http => {
+                let c = HttpClient::new(addr);
+                if opts.streaming {
+                    let (st, f, s) = c.generate_streaming_timed(&body, None)?;
+                    (f, s, st)
+                } else {
+                    let (st, s) = c.generate(&body, None)?;
+                    (Vec::new(), s, st)
+                }
+            }
+        };
+        let total_ms = t_start.elapsed().as_secs_f64() * 1e3;
+        // gateway sheds (429 rate / 503 concurrency) and engine-side
+        // rejections (503 with finish_reason "rejected", or the bare
+        // "rejected" summary on the TCP front)
+        let engine_rejected = summary
+            .get("finish_reason")
+            .and_then(|v| v.as_str().ok())
+            .is_some_and(|f| f == "rejected");
+        if status == 429 || status == 503 || engine_rejected {
+            if opts.retry_shed {
+                sheds += 1;
+                std::thread::sleep(Duration::from_millis(opts.shed_backoff_ms.max(1)));
+                continue;
+            }
+            let finish =
+                if engine_rejected { "rejected".to_string() } else { format!("shed_{status}") };
+            return Ok(RequestOutcome {
+                index: idx,
+                tokens: Vec::new(),
+                ttft_ms: 0.0,
+                tpot_ms: 0.0,
+                total_ms,
+                mal: 0.0,
+                cache_hit: false,
+                finish_reason: finish,
+                sheds,
+                tenant: r.tenant.clone(),
+                class: r.class,
+            });
+        }
+        if status != 200 {
+            return Err(anyhow!(
+                "request {idx}: HTTP {status}: {}",
+                summary.get("error").and_then(|e| e.as_str().ok()).unwrap_or("?")
+            ));
+        }
+        if let Some(e) = summary.get("error") {
+            return Err(anyhow!("request {idx}: {}", e.as_str().unwrap_or("malformed error")));
+        }
+        let finish = summary.req("finish_reason")?.as_str()?.to_string();
+        let tokens = summary.req("tokens")?.to_i32_vec()?;
+        if opts.streaming {
+            let concat: Vec<i32> = frames.iter().flat_map(|(_, c)| c.iter().copied()).collect();
+            if concat != tokens {
+                return Err(anyhow!("request {idx}: chunk concatenation != summary tokens"));
+            }
+        }
+        // learn the image's content address for later by-reference turns
+        if let Some(id) = summary.get("image_id").and_then(|v| v.as_str().ok()) {
+            if !id.is_empty() {
+                ids.lock().unwrap().insert(r.image, id.to_string());
+            }
+        }
+        let num = |k: &str| summary.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        let (ttft, tpot) = if opts.streaming {
+            match (frames.first(), frames.last()) {
+                (Some(f), Some(l)) => {
+                    let after_first = tokens.len().saturating_sub(f.1.len()).max(1);
+                    (f.0, (l.0 - f.0) / after_first as f64)
+                }
+                _ => (total_ms, 0.0),
+            }
+        } else {
+            let ttft = num("queue_ms") + num("prefill_ms");
+            let decode = (num("latency_ms") - ttft).max(0.0);
+            (ttft, decode / tokens.len().saturating_sub(1).max(1) as f64)
+        };
+        let hit = summary.get("cache_hit").and_then(|v| v.as_bool().ok()).unwrap_or(false);
+        return Ok(RequestOutcome {
+            index: idx,
+            mal: num("mal"),
+            tokens,
+            ttft_ms: ttft,
+            tpot_ms: tpot,
+            total_ms,
+            cache_hit: hit,
+            finish_reason: finish,
+            sheds,
+            tenant: r.tenant.clone(),
+            class: r.class,
+        });
+    }
+}

@@ -1,0 +1,438 @@
+//! Scenario trace replay against the real serving stack.
+//!
+//! Two standing guarantees:
+//!
+//! 1. **Cross-front equivalence** -- one greedy scenario trace replayed
+//!    through every front (TCP newline-JSON streaming + blocking, HTTP
+//!    non-streaming + SSE) at 1 and 2 replicas yields bit-identical
+//!    token streams.  The trace is the experiment; the transport and the
+//!    replica count must not be.
+//!
+//! 2. **Invariant soak** -- the mixed-tenant trace flooded through the
+//!    HTTP gateway with per-request chaos (tight deadlines, mid-stream
+//!    client disconnects, cancel pokes, quota sheds, engine admission
+//!    rejections) settles with exactly-once terminal accounting: every
+//!    admitted request reaches exactly one of
+//!    completed/cancelled/deadline/failed/rejected, no session, permit,
+//!    or connection leaks, and the gateway's shed counters agree with
+//!    what clients actually observed.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use massv::cluster::{ClusterConfig, ClusterEngine};
+use massv::coordinator::EngineConfig;
+use massv::metrics::scrape_delta;
+use massv::models::scripted::{demo_image, write_test_artifacts};
+use massv::server::http::{GatewayConfig, HttpClient, HttpServer, Quota};
+use massv::server::Server;
+use massv::util::json::{parse, Json};
+use massv::util::rng::Rng;
+use massv::workload::scenario::replay::{replay, Front, ReplayOptions};
+use massv::workload::scenario::{by_name, ScenarioKnobs, TraceRequest};
+
+fn cluster(dir: &str, replicas: usize, queue_capacity: usize) -> Arc<ClusterEngine> {
+    let engine = EngineConfig {
+        workers: 2,
+        queue_capacity,
+        prefix_cache_bytes: 64 << 20,
+        ..EngineConfig::default()
+    };
+    // spill_depth high enough that the router never sheds: admission
+    // pressure in these tests comes from the engine queue and the gateway
+    let cfg =
+        ClusterConfig { replicas, spill_depth: 1_000_000, engine, ..ClusterConfig::default() };
+    Arc::new(ClusterEngine::start(dir, cfg).unwrap())
+}
+
+/// Both fronts over one engine, bound to ephemeral ports.
+struct Fronts {
+    tcp: String,
+    http: String,
+    stops: Vec<Arc<AtomicBool>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn start_fronts(engine: Arc<ClusterEngine>, gateway: GatewayConfig) -> Fronts {
+    let tcp_server = Server::new(engine.clone());
+    let http_server = HttpServer::new(engine, gateway);
+    let stops = vec![tcp_server.stop_handle(), http_server.stop_handle()];
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t1 = std::thread::spawn(move || {
+        tcp_server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let tcp = rx.recv().unwrap().to_string();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t2 = std::thread::spawn(move || {
+        http_server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let http = rx.recv().unwrap().to_string();
+    Fronts { tcp, http, stops, handles: vec![t1, t2] }
+}
+
+impl Fronts {
+    fn stop(self) {
+        for s in &self.stops {
+            s.store(true, Ordering::Relaxed);
+        }
+        for h in self.handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+fn shutdown(engine: Arc<ClusterEngine>) {
+    match Arc::try_unwrap(engine) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("cluster engine still shared after the fronts stopped"),
+    }
+}
+
+/// One trace, four transports, two replica counts: eight replays, one
+/// token-stream answer.
+#[test]
+fn cross_front_trace_replay_is_bit_identical() {
+    let dir = write_test_artifacts("scenario_replay_equiv", 256, false);
+    let knobs = ScenarioKnobs {
+        requests: 12,
+        rate: 300.0,
+        image_pool: 4,
+        prompt_pool: 4,
+        max_new: 8,
+        image_base: 0,
+    };
+    let trace = by_name("chat_image_reuse", &knobs, 21).unwrap();
+    let mut reference: Option<Vec<Vec<i32>>> = None;
+    for replicas in [1usize, 2] {
+        let engine = cluster(&dir, replicas, 4096);
+        let fronts = start_fronts(engine.clone(), GatewayConfig::default());
+        for (front, streaming) in
+            [(Front::Tcp, false), (Front::Tcp, true), (Front::Http, false), (Front::Http, true)]
+        {
+            let addr = match front {
+                Front::Tcp => fronts.tcp.as_str(),
+                Front::Http => fronts.http.as_str(),
+            };
+            let opts = ReplayOptions {
+                front,
+                streaming,
+                time_scale: 0.0, // closed flood: pacing must not matter either
+                retry_shed: true,
+                shed_backoff_ms: 2,
+            };
+            let rep = replay(addr, &trace, &opts).unwrap();
+            let label = format!("replicas={replicas} front={front:?} streaming={streaming}");
+            assert_eq!(rep.completed(), trace.requests.len(), "{label}");
+            let streams = rep.token_streams();
+            assert!(streams.iter().all(|s| !s.is_empty()), "{label}: empty token stream");
+            match &reference {
+                None => reference = Some(streams),
+                Some(want) => {
+                    assert_eq!(&streams, want, "{label}: token streams must be bit-identical");
+                }
+            }
+        }
+        fronts.stop();
+        shutdown(engine);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------- chaos soak
+
+/// Wire body for a trace request (the soak builds its own so it can
+/// inject deadlines and drive raw SSE sockets).
+fn soak_body(r: &TraceRequest, streaming: bool, deadline_ms: Option<u64>) -> Json {
+    let mut fields = vec![
+        ("prompt", Json::str(r.prompt.clone())),
+        ("task", Json::str(r.class)),
+        ("max_new", Json::num(r.max_new as f64)),
+        ("temperature", Json::num(r.temperature as f64)),
+        ("seed", Json::num(r.seed as f64)),
+        ("priority", Json::str(r.priority)),
+        ("tenant", Json::str(r.tenant.clone())),
+        ("image", Json::arr_f32(&demo_image(r.image))),
+    ];
+    if streaming {
+        fields.push(("stream", Json::Bool(true)));
+    }
+    if let Some(d) = deadline_ms {
+        fields.push(("deadline_ms", Json::num(d as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Classify a response the way the reconciliation accounts for it: gate
+/// sheds carry no `finish_reason` (the engine never saw the request),
+/// engine admission rejections do.
+fn classify(status: u16, body: &Json) -> String {
+    match status {
+        429 => "shed_429".to_string(),
+        503 => {
+            if body.get("finish_reason").is_some() {
+                "rejected_503".to_string()
+            } else {
+                "shed_503_gate".to_string()
+            }
+        }
+        200 => body
+            .get("finish_reason")
+            .and_then(|f| f.as_str().ok())
+            .unwrap_or("error")
+            .to_string(),
+        s => panic!("unexpected HTTP status {s}: {body:?}"),
+    }
+}
+
+/// Open a raw streaming request and consume the status line + headers,
+/// so the test can abandon or poke the stream mid-flight.  Returns the
+/// writer half, the buffered reader half, and the status code.
+fn open_sse(addr: &str, body: &Json) -> (TcpStream, BufReader<TcpStream>, u16) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let payload = body.to_string();
+    let req = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    writer.write_all(req.as_bytes()).unwrap();
+    writer.write_all(payload.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let status = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .unwrap_or_else(|| panic!("malformed status line {line:?}"));
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h).unwrap() == 0 {
+            panic!("connection closed mid-headers");
+        }
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    (writer, reader, status)
+}
+
+fn read_error_body(mut reader: BufReader<TcpStream>) -> Json {
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    parse(&rest).unwrap()
+}
+
+/// Run one soaked request; returns (classification tag, cancel pokes).
+fn soak_one(addr: &str, idx: usize, r: &TraceRequest) -> (String, u32) {
+    let mut rng = Rng::seeded(0xC0FF_EE00 ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    match rng.range(4) {
+        // plain non-streaming request
+        0 => {
+            let (status, body) =
+                HttpClient::new(addr).generate(&soak_body(r, false, None), None).unwrap();
+            (classify(status, &body), 0)
+        }
+        // non-streaming with a deadline the flooded queue cannot make
+        1 => {
+            let (status, body) =
+                HttpClient::new(addr).generate(&soak_body(r, false, Some(1)), None).unwrap();
+            (classify(status, &body), 0)
+        }
+        // streaming, abandoned after 1-2 frames (client disconnect)
+        2 => {
+            let (writer, mut reader, status) = open_sse(addr, &soak_body(r, true, None));
+            if status != 200 {
+                drop(writer);
+                return (classify(status, &read_error_body(reader)), 0);
+            }
+            let want = 1 + rng.range(2);
+            let mut seen = 0;
+            while seen < want {
+                let mut l = String::new();
+                if reader.read_line(&mut l).unwrap_or(0) == 0 {
+                    break; // short stream finished before we could walk away
+                }
+                if l.trim_end().strip_prefix("data: ").is_some() {
+                    seen += 1;
+                }
+            }
+            drop(reader);
+            drop(writer);
+            ("abandoned".to_string(), 0)
+        }
+        // streaming, poked with POST /v1/cancel/{id} from a side channel
+        _ => {
+            let (writer, mut reader, status) = open_sse(addr, &soak_body(r, true, None));
+            if status != 200 {
+                drop(writer);
+                return (classify(status, &read_error_body(reader)), 0);
+            }
+            let mut pokes = 0u32;
+            let mut summary: Option<Json> = None;
+            loop {
+                let mut l = String::new();
+                if reader.read_line(&mut l).unwrap_or(0) == 0 {
+                    break;
+                }
+                let Some(data) = l.trim_end().strip_prefix("data: ") else { continue };
+                if data == "[DONE]" {
+                    break;
+                }
+                let v = parse(data).unwrap();
+                if v.get("chunk").is_some() {
+                    if pokes == 0 {
+                        let id = v.get("id").and_then(|x| x.as_f64().ok()).unwrap() as u64;
+                        let poke = HttpClient::new(addr)
+                            .request("POST", &format!("/v1/cancel/{id}"), &[], None)
+                            .unwrap();
+                        assert_eq!(poke.0, 200, "cancel poke must route");
+                        pokes = 1;
+                    }
+                } else {
+                    summary = Some(v);
+                }
+            }
+            drop(reader);
+            drop(writer);
+            let s = summary.expect("streaming request must end with a summary frame");
+            (classify(200, &s), pokes)
+        }
+    }
+}
+
+/// Flood the mixed-tenant trace through the gateway with chaos and check
+/// that every counter, permit, and session reconciles exactly once.
+#[test]
+fn mixed_tenant_chaos_soak_reconciles_exactly_once() {
+    let dir = write_test_artifacts("scenario_replay_soak", 256, false);
+    let knobs = ScenarioKnobs {
+        requests: 72,
+        rate: 400.0,
+        image_pool: 4,
+        prompt_pool: 4,
+        max_new: 6,
+        image_base: 100,
+    };
+    let trace = by_name("mixed_tenants", &knobs, 33).unwrap();
+    // a tight engine queue so the flood provokes admission rejections
+    let engine = cluster(&dir, 1, 16);
+    let gateway = GatewayConfig {
+        default_quota: Quota::default(),
+        tenant_quotas: vec![
+            // bulk saturates its concurrency slots -> gate 503s
+            ("bulk".to_string(), Quota { rps: 0.0, burst: 0.0, max_concurrent: 4 }),
+            // silver exhausts its token bucket -> gate 429s
+            ("silver".to_string(), Quota { rps: 2.0, burst: 1.0, max_concurrent: 0 }),
+        ],
+    };
+    let server = HttpServer::new(engine.clone(), gateway);
+    let stop = server.stop_handle();
+    let conns = server.conn_count_handle();
+    let counters = server.counters();
+    let admission = server.admission();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let serve_handle = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap().to_string();
+
+    let before = engine.scrape();
+    let (req0, s429_0, s503_0) =
+        (counters.requests.get(), counters.shed_429.get(), counters.shed_503.get());
+
+    // closed flood: every request dispatches immediately on its own thread
+    let mut handles = Vec::new();
+    for (idx, r) in trace.requests.iter().cloned().enumerate() {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || soak_one(&addr, idx, &r)));
+    }
+    let mut tags = Vec::new();
+    let mut pokes = 0u64;
+    for h in handles {
+        let (tag, p) = h.join().expect("soak worker panicked");
+        tags.push(tag);
+        pokes += p as u64;
+    }
+
+    // settle: abandoned streams and cancelled sessions drain asynchronously
+    let t0 = Instant::now();
+    loop {
+        let m = engine.scrape();
+        if m["inflight"] == 0.0 && m["queue_depth"] == 0.0 && conns.load(Ordering::Relaxed) == 0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "soak failed to settle: inflight={} queue_depth={} conns={}",
+            m["inflight"],
+            m["queue_depth"],
+            conns.load(Ordering::Relaxed)
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let after = engine.scrape();
+    let d = scrape_delta(&before, &after);
+    let g = |k: &str| d.get(k).copied().unwrap_or(0.0);
+    let count = |t: &str| tags.iter().filter(|x| x.as_str() == t).count();
+
+    let n = trace.requests.len();
+    let s429 = count("shed_429");
+    let s503_gate = count("shed_503_gate");
+    let s503_engine = count("rejected_503");
+    assert!(s429 >= 1, "silver's rate quota must shed at least once");
+    assert!(s503_gate >= 1, "bulk's concurrency quota must shed at least once");
+    assert_eq!(count("error"), 0, "no request may fail outright: {tags:?}");
+
+    // the engine saw exactly the requests the gate admitted
+    assert_eq!(g("requests_received") as usize, n - s429 - s503_gate, "{tags:?}");
+    // ...and every one of them reached exactly one terminal
+    let terminals = g("requests_completed")
+        + g("requests_cancelled")
+        + g("requests_deadline_exceeded")
+        + g("requests_failed")
+        + g("requests_rejected");
+    assert_eq!(terminals, g("requests_received"), "exactly-once terminal accounting");
+    assert_eq!(g("requests_failed"), 0.0);
+    // engine admission rejections all surfaced to clients as engine 503s
+    assert_eq!(g("requests_rejected") as usize, s503_engine, "{tags:?}");
+    // client-observed terminals are a lower bound: abandoned streams
+    // settle server-side as completed or cancelled without a client record
+    assert!(g("requests_completed") as usize >= count("eos") + count("length"));
+    assert!(g("requests_cancelled") as usize >= count("cancelled"));
+    assert!(g("requests_deadline_exceeded") as usize >= count("deadline"));
+    assert!(
+        g("requests_deadline_exceeded") >= 1.0,
+        "1ms deadlines under a flood must expire at least once: {tags:?}"
+    );
+
+    // gateway counters agree with what the clients observed
+    assert_eq!(counters.shed_429.get() - s429_0, s429 as u64);
+    assert_eq!(counters.shed_503.get() - s503_0, (s503_gate + s503_engine) as u64);
+    assert_eq!(counters.requests.get() - req0, n as u64 + pokes, "generates + cancel pokes");
+
+    // no admission permit leaked (inflight permits drop with the handler)
+    for t in ["gold", "silver", "bulk"] {
+        assert_eq!(admission.inflight(t), 0, "leaked admission permit for tenant {t}");
+    }
+    // per-tenant ledgers reconcile independently too
+    for t in ["gold", "silver", "bulk"] {
+        let tg = |s: &str| d.get(&format!("tenant_{s}{{tenant=\"{t}\"}}")).copied().unwrap_or(0.0);
+        let term =
+            tg("completed") + tg("cancelled") + tg("deadline") + tg("failed") + tg("rejected");
+        assert_eq!(tg("received"), term, "tenant {t} terminals must reconcile");
+        assert!(tg("received") >= 1.0, "tenant {t} must reach the engine at least once");
+    }
+    // the engine-side session gauge is back to idle
+    assert_eq!(after["inflight"], 0.0);
+
+    stop.store(true, Ordering::Relaxed);
+    serve_handle.join().unwrap();
+    shutdown(engine);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,227 @@
+//! Property tests for the workload generators and scenario traces.
+//!
+//! These pin the contracts the scenario suite (`docs/scenarios.md`)
+//! leans on:
+//!
+//! 1. determinism -- the same `(knobs, seed)` pair produces a
+//!    byte-identical schedule or trace (floats compared by bit pattern,
+//!    traces by `Trace::digest` *and* full `Debug` rendering);
+//! 2. validity -- scenario arrivals are time-sorted, non-negative, and
+//!    carry legal class/tenant/budget fields under every knob variant;
+//! 3. stream independence -- each knob perturbs only the stream it
+//!    semantically owns: `rate` moves arrival times but never
+//!    items/images/classes, `zipf_s` moves images but never
+//!    arrivals/items/classes, `prompt_pool` and `max_new` never move
+//!    arrivals or images.
+//!
+//! Property 3 is what makes knob sweeps in the benches A/B-comparable:
+//! two traces that differ in one knob share everything that knob does
+//! not own.
+
+use std::collections::BTreeMap;
+
+use massv::util::rng::Rng;
+use massv::workload::scenario::{by_name, ScenarioKnobs, Trace, NAMES};
+use massv::workload::{
+    bounded_pareto, hotspot_image_schedule, piecewise_poisson, poisson_schedule,
+    repeated_image_schedule, Arrival, HotSpotKnobs, MmArrival, RepeatKnobs, CLASSES,
+};
+
+fn knobs() -> ScenarioKnobs {
+    ScenarioKnobs { requests: 64, ..ScenarioKnobs::default() }
+}
+
+/// Full byte-level signature of a flat schedule (floats by bit pattern).
+fn arr_sig(s: &[Arrival]) -> Vec<(u64, usize, &'static str)> {
+    s.iter().map(|a| (a.at.to_bits(), a.item, a.class)).collect()
+}
+
+fn mm_sig(s: &[MmArrival]) -> Vec<(u64, usize, usize, &'static str)> {
+    s.iter().map(|a| (a.at.to_bits(), a.item, a.image, a.class)).collect()
+}
+
+/// Trace keyed by (conversation, turn): everything a `rate` sweep must
+/// preserve.  `finish()` sorts by arrival and truncates to the request
+/// budget, so a rate change may rotate which fringe requests survive the
+/// cut -- comparisons go through this map, not positional order.
+type Placement = (u64, usize, &'static str, String, usize);
+
+fn content_map(t: &Trace) -> BTreeMap<(u64, usize), (usize, &'static str, String, String, usize)> {
+    t.requests
+        .iter()
+        .map(|r| {
+            let v = (r.image, r.class, r.tenant.clone(), r.prompt.clone(), r.max_new);
+            ((r.conv, r.turn), v)
+        })
+        .collect()
+}
+
+/// Keyed view with arrival bits but without the prompt text: what a
+/// `prompt_pool` sweep must preserve.
+fn placement_map(t: &Trace, keep_prompt: bool) -> BTreeMap<(u64, usize), Placement> {
+    t.requests
+        .iter()
+        .map(|r| {
+            let p = if keep_prompt { r.prompt.clone() } else { String::new() };
+            ((r.conv, r.turn), (r.at.to_bits(), r.image, r.class, r.tenant.clone(), p))
+        })
+        .collect()
+}
+
+#[test]
+fn same_seed_flat_schedules_are_byte_identical() {
+    assert_eq!(
+        arr_sig(&poisson_schedule(256, 25.0, 12, 42)),
+        arr_sig(&poisson_schedule(256, 25.0, 12, 42))
+    );
+    assert_ne!(
+        arr_sig(&poisson_schedule(256, 25.0, 12, 42)),
+        arr_sig(&poisson_schedule(256, 25.0, 12, 43)),
+        "seed must matter"
+    );
+    let rk = RepeatKnobs { image_pool: 6, reuse_prob: 0.35 };
+    assert_eq!(
+        mm_sig(&repeated_image_schedule(256, 25.0, 8, &rk, 42)),
+        mm_sig(&repeated_image_schedule(256, 25.0, 8, &rk, 42))
+    );
+    let hk = HotSpotKnobs { image_pool: 16, zipf_s: 1.1, reuse_prob: 0.3 };
+    assert_eq!(
+        mm_sig(&hotspot_image_schedule(256, 25.0, 8, &hk, 42)),
+        mm_sig(&hotspot_image_schedule(256, 25.0, 8, &hk, 42))
+    );
+    // the scalar primitives replay too, given equal rng states
+    let mut a = Rng::seeded(99);
+    let mut b = Rng::seeded(99);
+    let pa: Vec<u64> = (0..64).map(|_| bounded_pareto(&mut a, 1.2, 2.0, 40.0).to_bits()).collect();
+    let pb: Vec<u64> = (0..64).map(|_| bounded_pareto(&mut b, 1.2, 2.0, 40.0).to_bits()).collect();
+    assert_eq!(pa, pb);
+    let segs = [(1.0, 4.0), (0.5, 16.0)];
+    let wa: Vec<u64> = piecewise_poisson(64, &segs, &mut a).iter().map(|x| x.to_bits()).collect();
+    let wb: Vec<u64> = piecewise_poisson(64, &segs, &mut b).iter().map(|x| x.to_bits()).collect();
+    assert_eq!(wa, wb);
+}
+
+#[test]
+fn same_seed_traces_are_byte_identical() {
+    for name in NAMES {
+        let a = by_name(name, &knobs(), 17).unwrap();
+        let b = by_name(name, &knobs(), 17).unwrap();
+        assert_eq!(a.digest(), b.digest(), "{name}: same seed, same digest");
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "{name}: same seed, same bytes");
+        let c = by_name(name, &knobs(), 18).unwrap();
+        assert_ne!(a.digest(), c.digest(), "{name}: seed must matter");
+    }
+}
+
+#[test]
+fn scenario_arrivals_always_sorted_and_tagged() {
+    let variants = [
+        ScenarioKnobs { requests: 48, rate: 15.0, ..knobs() },
+        ScenarioKnobs { requests: 64, rate: 200.0, image_pool: 2, prompt_pool: 2, ..knobs() },
+        ScenarioKnobs { requests: 32, rate: 0.0, max_new: 1, image_base: 500, ..knobs() },
+    ];
+    for name in NAMES {
+        for (vi, k) in variants.iter().enumerate() {
+            for seed in [1, 2] {
+                let t = by_name(name, k, seed).unwrap();
+                assert_eq!(t.requests.len(), k.requests, "{name} v{vi} s{seed}");
+                for w in t.requests.windows(2) {
+                    assert!(w[0].at <= w[1].at, "{name} v{vi} s{seed}: arrivals sorted");
+                }
+                for r in &t.requests {
+                    assert!(r.at.is_finite() && r.at >= 0.0, "{name} v{vi} s{seed}");
+                    assert!(CLASSES.contains(&r.class), "{name} v{vi} s{seed}");
+                    assert!(!r.tenant.is_empty() && !r.prompt.is_empty(), "{name} v{vi} s{seed}");
+                    assert!(r.max_new >= 1, "{name} v{vi} s{seed}");
+                    assert!(r.image >= k.image_base, "{name} v{vi} s{seed}: image_base offsets");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_generator_knobs_perturb_only_their_streams() {
+    // rate owns arrival times: items and classes never move
+    let slow = poisson_schedule(256, 5.0, 12, 7);
+    let fast = poisson_schedule(256, 50.0, 12, 7);
+    let tail = |s: &[Arrival]| s.iter().map(|a| (a.item, a.class)).collect::<Vec<_>>();
+    assert_eq!(tail(&slow), tail(&fast), "rate must not move items/classes");
+
+    // item_pool owns items: arrivals, images, and classes never move
+    let rk = RepeatKnobs { image_pool: 6, reuse_prob: 0.35 };
+    let a = repeated_image_schedule(256, 30.0, 4, &rk, 7);
+    let b = repeated_image_schedule(256, 30.0, 9, &rk, 7);
+    let frame =
+        |s: &[MmArrival]| s.iter().map(|x| (x.at.to_bits(), x.image, x.class)).collect::<Vec<_>>();
+    assert_eq!(frame(&a), frame(&b), "item_pool must not move arrivals/images/classes");
+    assert_ne!(
+        a.iter().map(|x| x.item).collect::<Vec<_>>(),
+        b.iter().map(|x| x.item).collect::<Vec<_>>(),
+        "item_pool owns the item stream"
+    );
+
+    // zipf_s owns image popularity: arrivals, items, and classes never move
+    let uk = HotSpotKnobs { image_pool: 16, zipf_s: 0.0, reuse_prob: 0.2 };
+    let sk = HotSpotKnobs { zipf_s: 1.4, ..uk.clone() };
+    let u = hotspot_image_schedule(256, 30.0, 5, &uk, 7);
+    let s = hotspot_image_schedule(256, 30.0, 5, &sk, 7);
+    let spine =
+        |s: &[MmArrival]| s.iter().map(|x| (x.at.to_bits(), x.item, x.class)).collect::<Vec<_>>();
+    assert_eq!(spine(&u), spine(&s), "zipf_s must not move arrivals/items/classes");
+    assert_ne!(
+        u.iter().map(|x| x.image).collect::<Vec<_>>(),
+        s.iter().map(|x| x.image).collect::<Vec<_>>(),
+        "zipf_s owns the image stream"
+    );
+}
+
+#[test]
+fn scenario_rate_moves_times_never_content() {
+    for name in NAMES {
+        let slow = by_name(name, &ScenarioKnobs { rate: 20.0, ..knobs() }, 11).unwrap();
+        let fast = by_name(name, &ScenarioKnobs { rate: 60.0, ..knobs() }, 11).unwrap();
+        let (a, b) = (content_map(&slow), content_map(&fast));
+        // a rate change can rotate which fringe requests survive the
+        // truncation cut, but the shared core must agree field-for-field
+        let shared: Vec<_> = a.keys().filter(|k| b.contains_key(*k)).collect();
+        assert!(
+            shared.len() * 4 >= knobs().requests * 3,
+            "{name}: truncation may drop a fringe, not {} of {}",
+            knobs().requests - shared.len(),
+            knobs().requests
+        );
+        for key in shared {
+            assert_eq!(a[key], b[key], "{name} {key:?}: rate must not move content");
+        }
+    }
+}
+
+#[test]
+fn scenario_prompt_pool_never_moves_arrivals_images_or_classes() {
+    for name in NAMES {
+        let a = by_name(name, &ScenarioKnobs { prompt_pool: 3, ..knobs() }, 13).unwrap();
+        let b = by_name(name, &ScenarioKnobs { prompt_pool: 9, ..knobs() }, 13).unwrap();
+        assert_eq!(placement_map(&a, false), placement_map(&b, false), "{name}");
+    }
+}
+
+#[test]
+fn scenario_decode_budget_never_moves_arrivals_or_content() {
+    for name in NAMES {
+        let a = by_name(name, &ScenarioKnobs { max_new: 8, ..knobs() }, 19).unwrap();
+        let b = by_name(name, &ScenarioKnobs { max_new: 24, ..knobs() }, 19).unwrap();
+        assert_eq!(placement_map(&a, true), placement_map(&b, true), "{name}");
+    }
+}
+
+#[test]
+fn registry_is_complete_and_closed() {
+    let mut seen = std::collections::BTreeSet::new();
+    for name in NAMES {
+        assert!(seen.insert(name), "duplicate scenario name {name}");
+        assert!(by_name(name, &knobs(), 1).is_some(), "{name} must build");
+    }
+    assert_eq!(seen.len(), 6);
+    assert!(by_name("not_a_scenario", &knobs(), 1).is_none());
+}
